@@ -1,0 +1,159 @@
+//! End-to-end driver: the §5.3 federated-learning evaluation, real
+//! numerics included. This is the run recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example federated -- \
+//!         [--model shufflenet_s] [--rounds 60] [--clients 5] \
+//!         [--steps 5] [--traces 4] [--arm both|swan|baseline]
+//!
+//! Both arms (Swan vs PyTorch-greedy baseline) run the same FedAvg
+//! workload over the same trace-driven fleet; per-arm it reports the
+//! accuracy-vs-virtual-time curve (Figs 5a/6a/7a), clients-online-per-
+//! round (Figs 5b/6b/7b), total fleet energy, and the Table-4 ratios.
+//! Curves are persisted as CSV under target/reports/.
+
+use swan::fl::{FlArm, FlConfig, FlOutcome, FlSim};
+use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
+use swan::train::data::SyntheticDataset;
+use swan::util::table::{fmt_ratio, Table};
+use swan::workload::{load_or_builtin, WorkloadName};
+
+fn parse_args() -> (String, usize, usize, usize, usize, String) {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |name: &str, default: &str| -> String {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+            .unwrap_or_else(|| default.to_string())
+    };
+    (
+        get("--model", "shufflenet_s"),
+        get("--rounds", "60").parse().expect("--rounds"),
+        get("--clients", "5").parse().expect("--clients"),
+        get("--steps", "5").parse().expect("--steps"),
+        get("--traces", "4").parse().expect("--traces"),
+        get("--arm", "both"),
+    )
+}
+
+fn run_arm(
+    arm: FlArm,
+    model: &str,
+    cfg: &FlConfig,
+    exec: &ModelExecutor,
+) -> anyhow::Result<FlOutcome> {
+    let paper = WorkloadName::paper_scale_of(
+        WorkloadName::parse(model).expect("model"),
+    );
+    let workload = load_or_builtin(paper, "artifacts");
+    let ds = if exec.meta.task == "speech" {
+        SyntheticDataset::speech(cfg.seed)
+    } else {
+        SyntheticDataset::vision(cfg.seed)
+    };
+    let t0 = std::time::Instant::now();
+    let mut sim = FlSim::new(cfg.clone(), arm, ds, &workload)?;
+    println!(
+        "[{}] fleet: {} clients, {} rounds × {} clients/round × {} steps",
+        arm.name(),
+        sim.clients.len(),
+        cfg.rounds,
+        cfg.clients_per_round,
+        cfg.local_steps
+    );
+    let out = sim.run(exec)?;
+    println!(
+        "[{}] done in {:.0}s wall; virtual time {:.1} h; fleet energy {:.1} kJ; \
+         best accuracy {:.3}",
+        arm.name(),
+        t0.elapsed().as_secs_f64(),
+        out.total_time_s / 3600.0,
+        out.total_energy_j / 1e3,
+        out.best_accuracy()
+    );
+    // persist curves
+    std::fs::create_dir_all("target/reports")?;
+    std::fs::write(
+        format!("target/reports/fl_{}_{}_accuracy.csv", exec.meta.name, arm.name()),
+        out.accuracy_curve.to_csv("accuracy"),
+    )?;
+    let mut online = String::from("round,online\n");
+    for (r, n) in &out.online_per_round {
+        online.push_str(&format!("{r},{n}\n"));
+    }
+    std::fs::write(
+        format!("target/reports/fl_{}_{}_online.csv", exec.meta.name, arm.name()),
+        online,
+    )?;
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let (model, rounds, clients, steps, traces, arm) = parse_args();
+    let reg = Registry::discover()?;
+    let client = RuntimeClient::cpu()?;
+    let exec = ModelExecutor::load(&client, &reg.dir, &model)?;
+    println!(
+        "model {} ({} params); artifacts from {}",
+        exec.meta.name,
+        exec.meta.param_scalars(),
+        reg.dir.display()
+    );
+
+    let cfg = FlConfig {
+        seed: 17,
+        raw_traces: traces * 4,
+        quality_traces: traces,
+        clients_per_round: clients,
+        local_steps: steps,
+        rounds,
+        eval_every: 2,
+        eval_batches: 4,
+        daily_credit_j: 2_500.0,
+        server_overhead_s: 2.0,
+    };
+
+    let mut outcomes: Vec<FlOutcome> = Vec::new();
+    if arm == "both" || arm == "swan" {
+        outcomes.push(run_arm(FlArm::Swan, &model, &cfg, &exec)?);
+    }
+    if arm == "both" || arm == "baseline" {
+        outcomes.push(run_arm(FlArm::Baseline, &model, &cfg, &exec)?);
+    }
+
+    if outcomes.len() == 2 {
+        let (swan, base) = (&outcomes[0], &outcomes[1]);
+        // Table 4: target = best accuracy reached by either arm
+        let target = swan.best_accuracy().min(base.best_accuracy());
+        let t_swan = swan.time_to_accuracy(target);
+        let t_base = base.time_to_accuracy(target);
+        let mut t = Table::new(
+            &format!("Table-4 style summary — {}", exec.meta.name),
+            &["metric", "swan", "baseline", "ratio"],
+        );
+        if let (Some(a), Some(b)) = (t_swan, t_base) {
+            t.row(&[
+                format!("time to {:.1}% acc (h)", target * 100.0),
+                format!("{:.2}", a / 3600.0),
+                format!("{:.2}", b / 3600.0),
+                fmt_ratio(b / a.max(1.0)),
+            ]);
+        }
+        t.row(&[
+            "fleet energy (kJ)".into(),
+            format!("{:.1}", swan.total_energy_j / 1e3),
+            format!("{:.1}", base.total_energy_j / 1e3),
+            fmt_ratio(base.total_energy_j / swan.total_energy_j.max(1.0)),
+        ]);
+        let final_online = |o: &FlOutcome| {
+            o.online_per_round.last().map(|(_, n)| *n).unwrap_or(0)
+        };
+        t.row(&[
+            "clients online (final round)".into(),
+            format!("{}", final_online(swan)),
+            format!("{}", final_online(base)),
+            "-".into(),
+        ]);
+        t.emit()?;
+    }
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Local evaluation sweep (the Table-2 experiment) on one device.
+//!
+//!     cargo run --release --example local_training -- [device]
+//!
+//! devices: pixel3 | s10e | oneplus8 | tabs6 | mi10 (default pixel3)
+//!
+//! For each of the three paper models: explore every execution choice on
+//! a fresh simulated phone, print the full profile table, and compare
+//! Swan's best choice against the PyTorch greedy baseline — while also
+//! running real training steps for the chosen model variant so the
+//! numerics are exercised, not just the simulator.
+
+use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
+use swan::sim::SimPhone;
+use swan::soc::device::{device, DeviceId};
+use swan::swan::choice::ExecutionChoice;
+use swan::swan::explorer::Explorer;
+use swan::train::data::SyntheticDataset;
+use swan::util::table::{fmt_ratio, Table};
+use swan::workload::{load_or_builtin, WorkloadName};
+
+fn main() -> anyhow::Result<()> {
+    let dev_arg = std::env::args().nth(1).unwrap_or_else(|| "pixel3".into());
+    let dev = DeviceId::parse(&dev_arg)
+        .ok_or_else(|| anyhow::anyhow!("unknown device '{dev_arg}'"))?;
+    let d = device(dev);
+    println!("device: {} ({})", d.id.name(), d.soc);
+
+    let reg = Registry::discover()?;
+    let client = RuntimeClient::cpu()?;
+
+    let pairs = [
+        (WorkloadName::Resnet34, "resnet_s"),
+        (WorkloadName::ShufflenetV2, "shufflenet_s"),
+        (WorkloadName::MobilenetV2, "mobilenet_s"),
+    ];
+    let mut summary = Table::new(
+        &format!("local evaluation on {}", d.id.name()),
+        &["model", "swan_choice", "speedup", "energy_eff"],
+    );
+    for (wl, model) in pairs {
+        let workload = load_or_builtin(wl, "artifacts");
+        let explorer = Explorer::default();
+        let mut phone = SimPhone::new(d.clone(), 7);
+        let profiles = explorer.explore_all(&mut phone, &workload);
+
+        let mut t = Table::new(
+            &format!("{} profiles", workload.name),
+            &["choice", "latency_s", "energy_j", "power_w"],
+        );
+        for p in &profiles {
+            t.row(&[
+                p.choice.label(),
+                format!("{:.3}", p.latency_s),
+                format!("{:.3}", p.energy_j),
+                format!("{:.2}", p.power_w),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+
+        let best = profiles
+            .iter()
+            .min_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap())
+            .unwrap();
+        let greedy_choice = ExecutionChoice::new(&d, d.low_latency_cores());
+        let mut phone_b = SimPhone::new(d.clone(), 8);
+        let greedy = explorer
+            .explore_choice(&mut phone_b, &workload, &greedy_choice, 5)
+            .profile;
+        summary.row(&[
+            workload.name.clone(),
+            best.choice.label(),
+            fmt_ratio(greedy.latency_s / best.latency_s),
+            fmt_ratio(greedy.energy_j / best.energy_j.max(1e-12)),
+        ]);
+
+        // prove the trainable variant learns on this schedule
+        let exec = ModelExecutor::load(&client, &reg.dir, model)?;
+        let ds = if exec.meta.task == "speech" {
+            SyntheticDataset::speech(1)
+        } else {
+            SyntheticDataset::vision(1)
+        };
+        let part = ds.partition(0);
+        let mut state = exec.init_state(0)?;
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..10 {
+            let (x, y) = ds.batch(&part, step, exec.meta.batch);
+            let loss = exec.train_step(&mut state, &x, &y)?;
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        println!(
+            "{model}: 10 real steps, loss {first:.3} → {last:.3}\n"
+        );
+    }
+    println!("{}", summary.to_markdown());
+    Ok(())
+}

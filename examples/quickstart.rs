@@ -1,0 +1,94 @@
+//! Quickstart: bring Swan up on a simulated Pixel 3 and train a real
+//! model for 20 steps.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Walks the full §4 lifecycle: enumerate execution choices → explore
+//! them with battery-drop energy attribution → prune to the preference
+//! chain → run real (PJRT-executed) training steps under the fastest
+//! choice, printing the simulated cost of each.
+
+use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
+use swan::sim::SimPhone;
+use swan::soc::device::{device, DeviceId};
+use swan::swan::{SwanConfig, SwanEngine};
+use swan::train::data::SyntheticDataset;
+use swan::util::table::Table;
+use swan::workload::{load_or_builtin, WorkloadName};
+
+fn main() -> anyhow::Result<()> {
+    let reg = Registry::discover()?;
+    let client = RuntimeClient::cpu()?;
+    println!("PJRT platform: {}", client.platform());
+
+    let exec = ModelExecutor::load(&client, &reg.dir, "shufflenet_s")?;
+    println!(
+        "loaded {} ({} parameters, batch {})",
+        exec.meta.name,
+        exec.meta.param_scalars(),
+        exec.meta.batch
+    );
+
+    // a simulated Pixel 3, idle and discharging
+    let d = device(DeviceId::Pixel3);
+    let mut phone = SimPhone::new(d, 42);
+    let workload = load_or_builtin(WorkloadName::ShufflenetV2, "artifacts");
+
+    println!("\nexploring execution choices (§4.2)...");
+    let mut engine = SwanEngine::explore_and_build(
+        &mut phone,
+        workload,
+        SwanConfig::default(),
+    );
+
+    let mut t = Table::new(
+        "explored profiles (pruned preference chain marked *)",
+        &["choice", "latency_s", "energy_j", "power_w", "kept"],
+    );
+    let kept: Vec<String> = engine
+        .chain()
+        .iter()
+        .map(|p| p.choice.label())
+        .collect();
+    for p in &engine.profiles {
+        t.row(&[
+            p.choice.label(),
+            format!("{:.3}", p.latency_s),
+            format!("{:.3}", p.energy_j),
+            format!("{:.2}", p.power_w),
+            if kept.contains(&p.choice.label()) { "*" } else { "" }
+                .to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    println!(
+        "fastest choice: {} ({:.0} ms/step simulated)",
+        engine.best_profile().choice.label(),
+        engine.best_profile().latency_s * 1e3
+    );
+
+    // now really train
+    let ds = SyntheticDataset::vision(7);
+    let part = ds.partition(0);
+    let mut state = exec.init_state(1)?;
+    println!("\ntraining 20 real steps under Swan:");
+    for step in 0..20 {
+        let (x, y) = ds.batch(&part, step, exec.meta.batch);
+        let mut loss = f32::NAN;
+        let rep = engine.run_local_step(&mut phone, || {
+            loss = exec.train_step(&mut state, &x, &y).expect("step");
+        });
+        println!(
+            "step {step:2}: loss {loss:.4}  choice {}  sim {:.0} ms",
+            rep.choice,
+            rep.latency_s * 1e3
+        );
+    }
+    println!(
+        "\nbattery now {:.1}%, temperature {:.1} °C — quickstart done",
+        phone.battery.soc() * 100.0,
+        phone.thermal.temp_c
+    );
+    Ok(())
+}

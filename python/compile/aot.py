@@ -1,0 +1,129 @@
+"""AOT bridge: lower L2 train/eval steps to HLO text for the Rust runtime.
+
+Run once by ``make artifacts`` (never on the request path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per model in `model.MODELS`:
+  artifacts/<model>_train.hlo.txt   (p0..pN, x, y) -> (p0'..pN', loss)
+  artifacts/<model>_eval.hlo.txt    (p0..pN, x, y) -> (loss, n_correct)
+  artifacts/meta/<model>.json       param order/shapes/init, io specs
+plus the Fig-1b microbenchmark ``matmul512.hlo.txt`` and the workload
+descriptors (`workloads.write_all`).
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Lowering goes stablehlo → XlaComputation with ``return_tuple=True``; the
+Rust side unwraps the tuple with ``Literal::to_tuple``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import workloads
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs_to_shapes(specs):
+    return [jax.ShapeDtypeStruct(tuple(s["shape"]), jnp.float32)
+            for s in specs]
+
+
+def lower_model(name: str, out_dir: str) -> dict:
+    cfg = M.MODELS[name]
+    specs = cfg["specs"]()
+    names = [s["name"] for s in specs]
+    x_spec = jax.ShapeDtypeStruct((M.BATCH,) + cfg["input_shape"], jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((M.BATCH,), jnp.int32)
+    p_specs = _param_specs_to_shapes(specs)
+
+    train = M.make_train_step(cfg["apply"], names, M.LEARNING_RATE)
+    eval_ = M.make_eval_step(cfg["apply"], names)
+
+    train_hlo = to_hlo_text(jax.jit(train).lower(*p_specs, x_spec, y_spec))
+    eval_hlo = to_hlo_text(jax.jit(eval_).lower(*p_specs, x_spec, y_spec))
+
+    train_path = f"{name}_train.hlo.txt"
+    eval_path = f"{name}_eval.hlo.txt"
+    with open(os.path.join(out_dir, train_path), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(out_dir, eval_path), "w") as f:
+        f.write(eval_hlo)
+
+    meta = {
+        "name": name,
+        "task": cfg["task"],
+        "paper_model": cfg["paper_model"],
+        "batch": M.BATCH,
+        "learning_rate": M.LEARNING_RATE,
+        "num_classes": cfg["num_classes"],
+        "input_shape": list((M.BATCH,) + cfg["input_shape"]),
+        "label_shape": [M.BATCH],
+        "params": specs,
+        "param_scalars": int(sum(
+            int(jnp.prod(jnp.array(s["shape"]))) for s in specs)),
+        "artifacts": {"train": train_path, "eval": eval_path},
+        "train_outputs": len(specs) + 1,   # params' + loss
+        "eval_outputs": 2,                 # loss, n_correct
+        "workload": f"workload_{cfg['paper_model']}.json",
+        "workload_small": f"workload_{name}.json",
+    }
+    with open(os.path.join(out_dir, "meta", f"{name}.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def lower_matmul512(out_dir: str) -> None:
+    from .kernels import matmul_fwd_only
+    spec = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+
+    def mm(x, y):
+        return (matmul_fwd_only(x, y),)
+
+    hlo = to_hlo_text(jax.jit(mm).lower(spec, spec))
+    with open(os.path.join(out_dir, "matmul512.hlo.txt"), "w") as f:
+        f.write(hlo)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(M.MODELS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    os.makedirs(os.path.join(args.out, "meta"), exist_ok=True)
+
+    for name in args.models:
+        meta = lower_model(name, args.out)
+        print(f"lowered {name}: {meta['param_scalars']} params "
+              f"-> {meta['artifacts']}")
+    lower_matmul512(args.out)
+    workloads.write_all(os.path.join(args.out, "meta"))
+    index = {
+        "models": args.models,
+        "microbench": ["matmul512.hlo.txt"],
+    }
+    with open(os.path.join(args.out, "meta", "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print("aot done")
+
+
+if __name__ == "__main__":
+    main()

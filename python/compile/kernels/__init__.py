@@ -1,0 +1,27 @@
+"""L1 — Pallas kernels for Swan's compute hot-spots.
+
+Four kernels, each with a pure-jnp oracle in `ref.py`:
+
+- `matmul`      MXU-tiled matmul (custom_vjp; both cotangents are Pallas)
+- `depthwise3x3` channel-tiled VPU depthwise conv (custom_vjp; dx and dw
+                 are Pallas kernels)
+- `conv2d`      im2col + `matmul` composition
+- `sgd_update`  fused block-tiled optimizer step
+
+All are lowered with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); real-TPU behaviour is estimated from block shapes in
+DESIGN.md §Perf.
+"""
+from .matmul import matmul, matmul_fwd_only, matmul_cost
+from .depthwise import depthwise3x3, depthwise_cost
+from .conv2d import conv2d, conv2d_cost
+from .sgd import sgd_update, sgd_cost
+from . import ref
+
+__all__ = [
+    "matmul", "matmul_fwd_only", "matmul_cost",
+    "depthwise3x3", "depthwise_cost",
+    "conv2d", "conv2d_cost",
+    "sgd_update", "sgd_cost",
+    "ref",
+]

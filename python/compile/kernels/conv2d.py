@@ -1,0 +1,60 @@
+"""Standard convolution as im2col + the MXU-tiled Pallas matmul.
+
+The paper's compute-bound op (standard conv) is exactly the op that *does*
+scale with cores on the phone — and on TPU it is the op that feeds the MXU.
+We express it as explicit im2col (shift-and-concat, unambiguous (di, dj, c)
+patch ordering) followed by `kernels.matmul.matmul`, whose forward and
+backward are Pallas kernels. The im2col glue is plain jnp (pads, strided
+slices, reshapes): XLA fuses it, and jax.grad differentiates it natively,
+so the whole conv is differentiable end to end with the contraction —
+the hot part — on the Pallas path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul, matmul_cost
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """NHWC -> (N, Ho, Wo, kh*kw*C) patches, SAME padding.
+
+    Patch features are ordered (di, dj, c) — matching
+    w.reshape(kh*kw*Cin, Cout) for HWIO weights.
+    """
+    n, h, w, c = x.shape
+    ho = -(-h // stride)  # ceil
+    wo = -(-w // stride)
+    pad_h = max((ho - 1) * stride + kh - h, 0)
+    pad_w = max((wo - 1) * stride + kw - w, 0)
+    top, left = pad_h // 2, pad_w // 2
+    xp = jnp.pad(x, ((0, 0), (top, pad_h - top), (left, pad_w - left), (0, 0)))
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            cols.append(
+                xp[:, di:di + ho * stride:stride, dj:dj + wo * stride:stride, :]
+            )
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """SAME-padded conv: x (N,H,W,Cin) × w (kh,kw,Cin,Cout) -> NHWC."""
+    n = x.shape[0]
+    kh, kw, cin, cout = w.shape
+    patches = _im2col(x, kh, kw, stride)
+    _, ho, wo, kdim = patches.shape
+    assert kdim == kh * kw * cin
+    flat = patches.reshape(n * ho * wo, kdim)
+    wmat = w.reshape(kdim, cout)
+    out = matmul(flat, wmat)
+    return out.reshape(n, ho, wo, cout)
+
+
+def conv2d_cost(n: int, h: int, w: int, cin: int, cout: int,
+                k: int = 3, stride: int = 1) -> dict:
+    """Analytical forward cost of the conv via its im2col matmul."""
+    ho = -(-h // stride)
+    wo = -(-w // stride)
+    return matmul_cost(n * ho * wo, cout, k * k * cin)

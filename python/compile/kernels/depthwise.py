@@ -1,0 +1,139 @@
+"""Channel-tiled Pallas 3x3 depthwise convolution with Pallas backward.
+
+Depthwise conv is the op the Swan paper's whole scheduling argument hangs
+on (§3.1): it is memory-bound (arithmetic intensity ≈ 9 flops per loaded
+element vs ~2·C for a standard conv), so on the paper's ARM SoCs adding
+threads causes cache thrashing and *anti*-scaling. The TPU translation of
+the same insight (DESIGN.md §Hardware-Adaptation): this op cannot feed the
+MXU (no contraction over channels), so the kernel stays on the VPU and the
+BlockSpec tiles over the *channel* axis — each grid step owns a channel
+slab whose padded (N, H+2, W+2, bc) input block lives in VMEM while the
+nine shifted multiply-accumulates stream over it exactly once.
+
+Layout: NHWC, weights (3, 3, C), stride 1, SAME padding. Stride-2
+downsampling in the models is expressed as stride-1 depthwise followed by
+pooling so that forward and backward both stay on this one kernel (the
+paper's models are re-expressed the same way; op mix is preserved — see
+DESIGN.md substitution ledger).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Channel tile: up to 128 channels × (16, 34, 34) spatial block ≈ 2.4 MiB in VMEM
+# for batch 16 — small enough to double-buffer within 16 MiB.
+BLOCK_C = 128
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _dw_fwd_kernel(x_ref, w_ref, o_ref, *, h: int, w: int):
+    """One channel slab: nine shifted MACs over the padded input block."""
+    x = x_ref[...]  # (N, h+2, w+2, bc)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            acc += x[:, di:di + h, dj:dj + w, :] * w_ref[di, dj, :]
+    o_ref[...] = acc
+
+
+def _dw_dw_kernel(x_ref, g_ref, dw_ref, *, h: int, w: int):
+    """Weight cotangent: dw[di,dj,c] = Σ_{n,y,x} x_shifted · g."""
+    x = x_ref[...]  # (N, h+2, w+2, bc)
+    g = g_ref[...]  # (N, h, w, bc)
+    for di in range(3):
+        for dj in range(3):
+            prod = x[:, di:di + h, dj:dj + w, :] * g
+            dw_ref[di, dj, :] = jnp.sum(prod, axis=(0, 1, 2))
+
+
+def _pad_channels(a: jax.Array, cp: int) -> jax.Array:
+    c = a.shape[-1]
+    if c == cp:
+        return a
+    pad = [(0, 0)] * (a.ndim - 1) + [(0, cp - c)]
+    return jnp.pad(a, pad)
+
+
+def _dw_call(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Forward Pallas call over channel-padded NHWC input."""
+    n, h, wd, c = x.shape
+    bc = min(BLOCK_C, c)
+    cp = _ceil_to(c, bc)
+    xp = _pad_channels(x, cp)
+    wp = _pad_channels(w, cp)
+    xpad = jnp.pad(xp, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_dw_fwd_kernel, h=h, w=wd),
+        grid=(cp // bc,),
+        in_specs=[
+            pl.BlockSpec((n, h + 2, wd + 2, bc), lambda ci: (0, 0, 0, ci)),
+            pl.BlockSpec((3, 3, bc), lambda ci: (0, 0, ci)),
+        ],
+        out_specs=pl.BlockSpec((n, h, wd, bc), lambda ci: (0, 0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((n, h, wd, cp), jnp.float32),
+        interpret=True,
+    )(xpad, wp)
+    return out[..., :c]
+
+
+def _dw_weight_grad(x: jax.Array, g: jax.Array) -> jax.Array:
+    """Pallas call computing the (3, 3, C) weight cotangent."""
+    n, h, wd, c = x.shape
+    bc = min(BLOCK_C, c)
+    cp = _ceil_to(c, bc)
+    xp = jnp.pad(_pad_channels(x, cp), ((0, 0), (1, 1), (1, 1), (0, 0)))
+    gp = _pad_channels(g, cp)
+    dw = pl.pallas_call(
+        functools.partial(_dw_dw_kernel, h=h, w=wd),
+        grid=(cp // bc,),
+        in_specs=[
+            pl.BlockSpec((n, h + 2, wd + 2, bc), lambda ci: (0, 0, 0, ci)),
+            pl.BlockSpec((n, h, wd, bc), lambda ci: (0, 0, 0, ci)),
+        ],
+        out_specs=pl.BlockSpec((3, 3, bc), lambda ci: (0, 0, ci)),
+        out_shape=jax.ShapeDtypeStruct((3, 3, cp), jnp.float32),
+        interpret=True,
+    )(xp, gp)
+    return dw[..., :c]
+
+
+@jax.custom_vjp
+def depthwise3x3(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable Pallas depthwise conv (stride 1, SAME).
+
+    Backward is two more Pallas calls: dx is a depthwise conv of the
+    cotangent with the spatially flipped weights (correlation↔convolution
+    duality), dw is the nine-tap reduction kernel above.
+    """
+    return _dw_call(x, w)
+
+
+def _dw_vjp_fwd(x, w):
+    return _dw_call(x, w), (x, w)
+
+
+def _dw_vjp_bwd(res, g):
+    x, w = res
+    w_flip = w[::-1, ::-1, :]
+    dx = _dw_call(g, w_flip)
+    dw = _dw_weight_grad(x, g)
+    return dx, dw
+
+
+depthwise3x3.defvjp(_dw_vjp_fwd, _dw_vjp_bwd)
+
+
+def depthwise_cost(n: int, h: int, w: int, c: int) -> dict:
+    """Analytical forward cost: 9 MACs/element, streaming reads+writes."""
+    elems = n * h * w * c
+    return {
+        "flops": 18.0 * elems,                     # 9 mul + 9 add
+        "bytes": 4.0 * (n * (h + 2) * (w + 2) * c + elems + 9 * c),
+    }

@@ -1,0 +1,137 @@
+"""MXU-tiled Pallas matmul with a Pallas backward pass (custom_vjp).
+
+This is the workhorse kernel: standard convolutions (via im2col), linear
+layers and the Fig-1b 512x512 microbenchmark all funnel through it.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates
+(M/bm, N/bn, K/bk); each step pulls one (bm, bk) tile of `x` and one
+(bk, bn) tile of `y` from HBM into VMEM and accumulates a (bm, bn)
+output tile — i.e. the classic systolic-array feeding schedule the MXU
+wants, expressed with BlockSpec index maps instead of CUDA threadblocks.
+Accumulation happens in the revisited output block (the out index map
+ignores k), which Pallas keeps resident in VMEM across the K loop.
+
+Kernels are lowered with interpret=True: the CPU PJRT client cannot run
+Mosaic custom-calls; real-TPU numbers are estimated analytically in
+DESIGN.md §Perf from the block shapes chosen here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tiling policy: fill VMEM first, grid only when the operands exceed it.
+# The MXU wants ≥128-edge tiles; beyond that, a bigger resident block is
+# strictly better (fewer HBM round-trips) until the three live tiles
+# (x, y, o) blow the per-core VMEM budget. We budget 12 MiB of the 16 MiB
+# for tiles, leaving room for double buffering of the streamed operand.
+VMEM_TILE_BUDGET = 12 * 1024 * 1024
+MAX_BLOCK_M = 4096
+MAX_BLOCK_N = 512
+MAX_BLOCK_K = 512
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Grid point (i, j, k): o[i,j] (+)= x[i,k] @ y[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+    del nk  # grid bound only used by callers for cost metadata
+
+
+def _matmul_padded(x: jax.Array, y: jax.Array,
+                   bm: int, bn: int, bk: int) -> jax.Array:
+    """Pallas matmul over already block-aligned operands."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _block_sizes(m: int, n: int, k: int) -> Tuple[int, int, int]:
+    """VMEM-filling tile selection (see module docstring).
+
+    Start from whole-operand blocks capped per axis, then halve the
+    largest axis until x(bm,bk) + y(bk,bn) + o(bm,bn) fit the budget.
+    """
+    bm = min(MAX_BLOCK_M, _ceil_to(m, 8))
+    bn = min(MAX_BLOCK_N, _ceil_to(n, 8))
+    bk = min(MAX_BLOCK_K, _ceil_to(k, 8))
+
+    def tile_bytes(a, b, c):
+        return 4 * (a * c + c * b + a * b)
+
+    while tile_bytes(bm, bn, bk) > VMEM_TILE_BUDGET and max(bm, bn, bk) > 8:
+        if bm >= bn and bm >= bk:
+            bm = max(8, bm // 2)
+        elif bk >= bn:
+            bk = max(8, bk // 2)
+        else:
+            bn = max(8, bn // 2)
+    return bm, bn, bk
+
+
+def matmul_fwd_only(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pallas matmul for arbitrary (M,K)@(K,N) f32 operands (no vjp)."""
+    m, k = x.shape
+    _, n = y.shape
+    bm, bn, bk = _block_sizes(m, n, k)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = _matmul_padded(xp, yp, bm, bn, bk)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable Pallas matmul: forward and both cotangents are
+    Pallas kernels (dx = g @ y^T, dy = x^T @ g)."""
+    return matmul_fwd_only(x, y)
+
+
+def _matmul_vjp_fwd(x, y):
+    return matmul_fwd_only(x, y), (x, y)
+
+
+def _matmul_vjp_bwd(res, g):
+    x, y = res
+    dx = matmul_fwd_only(g, y.T)
+    dy = matmul_fwd_only(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_vjp_fwd, _matmul_vjp_bwd)
+
+
+def matmul_cost(m: int, n: int, k: int) -> dict:
+    """Analytical cost of one forward matmul (for workload descriptors)."""
+    return {
+        "flops": 2.0 * m * n * k,
+        "bytes": 4.0 * (m * k + k * n + m * n),
+    }

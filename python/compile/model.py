@@ -1,0 +1,377 @@
+"""L2 — JAX model definitions for Swan's three training workloads.
+
+Three *trainable small variants* of the paper's models, preserving the op
+mix that drives Swan's scheduling decisions (DESIGN.md substitution ledger):
+
+- ``resnet_s``     residual CNN          — speech tier  (32×32×1 → 35 cls)
+- ``mobilenet_s``  inverted residual+dw  — vision tier  (32×32×3 → 64 cls)
+- ``shufflenet_s`` split/shuffle+dw      — vision tier  (32×32×3 → 64 cls)
+
+Every convolution/linear funnels through the L1 Pallas kernels
+(`kernels.conv2d` → im2col + MXU matmul; `kernels.depthwise3x3`), the
+optimizer is the fused Pallas `sgd_update`, and fwd+bwd+update are traced
+as ONE function (`train_step`) so AOT lowering emits a single HLO module
+per model — the Rust runtime never orchestrates sub-steps.
+
+Parameters are carried as a flat ``(name, array)`` list in sorted-name
+order; the same ordering is recorded in the artifact metadata so the Rust
+side can construct, feed and receive parameter buffers positionally.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d, depthwise3x3, matmul, sgd_update
+
+Params = Dict[str, jax.Array]
+
+# ---------------------------------------------------------------------------
+# Parameter specs: (name, shape, init) with init ∈ {he:<fan_in>, zeros, ones}
+# ---------------------------------------------------------------------------
+
+
+class SpecBuilder:
+    """Collects parameter specs while a model's apply() is being defined."""
+
+    def __init__(self) -> None:
+        self.specs: List[dict] = []
+
+    def conv(self, name: str, k: int, cin: int, cout: int) -> None:
+        self.specs.append({
+            "name": f"{name}.w", "shape": [k, k, cin, cout],
+            "init": "he", "fan_in": k * k * cin,
+        })
+
+    def dw(self, name: str, c: int) -> None:
+        self.specs.append({
+            "name": f"{name}.w", "shape": [3, 3, c],
+            "init": "he", "fan_in": 9,
+        })
+
+    def gn(self, name: str, c: int) -> None:
+        self.specs.append({"name": f"{name}.gamma", "shape": [c], "init": "ones"})
+        self.specs.append({"name": f"{name}.beta", "shape": [c], "init": "zeros"})
+
+    def linear(self, name: str, cin: int, cout: int) -> None:
+        self.specs.append({
+            "name": f"{name}.w", "shape": [cin, cout],
+            "init": "he", "fan_in": cin,
+        })
+        self.specs.append({"name": f"{name}.b", "shape": [cout], "init": "zeros"})
+
+    def sorted_specs(self) -> List[dict]:
+        return sorted(self.specs, key=lambda s: s["name"])
+
+
+# ---------------------------------------------------------------------------
+# Layer ops (jnp glue around the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def group_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               groups: int = 8) -> jax.Array:
+    """GroupNorm over channels (NHWC); stateless, so the train step stays
+    a pure function of (params, batch) — no running-stat side inputs."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(n, h, w, c) * gamma + beta
+
+
+def avg_pool2(x: jax.Array) -> jax.Array:
+    """2×2 average pool, stride 2 (all spatial dims here are powers of 2)."""
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    return x.mean(axis=(1, 2))
+
+
+def channel_shuffle(x: jax.Array, groups: int = 2) -> jax.Array:
+    n, h, w, c = x.shape
+    x = x.reshape(n, h, w, groups, c // groups)
+    x = jnp.swapaxes(x, 3, 4)
+    return x.reshape(n, h, w, c)
+
+
+def linear(params: Params, name: str, x: jax.Array) -> jax.Array:
+    return matmul(x, params[f"{name}.w"]) + params[f"{name}.b"]
+
+
+def conv_gn_relu(params: Params, name: str, x: jax.Array,
+                 stride: int = 1) -> jax.Array:
+    x = conv2d(x, params[f"{name}.w"], stride)
+    x = group_norm(x, params[f"{name}_gn.gamma"], params[f"{name}_gn.beta"])
+    return jax.nn.relu(x)
+
+
+# ---------------------------------------------------------------------------
+# resnet_s — residual CNN (paper tier: ResNet-34 on Google Speech)
+# ---------------------------------------------------------------------------
+
+RESNET_STAGES = [(16, 16), (16, 32), (32, 64)]  # (cin, cout), downsample ≥ stage 2
+
+
+def resnet_s_specs() -> List[dict]:
+    b = SpecBuilder()
+    b.conv("stem", 3, 1, 16)
+    b.gn("stem_gn", 16)
+    for i, (cin, cout) in enumerate(RESNET_STAGES):
+        p = f"s{i}"
+        b.conv(f"{p}.c1", 3, cin, cout)
+        b.gn(f"{p}.c1_gn", cout)
+        b.conv(f"{p}.c2", 3, cout, cout)
+        b.gn(f"{p}.c2_gn", cout)
+        if cin != cout:
+            b.conv(f"{p}.proj", 1, cin, cout)
+    b.linear("head", 64, 35)
+    return b.sorted_specs()
+
+
+def resnet_s_apply(params: Params, x: jax.Array) -> jax.Array:
+    x = conv_gn_relu(params, "stem", x)
+    for i, (cin, cout) in enumerate(RESNET_STAGES):
+        p = f"s{i}"
+        down = i > 0
+        h = conv2d(x, params[f"{p}.c1.w"], 2 if down else 1)
+        h = group_norm(h, params[f"{p}.c1_gn.gamma"], params[f"{p}.c1_gn.beta"])
+        h = jax.nn.relu(h)
+        h = conv2d(h, params[f"{p}.c2.w"], 1)
+        h = group_norm(h, params[f"{p}.c2_gn.gamma"], params[f"{p}.c2_gn.beta"])
+        skip = x
+        if cin != cout:
+            skip = conv2d(skip, params[f"{p}.proj.w"], 2 if down else 1)
+        x = jax.nn.relu(h + skip)
+    return linear(params, "head", global_avg_pool(x))
+
+
+# ---------------------------------------------------------------------------
+# mobilenet_s — inverted residuals + depthwise (paper tier: MobileNetV2)
+# ---------------------------------------------------------------------------
+
+# (cin, cout, expand, downsample)
+MOBILENET_BLOCKS = [
+    (16, 24, 4, True),
+    (24, 32, 4, True),
+    (32, 64, 4, True),
+    (64, 64, 4, False),
+]
+
+
+def mobilenet_s_specs() -> List[dict]:
+    b = SpecBuilder()
+    b.conv("stem", 3, 3, 16)
+    b.gn("stem_gn", 16)
+    for i, (cin, cout, exp, _down) in enumerate(MOBILENET_BLOCKS):
+        p = f"ir{i}"
+        mid = cin * exp
+        b.conv(f"{p}.expand", 1, cin, mid)
+        b.gn(f"{p}.expand_gn", mid)
+        b.dw(f"{p}.dw", mid)
+        b.gn(f"{p}.dw_gn", mid)
+        b.conv(f"{p}.project", 1, mid, cout)
+        b.gn(f"{p}.project_gn", cout)
+    b.linear("head", 64, 64)
+    return b.sorted_specs()
+
+
+def mobilenet_s_apply(params: Params, x: jax.Array) -> jax.Array:
+    x = conv_gn_relu(params, "stem", x)
+    for i, (cin, cout, exp, down) in enumerate(MOBILENET_BLOCKS):
+        p = f"ir{i}"
+        h = conv2d(x, params[f"{p}.expand.w"], 1)
+        h = group_norm(h, params[f"{p}.expand_gn.gamma"],
+                       params[f"{p}.expand_gn.beta"])
+        h = jax.nn.relu(h)
+        # Stride-2 depthwise in MobileNetV2 is expressed as stride-1
+        # depthwise + avg-pool so fwd AND bwd stay on the Pallas dw kernel
+        # (see kernels/depthwise.py docstring).
+        h = depthwise3x3(h, params[f"{p}.dw.w"])
+        if down:
+            h = avg_pool2(h)
+        h = group_norm(h, params[f"{p}.dw_gn.gamma"], params[f"{p}.dw_gn.beta"])
+        h = jax.nn.relu(h)
+        h = conv2d(h, params[f"{p}.project.w"], 1)
+        h = group_norm(h, params[f"{p}.project_gn.gamma"],
+                       params[f"{p}.project_gn.beta"])
+        if cin == cout and not down:
+            h = h + x
+        x = h
+    return linear(params, "head", global_avg_pool(x))
+
+
+# ---------------------------------------------------------------------------
+# shufflenet_s — channel split/shuffle + depthwise (paper tier: ShuffleNetV2)
+# ---------------------------------------------------------------------------
+
+# (channels_in, downsample). Down units double channels (both halves kept).
+SHUFFLENET_UNITS = [(24, True), (48, False), (48, True), (96, False)]
+
+
+def shufflenet_s_specs() -> List[dict]:
+    b = SpecBuilder()
+    b.conv("stem", 3, 3, 24)
+    b.gn("stem_gn", 24)
+    for i, (c, down) in enumerate(SHUFFLENET_UNITS):
+        p = f"su{i}"
+        half = c if down else c // 2
+        b.conv(f"{p}.pw1", 1, half, half)
+        b.gn(f"{p}.pw1_gn", half)
+        b.dw(f"{p}.dw", half)
+        b.gn(f"{p}.dw_gn", half)
+        b.conv(f"{p}.pw2", 1, half, half)
+        b.gn(f"{p}.pw2_gn", half)
+        if down:
+            b.dw(f"{p}.ldw", c)
+            b.gn(f"{p}.ldw_gn", c)
+            b.conv(f"{p}.lpw", 1, c, c)
+            b.gn(f"{p}.lpw_gn", c)
+    b.linear("head", 96, 64)
+    return b.sorted_specs()
+
+
+def _shuffle_branch(params: Params, p: str, x: jax.Array,
+                    down: bool) -> jax.Array:
+    h = conv2d(x, params[f"{p}.pw1.w"], 1)
+    h = group_norm(h, params[f"{p}.pw1_gn.gamma"], params[f"{p}.pw1_gn.beta"])
+    h = jax.nn.relu(h)
+    h = depthwise3x3(h, params[f"{p}.dw.w"])
+    if down:
+        h = avg_pool2(h)
+    h = group_norm(h, params[f"{p}.dw_gn.gamma"], params[f"{p}.dw_gn.beta"])
+    h = conv2d(h, params[f"{p}.pw2.w"], 1)
+    h = group_norm(h, params[f"{p}.pw2_gn.gamma"], params[f"{p}.pw2_gn.beta"])
+    return jax.nn.relu(h)
+
+
+def shufflenet_s_apply(params: Params, x: jax.Array) -> jax.Array:
+    x = conv_gn_relu(params, "stem", x)
+    for i, (c, down) in enumerate(SHUFFLENET_UNITS):
+        p = f"su{i}"
+        if down:
+            # both branches processed, channels double: left = dw+pw path
+            left = depthwise3x3(x, params[f"{p}.ldw.w"])
+            left = avg_pool2(left)
+            left = group_norm(left, params[f"{p}.ldw_gn.gamma"],
+                              params[f"{p}.ldw_gn.beta"])
+            left = conv2d(left, params[f"{p}.lpw.w"], 1)
+            left = group_norm(left, params[f"{p}.lpw_gn.gamma"],
+                              params[f"{p}.lpw_gn.beta"])
+            left = jax.nn.relu(left)
+            right = _shuffle_branch(params, p, x, down=True)
+        else:
+            half = c // 2
+            left, xr = x[..., :half], x[..., half:]
+            right = _shuffle_branch(params, p, xr, down=False)
+        x = channel_shuffle(jnp.concatenate([left, right], axis=-1))
+    return linear(params, "head", global_avg_pool(x))
+
+
+# ---------------------------------------------------------------------------
+# Task heads: loss / train / eval (shared by all models)
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, y: jax.Array) -> jax.Array:
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def _to_dict(names: Sequence[str], flat: Sequence[jax.Array]) -> Params:
+    return dict(zip(names, flat))
+
+
+def make_train_step(apply_fn: Callable[[Params, jax.Array], jax.Array],
+                    names: Sequence[str], lr: float):
+    """(p0..pN, x, y) -> (p0'..pN', loss): fwd, bwd and the fused Pallas
+    SGD update traced as one function → one AOT HLO module."""
+
+    def loss_fn(flat: Tuple[jax.Array, ...], x, y):
+        return cross_entropy(apply_fn(_to_dict(names, flat), x), y)
+
+    def train_step(*args):
+        flat, x, y = args[:-2], args[-2], args[-1]
+        loss, grads = jax.value_and_grad(loss_fn)(flat, x, y)
+        new = tuple(sgd_update(p, g, lr) for p, g in zip(flat, grads))
+        return new + (loss,)
+
+    return train_step
+
+
+def make_eval_step(apply_fn: Callable[[Params, jax.Array], jax.Array],
+                   names: Sequence[str]):
+    """(p0..pN, x, y) -> (loss, n_correct)."""
+
+    def eval_step(*args):
+        flat, x, y = args[:-2], args[-2], args[-1]
+        logits = apply_fn(_to_dict(names, flat), x)
+        loss = cross_entropy(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y)
+                          .astype(jnp.float32))
+        return loss, correct
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+MODELS = {
+    "resnet_s": {
+        "apply": resnet_s_apply,
+        "specs": resnet_s_specs,
+        "input_shape": (32, 32, 1),
+        "num_classes": 35,
+        "paper_model": "resnet34",
+        "task": "speech",
+    },
+    "mobilenet_s": {
+        "apply": mobilenet_s_apply,
+        "specs": mobilenet_s_specs,
+        "input_shape": (32, 32, 3),
+        "num_classes": 64,
+        "paper_model": "mobilenet_v2",
+        "task": "vision",
+    },
+    "shufflenet_s": {
+        "apply": shufflenet_s_apply,
+        "specs": shufflenet_s_specs,
+        "input_shape": (32, 32, 3),
+        "num_classes": 64,
+        "paper_model": "shufflenet_v2",
+        "task": "vision",
+    },
+}
+
+BATCH = 16       # paper §5.1: minibatch 16
+LEARNING_RATE = 0.05  # paper §5.1
+
+
+def init_params(name: str, seed: int = 0) -> List[jax.Array]:
+    """Host-side init (tests only — Rust re-implements this from metadata)."""
+    import numpy as np
+    specs = MODELS[name]["specs"]()
+    rng = np.random.RandomState(seed)
+    out = []
+    for s in specs:
+        if s["init"] == "he":
+            std = (2.0 / s["fan_in"]) ** 0.5
+            out.append(jnp.asarray(
+                rng.randn(*s["shape"]).astype("float32") * std))
+        elif s["init"] == "ones":
+            out.append(jnp.ones(s["shape"], jnp.float32))
+        else:
+            out.append(jnp.zeros(s["shape"], jnp.float32))
+    return out

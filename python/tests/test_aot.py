@@ -1,0 +1,99 @@
+# AOT round-trip tests: the HLO text we ship must (a) parse back into an
+# XlaComputation, (b) execute on the CPU PJRT client with the metadata's
+# input layout, and (c) reproduce the eager train step bit-for-bit-ish.
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _have_artifacts():
+    return os.path.exists(os.path.join(ART, "meta", "index.json"))
+
+
+pytestmark = pytest.mark.skipif(
+    not _have_artifacts(), reason="run `make artifacts` first")
+
+
+def _load_meta(name):
+    with open(os.path.join(ART, "meta", f"{name}.json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_metadata_matches_specs(name):
+    meta = _load_meta(name)
+    specs = M.MODELS[name]["specs"]()
+    assert [s["name"] for s in meta["params"]] == [s["name"] for s in specs]
+    assert [s["shape"] for s in meta["params"]] == [s["shape"] for s in specs]
+    assert meta["train_outputs"] == len(specs) + 1
+    assert meta["batch"] == M.BATCH
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_hlo_text_parses(name):
+    meta = _load_meta(name)
+    for key in ("train", "eval"):
+        path = os.path.join(ART, meta["artifacts"][key])
+        text = open(path).read()
+        assert "ENTRY" in text
+        # parse back through the same XLA the rust crate links
+        comp = xc._xla.hlo_module_from_text(text)
+        assert comp is not None
+
+
+def test_jit_train_step_matches_eager():
+    """The jitted (== what gets AOT-lowered) train step must match the
+    eager step numerically. The authoritative HLO-text → PJRT → execute
+    round-trip is exercised by the Rust integration tests
+    (rust/tests/runtime_roundtrip.rs), which load these same artifacts."""
+    name = "shufflenet_s"
+    meta = _load_meta(name)
+    cfg = M.MODELS[name]
+    names = [s["name"] for s in meta["params"]]
+    params = M.init_params(name, seed=7)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal(meta["input_shape"]).astype("float32"))
+    y = jnp.asarray(rng.integers(0, meta["num_classes"],
+                                 size=meta["label_shape"]).astype("int32"))
+
+    step = M.make_train_step(cfg["apply"], names, meta["learning_rate"])
+    eager = step(*params, x, y)
+    jitted = jax.jit(step)(*params, x, y)
+    assert len(jitted) == meta["train_outputs"]
+    for got, want in zip(jitted, eager):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_index_lists_all_models():
+    with open(os.path.join(ART, "meta", "index.json")) as f:
+        idx = json.load(f)
+    assert set(idx["models"]) == set(M.MODELS)
+
+
+def test_workload_jsons_exist():
+    for f in ("workload_resnet34.json", "workload_mobilenet_v2.json",
+              "workload_shufflenet_v2.json", "workload_matmul512.json",
+              "workload_resnet_s.json", "workload_mobilenet_s.json",
+              "workload_shufflenet_s.json"):
+        path = os.path.join(ART, "meta", f)
+        assert os.path.exists(path), f
+        with open(path) as fh:
+            d = json.load(fh)
+        assert d["total_flops"] > 0
+
+
+def test_matmul512_artifact_parses():
+    text = open(os.path.join(ART, "matmul512.hlo.txt")).read()
+    assert "ENTRY" in text
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None

@@ -1,0 +1,280 @@
+# pytest: Pallas kernels vs pure-jnp refs — the CORE correctness signal.
+# hypothesis sweeps shapes; every kernel is checked forward AND backward
+# (the custom_vjp backward passes are themselves Pallas kernels).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype("float32"))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_forward_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(
+        K.matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (8, 8, 8), (128, 128, 128), (129, 7, 255),
+    (512, 512, 512), (16384, 144, 16), (3, 4096, 5),
+])
+def test_matmul_forward_shapes(m, k, n):
+    rng = np.random.default_rng(m * 7919 + k * 31 + n)
+    x, y = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(
+        K.matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(5, 7, 3), (64, 33, 17), (130, 130, 130)])
+def test_matmul_grad_matches_ref(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    x, y = _arr(rng, m, k), _arr(rng, k, n)
+
+    def f_pallas(a, b):
+        return jnp.sum(jnp.tanh(K.matmul(a, b)))
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.tanh(ref.matmul_ref(a, b)))
+
+    gp = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_zero_operand():
+    x = jnp.zeros((17, 9), jnp.float32)
+    y = jnp.ones((9, 5), jnp.float32)
+    np.testing.assert_array_equal(K.matmul(x, y), jnp.zeros((17, 5)))
+
+
+def test_matmul_identity():
+    rng = np.random.default_rng(0)
+    x = _arr(rng, 40, 40)
+    eye = jnp.eye(40, dtype=jnp.float32)
+    np.testing.assert_allclose(K.matmul(x, eye), x, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_jit_consistency():
+    rng = np.random.default_rng(3)
+    x, y = _arr(rng, 33, 45), _arr(rng, 45, 21)
+    np.testing.assert_allclose(
+        jax.jit(K.matmul)(x, y), K.matmul(x, y), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# depthwise3x3
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    h=st.integers(3, 18),
+    w=st.integers(3, 18),
+    c=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_forward_hypothesis(n, h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x, wt = _arr(rng, n, h, w, c), _arr(rng, 3, 3, c)
+    np.testing.assert_allclose(
+        K.depthwise3x3(x, wt), ref.depthwise3x3_ref(x, wt),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 3, 3, 1), (16, 32, 32, 64), (2, 8, 8, 128), (4, 5, 9, 130),
+])
+def test_depthwise_forward_shapes(shape):
+    rng = np.random.default_rng(sum(shape))
+    x = _arr(rng, *shape)
+    wt = _arr(rng, 3, 3, shape[-1])
+    np.testing.assert_allclose(
+        K.depthwise3x3(x, wt), ref.depthwise3x3_ref(x, wt),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("c", [1, 32, 130])
+def test_depthwise_grad_matches_ref(c):
+    rng = np.random.default_rng(c)
+    x, wt = _arr(rng, 2, 7, 6, c), _arr(rng, 3, 3, c)
+
+    def f(fn, a, b):
+        return jnp.sum(jnp.sin(fn(a, b)))
+
+    gp = jax.grad(lambda a, b: f(K.depthwise3x3, a, b), (0, 1))(x, wt)
+    gr = jax.grad(lambda a, b: f(ref.depthwise3x3_ref, a, b), (0, 1))(x, wt)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_depthwise_delta_kernel_is_identity():
+    """A weight of 1 at the center tap and 0 elsewhere must copy the input."""
+    rng = np.random.default_rng(0)
+    x = _arr(rng, 2, 6, 6, 10)
+    wt = jnp.zeros((3, 3, 10), jnp.float32).at[1, 1, :].set(1.0)
+    np.testing.assert_allclose(K.depthwise3x3(x, wt), x, rtol=1e-6, atol=1e-6)
+
+
+def test_depthwise_channels_independent():
+    """Perturbing channel j must not change any other channel's output."""
+    rng = np.random.default_rng(1)
+    x = _arr(rng, 1, 8, 8, 6)
+    wt = _arr(rng, 3, 3, 6)
+    base = np.asarray(K.depthwise3x3(x, wt))
+    x2 = x.at[..., 3].add(1.0)
+    out2 = np.asarray(K.depthwise3x3(x2, wt))
+    mask = np.ones(6, bool)
+    mask[3] = False
+    np.testing.assert_allclose(out2[..., mask], base[..., mask],
+                               rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out2[..., 3], base[..., 3])
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(4, 14),
+    w=st.integers(4, 14),
+    cin=st.integers(1, 12),
+    cout=st.integers(1, 20),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_forward_hypothesis(n, h, w, cin, cout, stride, seed):
+    rng = np.random.default_rng(seed)
+    x, wt = _arr(rng, n, h, w, cin), _arr(rng, 3, 3, cin, cout)
+    np.testing.assert_allclose(
+        K.conv2d(x, wt, stride), ref.conv2d_ref(x, wt, stride),
+        rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("k,stride", [(1, 1), (1, 2), (3, 1), (3, 2)])
+def test_conv2d_kernel_sizes(k, stride):
+    rng = np.random.default_rng(k * 10 + stride)
+    x = _arr(rng, 2, 16, 16, 8)
+    wt = _arr(rng, k, k, 8, 24)
+    np.testing.assert_allclose(
+        K.conv2d(x, wt, stride), ref.conv2d_ref(x, wt, stride),
+        rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_grad_matches_ref():
+    rng = np.random.default_rng(9)
+    x = _arr(rng, 2, 8, 8, 4)
+    wt = _arr(rng, 3, 3, 4, 6)
+
+    def f(fn, a, b):
+        return jnp.sum(jnp.tanh(fn(a, b, 2)))
+
+    gp = jax.grad(lambda a, b: f(K.conv2d, a, b), (0, 1))(x, wt)
+    gr = jax.grad(lambda a, b: f(ref.conv2d_ref, a, b), (0, 1))(x, wt)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_1x1_equals_matmul():
+    """A 1×1 conv is exactly a per-pixel matmul."""
+    rng = np.random.default_rng(5)
+    x = _arr(rng, 2, 6, 6, 7)
+    wt = _arr(rng, 1, 1, 7, 11)
+    out = K.conv2d(x, wt, 1)
+    expect = np.asarray(x).reshape(-1, 7) @ np.asarray(wt).reshape(7, 11)
+    np.testing.assert_allclose(
+        np.asarray(out).reshape(-1, 11), expect, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sgd_update
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    numel=st.integers(1, 200_000),
+    lr=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_hypothesis(numel, lr, seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.standard_normal(numel).astype("float32"))
+    g = jnp.asarray(rng.standard_normal(numel).astype("float32"))
+    np.testing.assert_allclose(
+        K.sgd_update(p, g, lr), ref.sgd_ref(p, g, lr), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(1,), (3, 3, 130), (3, 3, 4, 6), (65536,),
+                                   (65537,), (79187,)])
+def test_sgd_shapes(shape):
+    rng = np.random.default_rng(sum(shape))
+    p = jnp.asarray(rng.standard_normal(shape).astype("float32"))
+    g = jnp.asarray(rng.standard_normal(shape).astype("float32"))
+    out = K.sgd_update(p, g, 0.05)
+    assert out.shape == p.shape
+    np.testing.assert_allclose(out, ref.sgd_ref(p, g, 0.05),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_zero_lr_is_identity():
+    rng = np.random.default_rng(2)
+    p = jnp.asarray(rng.standard_normal(1000).astype("float32"))
+    g = jnp.asarray(rng.standard_normal(1000).astype("float32"))
+    np.testing.assert_array_equal(K.sgd_update(p, g, 0.0), p)
+
+
+def test_sgd_descends_quadratic():
+    """Iterating p -= lr·∇(½p²) must converge to 0."""
+    p = jnp.full((64,), 10.0, jnp.float32)
+    for _ in range(100):
+        p = K.sgd_update(p, p, 0.1)
+    assert float(jnp.max(jnp.abs(p))) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# analytical cost helpers (consumed by the SoC simulator)
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_cost_positive_and_scales():
+    c1 = K.matmul_cost(128, 128, 128)
+    c2 = K.matmul_cost(256, 128, 128)
+    assert c2["flops"] == 2 * c1["flops"]
+    assert c1["flops"] > 0 and c1["bytes"] > 0
+
+
+def test_depthwise_cost_memory_bound():
+    """Depthwise AI must be far below matmul AI — the paper's §3.1 premise."""
+    dw = K.depthwise_cost(16, 32, 32, 64)
+    mm = K.matmul_cost(512, 512, 512)
+    ai_dw = dw["flops"] / dw["bytes"]
+    ai_mm = mm["flops"] / mm["bytes"]
+    assert ai_dw < 10
+    assert ai_mm > 20 * ai_dw

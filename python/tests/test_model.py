@@ -1,0 +1,149 @@
+# L2 model tests: shapes, determinism, learning, and spec/apply agreement.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _batch(name, seed=0):
+    cfg = M.MODELS[name]
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(
+        (M.BATCH,) + cfg["input_shape"]).astype("float32"))
+    y = jnp.asarray(rng.integers(
+        0, cfg["num_classes"], size=(M.BATCH,)).astype("int32"))
+    return x, y
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_specs_sorted_and_unique(name):
+    specs = M.MODELS[name]["specs"]()
+    names = [s["name"] for s in specs]
+    assert names == sorted(names)
+    assert len(names) == len(set(names))
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_specs_valid_inits(name):
+    for s in M.MODELS[name]["specs"]():
+        assert s["init"] in ("he", "ones", "zeros")
+        if s["init"] == "he":
+            assert s["fan_in"] > 0
+        assert all(d > 0 for d in s["shape"])
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_apply_output_shape(name):
+    cfg = M.MODELS[name]
+    params = dict(zip([s["name"] for s in cfg["specs"]()],
+                      M.init_params(name)))
+    x, _ = _batch(name)
+    logits = cfg["apply"](params, x)
+    assert logits.shape == (M.BATCH, cfg["num_classes"])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_train_step_signature(name):
+    cfg = M.MODELS[name]
+    specs = cfg["specs"]()
+    names = [s["name"] for s in specs]
+    params = M.init_params(name)
+    x, y = _batch(name)
+    out = M.make_train_step(cfg["apply"], names, 0.05)(*params, x, y)
+    assert len(out) == len(specs) + 1
+    for new, old in zip(out[:-1], params):
+        assert new.shape == old.shape
+    assert out[-1].shape == ()
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_train_step_reduces_loss_on_fixed_batch(name):
+    cfg = M.MODELS[name]
+    names = [s["name"] for s in cfg["specs"]()]
+    ts = jax.jit(M.make_train_step(cfg["apply"], names, M.LEARNING_RATE))
+    params = M.init_params(name)
+    x, y = _batch(name)
+    loss0 = float(ts(*params, x, y)[-1])
+    p = params
+    for _ in range(12):
+        out = ts(*p, x, y)
+        p = list(out[:-1])
+    assert float(out[-1]) < 0.7 * loss0
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_eval_step_counts(name):
+    cfg = M.MODELS[name]
+    names = [s["name"] for s in cfg["specs"]()]
+    params = M.init_params(name)
+    x, y = _batch(name)
+    loss, correct = M.make_eval_step(cfg["apply"], names)(*params, x, y)
+    assert 0.0 <= float(correct) <= M.BATCH
+    assert float(correct) == int(float(correct))
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_train_step_deterministic(name):
+    cfg = M.MODELS[name]
+    names = [s["name"] for s in cfg["specs"]()]
+    ts = M.make_train_step(cfg["apply"], names, 0.05)
+    params = M.init_params(name)
+    x, y = _batch(name)
+    a = ts(*params, x, y)
+    b = ts(*params, x, y)
+    for u, v in zip(a, b):
+        np.testing.assert_array_equal(u, v)
+
+
+def test_cross_entropy_uniform_logits():
+    logits = jnp.zeros((8, 10), jnp.float32)
+    y = jnp.arange(8, dtype=jnp.int32) % 10
+    np.testing.assert_allclose(
+        M.cross_entropy(logits, y), np.log(10.0), rtol=1e-6)
+
+
+def test_cross_entropy_perfect_prediction():
+    y = jnp.arange(4, dtype=jnp.int32)
+    logits = jax.nn.one_hot(y, 5) * 100.0
+    assert float(M.cross_entropy(logits, y)) < 1e-3
+
+
+def test_group_norm_normalizes():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 4, 4, 16)).astype("float32") * 7 + 3)
+    out = M.group_norm(x, jnp.ones(16), jnp.zeros(16), groups=8)
+    m = float(jnp.mean(out))
+    v = float(jnp.var(out))
+    assert abs(m) < 0.1 and abs(v - 1.0) < 0.1
+
+
+def test_channel_shuffle_is_permutation():
+    x = jnp.arange(2 * 3 * 3 * 8, dtype=jnp.float32).reshape(2, 3, 3, 8)
+    out = M.channel_shuffle(x, 2)
+    assert sorted(np.asarray(out[0, 0, 0]).tolist()) == \
+        sorted(np.asarray(x[0, 0, 0]).tolist())
+    assert not np.array_equal(out, x)
+
+
+def test_avg_pool2_constant_preserved():
+    x = jnp.full((1, 8, 8, 3), 2.5, jnp.float32)
+    out = M.avg_pool2(x)
+    assert out.shape == (1, 4, 4, 3)
+    np.testing.assert_allclose(out, 2.5)
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_init_params_match_specs(name):
+    specs = M.MODELS[name]["specs"]()
+    params = M.init_params(name)
+    assert len(params) == len(specs)
+    for p, s in zip(params, specs):
+        assert list(p.shape) == s["shape"]
+        if s["init"] == "ones":
+            np.testing.assert_array_equal(p, np.ones(s["shape"], "float32"))
+        if s["init"] == "zeros":
+            np.testing.assert_array_equal(p, np.zeros(s["shape"], "float32"))

@@ -1,0 +1,99 @@
+# Workload-descriptor tests: these JSONs parameterize the Rust SoC
+# simulator, so their invariants ARE the paper's §3.1 premises.
+import pytest
+
+from compile import workloads as W
+
+
+@pytest.fixture(scope="module")
+def descs():
+    return {name: fn() for name, fn in W.ALL_PAPER.items()}
+
+
+def test_all_descriptors_well_formed(descs):
+    for d in descs.values():
+        assert d["total_flops"] > 0
+        assert d["total_bytes"] > 0
+        assert d["arithmetic_intensity"] > 0
+        assert 0.0 <= d["memory_bound_byte_fraction"] <= 1.0
+        for op in d["ops"]:
+            assert op["flops"] >= 0 and op["bytes"] > 0
+            assert op["kind"] in ("conv", "pw", "dw", "norm", "act",
+                                  "pool", "add", "linear", "update")
+
+
+def test_totals_are_op_sums(descs):
+    for d in descs.values():
+        assert abs(sum(o["flops"] for o in d["ops"]) - d["total_flops"]) < 1
+        assert abs(sum(o["bytes"] for o in d["ops"]) - d["total_bytes"]) < 1
+
+
+def test_resnet34_flops_ballpark(descs):
+    """ResNet-34 on 32×32×1 is ≈ 0.6-1.5 GFLOP fwd per sample ⇒ batch-16
+    train step (3× fwd) in the tens of GFLOPs."""
+    tf = descs["resnet34"]["total_flops"]
+    assert 1e10 < tf < 2e11
+
+
+def test_depthwise_models_are_more_memory_bound(descs):
+    """The §3.1 cache-thrashing argument: ShuffleNet/MobileNet move a far
+    larger fraction of their bytes through memory-bound ops than ResNet."""
+    rn = descs["resnet34"]
+    for name in ("mobilenet_v2", "shufflenet_v2"):
+        d = descs[name]
+        # more of their traffic flows through memory-bound ops...
+        assert (d["memory_bound_byte_fraction"]
+                > rn["memory_bound_byte_fraction"])
+        # ...and their overall arithmetic intensity is far lower
+        assert rn["arithmetic_intensity"] > 5 * d["arithmetic_intensity"]
+
+
+def test_resnet_has_highest_arithmetic_intensity(descs):
+    assert (descs["resnet34"]["arithmetic_intensity"]
+            > descs["mobilenet_v2"]["arithmetic_intensity"])
+    assert (descs["resnet34"]["arithmetic_intensity"]
+            > descs["shufflenet_v2"]["arithmetic_intensity"])
+
+
+def test_matmul512_exact(descs):
+    d = descs["matmul512"]
+    assert d["total_flops"] == 2 * 512**3
+    assert d["total_bytes"] == 4 * 3 * 512 * 512
+
+
+def test_param_counts_ballpark(descs):
+    # ResNet-34 ≈ 21M; MobileNetV2 ≈ 3-4M (600-way head); ShuffleNetV2 ≈ 2-3M
+    assert 15e6 < descs["resnet34"]["param_scalars"] < 30e6
+    assert 2e6 < descs["mobilenet_v2"]["param_scalars"] < 6e6
+    assert 1e6 < descs["shufflenet_v2"]["param_scalars"] < 5e6
+
+
+@pytest.mark.parametrize("name", ["resnet_s", "mobilenet_s", "shufflenet_s"])
+def test_small_variants_well_formed(name):
+    d = W.small_variant(name)
+    assert d["total_flops"] > 0
+    assert d["name"] == name
+    kinds = {o["kind"] for o in d["ops"]}
+    if name != "resnet_s":
+        assert "dw" in kinds, "depthwise models must contain dw ops"
+
+
+def test_small_variant_param_count_matches_model():
+    """The walker's parameter accounting must agree with the real model."""
+    import numpy as np
+    from compile import model as M
+    for name in ("resnet_s", "mobilenet_s", "shufflenet_s"):
+        d = W.small_variant(name)
+        true = sum(int(np.prod(s["shape"])) for s in M.MODELS[name]["specs"]())
+        # walker skips biases/gn affine in some ops; allow 10% slack
+        assert abs(d["param_scalars"] - true) / true < 0.10, name
+
+
+def test_bwd_ops_double_fwd(descs):
+    d = descs["resnet34"]
+    fwd = [o for o in d["ops"] if not o["name"].endswith("#bwd")
+           and o["name"] != "sgd_update"]
+    bwd = [o for o in d["ops"] if o["name"].endswith("#bwd")]
+    assert len(fwd) == len(bwd)
+    assert abs(sum(o["flops"] for o in bwd)
+               - 2 * sum(o["flops"] for o in fwd)) < 1

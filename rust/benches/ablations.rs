@@ -1,0 +1,117 @@
+//! Ablations on Swan's design choices (DESIGN.md §4 extras):
+//!
+//! 1. pruning OFF — does the controller thrash / land on dominated
+//!    choices under interference?
+//! 2. migration OFF — Swan picks the best idle choice but never moves:
+//!    what happens to effective step latency under interference?
+//! 3. cost-order variants — latency-only ordering vs the paper's
+//!    relinquish-cost order: PCMark impact of the downgrade target.
+
+use swan::sim::interference::SessionGenerator;
+use swan::sim::pcmark::score_impact_percent;
+use swan::sim::SimPhone;
+use swan::soc::device::{device, DeviceId};
+use swan::soc::exec_model::{estimate, ExecutionContext};
+use swan::swan::choice::enumerate_choices;
+use swan::swan::controller::{Controller, ControllerConfig};
+use swan::swan::profile::ChoiceProfile;
+use swan::swan::prune::prune_dominated;
+use swan::util::table::Table;
+use swan::workload::{load_or_builtin, WorkloadName};
+
+fn profiles(dev: DeviceId, wl: WorkloadName) -> Vec<ChoiceProfile> {
+    let d = device(dev);
+    let w = load_or_builtin(wl, "artifacts");
+    let ctx = ExecutionContext::exclusive(d.n_cores());
+    enumerate_choices(&d)
+        .into_iter()
+        .map(|ch| {
+            let est = estimate(&d, &w, &ch.cores, &ctx);
+            ChoiceProfile {
+                choice: ch,
+                latency_s: est.latency_s,
+                energy_j: est.energy_j,
+                power_w: est.avg_power_w,
+                steps_measured: 5,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Ablations — pruning, migration, cost order",
+        &["ablation", "metric", "value"],
+    );
+
+    // 1. pruning: chain length with/without, and whether the unpruned
+    // chain contains dominated choices (slower AND costlier)
+    for wl in [WorkloadName::Resnet34, WorkloadName::ShufflenetV2] {
+        let profs = profiles(DeviceId::Pixel3, wl);
+        let mut unpruned = profs.clone();
+        unpruned.sort_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap());
+        let pruned = prune_dominated(profs);
+        table.row(&[
+            format!("pruning ({wl:?})"),
+            "chain length pruned/unpruned".into(),
+            format!("{}/{}", pruned.len(), unpruned.len()),
+        ]);
+    }
+
+    // 2. migration off: mean effective step latency under an endless
+    // heavy session, migrating vs pinned-to-best
+    let d = device(DeviceId::Pixel3);
+    let w = load_or_builtin(WorkloadName::Resnet34, "artifacts");
+    let chain = prune_dominated(profiles(DeviceId::Pixel3, WorkloadName::Resnet34));
+    for migrate in [true, false] {
+        let mut phone = SimPhone::new(d.clone(), 21)
+            .with_sessions(SessionGenerator::new(22, 1e-6, 1e15, 1.0));
+        phone.idle(1.0);
+        let mut ctl = Controller::new(chain.clone(), ControllerConfig::default());
+        let mut total = 0.0;
+        let n = 60;
+        for _ in 0..n {
+            let cores = ctl.current().choice.cores.clone();
+            let est = phone.run_train_step(&w, &cores);
+            total += est.latency_s;
+            if migrate {
+                ctl.observe_step(est.latency_s);
+            }
+        }
+        table.row(&[
+            format!("migration={migrate}"),
+            "mean step latency under interference (s)".into(),
+            format!("{:.3}", total / n as f64),
+        ]);
+    }
+
+    // 3. cost order: downgrade-by-cost vs downgrade-by-latency-only —
+    // PCMark impact of the first downgrade target
+    let profs = profiles(DeviceId::OnePlus8, WorkloadName::Resnet34);
+    let d8 = device(DeviceId::OnePlus8);
+    let pruned = prune_dominated(profs.clone());
+    if pruned.len() > 1 {
+        let cost_target = &pruned[1]; // paper's order
+        let mut by_lat = profs;
+        by_lat.sort_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap());
+        let lat_target = &by_lat[1]; // next-fastest regardless of cost
+        table.row(&[
+            "cost-order downgrade".into(),
+            format!("target {} PCMark impact %", cost_target.choice.label()),
+            format!(
+                "{:.1}",
+                score_impact_percent(&d8, &cost_target.choice.cores)
+            ),
+        ]);
+        table.row(&[
+            "latency-order downgrade".into(),
+            format!("target {} PCMark impact %", lat_target.choice.label()),
+            format!(
+                "{:.1}",
+                score_impact_percent(&d8, &lat_target.choice.cores)
+            ),
+        ]);
+    }
+
+    table.emit().expect("emit");
+}

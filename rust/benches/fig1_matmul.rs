@@ -1,0 +1,32 @@
+//! Fig 1b: per-core 512×512 matmul latency across the five SoCs (+GPU),
+//! plus the REAL matmul512 artifact timed through PJRT on the host
+//! (the compute the simulator's numbers stand in for).
+
+use swan::runtime::{Registry, RuntimeClient};
+use swan::util::bench::BenchSet;
+
+fn main() {
+    // simulated per-core rows (the figure itself)
+    let (_rows, table) = swan::report::fig1b_matmul_rows();
+    table.emit().expect("emit");
+
+    // host-measured PJRT execution of the actual artifact
+    let mut set = BenchSet::new("fig1b_matmul_host").with_samples(3, 10);
+    if let Ok(reg) = Registry::discover() {
+        let client = RuntimeClient::cpu().expect("pjrt");
+        let exe = client
+            .compile_hlo_file(reg.dir.join("matmul512.hlo.txt"))
+            .expect("compile");
+        let x: Vec<f32> = (0..512 * 512).map(|i| (i % 13) as f32).collect();
+        let y: Vec<f32> = (0..512 * 512).map(|i| (i % 7) as f32).collect();
+        let xb = client.upload_f32(&x, &[512, 512]).unwrap();
+        let yb = client.upload_f32(&y, &[512, 512]).unwrap();
+        set.bench("pjrt_matmul512_host_cpu", || {
+            let out = exe.execute_b(&[&xb, &yb]).expect("exec");
+            std::hint::black_box(&out[0][0]);
+        });
+    } else {
+        println!("(artifacts not built; host measurement skipped)");
+    }
+    set.write_csv().expect("csv");
+}

@@ -1,0 +1,26 @@
+//! Fig 2a/2b: per-core-combination latency/energy/power on Pixel 3 for
+//! ResNet-34 (scales) and ShuffleNet (anti-scales) — plus the same sweep
+//! on every other device as supplementary rows.
+
+use swan::soc::device::DeviceId;
+use swan::workload::{load_or_builtin, WorkloadName};
+
+fn main() {
+    for (fig, wl) in [
+        ("2a", WorkloadName::Resnet34),
+        ("2b", WorkloadName::ShufflenetV2),
+    ] {
+        let w = load_or_builtin(wl, "artifacts");
+        let (_rows, table) =
+            swan::report::fig2_combo_rows(DeviceId::Pixel3, &w);
+        println!("-- Figure {fig} --");
+        table.emit().expect("emit");
+    }
+    // supplementary: the same sweep on every other device
+    for dev in [DeviceId::S10e, DeviceId::OnePlus8, DeviceId::TabS6,
+                DeviceId::Mi10] {
+        let w = load_or_builtin(WorkloadName::ShufflenetV2, "artifacts");
+        let (_rows, table) = swan::report::fig2_combo_rows(dev, &w);
+        table.emit().expect("emit");
+    }
+}

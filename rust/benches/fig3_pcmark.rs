@@ -1,0 +1,6 @@
+//! Fig 3: PCMark score with vs without background (greedy) training.
+
+fn main() {
+    let (_rows, table) = swan::report::fig3_rows("artifacts");
+    table.emit().expect("emit");
+}

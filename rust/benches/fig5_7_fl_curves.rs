@@ -1,0 +1,106 @@
+//! Figs 5/6/7: FL accuracy-vs-time and clients-online-per-round series
+//! for ShuffleNet / MobileNet / ResNet-34, Swan vs baseline.
+//! Bench-scale; CSV series land in target/reports/.
+
+use swan::fl::{FlArm, FlConfig, FlSim};
+use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
+use swan::train::data::SyntheticDataset;
+use swan::workload::{load_or_builtin, WorkloadName};
+
+fn main() {
+    let Ok(reg) = Registry::discover() else {
+        println!("artifacts not built; run `make artifacts`");
+        return;
+    };
+    let client = RuntimeClient::cpu().expect("pjrt");
+    let cfg = FlConfig {
+        seed: 9,
+        raw_traces: 8,
+        quality_traces: 2,
+        clients_per_round: 3,
+        local_steps: 3,
+        rounds: 12,
+        eval_every: 2,
+        eval_batches: 2,
+        daily_credit_j: 1_500.0, // tight budget: makes Fig b visible
+        server_overhead_s: 2.0,
+    };
+    std::fs::create_dir_all("target/reports").unwrap();
+    for (fig, model, paper) in [
+        ("fig5", "shufflenet_s", WorkloadName::ShufflenetV2),
+        ("fig6", "mobilenet_s", WorkloadName::MobilenetV2),
+        ("fig7", "resnet_s", WorkloadName::Resnet34),
+    ] {
+        let exec = ModelExecutor::load(&client, &reg.dir, model).unwrap();
+        let workload = load_or_builtin(paper, "artifacts");
+        println!("== {fig}: {model} ==");
+        for arm in [FlArm::Swan, FlArm::Baseline] {
+            let ds = if exec.meta.task == "speech" {
+                SyntheticDataset::speech(cfg.seed)
+            } else {
+                SyntheticDataset::vision(cfg.seed)
+            };
+            let mut sim =
+                FlSim::new(cfg.clone(), arm, ds, &workload).unwrap();
+            let out = sim.run(&exec).unwrap();
+            println!(
+                "  {:9} vt={:7.1}s energy={:8.0}J best_acc={:.3} online(last)={}",
+                arm.name(),
+                out.total_time_s,
+                out.total_energy_j,
+                out.best_accuracy(),
+                out.online_per_round.last().map(|x| x.1).unwrap_or(0)
+            );
+            std::fs::write(
+                format!("target/reports/{fig}a_{}.csv", arm.name()),
+                out.accuracy_curve.to_csv("accuracy"),
+            )
+            .unwrap();
+            let mut online = String::from("round,online\n");
+            for (r, n) in &out.online_per_round {
+                online.push_str(&format!("{r},{n}\n"));
+            }
+            std::fs::write(
+                format!("target/reports/{fig}b_{}_shorthorizon.csv", arm.name()),
+                online,
+            )
+            .unwrap();
+
+            // Fig b proper: week-scale availability horizon (systems
+            // only — availability is independent of model values)
+            let ds2 = if exec.meta.task == "speech" {
+                SyntheticDataset::speech(cfg.seed)
+            } else {
+                SyntheticDataset::vision(cfg.seed)
+            };
+            let horizon_cfg = FlConfig {
+                quality_traces: 4,
+                raw_traces: 16,
+                clients_per_round: 20,
+                daily_credit_j: 400.0,
+                ..cfg.clone()
+            };
+            let mut sim2 =
+                FlSim::new(horizon_cfg, arm, ds2, &workload).unwrap();
+            let out2 = sim2.run_systems_only(4000);
+            let mut online2 = String::from("round,online\n");
+            for (r, n) in &out2.online_per_round {
+                online2.push_str(&format!("{r},{n}\n"));
+            }
+            std::fs::write(
+                format!("target/reports/{fig}b_{}.csv", arm.name()),
+                online2,
+            )
+            .unwrap();
+            let first = out2.online_per_round.first().map(|x| x.1).unwrap_or(0);
+            let last = out2.online_per_round.last().map(|x| x.1).unwrap_or(0);
+            println!(
+                "  {:9} fig-b horizon: online {} -> {} over {} rounds",
+                arm.name(),
+                first,
+                last,
+                out2.rounds_run
+            );
+        }
+    }
+}

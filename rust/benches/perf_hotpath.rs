@@ -1,0 +1,70 @@
+//! §Perf: the L3 hot paths, measured.
+//!
+//! - real PJRT train/eval step wall time per model (the end-to-end
+//!   numerics cost the FL harness pays per selected client);
+//! - parameter upload/download (FedAvg's per-round host round-trip);
+//! - the pure-simulation hot loop (exec_model::estimate), which every
+//!   explorer/controller/FL-policy call goes through;
+//! - FedAvg aggregation.
+
+use swan::fl::fedavg;
+use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
+use swan::soc::device::{device, DeviceId};
+use swan::soc::exec_model::{estimate, ExecutionContext};
+use swan::train::data::SyntheticDataset;
+use swan::util::bench::BenchSet;
+use swan::workload::{load_or_builtin, WorkloadName};
+
+fn main() {
+    let mut set = BenchSet::new("perf_hotpath").with_samples(3, 12);
+
+    // pure-sim estimate (called O(choices × steps) everywhere)
+    let d = device(DeviceId::S10e);
+    let w = load_or_builtin(WorkloadName::ShufflenetV2, "artifacts");
+    let ctx = ExecutionContext::exclusive(d.n_cores());
+    set.bench("exec_model_estimate_337op", || {
+        std::hint::black_box(estimate(&d, &w, &[4, 5, 6, 7], &ctx));
+    });
+
+    let Ok(reg) = Registry::discover() else {
+        println!("(artifacts not built; runtime benches skipped)");
+        set.write_csv().unwrap();
+        return;
+    };
+    let client = RuntimeClient::cpu().expect("pjrt");
+    for model in ["resnet_s", "mobilenet_s", "shufflenet_s"] {
+        let exec = ModelExecutor::load(&client, &reg.dir, model).unwrap();
+        let ds = if exec.meta.task == "speech" {
+            SyntheticDataset::speech(1)
+        } else {
+            SyntheticDataset::vision(1)
+        };
+        let part = ds.partition(0);
+        let (x, y) = ds.batch(&part, 0, exec.meta.batch);
+        let mut state = exec.init_state(0).unwrap();
+        set.bench(&format!("pjrt_train_step_{model}"), || {
+            let loss = exec.train_step(&mut state, &x, &y).unwrap();
+            std::hint::black_box(loss);
+        });
+        set.bench(&format!("pjrt_eval_step_{model}"), || {
+            let out = exec.eval_step(&state, &x, &y).unwrap();
+            std::hint::black_box(out);
+        });
+        set.bench(&format!("params_download_{model}"), || {
+            let host = exec.state_to_host(&state).unwrap();
+            std::hint::black_box(host.len());
+        });
+        let host = exec.state_to_host(&state).unwrap();
+        set.bench(&format!("params_upload_{model}"), || {
+            let s = exec.state_from_host(&host).unwrap();
+            std::hint::black_box(s.steps);
+        });
+        // FedAvg over 5 clients' parameters
+        let updates: Vec<(Vec<Vec<f32>>, f64)> =
+            (0..5).map(|i| (host.clone(), 1.0 + i as f64)).collect();
+        set.bench(&format!("fedavg_5clients_{model}"), || {
+            std::hint::black_box(fedavg(&updates).len());
+        });
+    }
+    set.write_csv().unwrap();
+}

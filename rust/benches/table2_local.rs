@@ -1,0 +1,9 @@
+//! Table 2: local speedup + energy efficiency over the greedy baseline,
+//! 5 devices × 3 models, via the full §4.2 exploration pipeline.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let (_rows, table) = swan::report::table2_rows("artifacts");
+    table.emit().expect("emit");
+    println!("(computed in {:.2}s)", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,9 @@
+//! Table 3: PCMark impact of background training, baseline vs Swan
+//! (controller migrating under a live PCMark session).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let (_rows, table) = swan::report::table3_rows("artifacts");
+    table.emit().expect("emit");
+    println!("(computed in {:.2}s)", t0.elapsed().as_secs_f64());
+}

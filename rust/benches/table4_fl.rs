@@ -1,0 +1,69 @@
+//! Table 4: FL time-to-accuracy speedup and energy efficiency for the
+//! three tasks. Bench-scale configuration (small fleet, short horizon)
+//! — the full run is `cargo run --release --example federated`.
+
+use swan::fl::{FlArm, FlConfig, FlSim};
+use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
+use swan::train::data::SyntheticDataset;
+use swan::util::table::{fmt_ratio, Table};
+use swan::workload::{load_or_builtin, WorkloadName};
+
+fn main() {
+    let Ok(reg) = Registry::discover() else {
+        println!("artifacts not built; run `make artifacts`");
+        return;
+    };
+    let client = RuntimeClient::cpu().expect("pjrt");
+    let cfg = FlConfig {
+        seed: 5,
+        raw_traces: 8,
+        quality_traces: 2,
+        clients_per_round: 3,
+        local_steps: 3,
+        rounds: 10,
+        eval_every: 2,
+        eval_batches: 2,
+        daily_credit_j: 2_000.0,
+        server_overhead_s: 2.0,
+    };
+    let mut table = Table::new(
+        "Table 4 — FL time-to-accuracy and energy (bench scale)",
+        &["model", "tta_speedup", "energy_eff", "swan_best_acc", "base_best_acc"],
+    );
+    for (model, paper) in [
+        ("mobilenet_s", WorkloadName::MobilenetV2),
+        ("shufflenet_s", WorkloadName::ShufflenetV2),
+        ("resnet_s", WorkloadName::Resnet34),
+    ] {
+        let exec = ModelExecutor::load(&client, &reg.dir, model).unwrap();
+        let workload = load_or_builtin(paper, "artifacts");
+        let mut run = |arm: FlArm| {
+            let ds = if exec.meta.task == "speech" {
+                SyntheticDataset::speech(cfg.seed)
+            } else {
+                SyntheticDataset::vision(cfg.seed)
+            };
+            let mut sim =
+                FlSim::new(cfg.clone(), arm, ds, &workload).unwrap();
+            sim.run(&exec).unwrap()
+        };
+        let swan = run(FlArm::Swan);
+        let base = run(FlArm::Baseline);
+        let target = swan.best_accuracy().min(base.best_accuracy());
+        let tta = match (
+            swan.time_to_accuracy(target),
+            base.time_to_accuracy(target),
+        ) {
+            (Some(a), Some(b)) => b / a.max(1.0),
+            _ => f64::NAN,
+        };
+        table.row(&[
+            model.to_string(),
+            fmt_ratio(tta),
+            fmt_ratio(base.total_energy_j / swan.total_energy_j.max(1.0)),
+            format!("{:.3}", swan.best_accuracy()),
+            format!("{:.3}", base.best_accuracy()),
+        ]);
+    }
+    table.emit().expect("emit");
+}

@@ -1,0 +1,98 @@
+//! The PyTorch greedy baseline (§5.1).
+//!
+//! "The baseline uses the execution choice defined by PyTorch that
+//! greedily picks as many threads as there are low-latency cores" — a
+//! static policy: all big+prime cores, no exploration, no migration,
+//! oblivious to interference, battery and temperature (beyond the same
+//! idle-admission gate real FL clients use).
+
+use crate::sim::SimPhone;
+use crate::soc::device::Device;
+use crate::swan::choice::ExecutionChoice;
+use crate::workload::Workload;
+
+pub struct GreedyBaseline {
+    choice: ExecutionChoice,
+    workload: Workload,
+}
+
+impl GreedyBaseline {
+    pub fn new(device: &Device, workload: Workload) -> Self {
+        let cores = device.low_latency_cores();
+        GreedyBaseline {
+            choice: ExecutionChoice::new(device, cores),
+            workload,
+        }
+    }
+
+    pub fn choice(&self) -> &ExecutionChoice {
+        &self.choice
+    }
+
+    /// Baseline admission: like real FL deployments, train when idle and
+    /// battery is healthy — but never adapt the core set.
+    pub fn is_active(&self, phone: &mut SimPhone, min_battery: u32) -> bool {
+        phone.admits_training(min_battery)
+    }
+
+    /// One training step on the static greedy choice.
+    pub fn run_local_step<F: FnMut()>(
+        &self,
+        phone: &mut SimPhone,
+        mut train_fn: F,
+    ) -> f64 {
+        let est = phone.run_train_step(&self.workload, &self.choice.cores);
+        train_fn();
+        est.latency_s
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+    use crate::workload::{builtin, WorkloadName};
+
+    #[test]
+    fn greedy_uses_all_low_latency_cores() {
+        for id in [DeviceId::Pixel3, DeviceId::S10e, DeviceId::OnePlus8] {
+            let d = device(id);
+            let b = GreedyBaseline::new(&d, builtin(WorkloadName::Resnet34));
+            assert_eq!(b.choice().cores, d.low_latency_cores());
+            assert_eq!(b.choice().n_little(), 0);
+        }
+    }
+
+    #[test]
+    fn greedy_never_migrates() {
+        let d = device(DeviceId::Pixel3);
+        let mut phone = SimPhone::new(d.clone(), 11);
+        let b = GreedyBaseline::new(&d, builtin(WorkloadName::ShufflenetV2));
+        let before = b.choice().label();
+        for _ in 0..50 {
+            b.run_local_step(&mut phone, || {});
+        }
+        assert_eq!(b.choice().label(), before);
+    }
+
+    #[test]
+    fn greedy_slower_than_single_core_on_shufflenet() {
+        // the §3.1 pathology the baseline walks into
+        let d = device(DeviceId::S10e);
+        let mut p1 = SimPhone::new(d.clone(), 1);
+        let mut p2 = SimPhone::new(d.clone(), 1);
+        let w = builtin(WorkloadName::ShufflenetV2);
+        let b = GreedyBaseline::new(&d, w.clone());
+        let t_greedy = b.run_local_step(&mut p1, || {});
+        let est = p2.run_train_step(&w, &[6]); // single prime core
+        assert!(
+            t_greedy > 2.0 * est.latency_s,
+            "greedy {t_greedy} vs single prime {}",
+            est.latency_s
+        );
+    }
+}

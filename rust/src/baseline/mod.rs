@@ -1,0 +1,5 @@
+//! Baseline execution policies Swan is compared against.
+
+pub mod greedy;
+
+pub use greedy::GreedyBaseline;

@@ -1,0 +1,314 @@
+//! The `swan` binary's subcommands — the launcher over the whole stack.
+//!
+//! ```text
+//! swan devices                       list the simulated device fleet
+//! swan explore --device s10e --model shufflenet_v2
+//! swan train   --model shufflenet_s --device pixel3 --steps 20
+//! swan pcmark  [--artifacts artifacts]
+//! swan fl      --model shufflenet_s --rounds 20 --clients 3
+//! swan traces  --users 4
+//! swan report  table2|table3|fig1|fig2|fig3
+//! ```
+
+use crate::report;
+use crate::runtime::{ModelExecutor, Registry, RuntimeClient};
+use crate::sim::SimPhone;
+use crate::soc::device::{all_devices, device, DeviceId};
+use crate::swan::{SwanConfig, SwanEngine};
+use crate::train::data::SyntheticDataset;
+use crate::util::table::Table;
+use crate::workload::{load_or_builtin, WorkloadName};
+
+use super::{parse_args, usage, Args, OptSpec};
+
+fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default,
+        is_switch: false,
+    }
+}
+
+pub fn run_main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            print_help();
+            return Ok(());
+        }
+    };
+    match cmd {
+        "devices" => cmd_devices(),
+        "explore" => cmd_explore(&rest),
+        "train" => cmd_train(&rest),
+        "pcmark" => cmd_pcmark(),
+        "fl" => cmd_fl(&rest),
+        "traces" => cmd_traces(&rest),
+        "report" => cmd_report(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "swan — neural engine for efficient DNN training on smartphone SoCs\n\
+         \n\
+         subcommands:\n\
+         \x20 devices   list the simulated device fleet\n\
+         \x20 explore   run §4.2 exploration on one device/model\n\
+         \x20 train     real local training under Swan scheduling\n\
+         \x20 pcmark    Fig-3/Table-3 user-experience evaluation\n\
+         \x20 fl        federated-learning simulation (§5.3)\n\
+         \x20 traces    generate + preprocess GreenHub-style traces\n\
+         \x20 report    regenerate a paper table/figure\n"
+    );
+}
+
+fn cmd_devices() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "simulated devices",
+        &["key", "name", "soc", "cores", "cache_MB", "bw_GB/s", "battery_mAh"],
+    );
+    for d in all_devices() {
+        let mut topo = String::new();
+        for k in [
+            crate::soc::core::CoreKind::Little,
+            crate::soc::core::CoreKind::Big,
+            crate::soc::core::CoreKind::Prime,
+        ] {
+            let n = d.cores_of_kind(k).len();
+            if n > 0 {
+                topo.push_str(&format!("{n}{} ", k));
+            }
+        }
+        t.row(&[
+            d.id.key().to_string(),
+            d.id.name().to_string(),
+            d.soc.to_string(),
+            topo.trim().to_string(),
+            format!("{:.1}", d.shared_cache_bytes / 1e6),
+            format!("{:.1}", d.mem_bw_bytes / 1e9),
+            format!("{:.0}", d.battery_mah),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn device_arg(args: &Args) -> anyhow::Result<DeviceId> {
+    let key = args.get_str("device", "pixel3");
+    DeviceId::parse(&key)
+        .ok_or_else(|| anyhow::anyhow!("unknown device '{key}'"))
+}
+
+fn cmd_explore(rest: &[String]) -> anyhow::Result<()> {
+    let specs = [
+        opt("device", "device key", Some("pixel3")),
+        opt("model", "workload (resnet34|mobilenet_v2|shufflenet_v2)", Some("shufflenet_v2")),
+        opt("steps", "benchmark steps per choice", Some("5")),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let dev = device_arg(&args)?;
+    let wl = WorkloadName::parse(&args.get_str("model", ""))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let workload = load_or_builtin(wl, "artifacts");
+    let mut phone = SimPhone::new(device(dev), 1);
+    let cfg = SwanConfig {
+        explore_steps: args.get_usize("steps", 5)?,
+        ..SwanConfig::default()
+    };
+    let engine = SwanEngine::explore_and_build(&mut phone, workload, cfg);
+    let mut t = Table::new(
+        &format!("profiles on {}", dev.name()),
+        &["choice", "latency_s", "energy_j", "power_w", "in_chain"],
+    );
+    let kept: Vec<String> =
+        engine.chain().iter().map(|p| p.choice.label()).collect();
+    for p in &engine.profiles {
+        t.row(&[
+            p.choice.label(),
+            format!("{:.3}", p.latency_s),
+            format!("{:.3}", p.energy_j),
+            format!("{:.2}", p.power_w),
+            kept.contains(&p.choice.label()).to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!("{}", usage("explore", "explore execution choices", &specs));
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
+    let specs = [
+        opt("device", "device key", Some("pixel3")),
+        opt("model", "trainable model", Some("shufflenet_s")),
+        opt("steps", "training steps", Some("20")),
+        opt("seed", "rng seed", Some("0")),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let dev = device_arg(&args)?;
+    let model = args.get_str("model", "shufflenet_s");
+    let steps = args.get_usize("steps", 20)?;
+    let seed = args.get_u64("seed", 0)?;
+
+    let reg = Registry::discover()?;
+    let client = RuntimeClient::cpu()?;
+    let exec = ModelExecutor::load(&client, &reg.dir, &model)?;
+    let paper = WorkloadName::paper_scale_of(
+        WorkloadName::parse(&model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model"))?,
+    );
+    let workload = load_or_builtin(paper, "artifacts");
+
+    let mut phone = SimPhone::new(device(dev), seed);
+    let mut engine = SwanEngine::explore_and_build(
+        &mut phone,
+        workload,
+        SwanConfig::default(),
+    );
+    let ds = if exec.meta.task == "speech" {
+        SyntheticDataset::speech(seed)
+    } else {
+        SyntheticDataset::vision(seed)
+    };
+    let part = ds.partition(0);
+    let mut state = exec.init_state(seed)?;
+    for step in 0..steps {
+        let (x, y) = ds.batch(&part, step, exec.meta.batch);
+        let mut loss = f32::NAN;
+        let rep = engine.run_local_step(&mut phone, || {
+            loss = exec.train_step(&mut state, &x, &y).expect("step");
+        });
+        println!(
+            "step {step:3}: loss {loss:.4} choice {} sim {:.0} ms",
+            rep.choice,
+            rep.latency_s * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pcmark() -> anyhow::Result<()> {
+    let (_r, fig3) = report::fig3_rows("artifacts");
+    fig3.emit()?;
+    let (_r, t3) = report::table3_rows("artifacts");
+    t3.emit()?;
+    Ok(())
+}
+
+fn cmd_fl(rest: &[String]) -> anyhow::Result<()> {
+    let specs = [
+        opt("model", "trainable model", Some("shufflenet_s")),
+        opt("rounds", "FL rounds", Some("20")),
+        opt("clients", "clients per round", Some("3")),
+        opt("steps", "local steps", Some("3")),
+        opt("traces", "quality traces (×24 clients)", Some("2")),
+        opt("arm", "swan|baseline|both", Some("both")),
+        opt("seed", "rng seed", Some("17")),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let model = args.get_str("model", "shufflenet_s");
+    let reg = Registry::discover()?;
+    let client = RuntimeClient::cpu()?;
+    let exec = ModelExecutor::load(&client, &reg.dir, &model)?;
+    let cfg = crate::fl::FlConfig {
+        seed: args.get_u64("seed", 17)?,
+        raw_traces: args.get_usize("traces", 2)? * 4,
+        quality_traces: args.get_usize("traces", 2)?,
+        clients_per_round: args.get_usize("clients", 3)?,
+        local_steps: args.get_usize("steps", 3)?,
+        rounds: args.get_usize("rounds", 20)?,
+        eval_every: 2,
+        eval_batches: 2,
+        daily_credit_j: 2_000.0,
+        server_overhead_s: 2.0,
+    };
+    let paper = WorkloadName::paper_scale_of(
+        WorkloadName::parse(&model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model"))?,
+    );
+    let workload = load_or_builtin(paper, "artifacts");
+    let arm_s = args.get_str("arm", "both");
+    let arms: Vec<crate::fl::FlArm> = match arm_s.as_str() {
+        "swan" => vec![crate::fl::FlArm::Swan],
+        "baseline" => vec![crate::fl::FlArm::Baseline],
+        _ => vec![crate::fl::FlArm::Swan, crate::fl::FlArm::Baseline],
+    };
+    for arm in arms {
+        let ds = if exec.meta.task == "speech" {
+            SyntheticDataset::speech(cfg.seed)
+        } else {
+            SyntheticDataset::vision(cfg.seed)
+        };
+        let mut sim = crate::fl::FlSim::new(cfg.clone(), arm, ds, &workload)?;
+        let out = sim.run(&exec)?;
+        println!(
+            "[{}] vt={:.1}h energy={:.1}kJ best_acc={:.3} rounds={}",
+            arm.name(),
+            out.total_time_s / 3600.0,
+            out.total_energy_j / 1e3,
+            out.best_accuracy(),
+            out.rounds_run
+        );
+    }
+    Ok(())
+}
+
+fn cmd_traces(rest: &[String]) -> anyhow::Result<()> {
+    let specs = [opt("users", "raw users to synthesize", Some("8"))];
+    let args = parse_args(rest, &specs)?;
+    let n = args.get_usize("users", 8)?;
+    let gen = crate::trace::greenhub::TraceGenerator::default();
+    let (kept, stats) =
+        crate::trace::filter::select_quality_traces(gen.population(1, n));
+    println!(
+        "generated {n} users → {} pass A.2 filters \
+         (period {}, freq {}, gap {}, long-gaps {})",
+        stats.pass,
+        stats.fail_period,
+        stats.fail_frequency,
+        stats.fail_max_gap,
+        stats.fail_long_gaps
+    );
+    let resampled: Vec<_> = kept
+        .iter()
+        .map(|t| crate::trace::resample::resample_trace(t).unwrap())
+        .collect();
+    let augmented = crate::trace::augment::augment_shifts(&resampled);
+    println!(
+        "resampled to 10-min grid, 23×1h shift augmentation → {} clients",
+        augmented.len()
+    );
+    Ok(())
+}
+
+fn cmd_report(rest: &[String]) -> anyhow::Result<()> {
+    let which = rest.first().map(String::as_str).unwrap_or("table2");
+    match which {
+        "fig1" | "fig1b" => report::fig1b_matmul_rows().1.emit()?,
+        "fig2" | "fig2a" => {
+            let w = load_or_builtin(WorkloadName::Resnet34, "artifacts");
+            report::fig2_combo_rows(DeviceId::Pixel3, &w).1.emit()?
+        }
+        "fig2b" => {
+            let w = load_or_builtin(WorkloadName::ShufflenetV2, "artifacts");
+            report::fig2_combo_rows(DeviceId::Pixel3, &w).1.emit()?
+        }
+        "fig3" => report::fig3_rows("artifacts").1.emit()?,
+        "table2" => report::table2_rows("artifacts").1.emit()?,
+        "table3" => report::table3_rows("artifacts").1.emit()?,
+        other => anyhow::bail!(
+            "unknown report '{other}' (fig1|fig2|fig2b|fig3|table2|table3)"
+        ),
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline set).
+//!
+//! Supports `swan <subcommand> [--flag value] [--switch]` with typed
+//! accessors, defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for one subcommand.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        Ok(self.get_usize(name, default as usize)? as u64)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Parse a token stream against a spec list.
+pub fn parse_args(
+    tokens: &[String],
+    specs: &[OptSpec],
+) -> anyhow::Result<Args> {
+    let mut args = Args::default();
+    for spec in specs {
+        if let (Some(d), false) = (spec.default, spec.is_switch) {
+            args.values.insert(spec.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < tokens.len() {
+        let t = &tokens[i];
+        if let Some(name) = t.strip_prefix("--") {
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}"))?;
+            if spec.is_switch {
+                if inline.is_some() {
+                    anyhow::bail!("--{name} is a switch and takes no value");
+                }
+                args.switches.push(name.to_string());
+            } else {
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        tokens
+                            .get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                    }
+                };
+                args.values.insert(name.to_string(), value);
+            }
+        } else {
+            args.positional.push(t.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("swan {cmd} — {about}\n\noptions:\n");
+    for s in specs {
+        let tail = if s.is_switch {
+            String::new()
+        } else if let Some(d) = s.default {
+            format!(" <val> (default: {d})")
+        } else {
+            " <val>".to_string()
+        };
+        out.push_str(&format!("  --{}{:<24} {}\n", s.name, tail, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "device", help: "device id", default: Some("pixel3"), is_switch: false },
+            OptSpec { name: "steps", help: "step count", default: Some("10"), is_switch: false },
+            OptSpec { name: "verbose", help: "more output", default: None, is_switch: true },
+        ]
+    }
+
+    fn toks(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse_args(&[], &specs()).unwrap();
+        assert_eq!(a.get("device"), Some("pixel3"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn parses_values_and_switches() {
+        let a = parse_args(
+            &toks(&["--device", "s10e", "--verbose", "--steps=25", "pos"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.get("device"), Some("s10e"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 25);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(parse_args(&toks(&["--nope", "1"]), &specs()).is_err());
+        assert!(parse_args(&toks(&["--device"]), &specs()).is_err());
+        assert!(parse_args(&toks(&["--verbose=1"]), &specs()).is_err());
+        let a = parse_args(&toks(&["--steps", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = usage("train", "run local training", &specs());
+        assert!(u.contains("--device"));
+        assert!(u.contains("default: pixel3"));
+    }
+}
+
+pub mod commands;
+pub use commands::run_main;

@@ -1,0 +1,125 @@
+//! One FL client: a traced device + energy loan + data partition handle.
+
+use crate::soc::device::{Device, DeviceId};
+use crate::trace::resample::ResampledTrace;
+use crate::train::data::Partition;
+
+use super::energy_loan::EnergyLoan;
+
+/// Minimum traced battery level (%) for participation when not charging
+/// (the same §4.1 gate local admission uses).
+pub const MIN_LEVEL_PCT: f64 = 20.0;
+
+pub struct FlClient {
+    pub id: usize,
+    pub device: Device,
+    pub trace: ResampledTrace,
+    pub loan: EnergyLoan,
+    pub partition: Partition,
+    /// Cumulative simulated seconds spent training (metrics).
+    pub train_time_s: f64,
+    /// Rounds this client participated in.
+    pub participations: usize,
+}
+
+impl FlClient {
+    pub fn new(
+        id: usize,
+        device: Device,
+        trace: ResampledTrace,
+        partition: Partition,
+        daily_credit_j: f64,
+    ) -> Self {
+        let loan = EnergyLoan::new(device.battery_mah, daily_credit_j);
+        FlClient {
+            id,
+            device,
+            trace,
+            loan,
+            partition,
+            train_time_s: 0.0,
+            participations: 0,
+        }
+    }
+
+    pub fn device_id(&self) -> DeviceId {
+        self.device.id
+    }
+
+    /// Paper §4.1/§5.1 availability: (charging ∨ level ≥ minimum) ∧ the
+    /// energy loan hasn't exhausted the budget. `now_s` is virtual time,
+    /// wrapped around the trace length.
+    pub fn online(&mut self, now_s: f64) -> bool {
+        let t = self.trace.wrap(now_s);
+        let charging = self.trace.is_charging(t);
+        self.loan.tick(now_s, charging);
+        let level_pct = self.trace.level_at(t);
+        let gate = charging || level_pct >= MIN_LEVEL_PCT;
+        gate && self.loan.allows_participation(level_pct / 100.0)
+    }
+
+    /// Record one participation's systems cost.
+    pub fn charge_participation(&mut self, time_s: f64, energy_j: f64) {
+        self.train_time_s += time_s;
+        self.loan.borrow(energy_j);
+        self.participations += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+    use crate::trace::greenhub::TraceGenerator;
+    use crate::trace::resample::resample_trace;
+    use crate::train::data::SyntheticDataset;
+
+    fn client(credit: f64) -> FlClient {
+        let tr =
+            resample_trace(&TraceGenerator::default().generate(1, 0)).unwrap();
+        let ds = SyntheticDataset::vision(0);
+        FlClient::new(0, device(DeviceId::Pixel3), tr, ds.partition(0), credit)
+    }
+
+    #[test]
+    fn availability_varies_over_a_day() {
+        let mut c = client(50_000.0);
+        let mut states = Vec::new();
+        for i in 0..144 {
+            states.push(c.online(i as f64 * 600.0));
+        }
+        assert!(states.iter().any(|&s| s), "never online in a day");
+    }
+
+    #[test]
+    fn heavy_borrowing_takes_client_offline() {
+        let mut c = client(1_000.0); // tiny daily credit
+        // find an online moment
+        let mut t = 0.0;
+        while !c.online(t) {
+            t += 600.0;
+        }
+        c.charge_participation(100.0, c.loan.capacity_j);
+        assert!(!c.online(t), "loan of a full pack must kill availability");
+        assert_eq!(c.participations, 1);
+    }
+
+    #[test]
+    fn generous_charger_revives_client() {
+        let mut c = client(1e6); // very generous daily credit
+        let mut t = 0.0;
+        while !c.online(t) {
+            t += 600.0;
+        }
+        c.charge_participation(100.0, c.loan.capacity_j * 0.5);
+        // a few days of charging later the loan is repaid
+        let mut revived = false;
+        for d in 1..8 {
+            if c.online(t + d as f64 * 86_400.0) {
+                revived = true;
+                break;
+            }
+        }
+        assert!(revived);
+    }
+}

@@ -1,0 +1,133 @@
+//! The paper's "real-world energy budget" (§5.1): FL neither gets an
+//! infinite energy budget nor a static one. Each device has a fixed
+//! daily charger credit; FL's energy use is tracked as a *loan* that the
+//! charger repays while the trace says the device charges. A device is
+//! unavailable whenever reflecting the outstanding loan onto the traced
+//! battery level would push it to the critical level.
+
+#[derive(Clone, Debug)]
+pub struct EnergyLoan {
+    /// Battery capacity in joules (mAh × 3.6 × nominal V).
+    pub capacity_j: f64,
+    /// Outstanding FL energy debt, joules.
+    pub loan_j: f64,
+    /// Charger credit available to FL repayment, joules/day.
+    pub daily_credit_j: f64,
+    /// Critical battery level (fraction) below which the device dies.
+    pub critical_level: f64,
+    /// Cumulative FL energy ever borrowed (evaluation metric).
+    pub total_borrowed_j: f64,
+    last_update_s: f64,
+}
+
+impl EnergyLoan {
+    pub fn new(capacity_mah: f64, daily_credit_j: f64) -> Self {
+        let capacity_j = capacity_mah * 3.6 * 3.85; // nominal pack voltage
+        EnergyLoan {
+            capacity_j,
+            loan_j: 0.0,
+            daily_credit_j,
+            critical_level: 0.10,
+            total_borrowed_j: 0.0,
+            last_update_s: 0.0,
+        }
+    }
+
+    /// FL spends `j` joules on this device.
+    pub fn borrow(&mut self, j: f64) {
+        debug_assert!(j >= 0.0);
+        self.loan_j += j;
+        self.total_borrowed_j += j;
+    }
+
+    /// Advance to `now_s`; if the device is charging per its trace, the
+    /// charger repays the loan at the daily-credit rate.
+    pub fn tick(&mut self, now_s: f64, is_charging: bool) {
+        let dt = (now_s - self.last_update_s).max(0.0);
+        self.last_update_s = now_s;
+        if is_charging && self.loan_j > 0.0 {
+            let repay = self.daily_credit_j * dt / 86_400.0;
+            self.loan_j = (self.loan_j - repay).max(0.0);
+        }
+    }
+
+    /// Battery level (fraction) after reflecting the outstanding loan.
+    pub fn effective_level(&self, traced_level_frac: f64) -> f64 {
+        traced_level_frac - self.loan_j / self.capacity_j
+    }
+
+    /// §5.1: unavailable if the loan would push the battery critical.
+    pub fn allows_participation(&self, traced_level_frac: f64) -> bool {
+        self.effective_level(traced_level_frac) > self.critical_level
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn borrowing_reduces_effective_level() {
+        let mut l = EnergyLoan::new(3000.0, 10_000.0);
+        assert!(l.allows_participation(0.5));
+        let half_pack = l.capacity_j / 2.0;
+        l.borrow(half_pack);
+        assert!((l.effective_level(0.5) - 0.0).abs() < 1e-9);
+        assert!(!l.allows_participation(0.5));
+        assert_eq!(l.total_borrowed_j, half_pack);
+    }
+
+    #[test]
+    fn charging_repays_at_daily_rate() {
+        let mut l = EnergyLoan::new(3000.0, 20_000.0);
+        l.borrow(10_000.0);
+        l.tick(0.0, true);
+        l.tick(43_200.0, true); // half a day charging
+        assert!((l.loan_j - 0.0).abs() < 1e-6, "loan {}", l.loan_j);
+    }
+
+    #[test]
+    fn no_repayment_while_discharging() {
+        let mut l = EnergyLoan::new(3000.0, 20_000.0);
+        l.borrow(5_000.0);
+        l.tick(0.0, false);
+        l.tick(86_400.0, false);
+        assert_eq!(l.loan_j, 5_000.0);
+    }
+
+    #[test]
+    fn loan_never_negative() {
+        let mut l = EnergyLoan::new(3000.0, 1e9);
+        l.borrow(1.0);
+        l.tick(0.0, true);
+        l.tick(86_400.0, true);
+        assert_eq!(l.loan_j, 0.0);
+    }
+
+    #[test]
+    fn heavier_spender_dies_first() {
+        // the Fig 5b/6b mechanism in miniature
+        let mut cheap = EnergyLoan::new(3000.0, 5_000.0);
+        let mut costly = EnergyLoan::new(3000.0, 5_000.0);
+        let mut cheap_dead = None;
+        let mut costly_dead = None;
+        for day in 0..200 {
+            let t = day as f64 * 86_400.0;
+            cheap.tick(t, true);
+            costly.tick(t, true);
+            cheap.borrow(4_000.0);
+            costly.borrow(30_000.0);
+            if costly_dead.is_none() && !costly.allows_participation(0.6) {
+                costly_dead = Some(day);
+            }
+            if cheap_dead.is_none() && !cheap.allows_participation(0.6) {
+                cheap_dead = Some(day);
+            }
+        }
+        assert!(costly_dead.is_some(), "heavy spender must exhaust budget");
+        assert!(
+            cheap_dead.is_none() || cheap_dead > costly_dead,
+            "cheap {cheap_dead:?} vs costly {costly_dead:?}"
+        );
+    }
+}

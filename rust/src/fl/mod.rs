@@ -1,0 +1,21 @@
+//! Federated-learning simulation (§5.3): FedAvg over trace-driven
+//! clients, with the paper's energy-loan availability model.
+//!
+//! Numerics are real — every selected client runs actual SGD steps
+//! through the PJRT executor from the current global model — while
+//! per-client time and energy come from the SoC simulator under the
+//! client's policy (Swan vs greedy baseline). Time-to-accuracy is
+//! measured on the virtual clock, exactly like the paper's FedScale
+//! emulation.
+
+pub mod availability;
+pub mod energy_loan;
+pub mod selection;
+pub mod server;
+pub mod sim;
+
+pub use availability::FlClient;
+pub use energy_loan::EnergyLoan;
+pub use selection::select_uniform;
+pub use server::fedavg;
+pub use sim::{FlArm, FlConfig, FlOutcome, FlSim};

@@ -1,0 +1,53 @@
+//! Participant selection: uniform over the online set (the paper uses
+//! random selection; Oort-style guided selection is cited as related
+//! work, not used).
+
+use crate::util::rng::Rng;
+
+/// Pick up to `k` distinct indices uniformly from `online`.
+pub fn select_uniform(online: &[usize], k: usize, rng: &mut Rng) -> Vec<usize> {
+    if online.len() <= k {
+        return online.to_vec();
+    }
+    let picks = rng.sample_indices(online.len(), k);
+    picks.into_iter().map(|i| online[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn takes_all_when_few_online() {
+        let mut rng = Rng::new(0);
+        assert_eq!(select_uniform(&[3, 7], 5, &mut rng), vec![3, 7]);
+    }
+
+    #[test]
+    fn selects_k_distinct_members() {
+        let online: Vec<usize> = (100..200).collect();
+        let mut rng = Rng::new(1);
+        let sel = select_uniform(&online, 10, &mut rng);
+        assert_eq!(sel.len(), 10);
+        let mut s = sel.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        assert!(sel.iter().all(|c| online.contains(c)));
+    }
+
+    #[test]
+    fn roughly_uniform_over_many_rounds() {
+        let online: Vec<usize> = (0..50).collect();
+        let mut rng = Rng::new(2);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..2000 {
+            for c in select_uniform(&online, 5, &mut rng) {
+                counts[c] += 1;
+            }
+        }
+        let min = *counts.iter().min().unwrap() as f64;
+        let max = *counts.iter().max().unwrap() as f64;
+        assert!(max / min < 1.6, "selection skew: {min}..{max}");
+    }
+}

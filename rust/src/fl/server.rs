@@ -1,0 +1,64 @@
+//! FedAvg aggregation (§5.1: "We use the Fed-Avg averaging algorithm to
+//! combine model updates").
+
+/// Weighted average of client parameter sets.
+///
+/// `updates` pairs each client's full parameter list (leaf-major, same
+/// order as the metadata) with its sample-count weight. Returns the
+/// aggregated parameter list.
+pub fn fedavg(updates: &[(Vec<Vec<f32>>, f64)]) -> Vec<Vec<f32>> {
+    assert!(!updates.is_empty(), "fedavg over zero clients");
+    let total_w: f64 = updates.iter().map(|(_, w)| *w).sum();
+    assert!(total_w > 0.0, "zero total weight");
+    let n_leaves = updates[0].0.len();
+    let mut out: Vec<Vec<f32>> = updates[0]
+        .0
+        .iter()
+        .map(|leaf| vec![0.0f32; leaf.len()])
+        .collect();
+    for (params, w) in updates {
+        assert_eq!(params.len(), n_leaves, "leaf count mismatch");
+        let scale = (w / total_w) as f32;
+        for (acc, leaf) in out.iter_mut().zip(params) {
+            assert_eq!(acc.len(), leaf.len(), "leaf shape mismatch");
+            for (a, v) in acc.iter_mut().zip(leaf) {
+                *a += scale * v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_weights_is_mean() {
+        let a = vec![vec![1.0f32, 2.0], vec![10.0]];
+        let b = vec![vec![3.0f32, 6.0], vec![30.0]];
+        let avg = fedavg(&[(a, 1.0), (b, 1.0)]);
+        assert_eq!(avg, vec![vec![2.0, 4.0], vec![20.0]]);
+    }
+
+    #[test]
+    fn weights_respected() {
+        let a = vec![vec![0.0f32]];
+        let b = vec![vec![10.0f32]];
+        let avg = fedavg(&[(a, 1.0), (b, 3.0)]);
+        assert!((avg[0][0] - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_client_identity() {
+        let a = vec![vec![1.5f32, -2.5]];
+        let avg = fedavg(&[(a.clone(), 123.0)]);
+        assert_eq!(avg, a);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero clients")]
+    fn empty_panics() {
+        fedavg(&[]);
+    }
+}

@@ -1,0 +1,45 @@
+//! # Swan — a neural engine for efficient DNN training on smartphone SoCs
+//!
+//! Reproduction of *Swan* (Singapuram et al., 2022) as a three-layer
+//! Rust + JAX + Pallas stack. This crate is **Layer 3**: the Swan
+//! scheduling engine itself, the smartphone-SoC simulator it schedules
+//! on (the paper's testbed, rebuilt — see `DESIGN.md` substitution
+//! ledger), the PJRT runtime that executes the AOT-lowered training
+//! steps, and the federated-learning harness for the paper's large-scale
+//! evaluation.
+//!
+//! Module map (bottom-up):
+//! - [`util`] — zero-dependency substrates: RNG, JSON, PCHIP, stats,
+//!   property-test + bench harnesses (the offline crate set has no
+//!   serde/rand/criterion/proptest); [`cli`] — the hand-rolled launcher.
+//! - [`soc`], [`power`] — the simulated phone: heterogeneous cores,
+//!   cache contention, DVFS, battery/charger/thermal models.
+//! - [`workload`] — op-level training-step descriptors (emitted by
+//!   `python/compile/workloads.py` at artifact-build time).
+//! - [`sim`] — virtual clock, Android cpuset scheduling, foreground
+//!   interference sessions, the PCMark-like responsiveness benchmark.
+//! - [`swan`] — the paper's contribution: execution choices, the cost
+//!   total order, pruning, the explorer and the migration controller.
+//! - [`baseline`] — the PyTorch greedy policy Swan is compared against.
+//! - [`runtime`] — PJRT loading/execution of `artifacts/*.hlo.txt`
+//!   (real numerics; Python never runs at request time).
+//! - [`train`], [`trace`], [`fl`] — local trainer + synthetic datasets,
+//!   GreenHub-style battery traces, and the FedAvg simulation.
+//! - [`report`] — emitters that regenerate every paper table and figure.
+
+pub mod util;
+pub mod soc;
+pub mod power;
+pub mod workload;
+pub mod sim;
+pub mod swan;
+pub mod baseline;
+pub mod runtime;
+pub mod train;
+pub mod trace;
+pub mod fl;
+pub mod report;
+pub mod cli;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

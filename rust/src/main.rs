@@ -1,0 +1,7 @@
+//! Swan CLI entrypoint (subcommands wired in cli::run).
+fn main() {
+    if let Err(e) = swan::cli::run_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

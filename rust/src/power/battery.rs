@@ -1,0 +1,174 @@
+//! Battery model: coulomb-counted state of charge + Li-ion voltage curve.
+
+/// Charging state as Android reports it (paper Appendix A.2 uses the
+/// same three-valued signal derived from SoC deltas).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatteryState {
+    Charging,
+    NotDischarging, // full / maintenance
+    Discharging,
+}
+
+/// A simulated Li-ion pack.
+#[derive(Clone, Debug)]
+pub struct Battery {
+    /// Capacity in coulombs (mAh × 3.6).
+    pub capacity_c: f64,
+    /// Remaining charge in coulombs.
+    pub charge_c: f64,
+    state: BatteryState,
+}
+
+impl Battery {
+    pub fn new(capacity_mah: f64, initial_soc: f64) -> Self {
+        let capacity_c = capacity_mah * 3.6;
+        Battery {
+            capacity_c,
+            charge_c: capacity_c * initial_soc.clamp(0.0, 1.0),
+            state: BatteryState::Discharging,
+        }
+    }
+
+    /// State of charge in [0, 1].
+    pub fn soc(&self) -> f64 {
+        (self.charge_c / self.capacity_c).clamp(0.0, 1.0)
+    }
+
+    /// Battery level as Android exposes it: integer percent. The paper's
+    /// meter only sees this quantized signal.
+    pub fn level_percent(&self) -> u32 {
+        (self.soc() * 100.0).floor() as u32
+    }
+
+    /// Open-circuit voltage: piecewise-linear Li-ion curve 3.3–4.35 V.
+    pub fn voltage(&self) -> f64 {
+        let s = self.soc();
+        // steep knee below 10%, plateau 3.7–3.9, fast rise above 90%
+        if s < 0.10 {
+            3.30 + s / 0.10 * 0.35
+        } else if s < 0.90 {
+            3.65 + (s - 0.10) / 0.80 * 0.35
+        } else {
+            4.00 + (s - 0.90) / 0.10 * 0.35
+        }
+    }
+
+    pub fn state(&self) -> BatteryState {
+        self.state
+    }
+
+    /// Drain `power_w` for `dt_s` seconds. Returns the energy actually
+    /// removed (joules) — less than requested if the pack empties.
+    pub fn drain(&mut self, power_w: f64, dt_s: f64) -> f64 {
+        debug_assert!(power_w >= 0.0 && dt_s >= 0.0);
+        self.state = BatteryState::Discharging;
+        let current_a = power_w / self.voltage();
+        let want_c = current_a * dt_s;
+        let got_c = want_c.min(self.charge_c);
+        self.charge_c -= got_c;
+        got_c * self.voltage()
+    }
+
+    /// Charge with `power_w` for `dt_s` (charger inefficiency applied by
+    /// the caller).
+    pub fn charge(&mut self, power_w: f64, dt_s: f64) {
+        debug_assert!(power_w >= 0.0 && dt_s >= 0.0);
+        let current_a = power_w / self.voltage();
+        self.charge_c = (self.charge_c + current_a * dt_s).min(self.capacity_c);
+        self.state = if self.soc() >= 0.999 {
+            BatteryState::NotDischarging
+        } else {
+            BatteryState::Charging
+        };
+    }
+
+    /// Force the SoC (used when replaying recorded traces).
+    pub fn set_soc(&mut self, soc: f64) {
+        self.charge_c = self.capacity_c * soc.clamp(0.0, 1.0);
+    }
+
+    pub fn set_state(&mut self, state: BatteryState) {
+        self.state = state;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.charge_c <= 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn soc_and_percent() {
+        let b = Battery::new(3000.0, 0.5);
+        assert!((b.soc() - 0.5).abs() < 1e-12);
+        assert_eq!(b.level_percent(), 50);
+    }
+
+    #[test]
+    fn voltage_monotone_in_soc() {
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let mut b = Battery::new(3000.0, 1.0);
+            b.set_soc(i as f64 / 100.0);
+            let v = b.voltage();
+            assert!(v >= prev, "voltage not monotone at {i}%");
+            assert!((3.2..=4.4).contains(&v));
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn drain_conserves_energy() {
+        let mut b = Battery::new(3000.0, 1.0);
+        let before = b.charge_c;
+        let e = b.drain(2.0, 3600.0); // 2 W for an hour
+        let used_c = before - b.charge_c;
+        // E = Q × V (voltage varies little over one hour at 2 W)
+        assert!((e - used_c * b.voltage()).abs() < 0.02 * e);
+        assert!(b.soc() < 1.0);
+    }
+
+    #[test]
+    fn drain_cannot_go_negative() {
+        let mut b = Battery::new(100.0, 0.01);
+        for _ in 0..100 {
+            b.drain(50.0, 3600.0);
+        }
+        assert!(b.charge_c >= 0.0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn charge_caps_at_capacity() {
+        let mut b = Battery::new(1000.0, 0.95);
+        for _ in 0..100 {
+            b.charge(18.0, 600.0);
+        }
+        assert!((b.soc() - 1.0).abs() < 1e-9);
+        assert_eq!(b.state(), BatteryState::NotDischarging);
+    }
+
+    #[test]
+    fn drain_then_charge_roundtrip() {
+        check(50, |rng| {
+            let mut b = Battery::new(4000.0, rng.range(0.3, 0.9));
+            let s0 = b.soc();
+            let p = rng.range(0.5, 6.0);
+            let t = rng.range(10.0, 3000.0);
+            b.drain(p, t);
+            crate::prop_assert!(b.soc() <= s0, "drain raised soc");
+            b.charge(p, t * 1.1);
+            crate::prop_assert!(
+                b.soc() >= s0 - 0.02,
+                "roundtrip lost too much: {} -> {}",
+                s0,
+                b.soc()
+            );
+            Ok(())
+        });
+    }
+}

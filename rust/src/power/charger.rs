@@ -1,0 +1,95 @@
+//! Charger model with taper near full charge.
+//!
+//! §5.1 "Real-world energy budget": charging speeds vary with charger
+//! power output and throttle to reduce battery wear. We model a fixed
+//! rated power with a linear taper above 80% SoC — enough structure for
+//! the energy-loan accounting without pretending to know each user's
+//! brick.
+
+use super::battery::Battery;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Charger {
+    /// Rated output, watts (5 W legacy … 30 W fast charge).
+    pub rated_w: f64,
+    /// Conversion efficiency into the pack.
+    pub efficiency: f64,
+}
+
+impl Charger {
+    pub fn new(rated_w: f64) -> Self {
+        Charger {
+            rated_w,
+            efficiency: 0.85,
+        }
+    }
+
+    /// Power delivered into the pack at the battery's current SoC.
+    pub fn delivered_w(&self, battery: &Battery) -> f64 {
+        let soc = battery.soc();
+        let taper = if soc <= 0.80 {
+            1.0
+        } else {
+            // linear taper 100% → 15% of rated over the last 20% SoC
+            1.0 - 0.85 * (soc - 0.80) / 0.20
+        };
+        self.rated_w * self.efficiency * taper.max(0.0)
+    }
+
+    /// Advance charging by `dt_s`, net of a concurrent load drawing
+    /// `load_w` from the rail. Returns true if still charging.
+    pub fn step(&self, battery: &mut Battery, load_w: f64, dt_s: f64) -> bool {
+        let p = self.delivered_w(battery) - load_w;
+        if p >= 0.0 {
+            battery.charge(p, dt_s);
+            true
+        } else {
+            battery.drain(-p, dt_s);
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_power_below_80_percent() {
+        let c = Charger::new(18.0);
+        let b = Battery::new(4000.0, 0.5);
+        assert!((c.delivered_w(&b) - 18.0 * 0.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tapers_above_80_percent() {
+        let c = Charger::new(18.0);
+        let mut prev = f64::INFINITY;
+        for soc in [0.82, 0.88, 0.94, 0.99] {
+            let mut b = Battery::new(4000.0, 1.0);
+            b.set_soc(soc);
+            let p = c.delivered_w(&b);
+            assert!(p < prev && p > 0.0, "taper at {soc}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn heavy_load_wins_over_weak_charger() {
+        let c = Charger::new(5.0);
+        let mut b = Battery::new(3000.0, 0.5);
+        let charging = c.step(&mut b, 8.0, 600.0);
+        assert!(!charging);
+        assert!(b.soc() < 0.5, "battery must drain under net-negative power");
+    }
+
+    #[test]
+    fn charges_battery_over_time() {
+        let c = Charger::new(18.0);
+        let mut b = Battery::new(3000.0, 0.2);
+        for _ in 0..60 {
+            c.step(&mut b, 0.5, 60.0);
+        }
+        assert!(b.soc() > 0.5, "soc after an hour: {}", b.soc());
+    }
+}

@@ -1,0 +1,16 @@
+//! Battery, charger, thermal and energy-metering models.
+//!
+//! Swan never reads ground-truth power: like the paper (Appendix B), it
+//! estimates energy from battery state-of-charge drops through
+//! [`meter::EnergyMeter`]. The battery/charger/thermal models below are
+//! the simulated physical substrate those estimates are taken against.
+
+pub mod battery;
+pub mod charger;
+pub mod meter;
+pub mod thermal;
+
+pub use battery::{Battery, BatteryState};
+pub use charger::Charger;
+pub use meter::EnergyMeter;
+pub use thermal::Thermal;

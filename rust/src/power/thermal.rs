@@ -1,0 +1,114 @@
+//! One-node thermal RC model for battery/skin temperature.
+//!
+//! The paper gates training on battery temperature ≤ 35 °C (§4.1, citing
+//! Li-ion aging and thermal-comfort studies). We model the battery node
+//! with a first-order RC circuit driven by dissipated SoC power:
+//!
+//! ```text
+//! C·dT/dt = κ·P − (T − T_ambient)/R
+//! ```
+//!
+//! which gives the familiar exponential approach to `T_amb + κ·P·R`.
+
+#[derive(Clone, Debug)]
+pub struct Thermal {
+    /// Battery/skin temperature, °C.
+    pub temp_c: f64,
+    /// Ambient, °C.
+    pub ambient_c: f64,
+    /// Thermal resistance, K/W (battery sees a fraction of SoC heat).
+    pub r_k_per_w: f64,
+    /// Thermal capacitance, J/K.
+    pub c_j_per_k: f64,
+    /// Fraction of SoC power that heats the battery node.
+    pub coupling: f64,
+}
+
+impl Thermal {
+    pub fn new(ambient_c: f64) -> Self {
+        Thermal {
+            temp_c: ambient_c,
+            ambient_c,
+            // steady state at 6 W sustained ≈ ambient + 6·0.62·3.4 ≈ +12.6 K
+            r_k_per_w: 3.4,
+            c_j_per_k: 45.0,
+            coupling: 0.62,
+        }
+    }
+
+    /// Advance by `dt_s` seconds with `power_w` dissipated in the SoC.
+    pub fn step(&mut self, power_w: f64, dt_s: f64) {
+        // exact discretization of the linear ODE over the interval
+        let t_inf = self.ambient_c + self.coupling * power_w * self.r_k_per_w;
+        let tau = self.r_k_per_w * self.c_j_per_k;
+        let a = (-dt_s / tau).exp();
+        self.temp_c = t_inf + (self.temp_c - t_inf) * a;
+    }
+
+    /// The paper's admission gate (§4.1).
+    pub fn too_hot(&self) -> bool {
+        self.temp_c > 35.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_stays_ambient() {
+        let mut t = Thermal::new(24.0);
+        for _ in 0..1000 {
+            t.step(0.0, 10.0);
+        }
+        assert!((t.temp_c - 24.0).abs() < 1e-6);
+        assert!(!t.too_hot());
+    }
+
+    #[test]
+    fn sustained_load_heats_to_steady_state() {
+        let mut t = Thermal::new(24.0);
+        for _ in 0..10_000 {
+            t.step(6.0, 10.0);
+        }
+        let expect = 24.0 + 0.62 * 6.0 * 3.4;
+        assert!((t.temp_c - expect).abs() < 0.01, "{}", t.temp_c);
+        assert!(t.too_hot(), "6 W sustained should cross 35°C from 24°C");
+    }
+
+    #[test]
+    fn cools_back_down() {
+        let mut t = Thermal::new(24.0);
+        for _ in 0..10_000 {
+            t.step(6.0, 10.0);
+        }
+        let hot = t.temp_c;
+        for _ in 0..10_000 {
+            t.step(0.0, 10.0);
+        }
+        assert!(t.temp_c < hot && (t.temp_c - 24.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn heating_is_monotone_under_constant_load() {
+        let mut t = Thermal::new(20.0);
+        let mut prev = t.temp_c;
+        for _ in 0..100 {
+            t.step(4.0, 30.0);
+            assert!(t.temp_c >= prev);
+            prev = t.temp_c;
+        }
+    }
+
+    #[test]
+    fn step_size_invariance() {
+        // exact discretization: 1×600 s must equal 600×1 s
+        let mut a = Thermal::new(22.0);
+        let mut b = Thermal::new(22.0);
+        a.step(5.0, 600.0);
+        for _ in 0..600 {
+            b.step(5.0, 1.0);
+        }
+        assert!((a.temp_c - b.temp_c).abs() < 1e-9);
+    }
+}

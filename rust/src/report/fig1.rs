@@ -1,0 +1,82 @@
+//! Figure 1b: per-core 512×512 matmul latency across SoCs (+ GPU).
+
+use crate::soc::device::all_devices;
+use crate::soc::exec_model::{estimate, estimate_gpu, ExecutionContext};
+use crate::util::table::Table;
+use crate::workload::{builtin, WorkloadName};
+
+/// One row per (device, core|gpu): label + latency in ms.
+pub fn fig1b_matmul_rows() -> (Vec<(String, String, f64)>, Table) {
+    let w = builtin(WorkloadName::Matmul512);
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig 1b — per-core 512x512 matmul latency (ms, simulated)",
+        &["device", "unit", "latency_ms"],
+    );
+    for d in all_devices() {
+        let ctx = ExecutionContext::exclusive(d.n_cores());
+        for c in 0..d.n_cores() {
+            let est = estimate(&d, &w, &[c], &ctx);
+            let ms = est.latency_s * 1e3;
+            rows.push((
+                d.id.key().to_string(),
+                format!("core{c}({})", d.cores[c].kind),
+                ms,
+            ));
+            table.row(&[
+                d.id.name().to_string(),
+                format!("core {c} ({})", d.cores[c].kind),
+                format!("{ms:.2}"),
+            ]);
+        }
+        let gpu = estimate_gpu(&d, &w);
+        let ms = gpu.latency_s * 1e3;
+        rows.push((d.id.key().to_string(), "gpu".to_string(), ms));
+        table.row(&[
+            d.id.name().to_string(),
+            "GPU".to_string(),
+            format!("{ms:.2}"),
+        ]);
+    }
+    (rows, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        let (rows, _t) = fig1b_matmul_rows();
+        assert_eq!(rows.len(), 5 * 9); // 8 cores + gpu per device
+        // within each device: little slower than big, gpu fastest
+        for dev in ["pixel3", "s10e", "oneplus8", "tabs6", "mi10"] {
+            let lat = |unit_prefix: &str| {
+                rows.iter()
+                    .find(|(d, u, _)| d == dev && u.starts_with(unit_prefix))
+                    .unwrap()
+                    .2
+            };
+            assert!(lat("core0") > lat("core4"), "{dev}: little ≤ big?");
+            assert!(lat("gpu") < lat("core7"), "{dev}: gpu not fastest");
+        }
+    }
+
+    #[test]
+    fn prime_faster_than_big_where_present() {
+        let (rows, _) = fig1b_matmul_rows();
+        for dev in ["s10e", "oneplus8", "tabs6", "mi10"] {
+            let core7 = rows
+                .iter()
+                .find(|(d, u, _)| d == dev && u.starts_with("core7"))
+                .unwrap()
+                .2;
+            let core4 = rows
+                .iter()
+                .find(|(d, u, _)| d == dev && u.starts_with("core4"))
+                .unwrap()
+                .2;
+            assert!(core7 < core4, "{dev}");
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Figure 2: per-core-combination latency / energy / power for a
+//! (device, model) pair — the motivation study of §3.1.
+
+use crate::soc::device::{device, Device, DeviceId};
+use crate::soc::exec_model::{estimate, ExecutionContext};
+use crate::swan::choice::enumerate_choices;
+use crate::util::table::Table;
+use crate::workload::Workload;
+
+/// One row per execution choice: (label, latency s, energy J, power W),
+/// normalized columns like the paper's relative plots are added in the
+/// table.
+pub fn fig2_combo_rows(
+    dev: DeviceId,
+    workload: &Workload,
+) -> (Vec<(String, f64, f64, f64)>, Table) {
+    let d: Device = device(dev);
+    let ctx = ExecutionContext::exclusive(d.n_cores());
+    let mut rows = Vec::new();
+    for ch in enumerate_choices(&d) {
+        let est = estimate(&d, workload, &ch.cores, &ctx);
+        rows.push((
+            ch.label(),
+            est.latency_s,
+            est.energy_j,
+            est.avg_power_w,
+        ));
+    }
+    // paper plots relative to the best value of each metric
+    let min_lat = rows.iter().map(|r| r.1).fold(f64::INFINITY, f64::min);
+    let min_en = rows.iter().map(|r| r.2).fold(f64::INFINITY, f64::min);
+    let min_pw = rows.iter().map(|r| r.3).fold(f64::INFINITY, f64::min);
+    let mut table = Table::new(
+        &format!(
+            "Fig 2 — {} on {}: per-combination latency/energy/power",
+            workload.name,
+            d.id.name()
+        ),
+        &[
+            "combo",
+            "latency_s",
+            "rel_lat",
+            "energy_j",
+            "rel_energy",
+            "power_w",
+            "rel_power",
+        ],
+    );
+    for (label, lat, en, pw) in &rows {
+        table.row(&[
+            label.clone(),
+            format!("{lat:.3}"),
+            format!("{:.2}", lat / min_lat),
+            format!("{en:.2}"),
+            format!("{:.2}", en / min_en),
+            format!("{pw:.2}"),
+            format!("{:.2}", pw / min_pw),
+        ]);
+    }
+    (rows, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{builtin, WorkloadName};
+
+    fn col<'a>(
+        rows: &'a [(String, f64, f64, f64)],
+        label: &str,
+    ) -> &'a (String, f64, f64, f64) {
+        rows.iter().find(|r| r.0 == label).unwrap()
+    }
+
+    #[test]
+    fn fig2a_resnet_pixel3_shapes() {
+        let (rows, _) = fig2_combo_rows(
+            DeviceId::Pixel3,
+            &builtin(WorkloadName::Resnet34),
+        );
+        assert_eq!(rows.len(), 8);
+        // fastest = 4567
+        let fastest = rows
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(fastest.0, "4567");
+        // most energy-efficient = a single big core
+        let thrifty = rows
+            .iter()
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        assert_eq!(thrifty.0, "4");
+        // little combos always lower power than big combos
+        assert!(col(&rows, "0123").3 < col(&rows, "4567").3);
+        assert!(col(&rows, "0").3 < col(&rows, "4").3);
+    }
+
+    #[test]
+    fn fig2b_shufflenet_pixel3_shapes() {
+        let (rows, _) = fig2_combo_rows(
+            DeviceId::Pixel3,
+            &builtin(WorkloadName::ShufflenetV2),
+        );
+        // single big core both fastest AND most energy-efficient (§3.1)
+        let fastest = rows
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let thrifty = rows
+            .iter()
+            .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+            .unwrap();
+        assert_eq!(fastest.0, "4");
+        assert_eq!(thrifty.0, "4");
+        // and 4567 is strictly worse than 4 on both axes
+        assert!(col(&rows, "4567").1 > col(&rows, "4").1);
+        assert!(col(&rows, "4567").2 > col(&rows, "4").2);
+    }
+}

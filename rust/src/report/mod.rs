@@ -1,0 +1,16 @@
+//! Report emitters — one per paper table/figure (DESIGN.md §4).
+//!
+//! Each function computes the rows/series the paper reports and returns
+//! them as data plus a formatted `util::table::Table`; the `benches/`
+//! binaries print and persist them, and `EXPERIMENTS.md` records
+//! paper-vs-measured.
+
+pub mod fig1;
+pub mod fig2;
+pub mod local_eval;
+pub mod pcmark_eval;
+
+pub use fig1::fig1b_matmul_rows;
+pub use fig2::fig2_combo_rows;
+pub use local_eval::{table2_rows, Table2Row};
+pub use pcmark_eval::{fig3_rows, table3_rows, Table3Row};

@@ -1,0 +1,186 @@
+//! Figure 3 + Table 3: PCMark impact of background training.
+//!
+//! Fig 3 compares the score with and without *baseline* (greedy)
+//! training in the background. Table 3 then adds Swan: while PCMark's
+//! foreground threads run, Swan's controller observes its own step
+//! latency inflating on the contended cores and walks down the
+//! preference chain; the table scores the device with training pinned
+//! to whatever choice the controller settles on.
+
+use crate::sim::interference::SessionGenerator;
+use crate::sim::pcmark::{pcmark_score, score_impact_percent};
+use crate::sim::SimPhone;
+use crate::soc::device::{all_devices, device, Device, DeviceId};
+use crate::swan::engine::{SwanConfig, SwanEngine};
+use crate::util::table::Table;
+use crate::workload::{load_or_builtin, Workload, WorkloadName};
+
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub device: DeviceId,
+    pub baseline_impact_pct: f64,
+    pub swan_impact_pct: f64,
+    pub swan_settled_choice: String,
+}
+
+/// Fig 3 rows: (device, score idle, score w/ greedy training, impact %).
+pub fn fig3_rows(artifacts_dir: &str) -> (Vec<(DeviceId, f64, f64, f64)>, Table) {
+    let _ = artifacts_dir;
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig 3 — PCMark score with and without background training (greedy)",
+        &["device", "score_idle", "score_training", "impact_%"],
+    );
+    for d in all_devices() {
+        let clean = pcmark_score(&d, &[]);
+        let dirty = pcmark_score(&d, &d.low_latency_cores());
+        let impact = (dirty - clean) / clean * 100.0;
+        rows.push((d.id, clean, dirty, impact));
+        table.row(&[
+            d.id.name().to_string(),
+            format!("{clean:.0}"),
+            format!("{dirty:.0}"),
+            format!("{impact:.1}%"),
+        ]);
+    }
+    (rows, table)
+}
+
+/// Run Swan on a phone with a persistent 2-thread foreground session
+/// (PCMark running) until the controller stops migrating; return its
+/// settled choice.
+fn swan_settled_choice(d: &Device, workload: &Workload) -> Vec<usize> {
+    // bring-up on an idle phone (profiles are interference-free)
+    let mut phone = SimPhone::new(d.clone(), 0x5CA9);
+    let mut engine = SwanEngine::explore_and_build(
+        &mut phone,
+        workload.clone(),
+        SwanConfig::default(),
+    );
+    // now the benchmark starts: endless heavy session. Run long enough
+    // for the upgrade backoff to converge, then report the choice the
+    // controller spent the most simulated TIME at — that is what PCMark
+    // experiences.
+    phone.sessions = SessionGenerator::new(0x9C, 1e-6, 1e15, 1.0);
+    phone.idle(1.0);
+    let mut time_at: std::collections::BTreeMap<String, f64> =
+        std::collections::BTreeMap::new();
+    for _ in 0..400 {
+        let label = engine.current_choice().choice.label();
+        let rep = engine.run_local_step(&mut phone, || {});
+        *time_at.entry(label).or_insert(0.0) += rep.latency_s;
+    }
+    let dominant = time_at
+        .into_iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(l, _)| l)
+        .expect("ran steps");
+    let dominant_cores: Vec<usize> = dominant
+        .chars()
+        .map(|c| c.to_digit(10).unwrap() as usize)
+        .collect();
+    // what actually runs is the within-cluster remap away from the
+    // PCMark threads (sched_setaffinity) — score those concrete cores
+    let sched = crate::sim::android_sched::Scheduler::new(d);
+    let share = sched.training_share(2);
+    sched.remap_least_contended(d, &dominant_cores, &share)
+}
+
+/// Table 3 rows for the four paper devices (the paper omits Mi 10 from
+/// Table 3 but notes it saw no impact; we compute all five).
+pub fn table3_rows(artifacts_dir: &str) -> (Vec<Table3Row>, Table) {
+    // the paper's Table-3 experiment trains the speech model (ResNet-34)
+    let workload = load_or_builtin(WorkloadName::Resnet34, artifacts_dir);
+    let mut rows = Vec::new();
+    for id in [DeviceId::TabS6, DeviceId::OnePlus8, DeviceId::Pixel3,
+               DeviceId::S10e, DeviceId::Mi10] {
+        let d = device(id);
+        let baseline_impact =
+            score_impact_percent(&d, &d.low_latency_cores());
+        let settled = swan_settled_choice(&d, &workload);
+        let swan_impact = score_impact_percent(&d, &settled);
+        rows.push(Table3Row {
+            device: id,
+            baseline_impact_pct: baseline_impact,
+            swan_impact_pct: swan_impact,
+            swan_settled_choice: settled
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<String>(),
+        });
+    }
+    let mut table = Table::new(
+        "Table 3 — PCMark impact while training in the background",
+        &["device", "baseline", "swan", "swan_choice_under_interference"],
+    );
+    for r in &rows {
+        table.row(&[
+            r.device.name().to_string(),
+            format!("{:.1} %", r.baseline_impact_pct),
+            format!("{:.1} %", r.swan_impact_pct),
+            r.swan_settled_choice.clone(),
+        ]);
+    }
+    (rows, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_training_always_hurts_pixel3_worst() {
+        let (rows, _) = fig3_rows("artifacts");
+        assert_eq!(rows.len(), 5);
+        for (id, clean, dirty, impact) in &rows {
+            assert!(dirty <= clean, "{id:?}");
+            assert!(*impact <= 0.0);
+        }
+        let worst = rows
+            .iter()
+            .min_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
+            .unwrap();
+        assert_eq!(worst.0, DeviceId::Pixel3, "paper: Pixel 3 hit hardest");
+    }
+
+    #[test]
+    fn table3_swan_strictly_better_than_baseline() {
+        let (rows, _) = table3_rows("artifacts");
+        for r in &rows {
+            assert!(
+                r.swan_impact_pct >= r.baseline_impact_pct,
+                "{:?}: swan {:.1}% worse than baseline {:.1}%",
+                r.device,
+                r.swan_impact_pct,
+                r.baseline_impact_pct
+            );
+        }
+        // and strictly better somewhere meaningful (paper: Pixel 3
+        // −27% → −3.1%)
+        let p3 = rows
+            .iter()
+            .find(|r| r.device == DeviceId::Pixel3)
+            .unwrap();
+        assert!(
+            p3.swan_impact_pct > p3.baseline_impact_pct + 5.0,
+            "pixel3: swan {:.1}% vs baseline {:.1}%",
+            p3.swan_impact_pct,
+            p3.baseline_impact_pct
+        );
+    }
+
+    #[test]
+    fn swan_migrates_off_contended_cores() {
+        let (rows, _) = table3_rows("artifacts");
+        for r in &rows {
+            // under a persistent 2-thread session the settled choice must
+            // not be the full greedy set
+            assert!(
+                r.swan_settled_choice.len() < 4,
+                "{:?}: settled on {}",
+                r.device,
+                r.swan_settled_choice
+            );
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Artifact metadata: the contract between `python/compile/aot.py` and
+//! the Rust runtime. The JSON is the single source of truth for
+//! parameter order (sorted names), shapes, init schemes and IO layout —
+//! the runtime never hardcodes a model.
+
+use crate::util::json::{parse_file, Value};
+
+/// How a parameter tensor is initialized (mirrors `model.SpecBuilder`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitKind {
+    /// He-normal with the given fan-in: N(0, sqrt(2/fan_in)).
+    He { fan_in: usize },
+    Ones,
+    Zeros,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `artifacts/meta/<model>.json`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub task: String,
+    pub paper_model: String,
+    pub batch: usize,
+    pub learning_rate: f64,
+    pub num_classes: usize,
+    /// Full input shape including batch, e.g. [16, 32, 32, 3].
+    pub input_shape: Vec<usize>,
+    pub label_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    pub train_outputs: usize,
+    pub eval_outputs: usize,
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub workload_key: String,
+    pub workload_small_key: String,
+}
+
+impl ModelMeta {
+    pub fn load(meta_path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let v = parse_file(meta_path)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let mut params = Vec::new();
+        for p in v.req_arr("params")? {
+            let name = p.req_str("name")?.to_string();
+            let shape: Vec<usize> = p
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            anyhow::ensure!(
+                shape.iter().all(|&d| d > 0),
+                "bad shape for param {name}"
+            );
+            let init = match p.req_str("init")? {
+                "he" => InitKind::He {
+                    fan_in: p.req_usize("fan_in")?,
+                },
+                "ones" => InitKind::Ones,
+                "zeros" => InitKind::Zeros,
+                other => anyhow::bail!("unknown init kind '{other}'"),
+            };
+            params.push(ParamSpec { name, shape, init });
+        }
+        // aot.py writes sorted names; the executor's positional protocol
+        // depends on it, so verify rather than trust.
+        for w in params.windows(2) {
+            anyhow::ensure!(
+                w[0].name < w[1].name,
+                "params not sorted: {} >= {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+        let art = v.req("artifacts")?;
+        Ok(ModelMeta {
+            name: v.req_str("name")?.to_string(),
+            task: v.req_str("task")?.to_string(),
+            paper_model: v.req_str("paper_model")?.to_string(),
+            batch: v.req_usize("batch")?,
+            learning_rate: v.req_f64("learning_rate")?,
+            num_classes: v.req_usize("num_classes")?,
+            input_shape: v
+                .req_arr("input_shape")?
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect(),
+            label_shape: v
+                .req_arr("label_shape")?
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect(),
+            params,
+            train_outputs: v.req_usize("train_outputs")?,
+            eval_outputs: v.req_usize("eval_outputs")?,
+            train_hlo: art.req_str("train")?.to_string(),
+            eval_hlo: art.req_str("eval")?.to_string(),
+            workload_key: v.req_str("workload")?.to_string(),
+            workload_small_key: v.req_str("workload_small")?.to_string(),
+        })
+    }
+
+    pub fn param_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn input_numel(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_json() -> &'static str {
+        r#"{
+          "name": "toy", "task": "vision", "paper_model": "toynet",
+          "batch": 4, "learning_rate": 0.05, "num_classes": 3,
+          "input_shape": [4, 8, 8, 1], "label_shape": [4],
+          "params": [
+            {"name": "a.w", "shape": [3, 3, 1, 8], "init": "he", "fan_in": 9},
+            {"name": "b.beta", "shape": [8], "init": "zeros"},
+            {"name": "b.gamma", "shape": [8], "init": "ones"}
+          ],
+          "train_outputs": 4, "eval_outputs": 2,
+          "artifacts": {"train": "toy_train.hlo.txt", "eval": "toy_eval.hlo.txt"},
+          "workload": "workload_toynet.json",
+          "workload_small": "workload_toy.json"
+        }"#
+    }
+
+    #[test]
+    fn parses_toy_meta() {
+        let v = crate::util::json::parse(toy_json()).unwrap();
+        let m = ModelMeta::from_json(&v).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[0].init, InitKind::He { fan_in: 9 });
+        assert_eq!(m.param_scalars(), 3 * 3 * 8 + 8 + 8);
+        assert_eq!(m.input_numel(), 4 * 8 * 8);
+    }
+
+    #[test]
+    fn rejects_unsorted_params() {
+        let src = toy_json().replace("a.w", "z.w");
+        let v = crate::util::json::parse(&src).unwrap();
+        assert!(ModelMeta::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_built() {
+        let p = std::path::Path::new("artifacts/meta/shufflenet_s.json");
+        if p.exists() {
+            let m = ModelMeta::load(p).unwrap();
+            assert_eq!(m.name, "shufflenet_s");
+            assert_eq!(m.batch, 16);
+            assert_eq!(m.train_outputs, m.params.len() + 1);
+            assert!(m.param_scalars() > 10_000);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! PJRT CPU client wrapper.
+//!
+//! One client per process; executables and buffers keep a handle to it.
+//! (The `xla` crate's `PjRtClient` is a cheap cloneable wrapper around
+//! the underlying C++ client.)
+
+use crate::Result;
+
+pub struct RuntimeClient {
+    pub client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO **text** (see aot.py for why text, not serialized proto)
+    /// and compile it.
+    pub fn compile_hlo_file(
+        &self,
+        path: impl AsRef<std::path::Path>,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            anyhow::anyhow!("parsing HLO text {}: {e}", path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))
+    }
+
+    /// Upload an f32 tensor.
+    ///
+    /// NOTE: must go through `buffer_from_host_buffer` — its C++ side
+    /// uses `HostBufferSemantics::kImmutableOnlyDuringCall`, i.e. the
+    /// copy completes before the call returns. `buffer_from_host_literal`
+    /// is ASYNC in XLA (`BufferFromHostLiteral`): the worker thread reads
+    /// the literal after this function returns, and a dropped temporary
+    /// literal turns into a use-after-free SIGSEGV on the PJRT thread.
+    pub fn upload_f32(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32: {e}"))
+    }
+
+    /// Upload an i32 tensor (same synchronous-copy requirement).
+    pub fn upload_i32(
+        &self,
+        data: &[i32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e}"))
+    }
+}

@@ -1,0 +1,279 @@
+//! Compiled train/eval executors with device-resident parameters.
+//!
+//! The protocol (fixed by `aot.py`): the train executable takes
+//! `(p_0 … p_{N-1}, x, y)` positionally (params in sorted-name order) and
+//! returns the tuple `(p'_0 … p'_{N-1}, loss)`; eval returns
+//! `(loss, n_correct)`.
+//!
+//! Hot path: parameters live as `PjRtBuffer`s between steps and each
+//! step is ONE `execute_b` call. PJRT may return the root tuple either
+//! flattened into N+1 buffers or as a single tuple buffer depending on
+//! build; both are handled — the flattened path keeps everything on
+//! device, the tuple path falls back to literal decompose + re-upload
+//! (measured in `benches/perf_hotpath.rs`).
+
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::artifact::{InitKind, ModelMeta, ParamSpec};
+use super::client::RuntimeClient;
+
+/// Device-resident model parameters.
+pub struct TrainState {
+    pub params: Vec<xla::PjRtBuffer>,
+    /// Steps taken since init (diagnostic).
+    pub steps: usize,
+}
+
+/// One model's compiled executables.
+pub struct ModelExecutor<'c> {
+    pub meta: ModelMeta,
+    client: &'c RuntimeClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+}
+
+impl<'c> ModelExecutor<'c> {
+    /// Compile both step functions from the artifacts directory.
+    pub fn load(
+        client: &'c RuntimeClient,
+        artifacts_dir: impl AsRef<std::path::Path>,
+        model: &str,
+    ) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let meta = ModelMeta::load(dir.join("meta").join(format!("{model}.json")))?;
+        let train_exe = client.compile_hlo_file(dir.join(&meta.train_hlo))?;
+        let eval_exe = client.compile_hlo_file(dir.join(&meta.eval_hlo))?;
+        Ok(ModelExecutor {
+            meta,
+            client,
+            train_exe,
+            eval_exe,
+        })
+    }
+
+    /// He/ones/zeros host-side init per metadata (mirrors
+    /// `model.init_params`; Rust owns init so no Python at runtime).
+    pub fn init_host_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        self.meta
+            .params
+            .iter()
+            .map(|spec| init_tensor(spec, &mut rng))
+            .collect()
+    }
+
+    /// Upload host params to device buffers.
+    pub fn state_from_host(&self, host: &[Vec<f32>]) -> Result<TrainState> {
+        anyhow::ensure!(host.len() == self.meta.params.len());
+        let mut params = Vec::with_capacity(host.len());
+        for (spec, data) in self.meta.params.iter().zip(host) {
+            anyhow::ensure!(
+                data.len() == spec.numel(),
+                "param {} length mismatch",
+                spec.name
+            );
+            params.push(self.client.upload_f32(data, &spec.shape)?);
+        }
+        Ok(TrainState { params, steps: 0 })
+    }
+
+    /// Fresh initialized state.
+    pub fn init_state(&self, seed: u64) -> Result<TrainState> {
+        let host = self.init_host_params(seed);
+        self.state_from_host(&host)
+    }
+
+    /// Download parameters (for FedAvg aggregation on the server).
+    pub fn state_to_host(&self, state: &TrainState) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(state.params.len());
+        for buf in &state.params {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+            out.push(
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// One SGD step on a batch; updates `state` in place, returns loss.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<f32> {
+        let xb = self.client.upload_f32(x, &self.meta.input_shape)?;
+        let yb = self.client.upload_i32(y, &self.meta.label_shape)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            state.params.iter().collect();
+        args.push(&xb);
+        args.push(&yb);
+        let mut outs = self
+            .train_exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("train execute: {e}"))?;
+        let replica = outs.swap_remove(0);
+        let n = self.meta.train_outputs;
+        if replica.len() == n {
+            // flattened outputs: stay on device
+            let mut bufs = replica;
+            let loss_buf = bufs.pop().expect("loss output");
+            state.params = bufs;
+            state.steps += 1;
+            let loss = loss_buf
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("loss download: {e}"))?;
+            Ok(first_f32(&loss)?)
+        } else if replica.len() == 1 {
+            // tuple root: host round-trip fallback
+            let tup = replica[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("tuple download: {e}"))?;
+            let mut parts = tup
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+            anyhow::ensure!(parts.len() == n, "expected {n} tuple elements");
+            let loss_lit = parts.pop().unwrap();
+            let mut new_params = Vec::with_capacity(parts.len());
+            for (lit, spec) in parts.into_iter().zip(&self.meta.params) {
+                let host = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+                new_params.push(self.client.upload_f32(&host, &spec.shape)?);
+            }
+            state.params = new_params;
+            state.steps += 1;
+            Ok(first_f32(&loss_lit)?)
+        } else {
+            anyhow::bail!(
+                "unexpected output arity {} (want {n} or 1)",
+                replica.len()
+            )
+        }
+    }
+
+    /// Evaluate a batch: (mean loss, #correct).
+    pub fn eval_step(
+        &self,
+        state: &TrainState,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let xb = self.client.upload_f32(x, &self.meta.input_shape)?;
+        let yb = self.client.upload_i32(y, &self.meta.label_shape)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            state.params.iter().collect();
+        args.push(&xb);
+        args.push(&yb);
+        let mut outs = self
+            .eval_exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("eval execute: {e}"))?;
+        let replica = outs.swap_remove(0);
+        if replica.len() == 2 {
+            let loss = first_f32(
+                &replica[0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("loss: {e}"))?,
+            )?;
+            let correct = first_f32(
+                &replica[1]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("correct: {e}"))?,
+            )?;
+            Ok((loss, correct))
+        } else {
+            let tup = replica[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+            let (l, c) = tup
+                .to_tuple2()
+                .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+            Ok((first_f32(&l)?, first_f32(&c)?))
+        }
+    }
+}
+
+fn first_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("scalar read: {e}"))
+}
+
+fn init_tensor(spec: &ParamSpec, rng: &mut Rng) -> Vec<f32> {
+    let n = spec.numel();
+    match &spec.init {
+        InitKind::He { fan_in } => {
+            let std = (2.0 / *fan_in as f64).sqrt();
+            (0..n).map(|_| (rng.normal() * std) as f32).collect()
+        }
+        InitKind::Ones => vec![1.0; n],
+        InitKind::Zeros => vec![0.0; n],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{InitKind, ParamSpec};
+
+    #[test]
+    fn init_tensor_statistics() {
+        let mut rng = Rng::new(0);
+        let spec = ParamSpec {
+            name: "w".into(),
+            shape: vec![100, 100],
+            init: InitKind::He { fan_in: 50 },
+        };
+        let t = init_tensor(&spec, &mut rng);
+        assert_eq!(t.len(), 10_000);
+        let mean: f32 = t.iter().sum::<f32>() / t.len() as f32;
+        let want_std = (2.0f32 / 50.0).sqrt();
+        let var: f32 =
+            t.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                / t.len() as f32;
+        assert!(mean.abs() < 0.01);
+        assert!((var.sqrt() - want_std).abs() / want_std < 0.05);
+    }
+
+    #[test]
+    fn init_tensor_constants() {
+        let mut rng = Rng::new(0);
+        let ones = init_tensor(
+            &ParamSpec {
+                name: "g".into(),
+                shape: vec![7],
+                init: InitKind::Ones,
+            },
+            &mut rng,
+        );
+        assert_eq!(ones, vec![1.0; 7]);
+        let zeros = init_tensor(
+            &ParamSpec {
+                name: "b".into(),
+                shape: vec![5],
+                init: InitKind::Zeros,
+            },
+            &mut rng,
+        );
+        assert_eq!(zeros, vec![0.0; 5]);
+    }
+}
+
+impl<'c> ModelExecutor<'c> {
+    /// Debug helper: raw execute_b on the train executable, returns
+    /// outputs-per-replica count.
+    pub fn debug_execute(
+        &self,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<usize> {
+        let outs = self
+            .train_exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        Ok(outs[0].len())
+    }
+}

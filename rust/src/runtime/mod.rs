@@ -1,0 +1,28 @@
+//! The PJRT runtime: load AOT-lowered HLO text and execute training steps.
+//!
+//! Python runs ONCE, at `make artifacts`; from here on the request path is
+//! pure Rust → PJRT:
+//!
+//! ```text
+//! PjRtClient::cpu()
+//!   → HloModuleProto::from_text_file("artifacts/<model>_train.hlo.txt")
+//!   → client.compile(...)
+//!   → executable.execute_b(device-resident params ++ [x, y])
+//! ```
+//!
+//! - [`artifact`] — metadata (`artifacts/meta/*.json`) describing each
+//!   model's parameter order/shapes/inits and IO layout.
+//! - [`client`] — thin PJRT CPU client wrapper.
+//! - [`executor`] — compiled train/eval steps with parameters held as
+//!   device buffers between steps (the L3 hot path; see §Perf).
+//! - [`registry`] — artifact discovery.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+pub mod registry;
+
+pub use artifact::{InitKind, ModelMeta, ParamSpec};
+pub use client::RuntimeClient;
+pub use executor::{ModelExecutor, TrainState};
+pub use registry::Registry;

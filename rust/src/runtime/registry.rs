@@ -1,0 +1,74 @@
+//! Artifact discovery: find the artifacts directory and list models.
+
+use crate::util::json::parse_file;
+
+pub struct Registry {
+    pub dir: std::path::PathBuf,
+    pub models: Vec<String>,
+}
+
+impl Registry {
+    /// Locate artifacts via `SWAN_ARTIFACTS` or by walking up from the
+    /// current directory (tests run from the crate root, binaries may
+    /// run from anywhere in the workspace).
+    pub fn discover() -> anyhow::Result<Registry> {
+        if let Ok(dir) = std::env::var("SWAN_ARTIFACTS") {
+            return Self::open(dir);
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("meta").join("index.json").exists() {
+                return Self::open(cand);
+            }
+            if !cur.pop() {
+                anyhow::bail!(
+                    "artifacts/ not found — run `make artifacts` first \
+                     (or set SWAN_ARTIFACTS)"
+                );
+            }
+        }
+    }
+
+    pub fn open(dir: impl Into<std::path::PathBuf>) -> anyhow::Result<Registry> {
+        let dir = dir.into();
+        let idx = parse_file(dir.join("meta").join("index.json"))?;
+        let models = idx
+            .req_arr("models")?
+            .iter()
+            .filter_map(|m| m.as_str().map(str::to_string))
+            .collect();
+        Ok(Registry { dir, models })
+    }
+
+    pub fn has_model(&self, name: &str) -> bool {
+        self.models.iter().any(|m| m == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discovers_built_artifacts() {
+        // unit tests run from the crate root; artifacts may or may not be
+        // built — both paths must behave sensibly.
+        match Registry::discover() {
+            Ok(reg) => {
+                assert!(reg.has_model("shufflenet_s"));
+                assert!(reg.has_model("resnet_s"));
+                assert!(reg.has_model("mobilenet_s"));
+                assert!(!reg.has_model("gpt5"));
+            }
+            Err(e) => {
+                assert!(e.to_string().contains("make artifacts"));
+            }
+        }
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(Registry::open("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Android cpuset/priority scheduling model.
+//!
+//! From the Android sources the paper cites ([1] in §4.3): foreground
+//! application threads are dispatched to the fastest available cores and
+//! get CFS priority over background work. We model the part Swan
+//! interacts with: given `k` foreground threads, they occupy the `k`
+//! fastest cores (prime → big → little), and on any core shared with
+//! training threads, the foreground thread receives a priority-weighted
+//! share of cycles.
+//!
+//! This is the mechanism behind both directions of Table 3:
+//! - training on big cores slows foreground apps (PCMark drops), and
+//! - foreground apps shrink training's share (Swan's controller sees the
+//!   step-latency inflation and migrates away).
+
+use crate::soc::device::Device;
+
+/// CFS nice-level weight ratio between a foreground thread and a
+/// background (training) thread sharing a core. Android runs background
+/// work at nice ≥ 10; weight ratio ≈ 3:1 is the corresponding CFS ratio
+/// order of magnitude.
+pub const FG_WEIGHT: f64 = 3.0;
+
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    n_cores: usize,
+    /// Cores sorted fastest-first (prime, big, little), used for
+    /// foreground placement.
+    fast_order: Vec<usize>,
+}
+
+impl Scheduler {
+    pub fn new(device: &Device) -> Self {
+        let mut order: Vec<usize> = (0..device.n_cores()).collect();
+        order.sort_by(|&a, &b| {
+            device.cores[b]
+                .peak_gflops
+                .partial_cmp(&device.cores[a].peak_gflops)
+                .unwrap()
+        });
+        Scheduler {
+            n_cores: device.n_cores(),
+            fast_order: order,
+        }
+    }
+
+    /// Which cores `n_fg_threads` foreground threads occupy.
+    pub fn foreground_cores(&self, n_fg_threads: usize) -> Vec<usize> {
+        self.fast_order
+            .iter()
+            .take(n_fg_threads.min(self.n_cores))
+            .copied()
+            .collect()
+    }
+
+    /// Per-core cycle share available to ONE training thread pinned to
+    /// each core, given the current foreground thread placement.
+    pub fn training_share(&self, n_fg_threads: usize) -> Vec<f64> {
+        let fg = self.foreground_cores(n_fg_threads);
+        (0..self.n_cores)
+            .map(|c| {
+                let n_fg_here = fg.iter().filter(|&&f| f == c).count() as f64;
+                1.0 / (1.0 + FG_WEIGHT * n_fg_here)
+            })
+            .collect()
+    }
+
+    /// Foreground thread's own cycle share on `core` when training pins
+    /// `n_train_here` threads there (for the PCMark model).
+    pub fn foreground_share(&self, n_train_here: usize) -> f64 {
+        FG_WEIGHT / (FG_WEIGHT + n_train_here as f64)
+    }
+
+    /// Within-cluster affinity remap (§4.3 "moving away from cores under
+    /// contention"): cores of the same kind are interchangeable, so a
+    /// choice asking for k big cores is pinned — via sched_setaffinity —
+    /// to the k *least-contended* big cores. Returns the concrete core
+    /// ids to use for a requested choice under the given per-core shares.
+    pub fn remap_least_contended(
+        &self,
+        device: &crate::soc::device::Device,
+        requested: &[usize],
+        share: &[f64],
+    ) -> Vec<usize> {
+        use crate::soc::core::CoreKind;
+        let mut out = Vec::with_capacity(requested.len());
+        for kind in [CoreKind::Little, CoreKind::Big, CoreKind::Prime] {
+            let want = requested
+                .iter()
+                .filter(|&&c| device.kind_of(c) == kind)
+                .count();
+            if want == 0 {
+                continue;
+            }
+            let mut cands = device.cores_of_kind(kind);
+            // most-available first, index as tie-break (sort is stable)
+            cands.sort_by(|&a, &b| {
+                share[b].partial_cmp(&share[a]).unwrap()
+            });
+            out.extend_from_slice(&cands[..want]);
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+
+    #[test]
+    fn foreground_lands_on_fastest_cores() {
+        let d = device(DeviceId::OnePlus8); // core 7 is prime
+        let s = Scheduler::new(&d);
+        assert_eq!(s.foreground_cores(1), vec![7]);
+        let two = s.foreground_cores(2);
+        assert!(two.contains(&7));
+        assert!(two.iter().all(|&c| c >= 4), "fg must stay on big/prime");
+    }
+
+    #[test]
+    fn training_share_drops_only_on_contended_cores() {
+        let d = device(DeviceId::Pixel3);
+        let s = Scheduler::new(&d);
+        let share = s.training_share(2);
+        let fg = s.foreground_cores(2);
+        for c in 0..d.n_cores() {
+            if fg.contains(&c) {
+                assert!((share[c] - 0.25).abs() < 1e-12);
+            } else {
+                assert_eq!(share[c], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn idle_device_gives_full_shares() {
+        let d = device(DeviceId::S10e);
+        let s = Scheduler::new(&d);
+        assert!(s.training_share(0).iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn foreground_share_degrades_with_training_threads() {
+        let d = device(DeviceId::Pixel3);
+        let s = Scheduler::new(&d);
+        assert_eq!(s.foreground_share(0), 1.0);
+        assert!(s.foreground_share(1) < 1.0);
+        assert!(s.foreground_share(2) < s.foreground_share(1));
+    }
+}

@@ -1,0 +1,42 @@
+//! Virtual clock. All simulated components share seconds-since-start;
+//! the FL harness reports time-to-accuracy in this clock, never
+//! wall-clock (§5.1's emulation does the same).
+
+#[derive(Clone, Debug, Default)]
+pub struct Clock {
+    now_s: f64,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Clock { now_s: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now_s
+    }
+
+    pub fn advance(&mut self, dt_s: f64) {
+        debug_assert!(dt_s >= 0.0, "time cannot go backwards");
+        self.now_s += dt_s;
+    }
+
+    pub fn hours(&self) -> f64 {
+        self.now_s / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = Clock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.advance(2.5);
+        assert!((c.now() - 4.0).abs() < 1e-12);
+        assert!((c.hours() - 4.0 / 3600.0).abs() < 1e-15);
+    }
+}

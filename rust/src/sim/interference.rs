@@ -1,0 +1,145 @@
+//! Foreground-application interference sessions.
+//!
+//! §3.2: "a majority of Android applications only use 1–2 threads" [27],
+//! arriving in bursts while the user interacts with the phone. The
+//! generator produces an alternating renewal process of idle gaps and
+//! app sessions (1–2 foreground threads plus a screen/app power draw);
+//! the phone sim feeds the resulting thread count into the scheduler
+//! model and the power draw into the battery.
+
+use crate::util::rng::Rng;
+
+/// Instantaneous foreground load.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ForegroundLoad {
+    /// Active foreground compute threads (0 = device idle).
+    pub threads: usize,
+    /// Screen + app power draw, watts (0 when idle).
+    pub power_w: f64,
+}
+
+impl ForegroundLoad {
+    pub const IDLE: ForegroundLoad = ForegroundLoad {
+        threads: 0,
+        power_w: 0.0,
+    };
+
+    pub fn is_idle(&self) -> bool {
+        self.threads == 0
+    }
+}
+
+/// Alternating idle/session renewal process.
+#[derive(Clone, Debug)]
+pub struct SessionGenerator {
+    rng: Rng,
+    /// Mean idle gap between sessions, seconds.
+    pub mean_idle_s: f64,
+    /// Mean session length, seconds.
+    pub mean_session_s: f64,
+    /// Probability a session is heavy (2 threads vs 1).
+    pub p_heavy: f64,
+    state: ForegroundLoad,
+    next_transition_s: f64,
+}
+
+impl SessionGenerator {
+    pub fn new(seed: u64, mean_idle_s: f64, mean_session_s: f64, p_heavy: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        let first = rng.exponential(mean_idle_s);
+        SessionGenerator {
+            rng,
+            mean_idle_s,
+            mean_session_s,
+            p_heavy,
+            state: ForegroundLoad::IDLE,
+            next_transition_s: first,
+        }
+    }
+
+    /// A generator that never produces foreground load (idle device).
+    pub fn always_idle(seed: u64) -> Self {
+        let mut g = SessionGenerator::new(seed, f64::INFINITY, 1.0, 0.0);
+        g.next_transition_s = f64::INFINITY;
+        g
+    }
+
+    /// Advance to absolute simulated time `now_s`, return current load.
+    pub fn load_at(&mut self, now_s: f64) -> ForegroundLoad {
+        while now_s >= self.next_transition_s {
+            if self.state.is_idle() {
+                // start a session
+                let heavy = self.rng.bool(self.p_heavy);
+                self.state = ForegroundLoad {
+                    threads: if heavy { 2 } else { 1 },
+                    power_w: if heavy { 2.2 } else { 1.3 }, // screen + app
+                };
+                self.next_transition_s +=
+                    self.rng.exponential(self.mean_session_s);
+            } else {
+                self.state = ForegroundLoad::IDLE;
+                self.next_transition_s += self.rng.exponential(self.mean_idle_s);
+            }
+        }
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_idle_stays_idle() {
+        let mut g = SessionGenerator::always_idle(1);
+        for t in 0..10_000 {
+            assert!(g.load_at(t as f64 * 10.0).is_idle());
+        }
+    }
+
+    #[test]
+    fn sessions_alternate_and_threads_bounded() {
+        let mut g = SessionGenerator::new(3, 300.0, 120.0, 0.3);
+        let mut saw_idle = false;
+        let mut saw_busy = false;
+        for t in 0..50_000 {
+            let l = g.load_at(t as f64);
+            assert!(l.threads <= 2);
+            if l.is_idle() {
+                saw_idle = true;
+                assert_eq!(l.power_w, 0.0);
+            } else {
+                saw_busy = true;
+                assert!(l.power_w > 0.0);
+            }
+        }
+        assert!(saw_idle && saw_busy);
+    }
+
+    #[test]
+    fn duty_cycle_tracks_means() {
+        let mut g = SessionGenerator::new(7, 300.0, 100.0, 0.5);
+        let mut busy = 0usize;
+        let n = 200_000;
+        for t in 0..n {
+            if !g.load_at(t as f64).is_idle() {
+                busy += 1;
+            }
+        }
+        let duty = busy as f64 / n as f64;
+        let expect = 100.0 / 400.0;
+        assert!(
+            (duty - expect).abs() < 0.05,
+            "duty {duty} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = SessionGenerator::new(11, 200.0, 80.0, 0.4);
+        let mut b = SessionGenerator::new(11, 200.0, 80.0, 0.4);
+        for t in 0..5000 {
+            assert_eq!(a.load_at(t as f64), b.load_at(t as f64));
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Device-level simulation: virtual time, the Android cpuset scheduler,
+//! foreground interference sessions, the phone process that ties battery
+//! + thermal + scheduler together, and the PCMark-style responsiveness
+//! benchmark used for Table 3 / Fig 3.
+
+pub mod android_sched;
+pub mod clock;
+pub mod interference;
+pub mod pcmark;
+pub mod phone;
+
+pub use android_sched::Scheduler;
+pub use clock::Clock;
+pub use interference::{ForegroundLoad, SessionGenerator};
+pub use phone::SimPhone;

@@ -1,0 +1,249 @@
+//! The simulated phone: battery + thermal + scheduler + interference,
+//! advanced on a shared virtual clock. This is the object both the Swan
+//! explorer/controller and the baseline policy run against — they can
+//! only observe what a real Android userland service could observe
+//! (battery level/voltage/state, temperature, own step latencies), never
+//! the simulator's ground-truth power.
+
+use crate::power::{Battery, BatteryState, Charger, Thermal};
+use crate::soc::device::Device;
+use crate::soc::exec_model::{estimate, ExecEstimate, ExecutionContext};
+use crate::workload::Workload;
+
+use super::android_sched::Scheduler;
+use super::clock::Clock;
+use super::interference::{ForegroundLoad, SessionGenerator};
+
+/// Power drawn by always-on background services (radios, sensors, OS).
+const BACKGROUND_SERVICES_W: f64 = 0.12;
+
+/// What a userland observer can read from the phone.
+#[derive(Clone, Copy, Debug)]
+pub struct Observation {
+    pub battery_level: u32,
+    pub battery_voltage: f64,
+    pub battery_state: BatteryState,
+    pub battery_temp_c: f64,
+    pub screen_on: bool,
+    pub now_s: f64,
+}
+
+/// One simulated device instance.
+pub struct SimPhone {
+    pub device: Device,
+    pub battery: Battery,
+    pub thermal: Thermal,
+    pub clock: Clock,
+    pub scheduler: Scheduler,
+    pub sessions: SessionGenerator,
+    pub charger: Option<Charger>,
+    /// Ground truth counters (for evaluation only — the engine never reads
+    /// these; they feed the paper tables as the "measured" columns).
+    pub truth_train_energy_j: f64,
+    pub truth_train_time_s: f64,
+}
+
+impl SimPhone {
+    pub fn new(device: Device, seed: u64) -> Self {
+        let scheduler = Scheduler::new(&device);
+        let battery = Battery::new(device.battery_mah, 0.85);
+        SimPhone {
+            device,
+            battery,
+            thermal: Thermal::new(24.0),
+            clock: Clock::new(),
+            scheduler,
+            sessions: SessionGenerator::always_idle(seed),
+            charger: None,
+            truth_train_energy_j: 0.0,
+            truth_train_time_s: 0.0,
+        }
+    }
+
+    pub fn with_sessions(mut self, sessions: SessionGenerator) -> Self {
+        self.sessions = sessions;
+        self
+    }
+
+    pub fn plug_charger(&mut self, charger: Charger) {
+        self.charger = Some(charger);
+    }
+
+    pub fn unplug_charger(&mut self) {
+        self.charger = None;
+        self.battery.set_state(BatteryState::Discharging);
+    }
+
+    /// Current foreground load (advances the session process).
+    pub fn foreground(&mut self) -> ForegroundLoad {
+        self.sessions.load_at(self.clock.now())
+    }
+
+    pub fn observe(&mut self) -> Observation {
+        let fg = self.foreground();
+        Observation {
+            battery_level: self.battery.level_percent(),
+            battery_voltage: self.battery.voltage(),
+            battery_state: self.battery.state(),
+            battery_temp_c: self.thermal.temp_c,
+            screen_on: !fg.is_idle(),
+            now_s: self.clock.now(),
+        }
+    }
+
+    /// Let simulated time pass with no training running.
+    pub fn idle(&mut self, dt_s: f64) {
+        let fg = self.foreground();
+        let p = BACKGROUND_SERVICES_W + fg.power_w;
+        self.apply_power(p, dt_s);
+        self.clock.advance(dt_s);
+    }
+
+    /// Execute one training step on `cores`; returns the estimate the
+    /// engine observes (latency) — energy is only observable through the
+    /// battery. Foreground load is sampled once at step start (steps are
+    /// short relative to sessions).
+    pub fn run_train_step(
+        &mut self,
+        workload: &Workload,
+        cores: &[usize],
+    ) -> ExecEstimate {
+        let fg = self.foreground();
+        let share = self.scheduler.training_share(fg.threads);
+        // §4.3: cores within a cluster are interchangeable — pin to the
+        // least-contended ones (sched_setaffinity in the real system)
+        let cores =
+            self.scheduler
+                .remap_least_contended(&self.device, cores, &share);
+        let ctx = ExecutionContext::with_share(share);
+        let est = estimate(&self.device, workload, &cores, &ctx);
+        let p_total =
+            est.avg_power_w + fg.power_w + BACKGROUND_SERVICES_W;
+        self.apply_power(p_total, est.latency_s);
+        self.clock.advance(est.latency_s);
+        self.truth_train_energy_j += est.energy_j;
+        self.truth_train_time_s += est.latency_s;
+        est
+    }
+
+    fn apply_power(&mut self, load_w: f64, dt_s: f64) {
+        match self.charger {
+            Some(ch) => {
+                ch.step(&mut self.battery, load_w, dt_s);
+            }
+            None => {
+                self.battery.drain(load_w, dt_s);
+            }
+        }
+        self.thermal.step(load_w, dt_s);
+    }
+
+    /// Paper §4.1 admission check: idle, cool, and battery healthy.
+    pub fn admits_training(&mut self, min_battery_level: u32) -> bool {
+        let obs = self.observe();
+        let battery_ok = obs.battery_state == BatteryState::Charging
+            || obs.battery_level >= min_battery_level;
+        !obs.screen_on && obs.battery_temp_c <= 35.0 && battery_ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+    use crate::workload::{builtin, WorkloadName};
+
+    fn phone() -> SimPhone {
+        SimPhone::new(device(DeviceId::Pixel3), 42)
+    }
+
+    #[test]
+    fn training_drains_battery_and_heats() {
+        let mut p = phone();
+        let w = builtin(WorkloadName::Resnet34);
+        let soc0 = p.battery.soc();
+        let t0 = p.thermal.temp_c;
+        for _ in 0..50 {
+            p.run_train_step(&w, &[4, 5, 6, 7]);
+        }
+        assert!(p.battery.soc() < soc0);
+        assert!(p.thermal.temp_c > t0);
+        assert!(p.truth_train_time_s > 0.0);
+    }
+
+    #[test]
+    fn idle_drains_much_less() {
+        let mut a = phone();
+        let mut b = phone();
+        let w = builtin(WorkloadName::Resnet34);
+        a.idle(600.0);
+        while b.clock.now() < 600.0 {
+            b.run_train_step(&w, &[4, 5, 6, 7]);
+        }
+        assert!(a.battery.soc() > b.battery.soc());
+    }
+
+    #[test]
+    fn admission_gates_on_temperature() {
+        let mut p = phone();
+        let w = builtin(WorkloadName::Resnet34);
+        assert!(p.admits_training(30));
+        // heat it up past 35°C with sustained full-tilt training
+        for _ in 0..3000 {
+            p.run_train_step(&w, &[4, 5, 6, 7]);
+            if p.thermal.temp_c > 35.5 {
+                break;
+            }
+        }
+        assert!(p.thermal.temp_c > 35.0, "never got hot: {}", p.thermal.temp_c);
+        assert!(!p.admits_training(30));
+    }
+
+    #[test]
+    fn admission_gates_on_battery_level() {
+        let mut p = phone();
+        p.battery.set_soc(0.10);
+        assert!(!p.admits_training(30));
+        p.plug_charger(Charger::new(18.0));
+        p.battery.charge(1.0, 1.0); // set state to Charging
+        assert!(p.admits_training(30), "charging overrides low battery");
+    }
+
+    #[test]
+    fn admission_gates_on_screen() {
+        let d = device(DeviceId::Pixel3);
+        let mut p = SimPhone::new(d, 1)
+            .with_sessions(SessionGenerator::new(1, 1e-6, 1e9, 0.0));
+        // session generator immediately starts an (endless) session
+        p.idle(10.0);
+        assert!(!p.admits_training(0));
+    }
+
+    #[test]
+    fn interference_inflates_step_latency() {
+        let w = builtin(WorkloadName::Resnet34);
+        let mut quiet = phone();
+        let t_quiet = quiet.run_train_step(&w, &[4, 5, 6, 7]).latency_s;
+        let d = device(DeviceId::Pixel3);
+        let mut busy = SimPhone::new(d, 2)
+            .with_sessions(SessionGenerator::new(2, 1e-6, 1e9, 1.0));
+        busy.idle(1.0); // enter the session
+        let t_busy = busy.run_train_step(&w, &[4, 5, 6, 7]).latency_s;
+        assert!(
+            t_busy > 1.3 * t_quiet,
+            "foreground contention must slow training: {t_busy} vs {t_quiet}"
+        );
+    }
+
+    #[test]
+    fn charger_keeps_battery_up_during_training() {
+        let mut p = phone();
+        p.plug_charger(Charger::new(18.0));
+        let w = builtin(WorkloadName::ShufflenetV2);
+        let soc0 = p.battery.soc();
+        for _ in 0..100 {
+            p.run_train_step(&w, &[4]);
+        }
+        assert!(p.battery.soc() >= soc0 - 0.01, "18W charger out-supplies training");
+    }
+}

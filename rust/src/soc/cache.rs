@@ -1,0 +1,112 @@
+//! Cache-contention ("thrashing") model — the quantitative core of §3.1.
+//!
+//! The paper's observation: depthwise convolution is memory-intensive, so
+//! running it on multiple threads makes them *compete for the shared
+//! cache*, and performance collapses instead of scaling ("a known issue
+//! addressed on GPUs and Intel CPUs, but not ARM"). We model this as a
+//! super-linear slowdown multiplier on memory-bound ops as a function of
+//! thread count, scaled by the device's calibrated `thrash_beta`
+//! (see `soc::device`) and by how much the op's streaming working set
+//! exceeds the shared cache.
+//!
+//! `thrash(1) == 1` always: a single thread owns the cache exclusively,
+//! which is exactly why "one big core" wins for ShuffleNet in Fig 2b.
+
+use crate::workload::OpKind;
+
+/// How strongly an op kind suffers cache contention. Depthwise conv is
+/// the pathological case; other elementwise/streaming ops contend for
+/// bandwidth but have no reuse to lose, so they degrade far less.
+pub fn contention_severity(kind: OpKind) -> f64 {
+    match kind {
+        OpKind::Dw => 1.0,
+        OpKind::Norm | OpKind::Pool | OpKind::Add | OpKind::Act => 0.25,
+        OpKind::Update => 0.15,
+        // matmul-class ops are tiled to stay cache-resident; they lose
+        // almost nothing to co-runners
+        OpKind::Conv | OpKind::Pw | OpKind::Linear => 0.005,
+    }
+}
+
+/// Slowdown multiplier for an op executed by `n_threads` threads whose
+/// combined streaming working set is `working_set_bytes`, on a device
+/// with `shared_cache_bytes` of cache and thrash severity `beta`.
+///
+/// Super-linear in n (∝ n²−1): each added thread both shrinks every
+/// thread's effective cache share *and* adds a stream that evicts the
+/// others — the standard capacity-miss blowup shape for shared LRU
+/// caches. Already at n=2 the reuse a single exclusive owner enjoyed is
+/// gone, which is exactly Fig 2b's "one big core wins" observation.
+pub fn thrash_multiplier(
+    kind: OpKind,
+    n_threads: usize,
+    working_set_bytes: f64,
+    shared_cache_bytes: f64,
+    beta: f64,
+) -> f64 {
+    if n_threads <= 1 {
+        return 1.0;
+    }
+    let sev = contention_severity(kind);
+    if sev == 0.0 {
+        return 1.0;
+    }
+    // pressure in [0, 1]: fraction of the op's reuse that thrashing can
+    // destroy. Once the streaming working set reaches the cache size the
+    // damage saturates — adding more working set cannot make the misses
+    // worse than "every access misses".
+    let pressure = (working_set_bytes / shared_cache_bytes).min(1.0);
+    let n = n_threads as f64;
+    1.0 + beta * sev * pressure * (n * n - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn single_thread_never_thrashes() {
+        for kind in OpKind::ALL {
+            assert_eq!(
+                thrash_multiplier(kind, 1, 1e9, 2e6, 10.0),
+                1.0,
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn depthwise_worst_matmul_negligible() {
+        let dw = thrash_multiplier(OpKind::Dw, 4, 8e6, 2e6, 4.0);
+        let mm = thrash_multiplier(OpKind::Conv, 4, 8e6, 2e6, 4.0);
+        assert!(dw > 10.0 * mm, "dw={dw} mm={mm}");
+        assert!(mm < 1.5);
+    }
+
+    #[test]
+    fn monotone_in_threads_and_beta() {
+        check(200, |rng| {
+            let ws = rng.range(1e5, 1e8);
+            let cache = rng.range(1e6, 8e6);
+            let beta = rng.range(0.1, 8.0);
+            let mut prev = 0.0;
+            for n in 1..=8 {
+                let t = thrash_multiplier(OpKind::Dw, n, ws, cache, beta);
+                crate::prop_assert!(t >= prev, "not monotone at n={n}");
+                prev = t;
+            }
+            let hi = thrash_multiplier(OpKind::Dw, 4, ws, cache, beta * 2.0);
+            let lo = thrash_multiplier(OpKind::Dw, 4, ws, cache, beta);
+            crate::prop_assert!(hi >= lo, "beta not monotone");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn small_working_set_thrashes_less() {
+        let small = thrash_multiplier(OpKind::Dw, 4, 0.5e6, 4e6, 4.0);
+        let large = thrash_multiplier(OpKind::Dw, 4, 16e6, 4e6, 4.0);
+        assert!(large > 2.0 * small);
+    }
+}

@@ -1,0 +1,99 @@
+//! Core kinds and per-core specifications.
+
+use std::fmt;
+
+/// Index of a core within its device (matches the paper's "0"–"7" naming:
+/// low indices are the low-power cluster).
+pub type CoreId = usize;
+
+/// The heterogeneity classes in ARM big.LITTLE(+prime) SoCs (Figure 1a).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum CoreKind {
+    /// Low-power, high-latency cluster (Cortex-A5x; paper's cores 0–3).
+    Little,
+    /// Low-latency performance cluster (Cortex-A7x; paper's cores 4–6/7).
+    Big,
+    /// Overclocked "Prime" core (e.g. core 7 on SD855/SD865).
+    Prime,
+}
+
+impl fmt::Display for CoreKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CoreKind::Little => write!(f, "little"),
+            CoreKind::Big => write!(f, "big"),
+            CoreKind::Prime => write!(f, "prime"),
+        }
+    }
+}
+
+/// Static per-core model parameters.
+#[derive(Clone, Debug)]
+pub struct CoreSpec {
+    pub kind: CoreKind,
+    /// Microarchitecture label (documentation only).
+    pub uarch: &'static str,
+    /// Max clock in GHz.
+    pub freq_ghz: f64,
+    /// Peak sustained f32 throughput in GFLOP/s at max clock
+    /// (NEON: ~4 flops/cycle on A5x, ~8 on A7x-class).
+    pub peak_gflops: f64,
+    /// Active power at full load, watts.
+    pub power_active_w: f64,
+    /// Idle (clock-gated) power, watts.
+    pub power_idle_w: f64,
+}
+
+impl CoreSpec {
+    pub fn little(uarch: &'static str, freq_ghz: f64, gflops: f64, pw: f64) -> Self {
+        CoreSpec {
+            kind: CoreKind::Little,
+            uarch,
+            freq_ghz,
+            peak_gflops: gflops,
+            power_active_w: pw,
+            power_idle_w: 0.01,
+        }
+    }
+
+    pub fn big(uarch: &'static str, freq_ghz: f64, gflops: f64, pw: f64) -> Self {
+        CoreSpec {
+            kind: CoreKind::Big,
+            uarch,
+            freq_ghz,
+            peak_gflops: gflops,
+            power_active_w: pw,
+            power_idle_w: 0.02,
+        }
+    }
+
+    pub fn prime(uarch: &'static str, freq_ghz: f64, gflops: f64, pw: f64) -> Self {
+        CoreSpec {
+            kind: CoreKind::Prime,
+            uarch,
+            freq_ghz,
+            peak_gflops: gflops,
+            power_active_w: pw,
+            power_idle_w: 0.02,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_ordering_matches_cost_rules() {
+        // swan::cost rule 2/3 rely on Little < Big < Prime
+        assert!(CoreKind::Little < CoreKind::Big);
+        assert!(CoreKind::Big < CoreKind::Prime);
+    }
+
+    #[test]
+    fn constructors_set_kind() {
+        assert_eq!(CoreSpec::little("a55", 1.8, 7.0, 0.45).kind, CoreKind::Little);
+        assert_eq!(CoreSpec::big("a76", 2.4, 19.0, 1.7).kind, CoreKind::Big);
+        assert_eq!(CoreSpec::prime("a76", 2.84, 23.0, 2.5).kind, CoreKind::Prime);
+    }
+}

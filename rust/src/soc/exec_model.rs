@@ -1,0 +1,349 @@
+//! Workload × core-set → (latency, power, energy).
+//!
+//! An op-level roofline with three mobile-specific twists the paper's
+//! measurements hinge on:
+//!
+//! 1. **OpenMP-static straggler semantics.** PyTorch's CPU backend splits
+//!    each op evenly across its threads, so a heterogeneous core set runs
+//!    at the pace of its *slowest* member — which is why mixing little
+//!    cores into a big-core combo makes training slower, and why the
+//!    paper's choice space is ordered rather than "more cores = better".
+//! 2. **Per-core stream bandwidth.** A single mobile core cannot saturate
+//!    DRAM; memory-bound ops gain bandwidth with threads — until twist 3.
+//! 3. **Cache thrashing** (`soc::cache`): memory-bound ops (depthwise
+//!    conv above all) slow down super-linearly with thread count, giving
+//!    Fig 2b's anti-scaling and the huge Table-2 wins on ShuffleNet.
+//!
+//! Power integrates per-op: active cores burn `power_active_w` scaled by
+//! their duty cycle within the op (stragglers keep fast cores idle), with
+//! memory-stalled cycles burning a calibrated fraction of active power.
+
+use super::cache::thrash_multiplier;
+use super::device::Device;
+use crate::workload::Workload;
+
+/// Fractional parallel-sync overhead per extra thread (OpenMP barrier +
+/// work-imbalance); calibrated so 4 homogeneous cores give ≈2.9×.
+const SYNC_OVERHEAD_PER_THREAD: f64 = 0.12;
+/// Fraction of DRAM bandwidth one big core's load/store stream reaches.
+const BIG_STREAM_FRACTION: f64 = 0.35;
+/// Same for a little core (narrower LSQ, lower clock).
+const LITTLE_STREAM_FRACTION: f64 = 0.15;
+/// Power burned while memory-stalled, as a fraction of active power.
+const STALL_POWER_FRACTION: f64 = 0.55;
+/// Fraction of a matmul-class op's peak the NEON pipes sustain.
+const COMPUTE_EFFICIENCY: f64 = 0.85;
+/// Per-extra-core active-power inflation: multi-core residency holds the
+/// cluster at a higher DVFS voltage and OpenMP spin-waits burn cycles at
+/// barriers, so per-core power rises with thread count. This is why a
+/// single big core is the most energy-efficient choice for ResNet-34 in
+/// Fig 2a even though four cores are ~3× faster.
+const MULTI_CORE_POWER_PENALTY: f64 = 0.08;
+
+/// Per-core availability (1.0 = exclusive use; lower when the Android
+/// scheduler timeslices the training thread against other apps).
+#[derive(Clone, Debug)]
+pub struct ExecutionContext {
+    pub share: Vec<f64>,
+}
+
+impl ExecutionContext {
+    pub fn exclusive(n_cores: usize) -> Self {
+        ExecutionContext {
+            share: vec![1.0; n_cores],
+        }
+    }
+
+    pub fn with_share(share: Vec<f64>) -> Self {
+        ExecutionContext { share }
+    }
+}
+
+/// Simulated cost of one training step (or one benchmark op).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecEstimate {
+    /// Wall-clock seconds for one step.
+    pub latency_s: f64,
+    /// Joules for one step (SoC base power included).
+    pub energy_j: f64,
+    /// Mean power over the step, watts.
+    pub avg_power_w: f64,
+    /// Peak per-op power over the step, watts.
+    pub peak_power_w: f64,
+}
+
+/// Estimate one training step of `workload` on `cores` of `device`.
+///
+/// `cores` is the execution choice (paper's "0123", "4567", …);
+/// panics on empty or out-of-range core sets (programmer error).
+pub fn estimate(
+    device: &Device,
+    workload: &Workload,
+    cores: &[usize],
+    ctx: &ExecutionContext,
+) -> ExecEstimate {
+    assert!(!cores.is_empty(), "empty execution choice");
+    for &c in cores {
+        assert!(c < device.n_cores(), "core {c} out of range");
+    }
+    let n = cores.len();
+    let par_factor = 1.0 + SYNC_OVERHEAD_PER_THREAD * (n as f64 - 1.0);
+
+    // effective per-core compute throughput under scheduler shares
+    let eff_gflops: Vec<f64> = cores
+        .iter()
+        .map(|&c| {
+            device.cores[c].peak_gflops
+                * 1e9
+                * COMPUTE_EFFICIENCY
+                * ctx.share.get(c).copied().unwrap_or(1.0).max(1e-3)
+        })
+        .collect();
+    let slowest = eff_gflops.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    // aggregate stream bandwidth for this core set
+    let stream_bw: f64 = cores
+        .iter()
+        .map(|&c| {
+            let frac = match device.cores[c].kind {
+                super::core::CoreKind::Little => LITTLE_STREAM_FRACTION,
+                _ => BIG_STREAM_FRACTION,
+            };
+            frac * device.mem_bw_bytes
+                * ctx.share.get(c).copied().unwrap_or(1.0).max(1e-3)
+        })
+        .sum::<f64>()
+        .min(device.mem_bw_bytes);
+
+    let mut total_time = 0.0;
+    let mut active_energy = 0.0;
+    let mut peak_power = 0.0f64;
+
+    for op in &workload.ops {
+        // compute wall: even split, straggler-paced
+        let t_compute = (op.flops / n as f64) * par_factor / slowest;
+        // memory wall: shared bandwidth + contention blowup
+        let thrash = thrash_multiplier(
+            op.kind,
+            n,
+            op.bytes,
+            device.shared_cache_bytes,
+            device.thrash_beta,
+        );
+        let t_mem = op.bytes * thrash / stream_bw;
+        let t_op = t_compute.max(t_mem).max(1e-12);
+
+        // per-core duty cycle within this op
+        let mut p_op = 0.0;
+        for (i, &c) in cores.iter().enumerate() {
+            let spec = &device.cores[c];
+            let duty = if t_compute >= t_mem {
+                // compute-bound: core i busy for its own share of work
+                ((op.flops / n as f64) * par_factor / eff_gflops[i]) / t_op
+            } else {
+                // memory-bound: all threads run the whole op, stalled
+                STALL_POWER_FRACTION
+            };
+            let p_active = spec.power_active_w
+                * (1.0 + MULTI_CORE_POWER_PENALTY * (n as f64 - 1.0));
+            p_op += spec.power_idle_w
+                + (p_active - spec.power_idle_w) * duty.min(1.0);
+        }
+        peak_power = peak_power.max(p_op + device.base_power_w);
+        total_time += t_op;
+        active_energy += p_op * t_op;
+    }
+
+    let energy = active_energy + device.base_power_w * total_time;
+    ExecEstimate {
+        latency_s: total_time,
+        energy_j: energy,
+        avg_power_w: energy / total_time,
+        peak_power_w: peak_power,
+    }
+}
+
+/// Fig 1b helper: time a single op on the mobile GPU.
+pub fn estimate_gpu(device: &Device, workload: &Workload) -> ExecEstimate {
+    const GPU_EFFICIENCY: f64 = 0.35;
+    let mut total = 0.0;
+    for op in &workload.ops {
+        let t_c = op.flops / (device.gpu_gflops * 1e9 * GPU_EFFICIENCY);
+        let t_m = op.bytes / device.mem_bw_bytes;
+        total += t_c.max(t_m);
+    }
+    let power = device.gpu_power_w + device.base_power_w;
+    ExecEstimate {
+        latency_s: total,
+        energy_j: power * total,
+        avg_power_w: power,
+        peak_power_w: power,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+    use crate::util::check::check;
+    use crate::workload::{builtin, WorkloadName};
+
+    fn pixel3() -> Device {
+        device(DeviceId::Pixel3)
+    }
+
+    fn ex(d: &Device) -> ExecutionContext {
+        ExecutionContext::exclusive(d.n_cores())
+    }
+
+    #[test]
+    fn resnet_all_big_cores_fastest() {
+        // Fig 2a: 4567 is the fastest choice for ResNet-34 on Pixel 3
+        let d = pixel3();
+        let w = builtin(WorkloadName::Resnet34);
+        let ctx = ex(&d);
+        let t = |cores: &[usize]| estimate(&d, &w, cores, &ctx).latency_s;
+        let t4567 = t(&[4, 5, 6, 7]);
+        for combo in [
+            vec![4, 5, 6],
+            vec![4, 5],
+            vec![4],
+            vec![0, 1, 2, 3],
+            vec![0],
+        ] {
+            assert!(t4567 < t(&combo), "{combo:?} beat 4567");
+        }
+    }
+
+    #[test]
+    fn resnet_single_big_most_energy_efficient_of_big_combos() {
+        // Fig 2a: energy-best is a single low-latency core
+        let d = pixel3();
+        let w = builtin(WorkloadName::Resnet34);
+        let ctx = ex(&d);
+        let e = |cores: &[usize]| estimate(&d, &w, cores, &ctx).energy_j;
+        assert!(e(&[4]) < e(&[4, 5, 6, 7]));
+        assert!(e(&[4]) < e(&[4, 5, 6]));
+        assert!(e(&[4]) < e(&[4, 5]));
+    }
+
+    #[test]
+    fn little_cores_lowest_power_not_lowest_energy() {
+        // §3.1: "low power usage does not translate to low energy usage"
+        let d = pixel3();
+        let w = builtin(WorkloadName::Resnet34);
+        let ctx = ex(&d);
+        let big = estimate(&d, &w, &[4], &ctx);
+        let little = estimate(&d, &w, &[0], &ctx);
+        assert!(little.avg_power_w < big.avg_power_w);
+        assert!(little.energy_j > big.energy_j);
+    }
+
+    #[test]
+    fn shufflenet_single_big_beats_all_big() {
+        // Fig 2b: ShuffleNet anti-scales — one big core is both faster
+        // and more energy-efficient than all four
+        let d = pixel3();
+        let w = builtin(WorkloadName::ShufflenetV2);
+        let ctx = ex(&d);
+        let one = estimate(&d, &w, &[4], &ctx);
+        let four = estimate(&d, &w, &[4, 5, 6, 7], &ctx);
+        assert!(one.latency_s < four.latency_s, "dw thrash must anti-scale");
+        assert!(one.energy_j < four.energy_j);
+    }
+
+    #[test]
+    fn resnet_scales_where_shufflenet_does_not() {
+        let d = pixel3();
+        let ctx = ex(&d);
+        let rn = builtin(WorkloadName::Resnet34);
+        let sn = builtin(WorkloadName::ShufflenetV2);
+        let speedup = |w: &Workload| {
+            estimate(&d, w, &[4], &ctx).latency_s
+                / estimate(&d, w, &[4, 5, 6, 7], &ctx).latency_s
+        };
+        assert!(speedup(&rn) > 2.0, "resnet speedup {}", speedup(&rn));
+        assert!(speedup(&sn) < 1.0, "shufflenet speedup {}", speedup(&sn));
+    }
+
+    #[test]
+    fn heterogeneous_combo_straggles() {
+        // adding a little core to a big core should NOT speed things up
+        // for compute-bound work (equal split → little core straggles)
+        let d = pixel3();
+        let w = builtin(WorkloadName::Resnet34);
+        let ctx = ex(&d);
+        let t_big = estimate(&d, &w, &[4], &ctx).latency_s;
+        let t_mixed = estimate(&d, &w, &[0, 4], &ctx).latency_s;
+        assert!(t_mixed > 0.9 * t_big, "mixed {t_mixed} vs big {t_big}");
+    }
+
+    #[test]
+    fn reduced_share_slows_down() {
+        let d = pixel3();
+        let w = builtin(WorkloadName::Resnet34);
+        let full = estimate(&d, &w, &[4, 5], &ex(&d));
+        let mut share = vec![1.0; d.n_cores()];
+        share[4] = 0.5; // foreground app stealing half of core 4
+        let contended =
+            estimate(&d, &w, &[4, 5], &ExecutionContext::with_share(share));
+        assert!(contended.latency_s > 1.5 * full.latency_s);
+    }
+
+    #[test]
+    fn estimates_are_positive_and_consistent() {
+        check(100, |rng| {
+            let ids = [
+                DeviceId::Pixel3,
+                DeviceId::S10e,
+                DeviceId::OnePlus8,
+                DeviceId::TabS6,
+                DeviceId::Mi10,
+            ];
+            let d = device(ids[rng.index(5)]);
+            let w = builtin(
+                [
+                    WorkloadName::Resnet34,
+                    WorkloadName::MobilenetV2,
+                    WorkloadName::ShufflenetV2,
+                ][rng.index(3)],
+            );
+            let n = 1 + rng.index(d.n_cores());
+            let cores = rng.sample_indices(d.n_cores(), n);
+            let est = estimate(&d, &w, &cores, &ExecutionContext::exclusive(8));
+            crate::prop_assert!(est.latency_s > 0.0, "latency");
+            crate::prop_assert!(est.energy_j > 0.0, "energy");
+            crate::prop_assert!(
+                est.peak_power_w >= est.avg_power_w * 0.99,
+                "peak {} < avg {}",
+                est.peak_power_w,
+                est.avg_power_w
+            );
+            crate::prop_assert!(
+                (est.energy_j / est.latency_s - est.avg_power_w).abs()
+                    < 1e-6 * est.avg_power_w.max(1.0),
+                "P*t != E"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gpu_beats_single_core_on_matmul() {
+        // Fig 1b: the Adreno GPU multiplies 512×512 far faster than any core
+        let d = pixel3();
+        let w = builtin(WorkloadName::Matmul512);
+        let gpu = estimate_gpu(&d, &w);
+        let cpu = estimate(&d, &w, &[7], &ex(&d));
+        assert!(gpu.latency_s < cpu.latency_s / 3.0);
+    }
+
+    #[test]
+    fn step_latency_in_plausible_mobile_range() {
+        // sanity: batch-16 resnet34 train step on a phone is O(seconds)
+        let d = pixel3();
+        let w = builtin(WorkloadName::Resnet34);
+        let t = estimate(&d, &w, &[4, 5, 6, 7], &ex(&d)).latency_s;
+        assert!(t > 0.2 && t < 20.0, "t={t}");
+    }
+}

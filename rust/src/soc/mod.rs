@@ -1,0 +1,24 @@
+//! The simulated smartphone SoC — the paper's testbed, rebuilt.
+//!
+//! The reproduction band for this paper is 0: no physical phones, no
+//! fuel-gauge power rail. Swan's decisions, however, depend only on the
+//! *relative* latency / power / energy of core combinations, so this
+//! module provides an analytical SoC model calibrated to the five devices
+//! the paper evaluates (§5.1). See `DESIGN.md` §1 for the substitution
+//! ledger and the calibration rationale.
+//!
+//! - [`core`] — core kinds (Little / Big / Prime) and per-core specs.
+//! - [`device`] — the five-device database (Pixel 3, S10e, OnePlus 8,
+//!   Galaxy Tab S6, Mi 10) with SoC topologies from public specs.
+//! - [`cache`] — the cache-contention ("thrashing") model behind §3.1.
+//! - [`exec_model`] — workload × core-set → (latency, power, energy):
+//!   an op-level roofline with OpenMP-static straggler semantics.
+
+pub mod cache;
+pub mod core;
+pub mod device;
+pub mod exec_model;
+
+pub use core::{CoreId, CoreKind, CoreSpec};
+pub use device::{Device, DeviceId, all_devices, device};
+pub use exec_model::{ExecEstimate, ExecutionContext, estimate};

@@ -1,0 +1,173 @@
+//! Execution choices: which CPU cores a training step runs on.
+//!
+//! Appendix B's state space, concretely: within a cluster, cores are
+//! interchangeable, so a choice is characterized by how many cores of
+//! each kind it uses — (n_little) XOR (n_big, n_prime). Little cores are
+//! never mixed with low-latency cores: under OpenMP's static split the
+//! little core paces the whole op (see `soc::exec_model`), so mixed
+//! combos are dominated by construction and the paper's own example
+//! space ("4567" … "4", "0123" … "0") excludes them.
+
+use crate::soc::core::CoreKind;
+use crate::soc::device::Device;
+
+/// A concrete core combination, sorted ascending (paper labels like
+/// "4567" are exactly the concatenated core ids).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ExecutionChoice {
+    pub cores: Vec<usize>,
+    counts: (usize, usize, usize), // (little, big, prime)
+}
+
+impl ExecutionChoice {
+    pub fn new(device: &Device, mut cores: Vec<usize>) -> Self {
+        cores.sort_unstable();
+        cores.dedup();
+        assert!(!cores.is_empty(), "empty execution choice");
+        let mut counts = (0, 0, 0);
+        for &c in &cores {
+            match device.kind_of(c) {
+                CoreKind::Little => counts.0 += 1,
+                CoreKind::Big => counts.1 += 1,
+                CoreKind::Prime => counts.2 += 1,
+            }
+        }
+        ExecutionChoice { cores, counts }
+    }
+
+    /// Paper-style label: concatenated core indices ("4567").
+    pub fn label(&self) -> String {
+        self.cores
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join("")
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn n_little(&self) -> usize {
+        self.counts.0
+    }
+
+    pub fn n_big(&self) -> usize {
+        self.counts.1
+    }
+
+    pub fn n_prime(&self) -> usize {
+        self.counts.2
+    }
+
+    pub fn uses_low_latency(&self) -> bool {
+        self.counts.1 + self.counts.2 > 0
+    }
+}
+
+/// Enumerate the full choice space for a device (Appendix B).
+///
+/// Low-latency choices: every (n_big, n_prime) with n_big+n_prime ≥ 1,
+/// taking the lowest-indexed cores of each kind (cluster symmetry).
+/// Little choices: every n_little ≥ 1. No mixing across the divide.
+pub fn enumerate_choices(device: &Device) -> Vec<ExecutionChoice> {
+    let little = device.cores_of_kind(CoreKind::Little);
+    let big = device.cores_of_kind(CoreKind::Big);
+    let prime = device.cores_of_kind(CoreKind::Prime);
+
+    let mut out = Vec::new();
+    for nb in 0..=big.len() {
+        for np in 0..=prime.len() {
+            if nb + np == 0 {
+                continue;
+            }
+            let mut cores: Vec<usize> = big[..nb].to_vec();
+            cores.extend_from_slice(&prime[..np]);
+            out.push(ExecutionChoice::new(device, cores));
+        }
+    }
+    for nl in 1..=little.len() {
+        out.push(ExecutionChoice::new(device, little[..nl].to_vec()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+
+    #[test]
+    fn pixel3_space_matches_paper_example() {
+        // §4.3: Pixel 3 order example lists 4567, 456, 45, 4, 0123, 012, 01, 0
+        let d = device(DeviceId::Pixel3);
+        let labels: Vec<String> =
+            enumerate_choices(&d).iter().map(|c| c.label()).collect();
+        for want in ["4567", "456", "45", "4", "0123", "012", "01", "0"] {
+            assert!(labels.contains(&want.to_string()), "missing {want}");
+        }
+        assert_eq!(labels.len(), 8, "pixel3 has exactly the 8 paper choices");
+    }
+
+    #[test]
+    fn prime_devices_get_mixed_big_prime_combos() {
+        // §4.3 rule 3 example uses "47" and "45" on a prime device
+        let d = device(DeviceId::OnePlus8); // cores 4,5,6 big; 7 prime
+        let labels: Vec<String> =
+            enumerate_choices(&d).iter().map(|c| c.label()).collect();
+        assert!(labels.contains(&"47".to_string()));
+        assert!(labels.contains(&"45".to_string()));
+        assert!(labels.contains(&"4567".to_string()));
+        assert!(labels.contains(&"7".to_string()));
+    }
+
+    #[test]
+    fn no_choice_mixes_little_with_low_latency() {
+        for id in [DeviceId::Pixel3, DeviceId::S10e, DeviceId::OnePlus8] {
+            let d = device(id);
+            for ch in enumerate_choices(&d) {
+                assert!(
+                    !(ch.n_little() > 0 && ch.uses_low_latency()),
+                    "mixed choice {} on {:?}",
+                    ch.label(),
+                    id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn choices_unique_and_nonempty() {
+        for id in [DeviceId::Pixel3, DeviceId::S10e, DeviceId::OnePlus8,
+                   DeviceId::TabS6, DeviceId::Mi10] {
+            let d = device(id);
+            let all = enumerate_choices(&d);
+            let mut labels: Vec<String> =
+                all.iter().map(|c| c.label()).collect();
+            let n = labels.len();
+            labels.sort();
+            labels.dedup();
+            assert_eq!(labels.len(), n, "duplicate choices on {id:?}");
+            for ch in &all {
+                assert!(ch.n_threads() >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn label_and_counts_consistent() {
+        let d = device(DeviceId::S10e); // 0-3 little, 4-5 big, 6-7 prime
+        let ch = ExecutionChoice::new(&d, vec![6, 4, 7]);
+        assert_eq!(ch.label(), "467");
+        assert_eq!(ch.n_big(), 1);
+        assert_eq!(ch.n_prime(), 2);
+        assert_eq!(ch.n_little(), 0);
+    }
+
+    #[test]
+    fn dedups_cores() {
+        let d = device(DeviceId::Pixel3);
+        let ch = ExecutionChoice::new(&d, vec![4, 4, 5]);
+        assert_eq!(ch.n_threads(), 2);
+    }
+}

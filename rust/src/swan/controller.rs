@@ -1,0 +1,341 @@
+//! The run-time migration control loop (§4.3, Fig 4b).
+//!
+//! Swan holds the pruned preference chain (fastest → cheapest). At run
+//! time it compares each step's observed latency against the active
+//! profile's expectation (EWMA-smoothed). Sustained inflation ⇒ some
+//! foreground app is contending for our cores ⇒ *downgrade* one chain
+//! position, relinquishing exactly the compute the cost order says the
+//! app wants. After a quiet period at a downgraded position, probe an
+//! *upgrade* back toward the fast end.
+//!
+//! The controller sees only what a real userland engine could see: its
+//! own step latencies and the battery/thermal observations.
+
+use super::profile::ChoiceProfile;
+
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Latency inflation (observed / expected) that signals interference.
+    pub downgrade_ratio: f64,
+    /// Inflation below which the core is considered quiet.
+    pub quiet_ratio: f64,
+    /// EWMA smoothing for observed/expected ratio.
+    pub ewma_alpha: f64,
+    /// Consecutive quiet steps required before probing an upgrade.
+    pub upgrade_patience: usize,
+    /// Consecutive inflated steps required before downgrading.
+    pub downgrade_patience: usize,
+    /// Cap for the exponential upgrade backoff (see `Controller`).
+    pub max_upgrade_patience: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            downgrade_ratio: 1.35,
+            quiet_ratio: 1.15,
+            ewma_alpha: 0.4,
+            upgrade_patience: 8,
+            downgrade_patience: 2,
+            max_upgrade_patience: 256,
+        }
+    }
+}
+
+/// A migration decision, reported for tracing/evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MigrationEvent {
+    Stay,
+    Downgrade { from: String, to: String },
+    Upgrade { from: String, to: String },
+}
+
+/// Run-time choice selector over the pruned chain.
+pub struct Controller {
+    /// Pruned profiles, latency-ascending (= cost-descending).
+    chain: Vec<ChoiceProfile>,
+    cfg: ControllerConfig,
+    /// Current position in the chain (0 = fastest).
+    pos: usize,
+    ratio_ewma: crate::util::stats::Ewma,
+    hot_streak: usize,
+    quiet_streak: usize,
+    /// Exponential upgrade backoff: when an upgrade probe is punished
+    /// (downgraded again within a few steps), the patience before the
+    /// next probe doubles — persistent interference (a long PCMark run,
+    /// a gaming session) stops costing a slow probe every few steps.
+    current_upgrade_patience: usize,
+    steps_since_upgrade: usize,
+    /// Total migrations performed (evaluation metric).
+    pub n_downgrades: usize,
+    pub n_upgrades: usize,
+}
+
+impl Controller {
+    /// `chain` must be the output of `prune_dominated` (asserted).
+    pub fn new(chain: Vec<ChoiceProfile>, cfg: ControllerConfig) -> Self {
+        assert!(!chain.is_empty(), "empty preference chain");
+        for w in chain.windows(2) {
+            assert!(
+                w[0].latency_s <= w[1].latency_s,
+                "chain must be latency-ascending"
+            );
+        }
+        let alpha = cfg.ewma_alpha;
+        let patience = cfg.upgrade_patience;
+        Controller {
+            chain,
+            cfg,
+            pos: 0,
+            ratio_ewma: crate::util::stats::Ewma::new(alpha),
+            hot_streak: 0,
+            quiet_streak: 0,
+            current_upgrade_patience: patience,
+            steps_since_upgrade: usize::MAX,
+            n_downgrades: 0,
+            n_upgrades: 0,
+        }
+    }
+
+    pub fn current(&self) -> &ChoiceProfile {
+        &self.chain[self.pos]
+    }
+
+    pub fn chain(&self) -> &[ChoiceProfile] {
+        &self.chain
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Feed one observed step latency; returns the migration decision to
+    /// apply to the NEXT step.
+    pub fn observe_step(&mut self, observed_latency_s: f64) -> MigrationEvent {
+        let expected = self.current().latency_s.max(1e-9);
+        let ratio = self.ratio_ewma.update(observed_latency_s / expected);
+
+        if ratio > self.cfg.downgrade_ratio {
+            self.hot_streak += 1;
+            self.quiet_streak = 0;
+        } else if ratio < self.cfg.quiet_ratio {
+            self.quiet_streak += 1;
+            self.hot_streak = 0;
+        } else {
+            self.hot_streak = 0;
+            self.quiet_streak = 0;
+        }
+
+        self.steps_since_upgrade = self.steps_since_upgrade.saturating_add(1);
+
+        if self.hot_streak >= self.cfg.downgrade_patience
+            && self.pos + 1 < self.chain.len()
+        {
+            let from = self.current().choice.label();
+            self.pos += 1;
+            self.n_downgrades += 1;
+            self.hot_streak = 0;
+            self.ratio_ewma.reset();
+            // punished probe ⇒ back off exponentially
+            if self.steps_since_upgrade <= self.cfg.downgrade_patience + 2 {
+                self.current_upgrade_patience = (self.current_upgrade_patience
+                    * 2)
+                .min(self.cfg.max_upgrade_patience);
+            }
+            return MigrationEvent::Downgrade {
+                from,
+                to: self.current().choice.label(),
+            };
+        }
+
+        if self.quiet_streak >= self.current_upgrade_patience && self.pos > 0 {
+            let from = self.current().choice.label();
+            self.pos -= 1;
+            self.n_upgrades += 1;
+            self.quiet_streak = 0;
+            self.steps_since_upgrade = 0;
+            self.ratio_ewma.reset();
+            return MigrationEvent::Upgrade {
+                from,
+                to: self.current().choice.label(),
+            };
+        }
+
+        MigrationEvent::Stay
+    }
+
+    /// Reset the upgrade backoff (e.g. the screen turned off).
+    pub fn reset_backoff(&mut self) {
+        self.current_upgrade_patience = self.cfg.upgrade_patience;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+    use crate::soc::exec_model::{estimate, ExecutionContext};
+    use crate::swan::choice::enumerate_choices;
+    use crate::swan::prune::prune_dominated;
+    use crate::workload::{builtin, WorkloadName};
+
+    fn chain(dev: DeviceId, wl: WorkloadName) -> Vec<ChoiceProfile> {
+        let d = device(dev);
+        let w = builtin(wl);
+        let ctx = ExecutionContext::exclusive(d.n_cores());
+        let profiles = enumerate_choices(&d)
+            .into_iter()
+            .map(|ch| {
+                let est = estimate(&d, &w, &ch.cores, &ctx);
+                ChoiceProfile {
+                    choice: ch,
+                    latency_s: est.latency_s,
+                    energy_j: est.energy_j,
+                    power_w: est.avg_power_w,
+                    steps_measured: 5,
+                }
+            })
+            .collect();
+        prune_dominated(profiles)
+    }
+
+    #[test]
+    fn starts_at_fastest() {
+        let c = Controller::new(
+            chain(DeviceId::Pixel3, WorkloadName::Resnet34),
+            ControllerConfig::default(),
+        );
+        assert_eq!(c.position(), 0);
+        assert_eq!(c.current().choice.label(), "4567");
+    }
+
+    #[test]
+    fn sustained_inflation_downgrades() {
+        let mut c = Controller::new(
+            chain(DeviceId::Pixel3, WorkloadName::Resnet34),
+            ControllerConfig::default(),
+        );
+        let base = c.current().latency_s;
+        let mut migrated = false;
+        for _ in 0..10 {
+            if let MigrationEvent::Downgrade { from, to } =
+                c.observe_step(base * 2.0)
+            {
+                assert_eq!(from, "4567");
+                assert_eq!(to, "456");
+                migrated = true;
+                break;
+            }
+        }
+        assert!(migrated, "controller must downgrade under 2× inflation");
+        assert_eq!(c.n_downgrades, 1);
+    }
+
+    #[test]
+    fn quiet_period_upgrades_back() {
+        let mut c = Controller::new(
+            chain(DeviceId::Pixel3, WorkloadName::Resnet34),
+            ControllerConfig::default(),
+        );
+        // force a downgrade
+        let base0 = c.current().latency_s;
+        for _ in 0..10 {
+            c.observe_step(base0 * 2.0);
+        }
+        assert!(c.position() > 0);
+        // now run quiet: observed latency tracks whatever choice is
+        // active (the device is idle again)
+        let mut upgraded = false;
+        for _ in 0..100 {
+            let expected = c.current().latency_s;
+            if let MigrationEvent::Upgrade { .. } = c.observe_step(expected) {
+                upgraded = true;
+            }
+            if c.position() == 0 {
+                break;
+            }
+        }
+        assert!(upgraded, "controller must upgrade after a quiet period");
+        assert_eq!(c.position(), 0);
+    }
+
+    #[test]
+    fn no_thrash_on_borderline_noise() {
+        // latencies jittering ±10% around expectation must cause no
+        // migration at all
+        let mut c = Controller::new(
+            chain(DeviceId::S10e, WorkloadName::MobilenetV2),
+            ControllerConfig::default(),
+        );
+        let base = c.current().latency_s;
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..500 {
+            let jitter = 1.0 + 0.1 * (rng.f64() * 2.0 - 1.0);
+            c.observe_step(base * jitter);
+        }
+        assert_eq!(c.n_downgrades, 0);
+        assert_eq!(c.n_upgrades, 0);
+    }
+
+    #[test]
+    fn never_leaves_chain_bounds() {
+        use crate::util::check::check;
+        check(50, |rng| {
+            let mut c = Controller::new(
+                chain(DeviceId::OnePlus8, WorkloadName::ShufflenetV2),
+                ControllerConfig::default(),
+            );
+            let n = c.chain().len();
+            for _ in 0..200 {
+                let lat = c.current().latency_s * rng.range(0.5, 4.0);
+                c.observe_step(lat);
+                crate::prop_assert!(c.position() < n, "position out of bounds");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn upgrade_backoff_under_persistent_interference() {
+        // under never-ending contention the controller must spend an
+        // ever-larger fraction of steps at the quiet position instead of
+        // bouncing every `upgrade_patience` steps
+        let mut c = Controller::new(
+            chain(DeviceId::Pixel3, WorkloadName::Resnet34),
+            ControllerConfig::default(),
+        );
+        let mut upgrades_first_100 = 0;
+        let mut upgrades_last_100 = 0;
+        for i in 0..600 {
+            // observed latency: 3× inflation whenever at the fast end,
+            // nominal otherwise (interference only touches big cores)
+            let expected = c.current().latency_s;
+            let obs = if c.position() == 0 { expected * 3.0 } else { expected };
+            if let MigrationEvent::Upgrade { .. } = c.observe_step(obs) {
+                if i < 100 {
+                    upgrades_first_100 += 1;
+                } else if i >= 500 {
+                    upgrades_last_100 += 1;
+                }
+            }
+        }
+        assert!(
+            upgrades_last_100 < upgrades_first_100,
+            "backoff should slow probing: first {upgrades_first_100},              last {upgrades_last_100}"
+        );
+    }
+
+    #[test]
+    fn bottom_of_chain_absorbs_persistent_interference() {
+        let mut c = Controller::new(
+            chain(DeviceId::Pixel3, WorkloadName::Resnet34),
+            ControllerConfig::default(),
+        );
+        for _ in 0..500 {
+            let lat = c.current().latency_s * 3.0;
+            c.observe_step(lat);
+        }
+        assert_eq!(c.position(), c.chain().len() - 1);
+        assert_eq!(c.current().choice.label(), "0");
+    }
+}

@@ -1,0 +1,127 @@
+//! The relinquish-cost total order over execution choices (§4.3).
+//!
+//! The paper's three rules, derived from how Android hands fast cores to
+//! foreground apps:
+//!
+//! 1. more cores of the same type is costlier        (cost[4567] > cost[4])
+//! 2. any low-latency cores beat any little cores    (cost[4]   > cost[0123])
+//! 3. prime cores are costlier than big cores        (cost[47]  > cost[45])
+//!
+//! All three are satisfied by comparing the tuple
+//! `(n_prime, n_big, n_little)` lexicographically — "how much of the
+//! stuff foreground apps want most does this choice hold?". The result
+//! for Pixel 3 is exactly the paper's example chain
+//! "4567" > "456" > "45" > "4" > "0123" > "012" > "01" > "0".
+
+use super::choice::ExecutionChoice;
+
+/// Sort key; higher = costlier (relinquishes more useful compute).
+pub fn cost_key(choice: &ExecutionChoice) -> (usize, usize, usize) {
+    (choice.n_prime(), choice.n_big(), choice.n_little())
+}
+
+/// Strict "costlier than" per the total order.
+pub fn costlier(a: &ExecutionChoice, b: &ExecutionChoice) -> bool {
+    cost_key(a) > cost_key(b)
+}
+
+/// Sort choices from costliest to cheapest (the paper's downgrade chain).
+pub fn sort_by_cost_desc(choices: &mut [ExecutionChoice]) {
+    choices.sort_by(|a, b| cost_key(b).cmp(&cost_key(a)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+    use crate::swan::choice::enumerate_choices;
+
+    fn by_label(dev: DeviceId, label: &str) -> ExecutionChoice {
+        let d = device(dev);
+        let cores: Vec<usize> = label
+            .chars()
+            .map(|c| c.to_digit(10).unwrap() as usize)
+            .collect();
+        ExecutionChoice::new(&d, cores)
+    }
+
+    #[test]
+    fn rule1_more_same_type_costlier() {
+        let a = by_label(DeviceId::Pixel3, "4567");
+        let b = by_label(DeviceId::Pixel3, "4");
+        assert!(costlier(&a, &b));
+        let a = by_label(DeviceId::Pixel3, "012");
+        let b = by_label(DeviceId::Pixel3, "01");
+        assert!(costlier(&a, &b));
+    }
+
+    #[test]
+    fn rule2_low_latency_beats_little() {
+        let a = by_label(DeviceId::Pixel3, "4");
+        let b = by_label(DeviceId::Pixel3, "0123");
+        assert!(costlier(&a, &b));
+    }
+
+    #[test]
+    fn rule3_prime_costlier_than_big() {
+        // OnePlus 8: core 7 = prime
+        let a = by_label(DeviceId::OnePlus8, "47");
+        let b = by_label(DeviceId::OnePlus8, "45");
+        assert!(costlier(&a, &b));
+    }
+
+    #[test]
+    fn pixel3_full_chain_matches_paper() {
+        let want = ["4567", "456", "45", "4", "0123", "012", "01", "0"];
+        let d = device(DeviceId::Pixel3);
+        let mut all = enumerate_choices(&d);
+        sort_by_cost_desc(&mut all);
+        let got: Vec<String> = all.iter().map(|c| c.label()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn total_order_is_strict_on_choice_space() {
+        // lexicographic keys must be pairwise distinct within a device
+        for id in [DeviceId::Pixel3, DeviceId::S10e, DeviceId::OnePlus8] {
+            let d = device(id);
+            let all = enumerate_choices(&d);
+            for i in 0..all.len() {
+                for j in 0..all.len() {
+                    if i != j {
+                        assert_ne!(
+                            cost_key(&all[i]),
+                            cost_key(&all[j]),
+                            "tie between {} and {} on {:?}",
+                            all[i].label(),
+                            all[j].label(),
+                            id
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn order_transitive_property() {
+        use crate::util::check::check;
+        check(100, |rng| {
+            let d = device(DeviceId::S10e);
+            let all = enumerate_choices(&d);
+            let a = &all[rng.index(all.len())];
+            let b = &all[rng.index(all.len())];
+            let c = &all[rng.index(all.len())];
+            if costlier(a, b) && costlier(b, c) {
+                crate::prop_assert!(
+                    costlier(a, c),
+                    "transitivity violated: {} {} {}",
+                    a.label(),
+                    b.label(),
+                    c.label()
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,249 @@
+//! The Swan engine: the standardized client interface (§4.1).
+//!
+//! Distributed frameworks (our FL harness, or PySyft-style clients in
+//! the paper) talk to the engine through exactly two calls:
+//! `is_active()` — may this device train right now? — and
+//! `run_local_step(...)` — execute one step under Swan's current
+//! execution choice, observing and reacting to interference.
+//!
+//! The engine owns the full §4 lifecycle: monitoring → exploration →
+//! pruned preference chain → controller-driven training.
+
+use crate::sim::SimPhone;
+use crate::workload::Workload;
+
+use super::controller::{Controller, ControllerConfig, MigrationEvent};
+use super::explorer::Explorer;
+use super::profile::ChoiceProfile;
+use super::prune::prune_dominated;
+
+#[derive(Clone, Debug)]
+pub struct SwanConfig {
+    pub controller: ControllerConfig,
+    /// Minimum battery level (%) to admit training when not charging
+    /// (§4.1 step 3).
+    pub min_battery_level: u32,
+    /// Benchmark steps per choice during exploration.
+    pub explore_steps: usize,
+}
+
+impl Default for SwanConfig {
+    fn default() -> Self {
+        SwanConfig {
+            controller: ControllerConfig::default(),
+            min_battery_level: 20,
+            explore_steps: 5,
+        }
+    }
+}
+
+/// Outcome of one engine-driven local step.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    pub latency_s: f64,
+    pub choice: String,
+    pub migration: MigrationEvent,
+}
+
+/// Swan engine bound to one (simulated) phone and one workload.
+pub struct SwanEngine {
+    pub cfg: SwanConfig,
+    workload: Workload,
+    controller: Controller,
+    /// Profiles as explored (pre-pruning), kept for reporting/sharing.
+    pub profiles: Vec<ChoiceProfile>,
+}
+
+impl SwanEngine {
+    /// Full §4.2 bring-up: explore every choice on this phone, prune,
+    /// build the controller.
+    pub fn explore_and_build(
+        phone: &mut SimPhone,
+        workload: Workload,
+        cfg: SwanConfig,
+    ) -> Self {
+        let explorer = Explorer {
+            min_steps: cfg.explore_steps,
+            ..Explorer::default()
+        };
+        let profiles = explorer.explore_all(phone, &workload);
+        Self::from_profiles(workload, profiles, cfg)
+    }
+
+    /// §4.2 amortization: a new device of a known model skips exploration
+    /// by adopting coordinator-distributed profiles.
+    pub fn from_profiles(
+        workload: Workload,
+        profiles: Vec<ChoiceProfile>,
+        cfg: SwanConfig,
+    ) -> Self {
+        let chain = prune_dominated(profiles.clone());
+        let controller = Controller::new(chain, cfg.controller.clone());
+        SwanEngine {
+            cfg,
+            workload,
+            controller,
+            profiles,
+        }
+    }
+
+    /// Standardized interface: may this device train right now?
+    pub fn is_active(&self, phone: &mut SimPhone) -> bool {
+        phone.admits_training(self.cfg.min_battery_level)
+    }
+
+    /// Standardized interface: run one local training step under the
+    /// current execution choice; observe latency; maybe migrate.
+    ///
+    /// `train_fn` performs the *numerics* (the PJRT-executed real step);
+    /// the phone supplies the *systems* cost. They are composed here so
+    /// callers can't accidentally run numerics without paying sim time.
+    pub fn run_local_step<F: FnMut()>(
+        &mut self,
+        phone: &mut SimPhone,
+        mut train_fn: F,
+    ) -> StepReport {
+        let choice = self.controller.current().choice.clone();
+        let est = phone.run_train_step(&self.workload, &choice.cores);
+        train_fn();
+        let migration = self.controller.observe_step(est.latency_s);
+        StepReport {
+            latency_s: est.latency_s,
+            choice: choice.label(),
+            migration,
+        }
+    }
+
+    pub fn current_choice(&self) -> &ChoiceProfile {
+        self.controller.current()
+    }
+
+    pub fn chain(&self) -> &[ChoiceProfile] {
+        self.controller.chain()
+    }
+
+    pub fn migrations(&self) -> (usize, usize) {
+        (self.controller.n_downgrades, self.controller.n_upgrades)
+    }
+
+    /// The fastest explored profile — what Swan reports to Table 2 as its
+    /// choice under no interference.
+    pub fn best_profile(&self) -> &ChoiceProfile {
+        &self.controller.chain()[0]
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::interference::SessionGenerator;
+    use crate::soc::device::{device, DeviceId};
+    use crate::workload::{builtin, WorkloadName};
+
+    #[test]
+    fn bring_up_produces_nonempty_chain() {
+        let mut phone = SimPhone::new(device(DeviceId::Pixel3), 1);
+        let eng = SwanEngine::explore_and_build(
+            &mut phone,
+            builtin(WorkloadName::ShufflenetV2),
+            SwanConfig::default(),
+        );
+        assert!(!eng.chain().is_empty());
+        assert_eq!(eng.profiles.len(), 8);
+        // shufflenet: best profile is a single big core
+        assert_eq!(eng.best_profile().choice.label(), "4");
+    }
+
+    #[test]
+    fn steps_run_and_report() {
+        let mut phone = SimPhone::new(device(DeviceId::Pixel3), 2);
+        let mut eng = SwanEngine::explore_and_build(
+            &mut phone,
+            builtin(WorkloadName::Resnet34),
+            SwanConfig::default(),
+        );
+        let mut numerics_ran = 0;
+        let rep = eng.run_local_step(&mut phone, || numerics_ran += 1);
+        assert_eq!(numerics_ran, 1);
+        assert!(rep.latency_s > 0.0);
+        assert_eq!(rep.choice, "4567");
+    }
+
+    #[test]
+    fn engine_migrates_under_interference_and_returns() {
+        // idle phone → fastest choice; session arrives → downgrade;
+        // session ends → upgrade back
+        let d = device(DeviceId::Pixel3);
+        let mut phone = SimPhone::new(d.clone(), 3);
+        let mut eng = SwanEngine::explore_and_build(
+            &mut phone,
+            builtin(WorkloadName::Resnet34),
+            SwanConfig::default(),
+        );
+        assert_eq!(eng.current_choice().choice.label(), "4567");
+
+        // inject an endless heavy session
+        phone.sessions = SessionGenerator::new(9, 1e-6, 1e12, 1.0);
+        phone.idle(1.0);
+        let mut downgraded = false;
+        for _ in 0..30 {
+            let rep = eng.run_local_step(&mut phone, || {});
+            if matches!(rep.migration, MigrationEvent::Downgrade { .. }) {
+                downgraded = true;
+                break;
+            }
+        }
+        assert!(downgraded, "must downgrade under heavy foreground session");
+
+        // back to idle
+        phone.sessions = SessionGenerator::always_idle(10);
+        let mut upgraded = false;
+        for _ in 0..100 {
+            let rep = eng.run_local_step(&mut phone, || {});
+            if matches!(rep.migration, MigrationEvent::Upgrade { .. }) {
+                upgraded = true;
+                break;
+            }
+        }
+        assert!(upgraded, "must upgrade once the device is quiet again");
+    }
+
+    #[test]
+    fn is_active_respects_gates() {
+        let mut phone = SimPhone::new(device(DeviceId::Pixel3), 4);
+        let eng = SwanEngine::explore_and_build(
+            &mut phone,
+            builtin(WorkloadName::ShufflenetV2),
+            SwanConfig::default(),
+        );
+        assert!(eng.is_active(&mut phone));
+        phone.battery.set_soc(0.05);
+        assert!(!eng.is_active(&mut phone));
+    }
+
+    #[test]
+    fn profile_sharing_skips_exploration() {
+        let mut phone_a = SimPhone::new(device(DeviceId::Pixel3), 5);
+        let w = builtin(WorkloadName::MobilenetV2);
+        let eng_a = SwanEngine::explore_and_build(
+            &mut phone_a,
+            w.clone(),
+            SwanConfig::default(),
+        );
+        // second device of the same model adopts a's profiles (§4.2)
+        let eng_b = SwanEngine::from_profiles(
+            w,
+            eng_a.profiles.clone(),
+            SwanConfig::default(),
+        );
+        assert_eq!(
+            eng_a.best_profile().choice.label(),
+            eng_b.best_profile().choice.label()
+        );
+        assert_eq!(eng_a.chain().len(), eng_b.chain().len());
+    }
+}

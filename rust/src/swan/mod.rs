@@ -1,0 +1,29 @@
+//! The Swan neural engine — the paper's contribution (§4).
+//!
+//! - [`choice`] — the execution-choice state space (Appendix B): core
+//!   combinations that never mix little with low-latency clusters.
+//! - [`cost`] — the "relinquish cost" total order (§4.3 rules 1–3).
+//! - [`prune`] — removal of choices that present no viable tradeoff.
+//! - [`profile`] — per-choice performance profiles from exploration.
+//! - [`explorer`] — §4.2: benchmark unexplored choices when the device
+//!   is idle and discharging, attributing energy via battery drops.
+//! - [`controller`] — §4.3/Fig 4b: the run-time control loop that infers
+//!   interference from step-latency inflation and migrates execution.
+//! - [`engine`] — the standardized client interface (`is_active`,
+//!   `run_local_step`) that distributed frameworks call.
+
+pub mod choice;
+pub mod controller;
+pub mod cost;
+pub mod engine;
+pub mod explorer;
+pub mod profile;
+pub mod prune;
+
+pub use choice::ExecutionChoice;
+pub use controller::{Controller, ControllerConfig, MigrationEvent};
+pub use cost::cost_key;
+pub use engine::{SwanEngine, SwanConfig};
+pub use explorer::{ExplorationResult, Explorer};
+pub use profile::ChoiceProfile;
+pub use prune::prune_dominated;

@@ -1,0 +1,88 @@
+//! Per-choice performance profiles produced by exploration (§4.2).
+
+use super::choice::ExecutionChoice;
+
+/// What Swan knows about one execution choice after benchmarking it.
+#[derive(Clone, Debug)]
+pub struct ChoiceProfile {
+    pub choice: ExecutionChoice,
+    /// Mean measured step latency, seconds.
+    pub latency_s: f64,
+    /// Estimated energy per step, joules (battery-drop attribution —
+    /// includes measurement noise, see `power::meter`).
+    pub energy_j: f64,
+    /// Estimated average power during the benchmark, watts.
+    pub power_w: f64,
+    /// Steps actually measured.
+    pub steps_measured: usize,
+}
+
+impl ChoiceProfile {
+    /// Serialize for the coordinator (the FL server shares profiles
+    /// across same-model devices so new installs skip exploration, §4.2).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        crate::util::json::Value::obj()
+            .set("choice", self.choice.label())
+            .set("latency_s", self.latency_s)
+            .set("energy_j", self.energy_j)
+            .set("power_w", self.power_w)
+            .set("steps_measured", self.steps_measured)
+    }
+
+    pub fn from_json(
+        v: &crate::util::json::Value,
+        device: &crate::soc::device::Device,
+    ) -> anyhow::Result<ChoiceProfile> {
+        let label = v.req_str("choice")?;
+        let cores: Vec<usize> = label
+            .chars()
+            .map(|c| {
+                c.to_digit(10)
+                    .map(|d| d as usize)
+                    .ok_or_else(|| anyhow::anyhow!("bad choice label '{label}'"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        Ok(ChoiceProfile {
+            choice: ExecutionChoice::new(device, cores),
+            latency_s: v.req_f64("latency_s")?,
+            energy_j: v.req_f64("energy_j")?,
+            power_w: v.req_f64("power_w")?,
+            steps_measured: v.req_usize("steps_measured")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+
+    #[test]
+    fn json_roundtrip() {
+        let d = device(DeviceId::OnePlus8);
+        let p = ChoiceProfile {
+            choice: ExecutionChoice::new(&d, vec![4, 7]),
+            latency_s: 1.25,
+            energy_j: 6.5,
+            power_w: 5.2,
+            steps_measured: 8,
+        };
+        let v = p.to_json();
+        let q = ChoiceProfile::from_json(&v, &d).unwrap();
+        assert_eq!(q.choice.label(), "47");
+        assert!((q.latency_s - 1.25).abs() < 1e-12);
+        assert_eq!(q.steps_measured, 8);
+    }
+
+    #[test]
+    fn rejects_garbage_label() {
+        let d = device(DeviceId::Pixel3);
+        let v = crate::util::json::Value::obj()
+            .set("choice", "4x")
+            .set("latency_s", 1.0)
+            .set("energy_j", 1.0)
+            .set("power_w", 1.0)
+            .set("steps_measured", 1usize);
+        assert!(ChoiceProfile::from_json(&v, &d).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Pruning choices that present no viable tradeoff (§4.3).
+//!
+//! After sorting profiles by increasing expected latency, a choice is
+//! kept only if it is *cheaper* (relinquish cost) than every faster
+//! choice — i.e. the Pareto frontier of (latency, cost). Anything else
+//! would be a downgrade that surrenders performance without freeing
+//! compute for the interfering app ("4567" for ShuffleNet: slower AND
+//! costlier than "4", so pruned).
+
+use super::cost::cost_key;
+use super::profile::ChoiceProfile;
+
+/// Sort by latency ascending and drop cost-dominated choices. The
+/// returned list is Swan's preference chain: index 0 is the fastest,
+/// each later entry trades latency for relinquished compute.
+pub fn prune_dominated(mut profiles: Vec<ChoiceProfile>) -> Vec<ChoiceProfile> {
+    profiles.sort_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap());
+    let mut kept: Vec<ChoiceProfile> = Vec::new();
+    for p in profiles {
+        let min_cost_so_far = kept.iter().map(|k| cost_key(&k.choice)).min();
+        match min_cost_so_far {
+            None => kept.push(p),
+            Some(mc) => {
+                if cost_key(&p.choice) < mc {
+                    kept.push(p);
+                }
+            }
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::{device, DeviceId};
+    use crate::soc::exec_model::{estimate, ExecutionContext};
+    use crate::swan::choice::{enumerate_choices, ExecutionChoice};
+    use crate::workload::{builtin, WorkloadName};
+
+    fn profiles_for(
+        dev: DeviceId,
+        workload: WorkloadName,
+    ) -> Vec<ChoiceProfile> {
+        let d = device(dev);
+        let w = builtin(workload);
+        let ctx = ExecutionContext::exclusive(d.n_cores());
+        enumerate_choices(&d)
+            .into_iter()
+            .map(|ch| {
+                let est = estimate(&d, &w, &ch.cores, &ctx);
+                ChoiceProfile {
+                    choice: ch,
+                    latency_s: est.latency_s,
+                    energy_j: est.energy_j,
+                    power_w: est.avg_power_w,
+                    steps_measured: 5,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chain_sorted_by_latency_and_strictly_cheaper() {
+        for (dev, wl) in [
+            (DeviceId::Pixel3, WorkloadName::Resnet34),
+            (DeviceId::Pixel3, WorkloadName::ShufflenetV2),
+            (DeviceId::S10e, WorkloadName::MobilenetV2),
+            (DeviceId::OnePlus8, WorkloadName::Resnet34),
+        ] {
+            let kept = prune_dominated(profiles_for(dev, wl));
+            assert!(!kept.is_empty());
+            for w in kept.windows(2) {
+                assert!(w[0].latency_s <= w[1].latency_s, "latency order");
+                assert!(
+                    cost_key(&w[1].choice) < cost_key(&w[0].choice),
+                    "each downgrade must relinquish compute: {} then {}",
+                    w[0].choice.label(),
+                    w[1].choice.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resnet_keeps_tradeoff_shufflenet_prunes_greedy() {
+        // §4.3's worked example on Pixel 3
+        let rn = prune_dominated(profiles_for(
+            DeviceId::Pixel3,
+            WorkloadName::Resnet34,
+        ));
+        let rn_labels: Vec<String> =
+            rn.iter().map(|p| p.choice.label()).collect();
+        // ResNet scales: 4567 is fastest, kept at the head of the chain
+        assert_eq!(rn_labels[0], "4567");
+        assert!(rn_labels.contains(&"4".to_string()));
+
+        let sn = prune_dominated(profiles_for(
+            DeviceId::Pixel3,
+            WorkloadName::ShufflenetV2,
+        ));
+        let sn_labels: Vec<String> =
+            sn.iter().map(|p| p.choice.label()).collect();
+        // ShuffleNet anti-scales: 4567 is slower AND costlier than 4 → pruned
+        assert!(
+            !sn_labels.contains(&"4567".to_string()),
+            "4567 must be pruned for shufflenet: {sn_labels:?}"
+        );
+        assert_eq!(sn_labels[0], "4", "single big core is fastest");
+    }
+
+    #[test]
+    fn fastest_choice_always_survives() {
+        use crate::util::check::check;
+        check(50, |rng| {
+            let devs = [DeviceId::Pixel3, DeviceId::S10e, DeviceId::OnePlus8,
+                        DeviceId::TabS6, DeviceId::Mi10];
+            let wls = [WorkloadName::Resnet34, WorkloadName::MobilenetV2,
+                       WorkloadName::ShufflenetV2];
+            let profs =
+                profiles_for(devs[rng.index(5)], wls[rng.index(3)]);
+            let fastest = profs
+                .iter()
+                .map(|p| p.latency_s)
+                .fold(f64::INFINITY, f64::min);
+            let kept = prune_dominated(profs);
+            crate::prop_assert!(
+                (kept[0].latency_s - fastest).abs() < 1e-12,
+                "head of chain must be the fastest profile"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pruned_set_always_ends_with_cheapest_core() {
+        // the chain must bottom out at a single little core ("0") so the
+        // controller can always fully yield
+        let kept =
+            prune_dominated(profiles_for(DeviceId::Pixel3, WorkloadName::Resnet34));
+        let last = kept.last().unwrap();
+        assert_eq!(last.choice.label(), "0");
+    }
+
+    #[test]
+    fn synthetic_tie_handling() {
+        // two profiles with equal latency: only the cheaper survives
+        let d = device(DeviceId::Pixel3);
+        let mk = |cores: Vec<usize>, lat: f64| ChoiceProfile {
+            choice: ExecutionChoice::new(&d, cores),
+            latency_s: lat,
+            energy_j: 1.0,
+            power_w: 1.0,
+            steps_measured: 1,
+        };
+        let kept = prune_dominated(vec![
+            mk(vec![4, 5], 1.0),
+            mk(vec![4], 1.0),
+            mk(vec![0], 2.0),
+        ]);
+        let labels: Vec<String> =
+            kept.iter().map(|p| p.choice.label()).collect();
+        assert!(labels.contains(&"4".to_string()) || labels[0] == "45");
+        // '45' may be first by sort stability, but '4' must survive and '45'
+        // must not appear after it
+        let pos4 = labels.iter().position(|l| l == "4");
+        assert!(pos4.is_some());
+    }
+}

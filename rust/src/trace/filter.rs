@@ -1,0 +1,132 @@
+//! Appendix A.2 trace-quality filters, verbatim:
+//!
+//! 1. sampling period ≥ 28 days;
+//! 2. overall sampling frequency ≥ 5/432 Hz (100 samples/day average);
+//! 3. max gap between adjacent samples ≤ 24 h;
+//! 4. at most 15 gaps longer than 6 h.
+
+use super::greenhub::RawTrace;
+
+pub const MIN_PERIOD_S: f64 = 28.0 * 86_400.0;
+pub const MIN_SAMPLES_PER_DAY: f64 = 100.0; // == 5/432 Hz
+pub const MAX_GAP_S: f64 = 24.0 * 3600.0;
+pub const MAX_LONG_GAPS: usize = 15;
+pub const LONG_GAP_S: f64 = 6.0 * 3600.0;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FilterStats {
+    pub total: usize,
+    pub pass: usize,
+    pub fail_period: usize,
+    pub fail_frequency: usize,
+    pub fail_max_gap: usize,
+    pub fail_long_gaps: usize,
+}
+
+pub fn passes_quality_filters(tr: &RawTrace) -> bool {
+    tr.duration_s() >= MIN_PERIOD_S
+        && tr.samples_per_day() >= MIN_SAMPLES_PER_DAY
+        && tr.max_gap_s() <= MAX_GAP_S
+        && tr.gaps_longer_than(LONG_GAP_S) <= MAX_LONG_GAPS
+}
+
+/// Filter a population, collecting per-criterion failure counts.
+pub fn select_quality_traces(
+    traces: Vec<RawTrace>,
+) -> (Vec<RawTrace>, FilterStats) {
+    let mut stats = FilterStats {
+        total: traces.len(),
+        ..Default::default()
+    };
+    let mut keep = Vec::new();
+    for tr in traces {
+        if tr.duration_s() < MIN_PERIOD_S {
+            stats.fail_period += 1;
+        } else if tr.samples_per_day() < MIN_SAMPLES_PER_DAY {
+            stats.fail_frequency += 1;
+        } else if tr.max_gap_s() > MAX_GAP_S {
+            stats.fail_max_gap += 1;
+        } else if tr.gaps_longer_than(LONG_GAP_S) > MAX_LONG_GAPS {
+            stats.fail_long_gaps += 1;
+        } else {
+            stats.pass += 1;
+            keep.push(tr);
+        }
+    }
+    (keep, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::greenhub::TraceGenerator;
+
+    fn trace(t_s: Vec<f64>) -> RawTrace {
+        let level = vec![50.0; t_s.len()];
+        RawTrace {
+            user_id: 0,
+            t_s,
+            level,
+        }
+    }
+
+    #[test]
+    fn rejects_short_period() {
+        let t: Vec<f64> = (0..10_000).map(|i| i as f64 * 60.0).collect();
+        assert!(!passes_quality_filters(&trace(t))); // ~7 days
+    }
+
+    #[test]
+    fn rejects_sparse_sampling() {
+        // 29 days but only ~48 samples/day
+        let t: Vec<f64> = (0..(29 * 48)).map(|i| i as f64 * 1800.0).collect();
+        assert!(!passes_quality_filters(&trace(t)));
+    }
+
+    #[test]
+    fn rejects_giant_gap() {
+        let mut t: Vec<f64> = (0..(30 * 144)).map(|i| i as f64 * 600.0).collect();
+        // inject a 25 h hole
+        for v in t.iter_mut().skip(2000) {
+            *v += 25.0 * 3600.0;
+        }
+        assert!(!passes_quality_filters(&trace(t)));
+    }
+
+    #[test]
+    fn rejects_many_long_gaps() {
+        let mut t = Vec::new();
+        let mut now = 0.0;
+        for day in 0..30 {
+            for i in 0..130 {
+                t.push(now + i as f64 * 300.0);
+            }
+            now += 86_400.0;
+            let _ = day;
+            // 130×5min ≈ 10.8h of samples, then a 13h gap → 30 long gaps
+        }
+        let tr = trace(t);
+        assert!(tr.gaps_longer_than(LONG_GAP_S) > MAX_LONG_GAPS);
+        assert!(!passes_quality_filters(&tr));
+    }
+
+    #[test]
+    fn accepts_clean_dense_trace() {
+        let t: Vec<f64> = (0..(30 * 150)).map(|i| i as f64 * 576.0).collect();
+        assert!(passes_quality_filters(&trace(t)));
+    }
+
+    #[test]
+    fn generator_population_mostly_passes() {
+        // the synthetic generator (35 days, ~7 min interval, few outages)
+        // should produce mostly usable traces — like GreenHub's good users
+        let g = TraceGenerator::default();
+        let (keep, stats) = select_quality_traces(g.population(42, 30));
+        assert_eq!(stats.total, 30);
+        assert!(
+            keep.len() >= 15,
+            "only {}/30 passed: {stats:?}",
+            keep.len()
+        );
+    }
+}

@@ -1,0 +1,223 @@
+//! Synthetic GreenHub-style raw battery traces.
+//!
+//! Reproduces the statistical pathologies the paper's Appendix A.2
+//! pipeline exists to clean up:
+//! - irregular sampling (per-user base rate + jitter),
+//! - missing stretches (phone off / app killed), occasionally > 6 h,
+//! - diurnal structure: overnight charging, daytime discharge with
+//!   usage bursts, occasional daytime top-ups,
+//! - device-specific discharge rates and battery sizes.
+//!
+//! Levels are integer percent (what Android logs), timestamps seconds.
+
+use crate::util::rng::Rng;
+
+/// One user's raw (irregular) battery trace.
+#[derive(Clone, Debug)]
+pub struct RawTrace {
+    pub user_id: usize,
+    /// Sample timestamps, seconds from trace start, strictly increasing.
+    pub t_s: Vec<f64>,
+    /// Battery level 0–100 (integer-valued, stored as f64 for PCHIP).
+    pub level: Vec<f64>,
+}
+
+impl RawTrace {
+    pub fn duration_s(&self) -> f64 {
+        if self.t_s.len() < 2 {
+            0.0
+        } else {
+            self.t_s[self.t_s.len() - 1] - self.t_s[0]
+        }
+    }
+
+    pub fn samples_per_day(&self) -> f64 {
+        let d = self.duration_s();
+        if d <= 0.0 {
+            0.0
+        } else {
+            self.t_s.len() as f64 / (d / 86_400.0)
+        }
+    }
+
+    pub fn max_gap_s(&self) -> f64 {
+        self.t_s
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .fold(0.0, f64::max)
+    }
+
+    pub fn gaps_longer_than(&self, secs: f64) -> usize {
+        self.t_s.windows(2).filter(|w| w[1] - w[0] > secs).count()
+    }
+}
+
+/// Generator of per-user traces.
+pub struct TraceGenerator {
+    pub days: usize,
+    /// Mean sampling interval, seconds (GreenHub logs opportunistically;
+    /// ~100+/day = every ~10 min average for "good" users).
+    pub mean_interval_s: f64,
+    /// Probability per day of a long (> 6 h) outage.
+    pub p_long_gap_per_day: f64,
+}
+
+impl Default for TraceGenerator {
+    fn default() -> Self {
+        TraceGenerator {
+            days: 35,
+            mean_interval_s: 420.0,
+            p_long_gap_per_day: 0.08,
+        }
+    }
+}
+
+impl TraceGenerator {
+    /// Generate user `user_id`'s trace (deterministic per seed+user).
+    pub fn generate(&self, seed: u64, user_id: usize) -> RawTrace {
+        let mut rng =
+            Rng::new(seed ^ (user_id as u64).wrapping_mul(0x2545_F491));
+        // user habits
+        let charge_start_h = rng.range(21.0, 24.5); // plug in between 9pm–0:30
+        let charge_dur_h = rng.range(6.0, 9.5);
+        let idle_drain_pct_h = rng.range(0.6, 1.6); // %/hour background
+        let usage_extra_pct_h = rng.range(4.0, 10.0); // %/hour while using
+        let usage_sessions_per_day = rng.range(4.0, 14.0);
+        let charger_pct_h = rng.range(25.0, 45.0);
+        let daytime_topup_p = rng.range(0.05, 0.35);
+
+        let total_s = self.days as f64 * 86_400.0;
+        let mut t = 0.0f64;
+        let mut level = rng.range(40.0, 95.0);
+        let mut ts = Vec::new();
+        let mut lv = Vec::new();
+
+        // simulate at 60 s resolution, record at irregular sample times
+        let mut next_sample = rng.exponential(self.mean_interval_s);
+        let mut gap_until = -1.0f64;
+        let mut topup_until = -1.0f64;
+        while t < total_s {
+            let hour = (t / 3600.0) % 24.0;
+            let day_frac = hour;
+            // nightly charge window (wraps midnight)
+            let in_night_charge = {
+                let start = charge_start_h % 24.0;
+                let end = (charge_start_h + charge_dur_h) % 24.0;
+                if start < end {
+                    day_frac >= start && day_frac < end
+                } else {
+                    day_frac >= start || day_frac < end
+                }
+            };
+            // occasional daytime top-up
+            if !in_night_charge
+                && topup_until < t
+                && rng.bool(daytime_topup_p / (24.0 * 60.0))
+            {
+                topup_until = t + rng.range(900.0, 3600.0);
+            }
+            let charging = in_night_charge || t < topup_until;
+
+            // usage bursts
+            let using = !charging
+                && rng.bool(usage_sessions_per_day / (24.0 * 60.0) * 8.0);
+
+            let dpct_min = if charging {
+                charger_pct_h / 60.0
+            } else {
+                -(idle_drain_pct_h
+                    + if using { usage_extra_pct_h } else { 0.0 })
+                    / 60.0
+            };
+            level = (level + dpct_min).clamp(1.0, 100.0);
+
+            // long outages
+            if gap_until < t && rng.bool(self.p_long_gap_per_day / (24.0 * 60.0))
+            {
+                gap_until = t + rng.range(6.5 * 3600.0, 20.0 * 3600.0);
+            }
+
+            if t >= next_sample {
+                if t > gap_until {
+                    ts.push(t);
+                    lv.push(level.floor());
+                }
+                next_sample = t + rng.exponential(self.mean_interval_s);
+            }
+            t += 60.0;
+        }
+        RawTrace {
+            user_id,
+            t_s: ts,
+            level: lv,
+        }
+    }
+
+    /// Generate a population of users.
+    pub fn population(&self, seed: u64, n: usize) -> Vec<RawTrace> {
+        (0..n).map(|u| self.generate(seed, u)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_deterministic_and_distinct() {
+        let g = TraceGenerator::default();
+        let a = g.generate(1, 0);
+        let b = g.generate(1, 0);
+        let c = g.generate(1, 1);
+        assert_eq!(a.t_s, b.t_s);
+        assert_eq!(a.level, b.level);
+        assert_ne!(a.level, c.level);
+    }
+
+    #[test]
+    fn timestamps_increasing_levels_valid() {
+        let g = TraceGenerator::default();
+        for u in 0..5 {
+            let tr = g.generate(7, u);
+            assert!(tr.t_s.len() > 1000, "too few samples: {}", tr.t_s.len());
+            for w in tr.t_s.windows(2) {
+                assert!(w[1] > w[0]);
+            }
+            for &l in &tr.level {
+                assert!((0.0..=100.0).contains(&l));
+                assert_eq!(l.fract(), 0.0, "levels must be integer percent");
+            }
+        }
+    }
+
+    #[test]
+    fn exhibits_diurnal_charging() {
+        // overnight the battery must regularly be higher than evening
+        let g = TraceGenerator::default();
+        let tr = g.generate(3, 2);
+        // average level by hour of day
+        let mut by_hour = vec![(0.0f64, 0usize); 24];
+        for (t, l) in tr.t_s.iter().zip(&tr.level) {
+            let h = ((t / 3600.0) % 24.0) as usize;
+            by_hour[h].0 += l;
+            by_hour[h].1 += 1;
+        }
+        let avg = |h: usize| by_hour[h].0 / by_hour[h].1.max(1) as f64;
+        let morning = avg(7).max(avg(8));
+        let evening = avg(19).min(avg(20));
+        assert!(
+            morning > evening + 5.0,
+            "no diurnal pattern: morning {morning} evening {evening}"
+        );
+    }
+
+    #[test]
+    fn has_irregular_sampling_and_gaps() {
+        let g = TraceGenerator::default();
+        let tr = g.generate(5, 4);
+        let gaps: Vec<f64> = tr.t_s.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = crate::util::stats::mean(&gaps);
+        let std = crate::util::stats::std(&gaps);
+        assert!(std > 0.3 * mean, "sampling suspiciously regular");
+    }
+}

@@ -1,0 +1,19 @@
+//! GreenHub-style battery traces and the paper's Appendix-A pipeline.
+//!
+//! The real GreenHub dataset (50M samples / 300k devices) is proprietary
+//! to download at this scale; `greenhub.rs` synthesizes traces with the
+//! same pathologies (irregular sampling, gaps, diurnal charging), and the
+//! rest of the pipeline is the paper's own preprocessing implemented for
+//! real: A.2 quality filters, PCHIP resampling to a 10-minute grid,
+//! battery-state derivation, and the 23×1-hour shift augmentation that
+//! yields 2400 clients.
+
+pub mod augment;
+pub mod filter;
+pub mod greenhub;
+pub mod resample;
+
+pub use augment::augment_shifts;
+pub use filter::{passes_quality_filters, FilterStats};
+pub use greenhub::{RawTrace, TraceGenerator};
+pub use resample::{resample_trace, BatteryStateSeq, ResampledTrace};

@@ -1,0 +1,125 @@
+//! Training metrics: loss curves and evaluation results.
+
+/// (simulated time, value) series — the x-axis of Figs 5a/6a/7a is
+/// simulated wall-clock, not rounds.
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, t_s: f64, value: f64) {
+        self.points.push((t_s, value));
+    }
+
+    pub fn last(&self) -> Option<(f64, f64)> {
+        self.points.last().copied()
+    }
+
+    /// First simulated time at which `value` crosses `target` (downward
+    /// for loss, upward for accuracy via `upward`).
+    pub fn time_to(&self, target: f64, upward: bool) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|(_, v)| if upward { *v >= target } else { *v <= target })
+            .map(|(t, _)| *t)
+    }
+
+    /// Best value reached.
+    pub fn best(&self, upward: bool) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|(_, v)| *v)
+            .fold(None, |acc, v| match acc {
+                None => Some(v),
+                Some(a) => Some(if upward { a.max(v) } else { a.min(v) }),
+            })
+    }
+
+    pub fn to_csv(&self, value_name: &str) -> String {
+        let mut s = format!("t_s,{value_name}\n");
+        for (t, v) in &self.points {
+            s.push_str(&format!("{t},{v}\n"));
+        }
+        s
+    }
+}
+
+/// Aggregate evaluation over several batches.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+impl EvalResult {
+    pub fn from_batches(batches: &[(f32, f32, usize)]) -> EvalResult {
+        let n: usize = batches.iter().map(|b| b.2).sum();
+        if n == 0 {
+            return EvalResult::default();
+        }
+        let loss: f64 = batches
+            .iter()
+            .map(|(l, _, bn)| *l as f64 * *bn as f64)
+            .sum::<f64>()
+            / n as f64;
+        let correct: f64 =
+            batches.iter().map(|(_, c, _)| *c as f64).sum();
+        EvalResult {
+            loss,
+            accuracy: correct / n as f64,
+            n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_to_crossing() {
+        let mut c = LossCurve::default();
+        c.push(0.0, 4.0);
+        c.push(10.0, 2.0);
+        c.push(20.0, 1.0);
+        assert_eq!(c.time_to(2.5, false), Some(10.0));
+        assert_eq!(c.time_to(0.5, false), None);
+        assert_eq!(c.best(false), Some(1.0));
+    }
+
+    #[test]
+    fn accuracy_crossing_upward() {
+        let mut c = LossCurve::default();
+        c.push(0.0, 0.1);
+        c.push(5.0, 0.4);
+        c.push(9.0, 0.6);
+        assert_eq!(c.time_to(0.5, true), Some(9.0));
+        assert_eq!(c.best(true), Some(0.6));
+    }
+
+    #[test]
+    fn eval_result_aggregates() {
+        let r = EvalResult::from_batches(&[(2.0, 8.0, 16), (4.0, 4.0, 16)]);
+        assert!((r.loss - 3.0).abs() < 1e-9);
+        assert!((r.accuracy - 12.0 / 32.0).abs() < 1e-9);
+        assert_eq!(r.n, 32);
+    }
+
+    #[test]
+    fn empty_eval_safe() {
+        let r = EvalResult::from_batches(&[]);
+        assert_eq!(r.n, 0);
+        assert_eq!(r.accuracy, 0.0);
+    }
+
+    #[test]
+    fn csv_export() {
+        let mut c = LossCurve::default();
+        c.push(1.0, 2.0);
+        let csv = c.to_csv("loss");
+        assert!(csv.starts_with("t_s,loss\n"));
+        assert!(csv.contains("1,2"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Local training: synthetic federated datasets, metrics, and the
+//! trainer that composes the Swan engine (systems) with the PJRT
+//! executor (numerics).
+
+pub mod data;
+pub mod metrics;
+pub mod trainer;
+
+pub use data::{Partition, SyntheticDataset};
+pub use metrics::{EvalResult, LossCurve};
+pub use trainer::LocalTrainer;

@@ -1,0 +1,107 @@
+//! Local trainer: composes a scheduling policy (Swan engine or greedy
+//! baseline) with the PJRT executor and a client's data partition.
+//!
+//! Every local step does two things at once:
+//! - **numerics**: one real SGD step through the AOT-compiled HLO;
+//! - **systems**: the same step's latency/energy on the simulated phone
+//!   under the policy's current execution choice.
+//!
+//! The FL harness consumes both: losses drive the accuracy curves,
+//! simulated time drives time-to-accuracy, battery drain drives the
+//! energy-loan availability model.
+
+use crate::baseline::GreedyBaseline;
+use crate::runtime::{ModelExecutor, TrainState};
+use crate::sim::SimPhone;
+use crate::swan::SwanEngine;
+use crate::train::data::{Partition, SyntheticDataset};
+use crate::Result;
+
+/// Which scheduling policy drives the device.
+pub enum Policy {
+    Swan(SwanEngine),
+    Greedy(GreedyBaseline),
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Swan(_) => "swan",
+            Policy::Greedy(_) => "baseline",
+        }
+    }
+}
+
+/// Result of a burst of local steps.
+#[derive(Clone, Debug, Default)]
+pub struct LocalRunReport {
+    pub losses: Vec<f32>,
+    pub sim_seconds: f64,
+    pub energy_j: f64,
+    pub steps: usize,
+}
+
+/// One device's trainer.
+pub struct LocalTrainer<'e> {
+    pub executor: &'e ModelExecutor<'e>,
+    pub dataset: SyntheticDataset,
+    pub partition: Partition,
+    step_counter: usize,
+}
+
+impl<'e> LocalTrainer<'e> {
+    pub fn new(
+        executor: &'e ModelExecutor<'e>,
+        dataset: SyntheticDataset,
+        partition: Partition,
+    ) -> Self {
+        LocalTrainer {
+            executor,
+            dataset,
+            partition,
+            step_counter: 0,
+        }
+    }
+
+    /// Run `steps` local SGD steps under `policy` on `phone`.
+    pub fn run_local_steps(
+        &mut self,
+        policy: &mut Policy,
+        phone: &mut SimPhone,
+        state: &mut TrainState,
+        steps: usize,
+    ) -> Result<LocalRunReport> {
+        let mut report = LocalRunReport::default();
+        let t0 = phone.clock.now();
+        let e0 = phone.truth_train_energy_j;
+        for _ in 0..steps {
+            let (x, y) = self.dataset.batch(
+                &self.partition,
+                self.step_counter,
+                self.executor.meta.batch,
+            );
+            self.step_counter += 1;
+            let mut loss_out: Result<f32> = Ok(f32::NAN);
+            match policy {
+                Policy::Swan(engine) => {
+                    engine.run_local_step(phone, || {
+                        loss_out = self.executor.train_step(state, &x, &y);
+                    });
+                }
+                Policy::Greedy(baseline) => {
+                    baseline.run_local_step(phone, || {
+                        loss_out = self.executor.train_step(state, &x, &y);
+                    });
+                }
+            }
+            report.losses.push(loss_out?);
+            report.steps += 1;
+        }
+        report.sim_seconds = phone.clock.now() - t0;
+        report.energy_j = phone.truth_train_energy_j - e0;
+        Ok(report)
+    }
+}
+
+// Integration coverage for this module lives in rust/tests/ (it needs
+// compiled artifacts and a PJRT client).

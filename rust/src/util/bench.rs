@@ -1,0 +1,168 @@
+//! Wall-clock bench harness (criterion is not in the offline crate set).
+//!
+//! Each `rust/benches/*.rs` binary (`harness = false`) builds a
+//! [`BenchSet`], times its closures with warmup + repeated measurement,
+//! and prints both human-readable rows and machine-readable CSV. The
+//! paper-table benches additionally emit their table rows through
+//! `crate::report`.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One timed measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// seconds per iteration, one entry per sample
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn std(&self) -> f64 {
+        stats::std(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        stats::min(&self.samples)
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+pub struct BenchSet {
+    pub title: String,
+    pub results: Vec<Measurement>,
+    warmup_iters: u32,
+    sample_count: u32,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== bench: {title} ===");
+        BenchSet {
+            title: title.to_string(),
+            results: Vec::new(),
+            warmup_iters: 2,
+            sample_count: 10,
+        }
+    }
+
+    pub fn with_samples(mut self, warmup: u32, samples: u32) -> Self {
+        self.warmup_iters = warmup;
+        self.sample_count = samples;
+        self
+    }
+
+    /// Time `f` (one call = one iteration).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_count as usize);
+        for _ in 0..self.sample_count {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            samples,
+        };
+        println!(
+            "{:40} {:>12} ± {:>10}  (min {})",
+            m.name,
+            fmt_secs(m.mean()),
+            fmt_secs(m.std()),
+            fmt_secs(m.min()),
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally produced metric (e.g. simulated seconds) so
+    /// non-wall-clock results flow through the same reporting.
+    pub fn record(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{:40} {value:>12.4} {unit}", name);
+        self.results.push(Measurement {
+            name: format!("{name} [{unit}]"),
+            samples: vec![value],
+        });
+    }
+
+    /// Dump CSV (name, mean_s, std_s, min_s) to `target/bench_csv/`.
+    pub fn write_csv(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("target/bench_csv");
+        std::fs::create_dir_all(dir)?;
+        let safe: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        let path = dir.join(format!("{safe}.csv"));
+        let mut out = String::from("name,mean_s,std_s,min_s\n");
+        for m in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{}\n",
+                m.name.replace(',', ";"),
+                m.mean(),
+                m.std(),
+                m.min()
+            ));
+        }
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let mut set = BenchSet::new("test").with_samples(1, 5);
+        let mut n = 0u64;
+        set.bench("noop-ish", || {
+            n = n.wrapping_add(1);
+            std::hint::black_box(n);
+        });
+        assert_eq!(set.results.len(), 1);
+        assert_eq!(set.results[0].samples.len(), 5);
+        assert!(set.results[0].mean() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn record_external_metric() {
+        let mut set = BenchSet::new("test2");
+        set.record("simulated_latency", 1.25, "s(sim)");
+        assert_eq!(set.results[0].samples, vec![1.25]);
+    }
+}

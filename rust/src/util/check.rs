@@ -1,0 +1,91 @@
+//! Mini property-test harness (proptest is not in the offline crate set).
+//!
+//! `check(n, |rng| ...)` runs a property closure against `n` seeded random
+//! inputs; on failure it reruns the failing seed with a clear message so
+//! the case reproduces deterministically. Properties return
+//! `Result<(), String>` so assertions can carry diagnostics.
+
+use super::rng::Rng;
+
+/// Outcome of one property case.
+pub type Prop = Result<(), String>;
+
+/// Run `cases` random cases of `prop`, each with a deterministically
+/// derived RNG. Panics with the offending seed on first failure.
+pub fn check<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Prop,
+{
+    check_seeded(0xC0FFEE, cases, &mut prop);
+}
+
+/// Same, with an explicit base seed (used to reproduce failures).
+pub fn check_seeded<F>(base_seed: u64, cases: u64, prop: &mut F)
+where
+    F: FnMut(&mut Rng) -> Prop,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case} (reproduce with \
+                 check_seeded({base_seed:#x}, ...) case {case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Prop`-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(50, |rng| {
+            count += 1;
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(100, |rng| {
+            let x = rng.f64();
+            prop_assert!(x < 0.5, "x too big: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check(10, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check(10, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,561 @@
+//! Minimal JSON: parser + pretty writer (no serde in the offline set).
+//!
+//! Used for the artifact metadata emitted by `python/compile/aot.py`
+//! (`artifacts/meta/*.json`), run configs, and report output. Object keys
+//! preserve insertion order so emitted reports diff cleanly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum JsonError {
+    #[error("unexpected end of input at byte {0}")]
+    Eof(usize),
+    #[error("unexpected character '{1}' at byte {0}")]
+    Unexpected(usize, char),
+    #[error("invalid number at byte {0}")]
+    BadNumber(usize),
+    #[error("invalid escape at byte {0}")]
+    BadEscape(usize),
+    #[error("trailing characters at byte {0}")]
+    Trailing(usize),
+}
+
+impl Value {
+    // -- accessors ----------------------------------------------------------
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|f| f as i64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Required-field helpers that turn misses into anyhow errors.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing json key '{key}'"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a number"))
+    }
+
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        Ok(self.req_f64(key)? as usize)
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a string"))
+    }
+
+    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Value]> {
+        self.req(key)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not an array"))
+    }
+
+    // -- builders ------------------------------------------------------------
+    pub fn obj() -> Value {
+        Value::Obj(Vec::new())
+    }
+
+    pub fn set(mut self, key: &str, v: impl Into<Value>) -> Value {
+        if let Value::Obj(ref mut kv) = self {
+            kv.push((key.to_string(), v.into()));
+        }
+        self
+    }
+
+    pub fn from_map(map: &BTreeMap<String, f64>) -> Value {
+        Value::Obj(
+            map.iter()
+                .map(|(k, v)| (k.clone(), Value::Num(*v)))
+                .collect(),
+        )
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Num(v)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(v: Vec<Value>) -> Self {
+        Value::Arr(v)
+    }
+}
+impl From<Vec<f64>> for Value {
+    fn from(v: Vec<f64>) -> Self {
+        Value::Arr(v.into_iter().map(Value::Num).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+pub fn parse(src: &str) -> Result<Value, JsonError> {
+    let b = src.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(JsonError::Trailing(pos));
+    }
+    Ok(v)
+}
+
+pub fn parse_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<Value> {
+    let s = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+        anyhow::anyhow!("reading {}: {e}", path.as_ref().display())
+    })?;
+    parse(&s).map_err(|e| {
+        anyhow::anyhow!("parsing {}: {e}", path.as_ref().display())
+    })
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value, JsonError> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        return Err(JsonError::Eof(*pos));
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Value::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Value::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Value::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Value::Null),
+        b'-' | b'0'..=b'9' => parse_num(b, pos),
+        c => Err(JsonError::Unexpected(*pos, c as char)),
+    }
+}
+
+fn parse_lit(
+    b: &[u8],
+    pos: &mut usize,
+    lit: &str,
+    v: Value,
+) -> Result<Value, JsonError> {
+    if b.len() - *pos >= lit.len() && &b[*pos..*pos + lit.len()] == lit.as_bytes()
+    {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(JsonError::Unexpected(*pos, b[*pos] as char))
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Value, JsonError> {
+    let start = *pos;
+    if b[*pos] == b'-' {
+        *pos += 1;
+    }
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    std::str::from_utf8(&b[start..*pos])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Value::Num)
+        .ok_or(JsonError::BadNumber(start))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        if *pos >= b.len() {
+            return Err(JsonError::Eof(*pos));
+        }
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    return Err(JsonError::Eof(*pos));
+                }
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if *pos + 4 >= b.len() {
+                            return Err(JsonError::Eof(*pos));
+                        }
+                        let hex =
+                            std::str::from_utf8(&b[*pos + 1..*pos + 5])
+                                .map_err(|_| JsonError::BadEscape(*pos))?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| JsonError::BadEscape(*pos))?;
+                        out.push(
+                            char::from_u32(cp).unwrap_or('\u{fffd}'),
+                        );
+                        *pos += 4;
+                    }
+                    _ => return Err(JsonError::BadEscape(*pos)),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // copy one UTF-8 scalar
+                let s = &b[*pos..];
+                let len = utf8_len(s[0]);
+                let chunk = std::str::from_utf8(&s[..len.min(s.len())])
+                    .map_err(|_| JsonError::BadEscape(*pos))?;
+                out.push_str(chunk);
+                *pos += len;
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Value, JsonError> {
+    *pos += 1; // '['
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Value::Arr(out));
+    }
+    loop {
+        out.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            return Err(JsonError::Eof(*pos));
+        }
+        match b[*pos] {
+            b',' => *pos += 1,
+            b']' => {
+                *pos += 1;
+                return Ok(Value::Arr(out));
+            }
+            c => return Err(JsonError::Unexpected(*pos, c as char)),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Value, JsonError> {
+    *pos += 1; // '{'
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Value::Obj(out));
+    }
+    loop {
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            return Err(JsonError::Eof(*pos));
+        }
+        if b[*pos] != b'"' {
+            return Err(JsonError::Unexpected(*pos, b[*pos] as char));
+        }
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b':' {
+            return Err(JsonError::Unexpected(
+                *pos,
+                if *pos < b.len() { b[*pos] as char } else { '?' },
+            ));
+        }
+        *pos += 1;
+        let v = parse_value(b, pos)?;
+        out.push((key, v));
+        skip_ws(b, pos);
+        if *pos >= b.len() {
+            return Err(JsonError::Eof(*pos));
+        }
+        match b[*pos] {
+            b',' => *pos += 1,
+            b'}' => {
+                *pos += 1;
+                return Ok(Value::Obj(out));
+            }
+            c => return Err(JsonError::Unexpected(*pos, c as char)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write_value(self, f, 0, f.alternate())
+    }
+}
+
+fn write_value(
+    v: &Value,
+    f: &mut fmt::Formatter<'_>,
+    indent: usize,
+    pretty: bool,
+) -> fmt::Result {
+    match v {
+        Value::Null => write!(f, "null"),
+        Value::Bool(b) => write!(f, "{b}"),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                write!(f, "{}", *n as i64)
+            } else {
+                write!(f, "{n}")
+            }
+        }
+        Value::Str(s) => write_escaped(s, f),
+        Value::Arr(items) => {
+            if items.is_empty() {
+                return write!(f, "[]");
+            }
+            write!(f, "[")?;
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                if pretty {
+                    write!(f, "\n{}", " ".repeat(indent + 1))?;
+                }
+                write_value(item, f, indent + 1, pretty)?;
+            }
+            if pretty {
+                write!(f, "\n{}", " ".repeat(indent))?;
+            }
+            write!(f, "]")
+        }
+        Value::Obj(kv) => {
+            if kv.is_empty() {
+                return write!(f, "{{}}");
+            }
+            write!(f, "{{")?;
+            for (i, (k, val)) in kv.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                if pretty {
+                    write!(f, "\n{}", " ".repeat(indent + 1))?;
+                }
+                write_escaped(k, f)?;
+                write!(f, ":")?;
+                if pretty {
+                    write!(f, " ")?;
+                }
+                write_value(val, f, indent + 1, pretty)?;
+            }
+            if pretty {
+                write!(f, "\n{}", " ".repeat(indent))?;
+            }
+            write!(f, "}}")
+        }
+    }
+}
+
+fn write_escaped(s: &str, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\t' => write!(f, "\\t")?,
+            '\r' => write!(f, "\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("42").unwrap(), Value::Num(42.0));
+        assert_eq!(parse("-1.5e3").unwrap(), Value::Num(-1500.0));
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": "c"}], "d": null}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            v.get("a").unwrap().as_arr().unwrap()[2]
+                .get("b")
+                .unwrap()
+                .as_str(),
+            Some("c")
+        );
+        assert_eq!(v.get("d"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn parses_escapes() {
+        let v = parse(r#""a\nb\t\"q\" A""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\nb\t\"q\" A"));
+    }
+
+    #[test]
+    fn parses_unicode_passthrough() {
+        let v = parse("\"héllo → 日本\"").unwrap();
+        assert_eq!(v.as_str(), Some("héllo → 日本"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("{'a': 1}").is_err());
+    }
+
+    #[test]
+    fn roundtrip_compact_and_pretty() {
+        let src = r#"{"x": 1, "y": [true, null, "s"], "z": {"w": 2.5}}"#;
+        let v = parse(src).unwrap();
+        let compact = format!("{v}");
+        let pretty = format!("{v:#}");
+        assert_eq!(parse(&compact).unwrap(), v);
+        assert_eq!(parse(&pretty).unwrap(), v);
+        assert!(pretty.contains('\n'));
+    }
+
+    #[test]
+    fn preserves_key_order() {
+        let v = parse(r#"{"zz": 1, "aa": 2}"#).unwrap();
+        if let Value::Obj(kv) = &v {
+            assert_eq!(kv[0].0, "zz");
+            assert_eq!(kv[1].0, "aa");
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn builder_and_accessors() {
+        let v = Value::obj()
+            .set("name", "swan")
+            .set("n", 3usize)
+            .set("ok", true);
+        assert_eq!(v.req_str("name").unwrap(), "swan");
+        assert_eq!(v.req_usize("n").unwrap(), 3);
+        assert!(v.req("missing").is_err());
+    }
+
+    #[test]
+    fn reads_real_artifact_meta_if_present() {
+        // integration-ish: if artifacts are built, our parser must read them
+        let p = std::path::Path::new("artifacts/meta/resnet_s.json");
+        if p.exists() {
+            let v = parse_file(p).unwrap();
+            assert_eq!(v.req_str("name").unwrap(), "resnet_s");
+            assert!(v.req_usize("param_scalars").unwrap() > 10_000);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Zero-dependency substrates.
+//!
+//! The offline crate registry has no `rand`, `serde`, `serde_json`,
+//! `proptest` or `criterion`, so this module provides the small slices of
+//! each that the rest of the crate needs: a seedable PRNG ([`rng`]), a
+//! JSON parser/writer ([`json`]), the PCHIP monotone-cubic interpolator
+//! the paper's trace pipeline uses ([`pchip`]), summary statistics
+//! ([`stats`]), a randomized property-test harness ([`check`]), a
+//! wall-clock bench harness ([`bench`]) and table/CSV emitters
+//! ([`table`]).
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod pchip;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,241 @@
+//! PCHIP — Piecewise Cubic Hermite Interpolating Polynomial.
+//!
+//! Rust port of `scipy.interpolate.PchipInterpolator` (Fritsch–Carlson
+//! monotone derivatives), which Appendix A.2 of the paper uses to resample
+//! irregular GreenHub battery traces onto a uniform 10-minute grid. The
+//! monotonicity-preserving property matters: battery level between two
+//! samples must never overshoot (a battery cannot charge above the later
+//! sample while discharging), which a plain cubic spline would violate.
+
+/// Monotone cubic Hermite interpolator over strictly increasing `x`.
+#[derive(Clone, Debug)]
+pub struct Pchip {
+    x: Vec<f64>,
+    y: Vec<f64>,
+    d: Vec<f64>, // derivative at each knot
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PchipError {
+    #[error("need at least 2 points, got {0}")]
+    TooFew(usize),
+    #[error("x must be strictly increasing at index {0}")]
+    NotIncreasing(usize),
+    #[error("x and y length mismatch: {0} vs {1}")]
+    LengthMismatch(usize, usize),
+}
+
+impl Pchip {
+    pub fn new(x: Vec<f64>, y: Vec<f64>) -> Result<Self, PchipError> {
+        if x.len() != y.len() {
+            return Err(PchipError::LengthMismatch(x.len(), y.len()));
+        }
+        let n = x.len();
+        if n < 2 {
+            return Err(PchipError::TooFew(n));
+        }
+        for i in 1..n {
+            if x[i] <= x[i - 1] {
+                return Err(PchipError::NotIncreasing(i));
+            }
+        }
+        let d = derivatives(&x, &y);
+        Ok(Pchip { x, y, d })
+    }
+
+    /// Evaluate at `t`; clamps outside the knot range (flat extrapolation —
+    /// matches how the trace pipeline holds the last battery reading).
+    pub fn eval(&self, t: f64) -> f64 {
+        let n = self.x.len();
+        if t <= self.x[0] {
+            return self.y[0];
+        }
+        if t >= self.x[n - 1] {
+            return self.y[n - 1];
+        }
+        // binary search for the interval with x[i] <= t < x[i+1]
+        let mut lo = 0usize;
+        let mut hi = n - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.x[mid] <= t {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let h = self.x[lo + 1] - self.x[lo];
+        let s = (t - self.x[lo]) / h;
+        hermite(
+            s,
+            h,
+            self.y[lo],
+            self.y[lo + 1],
+            self.d[lo],
+            self.d[lo + 1],
+        )
+    }
+
+    /// Evaluate on a uniform grid from `t0` with spacing `dt`, `n` points.
+    pub fn resample(&self, t0: f64, dt: f64, n: usize) -> Vec<f64> {
+        (0..n).map(|i| self.eval(t0 + dt * i as f64)).collect()
+    }
+}
+
+#[inline]
+fn hermite(s: f64, h: f64, y0: f64, y1: f64, d0: f64, d1: f64) -> f64 {
+    // cubic Hermite basis on normalized s ∈ [0, 1]
+    let s2 = s * s;
+    let s3 = s2 * s;
+    let h00 = 2.0 * s3 - 3.0 * s2 + 1.0;
+    let h10 = s3 - 2.0 * s2 + s;
+    let h01 = -2.0 * s3 + 3.0 * s2;
+    let h11 = s3 - s2;
+    h00 * y0 + h10 * h * d0 + h01 * y1 + h11 * h * d1
+}
+
+/// Fritsch–Carlson derivative estimates (scipy `_find_derivatives`).
+fn derivatives(x: &[f64], y: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut h = vec![0.0; n - 1];
+    let mut s = vec![0.0; n - 1]; // secant slopes
+    for i in 0..n - 1 {
+        h[i] = x[i + 1] - x[i];
+        s[i] = (y[i + 1] - y[i]) / h[i];
+    }
+    let mut d = vec![0.0; n];
+    if n == 2 {
+        d[0] = s[0];
+        d[1] = s[0];
+        return d;
+    }
+    // interior: weighted harmonic mean where secants agree in sign
+    for i in 1..n - 1 {
+        let (s0, s1) = (s[i - 1], s[i]);
+        if s0 == 0.0 || s1 == 0.0 || (s0 > 0.0) != (s1 > 0.0) {
+            d[i] = 0.0;
+        } else {
+            let w1 = 2.0 * h[i] + h[i - 1];
+            let w2 = h[i] + 2.0 * h[i - 1];
+            d[i] = (w1 + w2) / (w1 / s0 + w2 / s1);
+        }
+    }
+    d[0] = edge_derivative(h[0], h[1], s[0], s[1]);
+    d[n - 1] = edge_derivative(h[n - 2], h[n - 3], s[n - 2], s[n - 3]);
+    d
+}
+
+/// One-sided three-point estimate with scipy's sign clipping.
+fn edge_derivative(h0: f64, h1: f64, s0: f64, s1: f64) -> f64 {
+    let mut d = ((2.0 * h0 + h1) * s0 - h0 * s1) / (h0 + h1);
+    if d.signum() != s0.signum() || s0 == 0.0 {
+        if s0 == 0.0 {
+            return 0.0;
+        }
+        d = 0.0;
+    } else if (s0 > 0.0) != (s1 > 0.0) && d.abs() > 3.0 * s0.abs() {
+        d = 3.0 * s0;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolates_knots_exactly() {
+        let x = vec![0.0, 1.0, 2.5, 4.0, 7.0];
+        let y = vec![1.0, 3.0, 2.0, 2.0, 9.0];
+        let p = Pchip::new(x.clone(), y.clone()).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            assert!((p.eval(*xi) - yi).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn linear_data_stays_linear() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        let p = Pchip::new(x, y).unwrap();
+        for i in 0..90 {
+            let t = i as f64 * 0.1;
+            assert!((p.eval(t) - (2.0 * t + 1.0)).abs() < 1e-9, "t={t}");
+        }
+    }
+
+    #[test]
+    fn monotone_data_gives_monotone_interpolant() {
+        // the property the paper needs: battery % must not overshoot
+        let x = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = vec![100.0, 97.0, 96.5, 80.0, 79.9, 50.0];
+        let p = Pchip::new(x, y).unwrap();
+        let mut prev = f64::INFINITY;
+        for i in 0..=500 {
+            let v = p.eval(i as f64 * 0.01);
+            assert!(v <= prev + 1e-9, "overshoot at {i}: {v} > {prev}");
+            prev = v;
+        }
+        assert!(p.eval(0.0) <= 100.0 && p.eval(5.0) >= 50.0 - 1e-9);
+    }
+
+    #[test]
+    fn flat_segments_stay_flat() {
+        let x = vec![0.0, 1.0, 2.0, 3.0];
+        let y = vec![5.0, 5.0, 5.0, 7.0];
+        let p = Pchip::new(x, y).unwrap();
+        for i in 0..=100 {
+            let t = i as f64 * 0.02; // within [0, 2]
+            assert!((p.eval(t) - 5.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let p = Pchip::new(vec![1.0, 2.0], vec![10.0, 20.0]).unwrap();
+        assert_eq!(p.eval(0.0), 10.0);
+        assert_eq!(p.eval(5.0), 20.0);
+    }
+
+    #[test]
+    fn matches_scipy_reference_values() {
+        // scipy.interpolate.PchipInterpolator(
+        //     [0, 1, 2, 4, 5], [0, 1, 0.5, 2, 2.5]) evaluated at selected ts
+        let p = Pchip::new(
+            vec![0.0, 1.0, 2.0, 4.0, 5.0],
+            vec![0.0, 1.0, 0.5, 2.0, 2.5],
+        )
+        .unwrap();
+        // values computed with scipy 1.17.1
+        let cases = [
+            (0.5, 0.71875),
+            (1.5, 0.75),
+            (3.0, 1.1032608695652175),
+            (4.5, 2.271286231884058),
+        ];
+        for (t, want) in cases {
+            let got = p.eval(t);
+            assert!(
+                (got - want).abs() < 1e-9,
+                "t={t}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Pchip::new(vec![0.0], vec![1.0]).is_err());
+        assert!(Pchip::new(vec![0.0, 0.0], vec![1.0, 2.0]).is_err());
+        assert!(Pchip::new(vec![2.0, 1.0], vec![1.0, 2.0]).is_err());
+        assert!(Pchip::new(vec![0.0, 1.0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn resample_uniform_grid() {
+        let p = Pchip::new(vec![0.0, 10.0], vec![0.0, 10.0]).unwrap();
+        let out = p.resample(0.0, 2.5, 5);
+        assert_eq!(out.len(), 5);
+        assert!((out[2] - 5.0).abs() < 1e-9);
+        assert!((out[4] - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,155 @@
+//! Markdown / CSV table emitter for the paper-table reports.
+
+/// A simple column-aligned table with a title.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = format!("### {}\n\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:width$} |", c, width = w[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for wi in &w {
+            sep.push_str(&format!("{:-<width$}|", "", width = wi + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown to stdout and persist both formats under
+    /// `target/reports/`.
+    pub fn emit(&self) -> std::io::Result<()> {
+        println!("\n{}", self.to_markdown());
+        let dir = std::path::Path::new("target/reports");
+        std::fs::create_dir_all(dir)?;
+        let safe: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+            .collect();
+        std::fs::write(dir.join(format!("{safe}.md")), self.to_markdown())?;
+        std::fs::write(dir.join(format!("{safe}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Format a ratio as the paper does ("1.9×", "21×").
+pub fn fmt_ratio(r: f64) -> String {
+    if r >= 10.0 {
+        format!("{r:.0}×")
+    } else {
+        format!("{r:.1}×")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row_strs(&["1", "2"]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.lines().count() >= 4);
+        assert!(md.contains("| a"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row_strs(&["1"]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("T", &["a"]);
+        t.row_strs(&["x,y"]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn ratio_format_matches_paper_style() {
+        assert_eq!(fmt_ratio(1.86), "1.9×");
+        assert_eq!(fmt_ratio(21.3), "21×");
+        assert_eq!(fmt_ratio(6.5), "6.5×");
+    }
+}

@@ -1,0 +1,213 @@
+//! Workload descriptor types + JSON loading.
+
+use crate::util::json::Value;
+
+/// Operator classes, mirroring `workloads.py`. The class determines the
+/// roofline behaviour (compute- vs memory-bound) and the cache-contention
+/// severity (`soc::cache`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Standard convolution (im2col + MXU matmul) — compute-bound.
+    Conv,
+    /// 1×1 pointwise convolution — matmul-shaped, moderate AI.
+    Pw,
+    /// Depthwise convolution — memory-bound, thrash-prone (§3.1).
+    Dw,
+    /// Normalization (GroupNorm here, BatchNorm in the paper's models).
+    Norm,
+    /// Elementwise activation.
+    Act,
+    /// Pooling (avg/max/global).
+    Pool,
+    /// Residual add / concat+shuffle glue.
+    Add,
+    /// Dense head.
+    Linear,
+    /// Fused SGD parameter update.
+    Update,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 9] = [
+        OpKind::Conv,
+        OpKind::Pw,
+        OpKind::Dw,
+        OpKind::Norm,
+        OpKind::Act,
+        OpKind::Pool,
+        OpKind::Add,
+        OpKind::Linear,
+        OpKind::Update,
+    ];
+
+    pub fn parse(s: &str) -> Option<OpKind> {
+        Some(match s {
+            "conv" => OpKind::Conv,
+            "pw" => OpKind::Pw,
+            "dw" => OpKind::Dw,
+            "norm" => OpKind::Norm,
+            "act" => OpKind::Act,
+            "pool" => OpKind::Pool,
+            "add" => OpKind::Add,
+            "linear" => OpKind::Linear,
+            "update" => OpKind::Update,
+            _ => return None,
+        })
+    }
+
+    /// Memory-bound op classes hit the bandwidth wall before the FLOP
+    /// wall on every device we model.
+    pub fn is_memory_bound(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Dw
+                | OpKind::Norm
+                | OpKind::Act
+                | OpKind::Pool
+                | OpKind::Add
+                | OpKind::Update
+        )
+    }
+}
+
+/// One operator of a training step.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub name: String,
+    pub kind: OpKind,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl Op {
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops / self.bytes.max(1.0)
+    }
+}
+
+/// A full training-step workload (fwd + bwd + update ops, in order).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub batch: usize,
+    pub ops: Vec<Op>,
+    pub param_scalars: f64,
+}
+
+impl Workload {
+    pub fn total_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.bytes).sum()
+    }
+
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.total_flops() / self.total_bytes().max(1.0)
+    }
+
+    /// Fraction of total bytes moved by memory-bound op classes — the
+    /// §3.1 "how thrashable is this model" scalar.
+    pub fn memory_bound_fraction(&self) -> f64 {
+        let mb: f64 = self
+            .ops
+            .iter()
+            .filter(|o| o.kind.is_memory_bound())
+            .map(|o| o.bytes)
+            .sum();
+        mb / self.total_bytes().max(1.0)
+    }
+
+    /// Parse a `workload_*.json` emitted by `workloads.py`.
+    pub fn from_json(v: &Value) -> anyhow::Result<Workload> {
+        let name = v.req_str("name")?.to_string();
+        let batch = v.req_usize("batch")?;
+        let param_scalars = v.req_f64("param_scalars")?;
+        let mut ops = Vec::new();
+        for o in v.req_arr("ops")? {
+            let kind_s = o.req_str("kind")?;
+            let kind = OpKind::parse(kind_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown op kind '{kind_s}'"))?;
+            ops.push(Op {
+                name: o.req_str("name")?.to_string(),
+                kind,
+                flops: o.req_f64("flops")?,
+                bytes: o.req_f64("bytes")?,
+            });
+        }
+        anyhow::ensure!(!ops.is_empty(), "workload '{name}' has no ops");
+        Ok(Workload {
+            name,
+            batch,
+            ops,
+            param_scalars,
+        })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Workload> {
+        let v = crate::util::json::parse_file(path)?;
+        Workload::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> &'static str {
+        r#"{
+            "name": "toy", "batch": 16, "param_scalars": 1000,
+            "ops": [
+                {"name": "c1", "kind": "conv", "flops": 1e9, "bytes": 1e7},
+                {"name": "d1", "kind": "dw", "flops": 1e7, "bytes": 1e7},
+                {"name": "u", "kind": "update", "flops": 2e3, "bytes": 1.2e4}
+            ]
+        }"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let v = crate::util::json::parse(sample_json()).unwrap();
+        let w = Workload::from_json(&v).unwrap();
+        assert_eq!(w.name, "toy");
+        assert_eq!(w.ops.len(), 3);
+        assert_eq!(w.ops[1].kind, OpKind::Dw);
+        assert!((w.total_flops() - 1.010002e9).abs() / 1e9 < 1e-6);
+    }
+
+    #[test]
+    fn memory_bound_fraction_sane() {
+        let v = crate::util::json::parse(sample_json()).unwrap();
+        let w = Workload::from_json(&v).unwrap();
+        let f = w.memory_bound_fraction();
+        assert!(f > 0.4 && f < 0.6, "{f}"); // dw+update ≈ half the bytes
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let src = r#"{"name":"x","batch":1,"param_scalars":0,
+            "ops":[{"name":"a","kind":"warp_shuffle","flops":1,"bytes":1}]}"#;
+        let v = crate::util::json::parse(src).unwrap();
+        assert!(Workload::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in OpKind::ALL {
+            let s = match k {
+                OpKind::Conv => "conv",
+                OpKind::Pw => "pw",
+                OpKind::Dw => "dw",
+                OpKind::Norm => "norm",
+                OpKind::Act => "act",
+                OpKind::Pool => "pool",
+                OpKind::Add => "add",
+                OpKind::Linear => "linear",
+                OpKind::Update => "update",
+            };
+            assert_eq!(OpKind::parse(s), Some(k));
+        }
+        assert_eq!(OpKind::parse("nope"), None);
+    }
+}

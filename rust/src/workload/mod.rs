@@ -1,0 +1,12 @@
+//! Op-level training-step workload descriptors.
+//!
+//! Produced by `python/compile/workloads.py` at artifact-build time
+//! (`artifacts/meta/workload_*.json`) for the paper-scale models and the
+//! small trainable variants; the SoC simulator times a training step by
+//! walking these ops through its roofline (see `soc::exec_model`).
+
+pub mod descriptor;
+pub mod models;
+
+pub use descriptor::{Op, OpKind, Workload};
+pub use models::{builtin, load_or_builtin, WorkloadName};

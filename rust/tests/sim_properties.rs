@@ -1,0 +1,295 @@
+//! Cross-module property suite (no artifacts required): randomized
+//! invariants over the simulator, the Swan engine, and the trace
+//! pipeline — the places where a silent modeling bug would quietly
+//! invalidate the paper tables.
+
+use swan::prop_assert;
+use swan::sim::interference::SessionGenerator;
+use swan::sim::pcmark::pcmark_score;
+use swan::sim::SimPhone;
+use swan::soc::device::{all_devices, device, DeviceId};
+use swan::soc::exec_model::{estimate, ExecutionContext};
+use swan::swan::choice::enumerate_choices;
+use swan::swan::cost::cost_key;
+use swan::swan::explorer::Explorer;
+use swan::swan::prune::prune_dominated;
+use swan::swan::{SwanConfig, SwanEngine};
+use swan::trace::augment::augment_shifts;
+use swan::trace::greenhub::TraceGenerator;
+use swan::trace::resample::resample_trace;
+use swan::util::check::check;
+use swan::workload::{builtin, WorkloadName};
+
+const DEVICES: [DeviceId; 5] = [
+    DeviceId::Pixel3,
+    DeviceId::S10e,
+    DeviceId::OnePlus8,
+    DeviceId::TabS6,
+    DeviceId::Mi10,
+];
+
+const WORKLOADS: [WorkloadName; 3] = [
+    WorkloadName::Resnet34,
+    WorkloadName::MobilenetV2,
+    WorkloadName::ShufflenetV2,
+];
+
+/// The explorer's measured ordering must agree with the ground-truth
+/// model's ordering on an idle phone — otherwise Swan's decisions would
+/// be artifacts of the measurement pipeline, not the hardware.
+#[test]
+fn exploration_ranking_matches_ground_truth_everywhere() {
+    for dev in DEVICES {
+        for wl in WORKLOADS {
+            let d = device(dev);
+            let w = builtin(wl);
+            let mut phone = SimPhone::new(d.clone(), 99);
+            let profiles = Explorer::default().explore_all(&mut phone, &w);
+            let ctx = ExecutionContext::exclusive(d.n_cores());
+            let mut truth: Vec<(String, f64)> = enumerate_choices(&d)
+                .into_iter()
+                .map(|ch| {
+                    (ch.label(), estimate(&d, &w, &ch.cores, &ctx).latency_s)
+                })
+                .collect();
+            truth.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let mut measured: Vec<(String, f64)> = profiles
+                .iter()
+                .map(|p| (p.choice.label(), p.latency_s))
+                .collect();
+            measured.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let t_order: Vec<&String> = truth.iter().map(|x| &x.0).collect();
+            let m_order: Vec<&String> =
+                measured.iter().map(|x| &x.0).collect();
+            assert_eq!(t_order, m_order, "{dev:?}/{wl:?}");
+        }
+    }
+}
+
+/// Pruned chains are strict Pareto frontiers for every device × model.
+#[test]
+fn pruned_chains_are_pareto_frontiers() {
+    for dev in DEVICES {
+        for wl in WORKLOADS {
+            let d = device(dev);
+            let w = builtin(wl);
+            let ctx = ExecutionContext::exclusive(d.n_cores());
+            let profiles: Vec<_> = enumerate_choices(&d)
+                .into_iter()
+                .map(|ch| {
+                    let est = estimate(&d, &w, &ch.cores, &ctx);
+                    swan::swan::profile::ChoiceProfile {
+                        choice: ch,
+                        latency_s: est.latency_s,
+                        energy_j: est.energy_j,
+                        power_w: est.avg_power_w,
+                        steps_measured: 1,
+                    }
+                })
+                .collect();
+            let chain = prune_dominated(profiles.clone());
+            // every kept choice: nothing in the FULL set is both faster
+            // and not-costlier
+            for kept in &chain {
+                for other in &profiles {
+                    let faster = other.latency_s < kept.latency_s - 1e-12;
+                    let not_costlier =
+                        cost_key(&other.choice) <= cost_key(&kept.choice);
+                    assert!(
+                        !(faster && not_costlier
+                            && other.choice.label() != kept.choice.label()),
+                        "{dev:?}/{wl:?}: {} dominated by {}",
+                        kept.choice.label(),
+                        other.choice.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Anti-scaling is a depthwise phenomenon: on every device, ShuffleNet's
+/// greedy choice loses to the best single core, while ResNet-34's greedy
+/// choice is at worst mildly suboptimal.
+#[test]
+fn antiscaling_depthwise_only() {
+    for dev in DEVICES {
+        let d = device(dev);
+        let ctx = ExecutionContext::exclusive(d.n_cores());
+        let greedy = d.low_latency_cores();
+        let best_single = |w: &swan::workload::Workload| {
+            (4..d.n_cores())
+                .map(|c| estimate(&d, w, &[c], &ctx).latency_s)
+                .fold(f64::INFINITY, f64::min)
+        };
+        let sn = builtin(WorkloadName::ShufflenetV2);
+        let rn = builtin(WorkloadName::Resnet34);
+        let sn_greedy = estimate(&d, &sn, &greedy, &ctx).latency_s;
+        let rn_greedy = estimate(&d, &rn, &greedy, &ctx).latency_s;
+        assert!(
+            sn_greedy > best_single(&sn),
+            "{dev:?}: shufflenet must anti-scale"
+        );
+        assert!(
+            rn_greedy < 1.05 * best_single(&rn) * 4.0,
+            "{dev:?}: resnet greedy should be near-linear"
+        );
+    }
+}
+
+/// PCMark scores degrade monotonically as training occupies more of the
+/// cores the foreground uses.
+#[test]
+fn pcmark_monotone_in_contention() {
+    for dev in DEVICES {
+        let d = device(dev);
+        let ll = d.low_latency_cores();
+        let mut prev = f64::INFINITY;
+        for k in 0..=ll.len() {
+            let score = pcmark_score(&d, &ll[..k]);
+            assert!(
+                score <= prev + 1e-9,
+                "{dev:?}: score rose when adding training threads"
+            );
+            prev = score;
+        }
+    }
+}
+
+/// Randomized engine fuzz: arbitrary session patterns and step counts
+/// never panic, never leave the chain, and the device's battery/thermal
+/// state stays physical.
+#[test]
+fn engine_fuzz_under_random_sessions() {
+    check(12, |rng| {
+        let dev = DEVICES[rng.index(5)];
+        let wl = WORKLOADS[rng.index(3)];
+        let d = device(dev);
+        let mut phone = SimPhone::new(d.clone(), rng.next_u64());
+        let mut engine = SwanEngine::explore_and_build(
+            &mut phone,
+            builtin(wl),
+            SwanConfig::default(),
+        );
+        phone.sessions = SessionGenerator::new(
+            rng.next_u64(),
+            rng.range(50.0, 2000.0),
+            rng.range(30.0, 600.0),
+            rng.f64(),
+        );
+        for _ in 0..40 {
+            let rep = engine.run_local_step(&mut phone, || {});
+            prop_assert!(rep.latency_s > 0.0, "nonpositive latency");
+            prop_assert!(
+                phone.battery.soc() >= 0.0 && phone.battery.soc() <= 1.0,
+                "soc out of range"
+            );
+            prop_assert!(
+                phone.thermal.temp_c > 0.0 && phone.thermal.temp_c < 90.0,
+                "temperature absurd: {}",
+                phone.thermal.temp_c
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Trace pipeline invariants over a random population.
+#[test]
+fn trace_pipeline_invariants() {
+    let gen = TraceGenerator::default();
+    let traces = gen.population(123, 6);
+    let resampled: Vec<_> = traces
+        .iter()
+        .filter(|t| swan::trace::filter::passes_quality_filters(t))
+        .map(|t| resample_trace(t).unwrap())
+        .collect();
+    assert!(!resampled.is_empty());
+    for rs in &resampled {
+        for &s in &rs.state {
+            assert!((-1..=1).contains(&(s as i32)));
+        }
+        for &l in &rs.level {
+            assert!((0.0..=100.0).contains(&l));
+        }
+        // availability exists: some charging samples in 28+ days
+        assert!(rs.state.iter().any(|&s| s > 0));
+        assert!(rs.state.iter().any(|&s| s < 0));
+    }
+    let aug = augment_shifts(&resampled);
+    assert_eq!(aug.len(), resampled.len() * 24);
+    // augmentation preserves each trace's level multiset
+    let sum0: f64 = resampled[0].level.iter().sum();
+    for k in 0..24 {
+        let sum_k: f64 = aug[k].level.iter().sum();
+        assert!((sum_k - sum0).abs() < 1e-6);
+    }
+}
+
+/// Exploration must leave the battery able to explain the energy it
+/// reports: per-choice energies are positive and the battery lost at
+/// least the sum of what the profiles claim (background services only
+/// add on top).
+#[test]
+fn exploration_energy_accounting_consistent() {
+    for dev in [DeviceId::Pixel3, DeviceId::S10e] {
+        let d = device(dev);
+        let w = builtin(WorkloadName::MobilenetV2);
+        let mut phone = SimPhone::new(d.clone(), 5);
+        let q0 = phone.battery.charge_c;
+        let profiles = Explorer::default().explore_all(&mut phone, &w);
+        let v = phone.battery.voltage();
+        let battery_spent = (q0 - phone.battery.charge_c) * v;
+        let claimed: f64 = profiles
+            .iter()
+            .map(|p| p.energy_j * p.steps_measured as f64)
+            .sum();
+        assert!(claimed > 0.0);
+        assert!(
+            claimed <= battery_spent * 1.10,
+            "{dev:?}: profiles claim {claimed} J but battery lost only \
+             {battery_spent} J"
+        );
+    }
+}
+
+/// All devices: greedy baseline power is the highest of any choice's
+/// power (it lights every low-latency core), so Table 3's premise — the
+/// baseline maximally contends — holds by construction.
+#[test]
+fn greedy_is_peak_power_choice() {
+    for dev in DEVICES {
+        let d = device(dev);
+        let w = builtin(WorkloadName::Resnet34);
+        let ctx = ExecutionContext::exclusive(d.n_cores());
+        let greedy_p =
+            estimate(&d, &w, &d.low_latency_cores(), &ctx).avg_power_w;
+        for ch in enumerate_choices(&d) {
+            let p = estimate(&d, &w, &ch.cores, &ctx).avg_power_w;
+            assert!(
+                p <= greedy_p + 1e-9,
+                "{dev:?}: {} draws more power than greedy",
+                ch.label()
+            );
+        }
+    }
+}
+
+/// Device database consistency with the choice space: the number of
+/// enumerable choices is (nb+1)(np+1)-1 + nl.
+#[test]
+fn choice_space_cardinality() {
+    for d in all_devices() {
+        let nb = d
+            .cores_of_kind(swan::soc::core::CoreKind::Big)
+            .len();
+        let np = d
+            .cores_of_kind(swan::soc::core::CoreKind::Prime)
+            .len();
+        let nl = d
+            .cores_of_kind(swan::soc::core::CoreKind::Little)
+            .len();
+        let expect = (nb + 1) * (np + 1) - 1 + nl;
+        assert_eq!(enumerate_choices(&d).len(), expect, "{:?}", d.id);
+    }
+}
