@@ -40,7 +40,7 @@ fn run_arm(
     model: &str,
     cfg: &FlConfig,
     exec: &ModelExecutor,
-) -> anyhow::Result<FlOutcome> {
+) -> swan::Result<FlOutcome> {
     let paper = WorkloadName::paper_scale_of(
         WorkloadName::parse(model).expect("model"),
     );
@@ -87,7 +87,7 @@ fn run_arm(
     Ok(out)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swan::Result<()> {
     let (model, rounds, clients, steps, traces, arm) = parse_args();
     let reg = Registry::discover()?;
     let client = RuntimeClient::cpu()?;

@@ -18,7 +18,7 @@ use swan::swan::{SwanConfig, SwanEngine};
 use swan::train::data::SyntheticDataset;
 use swan::workload::{load_or_builtin, WorkloadName};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swan::Result<()> {
     let reg = Registry::discover()?;
     let client = RuntimeClient::cpu()?;
     let exec = ModelExecutor::load(&client, &reg.dir, "resnet_s")?;
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
                          state: &mut swan::runtime::TrainState,
                          label: &str,
                          steps: usize|
-     -> anyhow::Result<()> {
+     -> swan::Result<()> {
         println!("\n== {label} ==");
         for _ in 0..steps {
             let (x, y) = ds.batch(&part, step_no, exec.meta.batch);

@@ -19,10 +19,10 @@ use swan::train::data::SyntheticDataset;
 use swan::util::table::{fmt_ratio, Table};
 use swan::workload::{load_or_builtin, WorkloadName};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swan::Result<()> {
     let dev_arg = std::env::args().nth(1).unwrap_or_else(|| "pixel3".into());
     let dev = DeviceId::parse(&dev_arg)
-        .ok_or_else(|| anyhow::anyhow!("unknown device '{dev_arg}'"))?;
+        .ok_or_else(|| swan::err!("unknown device '{dev_arg}'"))?;
     let d = device(dev);
     println!("device: {} ({})", d.id.name(), d.soc);
 

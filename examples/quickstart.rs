@@ -16,7 +16,7 @@ use swan::train::data::SyntheticDataset;
 use swan::util::table::Table;
 use swan::workload::{load_or_builtin, WorkloadName};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> swan::Result<()> {
     let reg = Registry::discover()?;
     let client = RuntimeClient::cpu()?;
     println!("PJRT platform: {}", client.platform());

@@ -7,9 +7,55 @@ use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
 use swan::train::data::SyntheticDataset;
 use swan::workload::{load_or_builtin, WorkloadName};
 
+/// `--fleet` fast path: Figs 5b/6b/7b (clients-online-per-round) from
+/// the sharded fleet kernel — availability is numerics-independent, so
+/// no artifacts or PJRT are needed and the horizon can be fleet-scale.
+fn fleet_fast_path() {
+    std::fs::create_dir_all("target/reports").unwrap();
+    for (fig, wl) in [
+        ("fig5", WorkloadName::ShufflenetV2),
+        ("fig6", WorkloadName::MobilenetV2),
+        ("fig7", WorkloadName::Resnet34),
+    ] {
+        let spec = swan::fleet::ScenarioSpec {
+            workload: wl,
+            rounds: 2_000,
+            daily_credit_j: 400.0, // tight budget: makes Fig b visible
+            ..swan::fleet::ScenarioSpec::builtin("smoke").unwrap()
+        };
+        println!("== {fig} (fleet): {:?} ==", wl);
+        for arm in [FlArm::Swan, FlArm::Baseline] {
+            let out = swan::fleet::run_scenario(&spec, 4, arm)
+                .expect("fleet run");
+            let mut online = String::from("round,online\n");
+            for (r, n) in &out.online_per_round {
+                online.push_str(&format!("{r},{n}\n"));
+            }
+            std::fs::write(
+                format!("target/reports/{fig}b_{}_fleet.csv", out.arm),
+                online,
+            )
+            .unwrap();
+            println!(
+                "  {:9} online {} -> {} over {} rounds \
+                 ({:.0} devices-stepped/s)",
+                out.arm,
+                out.online_first(),
+                out.online_last(),
+                out.rounds_run,
+                out.devices_stepped_per_sec()
+            );
+        }
+    }
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--fleet") {
+        fleet_fast_path();
+        return;
+    }
     let Ok(reg) = Registry::discover() else {
-        println!("artifacts not built; run `make artifacts`");
+        println!("artifacts not built; run `make artifacts` (or pass --fleet)");
         return;
     };
     let client = RuntimeClient::cpu().expect("pjrt");

@@ -1,0 +1,59 @@
+//! Fleet kernel throughput: devices-stepped/sec on the 100k-device
+//! `city` scenario across shard counts, plus the resharding-determinism
+//! check (every shard count must produce a bit-identical aggregate
+//! digest). Pass `--small` to run the 2k-device smoke scenario instead.
+
+use swan::fl::FlArm;
+use swan::fleet::{run_scenario, ScenarioSpec};
+use swan::report::fleet_table;
+use swan::util::bench::BenchSet;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let small = args.iter().any(|a| a == "--small");
+    let key = if small { "smoke" } else { "city" };
+    let spec = ScenarioSpec::builtin(key).expect("builtin scenario");
+    println!(
+        "fleet_throughput: scenario '{}' — {} devices × {} rounds, \
+         {} clients/round",
+        spec.name, spec.devices, spec.rounds, spec.clients_per_round
+    );
+
+    let mut set = BenchSet::new("fleet_throughput");
+    let mut outcomes = Vec::new();
+    let mut digests: Vec<(usize, String)> = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let out = run_scenario(&spec, shards, FlArm::Swan).expect("fleet run");
+        set.record(
+            &format!("devices_stepped_per_sec_{shards}shard"),
+            out.devices_stepped_per_sec(),
+            "dev/s",
+        );
+        set.record(
+            &format!("steps_per_sec_{shards}shard"),
+            out.steps_per_sec(),
+            "steps/s",
+        );
+        set.record(&format!("wall_s_{shards}shard"), out.wall_s, "s");
+        digests.push((shards, out.digest()));
+        outcomes.push(out);
+    }
+
+    let (base_shards, base_digest) = digests[0].clone();
+    for (shards, digest) in &digests[1..] {
+        assert_eq!(
+            digest, &base_digest,
+            "{shards}-shard aggregates diverged from {base_shards}-shard"
+        );
+    }
+    println!(
+        "determinism: shard counts {:?} all produced digest {base_digest}",
+        digests.iter().map(|(s, _)| *s).collect::<Vec<_>>()
+    );
+
+    // baseline arm for the comparison table
+    let base = run_scenario(&spec, 4, FlArm::Baseline).expect("fleet run");
+    outcomes.push(base);
+    fleet_table(&outcomes).emit().expect("emit");
+    set.write_csv().expect("csv");
+}

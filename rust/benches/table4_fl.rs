@@ -8,9 +8,47 @@ use swan::train::data::SyntheticDataset;
 use swan::util::table::{fmt_ratio, Table};
 use swan::workload::{load_or_builtin, WorkloadName};
 
+/// `--fleet` fast path: the Table-4 systems ratios (time + energy) from
+/// the sharded fleet kernel — no artifacts or PJRT needed, and it scales
+/// to far larger fleets than the numerics path.
+fn fleet_fast_path() {
+    let mut table = Table::new(
+        "Table 4 (fleet fast path) — systems time/energy ratios",
+        &["model", "time_speedup", "energy_eff", "swan_online_last", "base_online_last"],
+    );
+    for (model, wl) in [
+        ("mobilenet", WorkloadName::MobilenetV2),
+        ("shufflenet", WorkloadName::ShufflenetV2),
+        ("resnet34", WorkloadName::Resnet34),
+    ] {
+        let spec = swan::fleet::ScenarioSpec {
+            workload: wl,
+            ..swan::fleet::ScenarioSpec::builtin("smoke").unwrap()
+        };
+        let swan_out =
+            swan::fleet::run_scenario(&spec, 4, FlArm::Swan).expect("fleet");
+        let base_out = swan::fleet::run_scenario(&spec, 4, FlArm::Baseline)
+            .expect("fleet");
+        table.row(&[
+            model.to_string(),
+            fmt_ratio(base_out.total_time_s / swan_out.total_time_s.max(1e-9)),
+            fmt_ratio(
+                base_out.total_energy_j / swan_out.total_energy_j.max(1e-9),
+            ),
+            swan_out.online_last().to_string(),
+            base_out.online_last().to_string(),
+        ]);
+    }
+    table.emit().expect("emit");
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--fleet") {
+        fleet_fast_path();
+        return;
+    }
     let Ok(reg) = Registry::discover() else {
-        println!("artifacts not built; run `make artifacts`");
+        println!("artifacts not built; run `make artifacts` (or pass --fleet)");
         return;
     };
     let client = RuntimeClient::cpu().expect("pjrt");

@@ -6,8 +6,9 @@
 //! swan train   --model shufflenet_s --device pixel3 --steps 20
 //! swan pcmark  [--artifacts artifacts]
 //! swan fl      --model shufflenet_s --rounds 20 --clients 3
+//! swan fleet   --scenario city --shards 8 --arm both
 //! swan traces  --users 4
-//! swan report  table2|table3|fig1|fig2|fig3
+//! swan report  table2|table3|fig1|fig2|fig3|fleet
 //! ```
 
 use crate::report;
@@ -30,7 +31,7 @@ fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) ->
     }
 }
 
-pub fn run_main() -> anyhow::Result<()> {
+pub fn run_main() -> crate::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
@@ -45,6 +46,7 @@ pub fn run_main() -> anyhow::Result<()> {
         "train" => cmd_train(&rest),
         "pcmark" => cmd_pcmark(),
         "fl" => cmd_fl(&rest),
+        "fleet" => cmd_fleet(&rest),
         "traces" => cmd_traces(&rest),
         "report" => cmd_report(&rest),
         "help" | "--help" | "-h" => {
@@ -53,7 +55,7 @@ pub fn run_main() -> anyhow::Result<()> {
         }
         other => {
             print_help();
-            anyhow::bail!("unknown subcommand '{other}'")
+            crate::bail!("unknown subcommand '{other}'")
         }
     }
 }
@@ -68,12 +70,13 @@ fn print_help() {
          \x20 train     real local training under Swan scheduling\n\
          \x20 pcmark    Fig-3/Table-3 user-experience evaluation\n\
          \x20 fl        federated-learning simulation (§5.3)\n\
+         \x20 fleet     sharded fleet simulation (100k–1M devices)\n\
          \x20 traces    generate + preprocess GreenHub-style traces\n\
          \x20 report    regenerate a paper table/figure\n"
     );
 }
 
-fn cmd_devices() -> anyhow::Result<()> {
+fn cmd_devices() -> crate::Result<()> {
     let mut t = Table::new(
         "simulated devices",
         &["key", "name", "soc", "cores", "cache_MB", "bw_GB/s", "battery_mAh"],
@@ -104,13 +107,13 @@ fn cmd_devices() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn device_arg(args: &Args) -> anyhow::Result<DeviceId> {
+fn device_arg(args: &Args) -> crate::Result<DeviceId> {
     let key = args.get_str("device", "pixel3");
     DeviceId::parse(&key)
-        .ok_or_else(|| anyhow::anyhow!("unknown device '{key}'"))
+        .ok_or_else(|| crate::err!("unknown device '{key}'"))
 }
 
-fn cmd_explore(rest: &[String]) -> anyhow::Result<()> {
+fn cmd_explore(rest: &[String]) -> crate::Result<()> {
     let specs = [
         opt("device", "device key", Some("pixel3")),
         opt("model", "workload (resnet34|mobilenet_v2|shufflenet_v2)", Some("shufflenet_v2")),
@@ -119,7 +122,7 @@ fn cmd_explore(rest: &[String]) -> anyhow::Result<()> {
     let args = parse_args(rest, &specs)?;
     let dev = device_arg(&args)?;
     let wl = WorkloadName::parse(&args.get_str("model", ""))
-        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+        .ok_or_else(|| crate::err!("unknown model"))?;
     let workload = load_or_builtin(wl, "artifacts");
     let mut phone = SimPhone::new(device(dev), 1);
     let cfg = SwanConfig {
@@ -147,7 +150,7 @@ fn cmd_explore(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
+fn cmd_train(rest: &[String]) -> crate::Result<()> {
     let specs = [
         opt("device", "device key", Some("pixel3")),
         opt("model", "trainable model", Some("shufflenet_s")),
@@ -165,7 +168,7 @@ fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
     let exec = ModelExecutor::load(&client, &reg.dir, &model)?;
     let paper = WorkloadName::paper_scale_of(
         WorkloadName::parse(&model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model"))?,
+            .ok_or_else(|| crate::err!("unknown model"))?,
     );
     let workload = load_or_builtin(paper, "artifacts");
 
@@ -197,7 +200,7 @@ fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_pcmark() -> anyhow::Result<()> {
+fn cmd_pcmark() -> crate::Result<()> {
     let (_r, fig3) = report::fig3_rows("artifacts");
     fig3.emit()?;
     let (_r, t3) = report::table3_rows("artifacts");
@@ -205,7 +208,7 @@ fn cmd_pcmark() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_fl(rest: &[String]) -> anyhow::Result<()> {
+fn cmd_fl(rest: &[String]) -> crate::Result<()> {
     let specs = [
         opt("model", "trainable model", Some("shufflenet_s")),
         opt("rounds", "FL rounds", Some("20")),
@@ -234,7 +237,7 @@ fn cmd_fl(rest: &[String]) -> anyhow::Result<()> {
     };
     let paper = WorkloadName::paper_scale_of(
         WorkloadName::parse(&model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model"))?,
+            .ok_or_else(|| crate::err!("unknown model"))?,
     );
     let workload = load_or_builtin(paper, "artifacts");
     let arm_s = args.get_str("arm", "both");
@@ -263,7 +266,77 @@ fn cmd_fl(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_traces(rest: &[String]) -> anyhow::Result<()> {
+fn cmd_fleet(rest: &[String]) -> crate::Result<()> {
+    let specs = [
+        opt("scenario", "builtin scenario (smoke|city|metro|million)", Some("smoke")),
+        opt("file", "load a ScenarioSpec JSON instead of a builtin", None),
+        opt("shards", "worker shards (0 = available parallelism)", Some("4")),
+        opt("devices", "override device count (0 = scenario value)", Some("0")),
+        opt("rounds", "override round count (0 = scenario value)", Some("0")),
+        opt("arm", "swan|baseline|both", Some("both")),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let mut spec = match args.get("file") {
+        Some(path) => crate::fleet::ScenarioSpec::load(path)?,
+        None => {
+            let key = args.get_str("scenario", "smoke");
+            crate::fleet::ScenarioSpec::builtin(&key).ok_or_else(|| {
+                crate::err!(
+                    "unknown scenario '{key}' (smoke|city|metro|million)"
+                )
+            })?
+        }
+    };
+    let devices = args.get_usize("devices", 0)?;
+    if devices > 0 {
+        spec.devices = devices;
+    }
+    let rounds = args.get_usize("rounds", 0)?;
+    if rounds > 0 {
+        spec.rounds = rounds;
+    }
+    let mut shards = args.get_usize("shards", 4)?;
+    if shards == 0 {
+        shards = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+    }
+    // unlike `swan fl`, a fleet run can be hours of compute — fail fast
+    // on a typo'd arm instead of silently running both
+    let arms: Vec<crate::fl::FlArm> = match args.get_str("arm", "both").as_str()
+    {
+        "swan" => vec![crate::fl::FlArm::Swan],
+        "baseline" => vec![crate::fl::FlArm::Baseline],
+        "both" => vec![crate::fl::FlArm::Swan, crate::fl::FlArm::Baseline],
+        other => crate::bail!("unknown --arm '{other}' (swan|baseline|both)"),
+    };
+    println!("scenario: {:#}", spec.to_json());
+    let mut outcomes = Vec::new();
+    for arm in arms {
+        let out = crate::fleet::run_scenario(&spec, shards, arm)?;
+        println!(
+            "[{}] {} devices × {} rounds on {} shards: vt={:.1}h \
+             energy={:.1}kJ steps={} online {}→{} | \
+             {:.0} devices-stepped/s ({:.2}s wall)",
+            out.arm,
+            out.devices,
+            out.rounds_run,
+            out.shards,
+            out.total_time_s / 3600.0,
+            out.total_energy_j / 1e3,
+            out.total_steps,
+            out.online_first(),
+            out.online_last(),
+            out.devices_stepped_per_sec(),
+            out.wall_s,
+        );
+        outcomes.push(out);
+    }
+    report::fleet_table(&outcomes).emit()?;
+    Ok(())
+}
+
+fn cmd_traces(rest: &[String]) -> crate::Result<()> {
     let specs = [opt("users", "raw users to synthesize", Some("8"))];
     let args = parse_args(rest, &specs)?;
     let n = args.get_usize("users", 8)?;
@@ -291,7 +364,7 @@ fn cmd_traces(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_report(rest: &[String]) -> anyhow::Result<()> {
+fn cmd_report(rest: &[String]) -> crate::Result<()> {
     let which = rest.first().map(String::as_str).unwrap_or("table2");
     match which {
         "fig1" | "fig1b" => report::fig1b_matmul_rows().1.emit()?,
@@ -306,8 +379,10 @@ fn cmd_report(rest: &[String]) -> anyhow::Result<()> {
         "fig3" => report::fig3_rows("artifacts").1.emit()?,
         "table2" => report::table2_rows("artifacts").1.emit()?,
         "table3" => report::table3_rows("artifacts").1.emit()?,
-        other => anyhow::bail!(
-            "unknown report '{other}' (fig1|fig2|fig2b|fig3|table2|table3)"
+        "fleet" => report::fleet_eval_rows("smoke", 4)?.1.emit()?,
+        other => crate::bail!(
+            "unknown report '{other}' \
+             (fig1|fig2|fig2b|fig3|table2|table3|fleet)"
         ),
     }
     Ok(())

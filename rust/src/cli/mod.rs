@@ -31,25 +31,25 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+    pub fn get_f64(&self, name: &str, default: f64) -> crate::Result<f64> {
         match self.get(name) {
             None => Ok(default),
             Some(s) => s
                 .parse::<f64>()
-                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'")),
+                .map_err(|_| crate::err!("--{name} expects a number, got '{s}'")),
         }
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+    pub fn get_usize(&self, name: &str, default: usize) -> crate::Result<usize> {
         match self.get(name) {
             None => Ok(default),
             Some(s) => s
                 .parse::<usize>()
-                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+                .map_err(|_| crate::err!("--{name} expects an integer, got '{s}'")),
         }
     }
 
-    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+    pub fn get_u64(&self, name: &str, default: u64) -> crate::Result<u64> {
         Ok(self.get_usize(name, default as usize)? as u64)
     }
 
@@ -62,7 +62,7 @@ impl Args {
 pub fn parse_args(
     tokens: &[String],
     specs: &[OptSpec],
-) -> anyhow::Result<Args> {
+) -> crate::Result<Args> {
     let mut args = Args::default();
     for spec in specs {
         if let (Some(d), false) = (spec.default, spec.is_switch) {
@@ -80,10 +80,10 @@ pub fn parse_args(
             let spec = specs
                 .iter()
                 .find(|s| s.name == name)
-                .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}"))?;
+                .ok_or_else(|| crate::err!("unknown flag --{name}"))?;
             if spec.is_switch {
                 if inline.is_some() {
-                    anyhow::bail!("--{name} is a switch and takes no value");
+                    crate::bail!("--{name} is a switch and takes no value");
                 }
                 args.switches.push(name.to_string());
             } else {
@@ -94,7 +94,7 @@ pub fn parse_args(
                         tokens
                             .get(i)
                             .cloned()
-                            .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                            .ok_or_else(|| crate::err!("--{name} needs a value"))?
                     }
                 };
                 args.values.insert(name.to_string(), value);

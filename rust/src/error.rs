@@ -1,0 +1,146 @@
+//! Crate-local error type (the offline crate set has no `anyhow`).
+//!
+//! A message-carrying error plus the three macros the crate idiomatically
+//! used from anyhow: [`err!`](crate::err), [`bail!`](crate::bail) and
+//! [`ensure!`](crate::ensure). Errors are plain strings — the crate's
+//! failure modes are configuration/IO shaped, never recoverable typed
+//! conditions, so a message is the right amount of structure.
+
+use std::fmt;
+
+/// Crate-wide error: a human-readable message.
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Build an [`Error`] from a format string: `crate::err!("bad {x}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds. With no
+/// message the stringified condition is reported.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::error::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_plain() -> crate::Result<()> {
+        crate::ensure!(1 + 1 == 3);
+        Ok(())
+    }
+
+    fn fails_fmt(n: usize) -> crate::Result<usize> {
+        crate::ensure!(n < 10, "n too big: {n}");
+        Ok(n)
+    }
+
+    fn bails() -> crate::Result<()> {
+        crate::bail!("gave up after {} tries", 3);
+    }
+
+    #[test]
+    fn display_carries_message() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+    }
+
+    #[test]
+    fn err_macro_formats() {
+        let e = crate::err!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+    }
+
+    #[test]
+    fn ensure_plain_names_condition() {
+        let e = fails_plain().unwrap_err();
+        assert!(e.to_string().contains("1 + 1 == 3"), "{e}");
+    }
+
+    #[test]
+    fn ensure_formatted_and_passing() {
+        assert_eq!(fails_fmt(5).unwrap(), 5);
+        let e = fails_fmt(20).unwrap_err();
+        assert_eq!(e.to_string(), "n too big: 20");
+    }
+
+    #[test]
+    fn bail_returns_error() {
+        assert_eq!(bails().unwrap_err().to_string(), "gave up after 3 tries");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> crate::Result<String> {
+            Ok(std::fs::read_to_string("/nonexistent/swan/path")?)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -10,6 +10,25 @@ use super::energy_loan::EnergyLoan;
 /// (the same §4.1 gate local admission uses).
 pub const MIN_LEVEL_PCT: f64 = 20.0;
 
+/// The §4.1/§5.1 availability gate shared by [`FlClient`] and the fleet
+/// kernel's light devices: (charging ∨ level ≥ minimum) ∧ the energy
+/// loan hasn't exhausted the budget. Advances the loan to `now_s`;
+/// `trace_offset_s` applies the A.2 hourly-shift augmentation.
+pub fn availability_gate(
+    trace: &ResampledTrace,
+    loan: &mut EnergyLoan,
+    now_s: f64,
+    trace_offset_s: f64,
+    min_level_pct: f64,
+) -> bool {
+    let t = trace.wrap(now_s + trace_offset_s);
+    let charging = trace.is_charging(t);
+    loan.tick(now_s, charging);
+    let level_pct = trace.level_at(t);
+    let gate = charging || level_pct >= min_level_pct;
+    gate && loan.allows_participation(level_pct / 100.0)
+}
+
 pub struct FlClient {
     pub id: usize,
     pub device: Device,
@@ -46,16 +65,17 @@ impl FlClient {
         self.device.id
     }
 
-    /// Paper §4.1/§5.1 availability: (charging ∨ level ≥ minimum) ∧ the
-    /// energy loan hasn't exhausted the budget. `now_s` is virtual time,
-    /// wrapped around the trace length.
+    /// Paper §4.1/§5.1 availability (see [`availability_gate`]).
+    /// `now_s` is virtual time, wrapped around the trace length.
     pub fn online(&mut self, now_s: f64) -> bool {
-        let t = self.trace.wrap(now_s);
-        let charging = self.trace.is_charging(t);
-        self.loan.tick(now_s, charging);
-        let level_pct = self.trace.level_at(t);
-        let gate = charging || level_pct >= MIN_LEVEL_PCT;
-        gate && self.loan.allows_participation(level_pct / 100.0)
+        availability_gate(&self.trace, &mut self.loan, now_s, 0.0, MIN_LEVEL_PCT)
+    }
+
+    /// Steps in one full local epoch (paper §5.1: one pass over the
+    /// client's samples at batch 16, == `ModelMeta::batch`).
+    pub fn epoch_steps(&self) -> usize {
+        const BATCH: usize = 16;
+        (self.partition.n_samples + BATCH - 1) / BATCH
     }
 
     /// Record one participation's systems cost.

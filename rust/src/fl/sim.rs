@@ -13,17 +13,19 @@
 //!    stragglers pace the round, as in FedScale);
 //! 5. periodically evaluate the global model on held-out batches →
 //!    accuracy-vs-time curve (Figs 5a/6a/7a).
+//!
+//! The systems-only path (`run_systems_only*`) delegates its round
+//! scheduling to `fleet::ShardedEventLoop`, the same kernel the fleet
+//! CLI and bench drive at 100k–1M devices; the numerics path keeps its
+//! serial loop because the PJRT executor is not thread-safe.
 
+use crate::fleet::coordinator::{
+    FleetPolicy, ProfileCoordinator, ResolvedCost, StepCost,
+};
+use crate::fleet::engine::{DriveConfig, ShardedEventLoop};
 use crate::runtime::ModelExecutor;
-use crate::soc::device::{all_devices, Device};
-use crate::soc::exec_model::{estimate, ExecEstimate, ExecutionContext};
-use crate::swan::choice::enumerate_choices;
-use crate::swan::profile::ChoiceProfile;
-use crate::swan::prune::prune_dominated;
+use crate::soc::device::{all_devices, Device, DeviceId};
 use crate::trace::augment::augment_shifts;
-use crate::trace::filter::passes_quality_filters;
-use crate::trace::greenhub::TraceGenerator;
-use crate::trace::resample::resample_trace;
 use crate::train::data::SyntheticDataset;
 use crate::train::metrics::{EvalResult, LossCurve};
 use crate::util::rng::Rng;
@@ -121,51 +123,42 @@ impl FlOutcome {
 
 /// Per-device-model step cost under each arm, computed once (the
 /// coordinator amortizes exploration across same-model devices, §4.2).
+/// Built through the fleet [`ProfileCoordinator`] so the FL harness and
+/// the fleet kernel share one exploration/pruning path.
 pub struct PolicyTable {
-    /// device-key → (swan best profile, greedy estimate)
-    entries: Vec<(Device, ChoiceProfile, ExecEstimate)>,
+    /// device-model → (swan best-choice cost, greedy baseline cost)
+    entries: Vec<(DeviceId, StepCost, StepCost)>,
 }
 
 impl PolicyTable {
     pub fn build(workload: &crate::workload::Workload) -> PolicyTable {
+        let mut coord = ProfileCoordinator::new(workload.clone());
         let mut entries = Vec::new();
         for d in all_devices() {
-            let ctx = ExecutionContext::exclusive(d.n_cores());
-            let profiles: Vec<ChoiceProfile> = enumerate_choices(&d)
-                .into_iter()
-                .map(|ch| {
-                    let est = estimate(&d, workload, &ch.cores, &ctx);
-                    ChoiceProfile {
-                        choice: ch,
-                        latency_s: est.latency_s,
-                        energy_j: est.energy_j,
-                        power_w: est.avg_power_w,
-                        steps_measured: 5,
-                    }
-                })
-                .collect();
-            let best = prune_dominated(profiles)
-                .into_iter()
-                .next()
-                .expect("nonempty chain");
-            let greedy =
-                estimate(&d, workload, &d.low_latency_cores(), &ctx);
-            entries.push((d, best, greedy));
+            let swan = coord.resolve(d.id, 0, FlArm::Swan).cost;
+            let greedy = coord.resolve(d.id, 0, FlArm::Baseline).cost;
+            entries.push((d.id, swan, greedy));
         }
         PolicyTable { entries }
     }
 
     /// (step latency, step energy) for `device` under `arm`.
     pub fn step_cost(&self, device: &Device, arm: FlArm) -> (f64, f64) {
-        let (_, best, greedy) = self
+        self.step_cost_by_id(device.id, arm)
+    }
+
+    /// Same, by SoC model id (what the fleet kernel resolves by).
+    pub fn step_cost_by_id(&self, id: DeviceId, arm: FlArm) -> (f64, f64) {
+        let (_, swan, greedy) = self
             .entries
             .iter()
-            .find(|(d, _, _)| d.id == device.id)
+            .find(|(d, _, _)| *d == id)
             .expect("device in table");
-        match arm {
-            FlArm::Swan => (best.latency_s, best.energy_j),
-            FlArm::Baseline => (greedy.latency_s, greedy.energy_j),
-        }
+        let c = match arm {
+            FlArm::Swan => swan,
+            FlArm::Baseline => greedy,
+        };
+        (c.latency_s, c.energy_j)
     }
 }
 
@@ -188,17 +181,12 @@ impl FlSim {
         dataset: SyntheticDataset,
         workload: &crate::workload::Workload,
     ) -> Result<FlSim> {
-        let gen = TraceGenerator::default();
-        let mut quality = Vec::new();
-        let mut uid = 0usize;
-        while quality.len() < cfg.quality_traces && uid < cfg.raw_traces * 20 {
-            let tr = gen.generate(cfg.seed, uid);
-            uid += 1;
-            if passes_quality_filters(&tr) {
-                quality.push(resample_trace(&tr)?);
-            }
-        }
-        anyhow::ensure!(
+        let quality = crate::trace::synthesize_quality_pool(
+            cfg.seed,
+            cfg.quality_traces,
+            cfg.raw_traces * 20,
+        )?;
+        crate::ensure!(
             quality.len() >= cfg.quality_traces.min(1),
             "no quality traces generated"
         );
@@ -231,12 +219,7 @@ impl FlSim {
     /// Steps in one full local epoch for client `ci` (paper §5.1: one
     /// pass over the client's samples at batch 16).
     fn epoch_steps(&self, ci: usize) -> usize {
-        (self.clients[ci].partition.n_samples + self.dataset_batch() - 1)
-            / self.dataset_batch()
-    }
-
-    fn dataset_batch(&self) -> usize {
-        16 // paper §5.1 minibatch size (== ModelMeta::batch)
+        self.clients[ci].epoch_steps()
     }
 
     /// Systems-only horizon: availability + energy-loan dynamics over
@@ -244,46 +227,66 @@ impl FlSim {
     /// is independent of model values (selection is uniform; energy per
     /// participation depends only on device, policy and epoch size) —
     /// this is how Figs 5b/6b/7b's week-scale decline is reproduced
-    /// without paying week-scale compute.
+    /// without paying week-scale compute. Runs on the fleet kernel
+    /// (single shard).
     pub fn run_systems_only(&mut self, rounds: usize) -> FlOutcome {
-        let mut outcome = FlOutcome {
-            arm: self.arm.name(),
-            ..Default::default()
-        };
-        let mut now_s = 0.0f64;
-        let mut total_energy = 0.0f64;
-        for round in 0..rounds {
-            let online: Vec<usize> = (0..self.clients.len())
-                .filter(|&i| self.clients[i].online(now_s))
-                .collect();
-            outcome.online_per_round.push((round, online.len()));
-            if online.is_empty() {
-                now_s += 600.0;
-                continue;
-            }
-            let picked = select_uniform(
-                &online,
-                self.cfg.clients_per_round,
-                &mut self.rng,
-            );
-            let mut round_time = 0.0f64;
-            for &ci in &picked {
-                let (lat, en) = self
-                    .policy
-                    .step_cost(&self.clients[ci].device, self.arm);
-                let epoch_steps = self.epoch_steps(ci);
-                let t = lat * epoch_steps as f64;
-                let e = en * epoch_steps as f64;
-                self.clients[ci].charge_participation(t, e);
-                total_energy += e;
-                round_time = round_time.max(t);
-            }
-            now_s += round_time + self.cfg.server_overhead_s;
-            outcome.rounds_run = round + 1;
+        self.run_systems_only_sharded(rounds, 1)
+    }
+
+    /// Same, with an explicit worker-shard count. The round scheduler is
+    /// `fleet::ShardedEventLoop` — the one the fleet CLI/bench drive —
+    /// so aggregates are bit-identical for any `n_shards`.
+    pub fn run_systems_only_sharded(
+        &mut self,
+        rounds: usize,
+        n_shards: usize,
+    ) -> FlOutcome {
+        struct TablePolicy<'a> {
+            table: &'a PolicyTable,
+            arm: FlArm,
         }
-        outcome.total_energy_j = total_energy;
-        outcome.total_time_s = now_s;
-        outcome
+        impl FleetPolicy for TablePolicy<'_> {
+            fn step_cost(
+                &mut self,
+                model: DeviceId,
+                _requester: usize,
+            ) -> ResolvedCost {
+                let (latency_s, energy_j) =
+                    self.table.step_cost_by_id(model, self.arm);
+                ResolvedCost {
+                    cost: StepCost {
+                        latency_s,
+                        energy_j,
+                    },
+                    ..Default::default()
+                }
+            }
+        }
+
+        let clients = std::mem::take(&mut self.clients);
+        let mut engine = ShardedEventLoop::new(clients, n_shards);
+        let cfg = DriveConfig {
+            scenario: "fl-systems-only".to_string(),
+            arm: self.arm,
+            seed: self.cfg.seed,
+            rounds,
+            clients_per_round: self.cfg.clients_per_round,
+            server_overhead_s: self.cfg.server_overhead_s,
+        };
+        let mut policy = TablePolicy {
+            table: &self.policy,
+            arm: self.arm,
+        };
+        let out = engine.drive(&mut policy, &cfg);
+        self.clients = engine.into_nodes();
+        FlOutcome {
+            arm: self.arm.name(),
+            online_per_round: out.online_per_round,
+            total_energy_j: out.total_energy_j,
+            total_time_s: out.total_time_s,
+            rounds_run: out.rounds_run,
+            ..Default::default()
+        }
     }
 
     /// Run the configured number of rounds with real numerics through

@@ -1,0 +1,291 @@
+//! §4.2 exploration amortized at fleet scale.
+//!
+//! On a real deployment Swan does not benchmark the choice space on
+//! every phone: the *first* device of each SoC model explores (paying
+//! real time and battery for it) and uploads its `ChoiceProfile`s; the
+//! coordinator distributes the pruned chain to every later device of the
+//! same model, which adopts it for free. This module makes that
+//! amortization explicit and measurable: the kernel bills the explorer
+//! device the full exploration cost in its first round, and the outcome
+//! reports how many devices adopted per exploration.
+
+use crate::fl::FlArm;
+use crate::soc::device::{device, DeviceId};
+use crate::soc::exec_model::{estimate, ExecutionContext};
+use crate::swan::choice::enumerate_choices;
+use crate::swan::profile::ChoiceProfile;
+use crate::swan::prune::prune_dominated;
+use crate::workload::Workload;
+
+/// Benchmark steps per choice during exploration (§4.2 request minimum).
+pub const EXPLORE_STEPS: usize = 5;
+
+/// Per-step cost of one device model under one policy arm.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepCost {
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+/// What the kernel needs back from a policy for one picked device: the
+/// steady-state per-step cost plus any one-time exploration charge
+/// billed to this requester.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResolvedCost {
+    pub cost: StepCost,
+    pub exploration_time_s: f64,
+    pub exploration_energy_j: f64,
+}
+
+/// Maps a picked device to its per-step cost. Implemented by
+/// [`ProfileCoordinator`] (via [`CoordinatorPolicy`]) for fleet runs and
+/// by `fl::FlSim`'s policy table for the FL harness — both feed the same
+/// [`ShardedEventLoop`](super::engine::ShardedEventLoop).
+pub trait FleetPolicy {
+    fn step_cost(&mut self, model: DeviceId, requester: usize) -> ResolvedCost;
+}
+
+/// One SoC model's distributed profile state.
+pub struct ModelProfile {
+    /// Pruned preference chain (index 0 = fastest choice).
+    pub chain: Vec<ChoiceProfile>,
+    /// The PyTorch-greedy baseline cost, benchmarked identically.
+    pub greedy: StepCost,
+    /// Global id of the device that paid for exploration.
+    pub explorer_device: usize,
+    pub exploration_time_s: f64,
+    pub exploration_energy_j: f64,
+    /// Devices that adopted the chain without exploring.
+    pub adoptions: usize,
+}
+
+/// Aggregate §4.2 accounting for one run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordinatorStats {
+    pub models_explored: usize,
+    pub adoptions: usize,
+    pub exploration_time_s: f64,
+    pub exploration_energy_j: f64,
+}
+
+/// The fleet-scale §4.2 coordinator: lazily explores each SoC model the
+/// first time one of its devices is picked, then serves the chain.
+pub struct ProfileCoordinator {
+    workload: Workload,
+    entries: Vec<(DeviceId, ModelProfile)>,
+}
+
+impl ProfileCoordinator {
+    pub fn new(workload: Workload) -> ProfileCoordinator {
+        ProfileCoordinator {
+            workload,
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    fn explore(workload: &Workload, model: DeviceId, requester: usize) -> ModelProfile {
+        let d = device(model);
+        let ctx = ExecutionContext::exclusive(d.n_cores());
+        let mut exploration_time_s = 0.0;
+        let mut exploration_energy_j = 0.0;
+        let profiles: Vec<ChoiceProfile> = enumerate_choices(&d)
+            .into_iter()
+            .map(|ch| {
+                let est = estimate(&d, workload, &ch.cores, &ctx);
+                exploration_time_s += est.latency_s * EXPLORE_STEPS as f64;
+                exploration_energy_j += est.energy_j * EXPLORE_STEPS as f64;
+                ChoiceProfile {
+                    choice: ch,
+                    latency_s: est.latency_s,
+                    energy_j: est.energy_j,
+                    power_w: est.avg_power_w,
+                    steps_measured: EXPLORE_STEPS,
+                }
+            })
+            .collect();
+        let greedy_est =
+            estimate(&d, workload, &d.low_latency_cores(), &ctx);
+        ModelProfile {
+            chain: prune_dominated(profiles),
+            greedy: StepCost {
+                latency_s: greedy_est.latency_s,
+                energy_j: greedy_est.energy_j,
+            },
+            explorer_device: requester,
+            exploration_time_s,
+            exploration_energy_j,
+            adoptions: 0,
+        }
+    }
+
+    /// Resolve the per-step cost for a device of `model` under `arm`.
+    ///
+    /// The first resolution of a model runs the full §4.2 exploration
+    /// and bills it to `requester` (Swan arm only — the greedy baseline
+    /// never explores); every later resolution adopts for free.
+    pub fn resolve(
+        &mut self,
+        model: DeviceId,
+        requester: usize,
+        arm: FlArm,
+    ) -> ResolvedCost {
+        let fresh = !self.entries.iter().any(|(m, _)| *m == model);
+        if fresh {
+            let entry = Self::explore(&self.workload, model, requester);
+            self.entries.push((model, entry));
+        }
+        let entry = self
+            .entries
+            .iter_mut()
+            .find(|(m, _)| *m == model)
+            .map(|(_, e)| e)
+            .expect("entry just ensured");
+        let cost = match arm {
+            FlArm::Swan => {
+                let best = &entry.chain[0];
+                StepCost {
+                    latency_s: best.latency_s,
+                    energy_j: best.energy_j,
+                }
+            }
+            FlArm::Baseline => entry.greedy,
+        };
+        if fresh && arm == FlArm::Swan {
+            ResolvedCost {
+                cost,
+                exploration_time_s: entry.exploration_time_s,
+                exploration_energy_j: entry.exploration_energy_j,
+            }
+        } else {
+            // Adoption is a Swan concept: the baseline neither explores
+            // nor adopts a chain, it just runs greedy.
+            if !fresh && arm == FlArm::Swan {
+                entry.adoptions += 1;
+            }
+            ResolvedCost {
+                cost,
+                ..Default::default()
+            }
+        }
+    }
+
+    /// The distributed chain for `model`, if explored.
+    pub fn chain(&self, model: DeviceId) -> Option<&[ChoiceProfile]> {
+        self.entries
+            .iter()
+            .find(|(m, _)| *m == model)
+            .map(|(_, e)| e.chain.as_slice())
+    }
+
+    pub fn stats(&self) -> CoordinatorStats {
+        let mut s = CoordinatorStats {
+            models_explored: self.entries.len(),
+            ..Default::default()
+        };
+        for (_, e) in &self.entries {
+            s.adoptions += e.adoptions;
+            s.exploration_time_s += e.exploration_time_s;
+            s.exploration_energy_j += e.exploration_energy_j;
+        }
+        s
+    }
+}
+
+/// Adapter binding a coordinator to one policy arm for a kernel run.
+pub struct CoordinatorPolicy<'a> {
+    pub coord: &'a mut ProfileCoordinator,
+    pub arm: FlArm,
+}
+
+impl FleetPolicy for CoordinatorPolicy<'_> {
+    fn step_cost(&mut self, model: DeviceId, requester: usize) -> ResolvedCost {
+        self.coord.resolve(model, requester, self.arm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{builtin, WorkloadName};
+
+    fn coord() -> ProfileCoordinator {
+        ProfileCoordinator::new(builtin(WorkloadName::ShufflenetV2))
+    }
+
+    #[test]
+    fn first_device_pays_exploration_rest_adopt() {
+        let mut c = coord();
+        let first = c.resolve(DeviceId::S10e, 42, FlArm::Swan);
+        assert!(
+            first.exploration_time_s > 0.0,
+            "first device must be billed exploration"
+        );
+        assert!(first.exploration_energy_j > 0.0);
+        let second = c.resolve(DeviceId::S10e, 43, FlArm::Swan);
+        assert_eq!(second.exploration_time_s, 0.0, "adopters pay nothing");
+        assert_eq!(second.cost.latency_s, first.cost.latency_s);
+        let stats = c.stats();
+        assert_eq!(stats.models_explored, 1);
+        assert_eq!(stats.adoptions, 1);
+    }
+
+    #[test]
+    fn swan_never_slower_than_greedy() {
+        for wl in [
+            WorkloadName::Resnet34,
+            WorkloadName::MobilenetV2,
+            WorkloadName::ShufflenetV2,
+        ] {
+            let mut c = ProfileCoordinator::new(builtin(wl));
+            for d in crate::soc::device::all_devices() {
+                let s = c.resolve(d.id, 0, FlArm::Swan);
+                let b = c.resolve(d.id, 0, FlArm::Baseline);
+                assert!(
+                    s.cost.latency_s <= b.cost.latency_s + 1e-12,
+                    "{:?}/{wl:?}: swan {} > greedy {}",
+                    d.id,
+                    s.cost.latency_s,
+                    b.cost.latency_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_never_billed_exploration() {
+        let mut c = coord();
+        let b = c.resolve(DeviceId::Pixel3, 7, FlArm::Baseline);
+        assert_eq!(b.exploration_time_s, 0.0);
+        assert_eq!(b.exploration_energy_j, 0.0);
+    }
+
+    #[test]
+    fn chain_head_is_fastest() {
+        let mut c = coord();
+        c.resolve(DeviceId::OnePlus8, 0, FlArm::Swan);
+        let chain = c.chain(DeviceId::OnePlus8).unwrap();
+        assert!(!chain.is_empty());
+        for p in chain {
+            assert!(chain[0].latency_s <= p.latency_s + 1e-15);
+        }
+        assert!(c.chain(DeviceId::TabS6).is_none());
+    }
+
+    #[test]
+    fn exploration_cost_covers_the_whole_choice_space() {
+        let mut c = coord();
+        let rc = c.resolve(DeviceId::Pixel3, 0, FlArm::Swan);
+        // pixel3 has 8 choices × 5 steps; each step ≥ the fastest step
+        let per_step = rc.cost.latency_s;
+        assert!(
+            rc.exploration_time_s >= 8.0 * EXPLORE_STEPS as f64 * per_step,
+            "exploration {} vs floor {}",
+            rc.exploration_time_s,
+            8.0 * EXPLORE_STEPS as f64 * per_step
+        );
+    }
+}

@@ -1,0 +1,245 @@
+//! What the fleet kernel schedules: the [`FleetNode`] trait and the
+//! scenario-instantiated light device state.
+//!
+//! Two implementations exist. [`FleetDevice`] is the trace-driven,
+//! data-free node a [`ScenarioSpec`](super::scenario::ScenarioSpec)
+//! stamps out by the hundred thousand; `fl::FlClient` is the full FL
+//! harness client (device + trace + dataset partition). Both run on the
+//! same [`ShardedEventLoop`](super::engine::ShardedEventLoop), which is
+//! how `fl::FlSim` and the fleet CLI share one scheduler.
+
+use std::sync::Arc;
+
+use crate::fl::energy_loan::EnergyLoan;
+use crate::fl::FlClient;
+use crate::soc::device::DeviceId;
+use crate::trace::resample::ResampledTrace;
+use crate::util::rng::Rng;
+
+/// A device the [`ShardedEventLoop`](super::engine::ShardedEventLoop)
+/// can schedule.
+///
+/// Implementations must be deterministic functions of their own state
+/// and the arguments — never of scheduling order — so that resharding
+/// cannot change results.
+pub trait FleetNode: Send {
+    /// The SoC model, for §4.2 profile lookup.
+    fn model(&self) -> DeviceId;
+
+    /// Availability at virtual time `now_s`. May advance device-local
+    /// bookkeeping (e.g. energy-loan repayment); called exactly once per
+    /// round per device, in device order within each shard.
+    fn poll_online(&mut self, now_s: f64) -> bool;
+
+    /// Steps in one local epoch when this device is picked.
+    fn epoch_steps(&self) -> usize;
+
+    /// Per-step cost multiplier at `(now_s, round)` — the interference /
+    /// thermal envelope. Must be a pure function of device state and the
+    /// arguments.
+    fn cost_multiplier(&self, now_s: f64, round: usize) -> f64 {
+        let _ = (now_s, round);
+        1.0
+    }
+
+    /// Record one participation's systems cost.
+    fn charge(&mut self, time_s: f64, energy_j: f64);
+}
+
+impl FleetNode for FlClient {
+    fn model(&self) -> DeviceId {
+        self.device.id
+    }
+
+    fn poll_online(&mut self, now_s: f64) -> bool {
+        self.online(now_s)
+    }
+
+    fn epoch_steps(&self) -> usize {
+        FlClient::epoch_steps(self)
+    }
+
+    fn charge(&mut self, time_s: f64, energy_j: f64) {
+        self.charge_participation(time_s, energy_j);
+    }
+}
+
+/// A scenario-instantiated device: GreenHub trace (shared, time-shifted
+/// per Appendix A.2), energy loan against its charger envelope, and
+/// deterministic interference/thermal schedules. Light enough to stamp
+/// out a million of.
+pub struct FleetDevice {
+    pub id: usize,
+    pub model: DeviceId,
+    /// Shared trace from the scenario pool.
+    pub trace: Arc<ResampledTrace>,
+    /// Hourly-shift augmentation offset, seconds.
+    pub shift_s: f64,
+    pub loan: EnergyLoan,
+    pub epoch_steps: usize,
+    /// Minimum traced battery level (%) when not charging.
+    pub min_level_pct: f64,
+    /// Probability a foreground session overlaps a given round's epoch.
+    pub interference_p: f64,
+    /// Latency/energy multiplier while interfered.
+    pub interference_slowdown: f64,
+    /// Probability a round's epoch runs DVFS-throttled.
+    pub thermal_throttle_p: f64,
+    /// Multiplier while throttled.
+    pub thermal_derate: f64,
+    /// Per-device stream seed (derived from scenario seed + id only).
+    pub seed: u64,
+    pub participations: usize,
+    pub train_time_s: f64,
+}
+
+impl FleetNode for FleetDevice {
+    fn model(&self) -> DeviceId {
+        self.model
+    }
+
+    fn poll_online(&mut self, now_s: f64) -> bool {
+        crate::fl::availability::availability_gate(
+            &self.trace,
+            &mut self.loan,
+            now_s,
+            self.shift_s,
+            self.min_level_pct,
+        )
+    }
+
+    fn epoch_steps(&self) -> usize {
+        self.epoch_steps
+    }
+
+    fn cost_multiplier(&self, _now_s: f64, round: usize) -> f64 {
+        // Keyed on (device seed, round) only — identical under any
+        // sharding and any scheduling order. The round-mixing constant
+        // must differ from the id-mixing constant in `build_fleet`, or
+        // the XOR cancels on the id == round diagonal and those
+        // devices' schedules become perfectly correlated.
+        let mut rng = Rng::new(
+            self.seed ^ (round as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93),
+        );
+        let mut m = 1.0;
+        if rng.f64() < self.interference_p {
+            m *= self.interference_slowdown;
+        }
+        if rng.f64() < self.thermal_throttle_p {
+            m *= self.thermal_derate;
+        }
+        m
+    }
+
+    fn charge(&mut self, time_s: f64, energy_j: f64) {
+        self.train_time_s += time_s;
+        self.loan.borrow(energy_j);
+        self.participations += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::greenhub::TraceGenerator;
+    use crate::trace::resample::resample_trace;
+
+    fn test_device(credit_j: f64) -> FleetDevice {
+        let tr = Arc::new(
+            resample_trace(&TraceGenerator::default().generate(1, 0)).unwrap(),
+        );
+        FleetDevice {
+            id: 0,
+            model: DeviceId::Pixel3,
+            trace: tr,
+            shift_s: 0.0,
+            loan: EnergyLoan::new(2915.0, credit_j),
+            epoch_steps: 5,
+            min_level_pct: 20.0,
+            interference_p: 0.25,
+            interference_slowdown: 2.5,
+            thermal_throttle_p: 0.1,
+            thermal_derate: 1.5,
+            seed: 7,
+            participations: 0,
+            train_time_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn availability_varies_over_a_day() {
+        let mut d = test_device(50_000.0);
+        let states: Vec<bool> =
+            (0..144).map(|i| d.poll_online(i as f64 * 600.0)).collect();
+        assert!(states.iter().any(|&s| s), "never online in a day");
+    }
+
+    #[test]
+    fn heavy_borrowing_takes_device_offline() {
+        let mut d = test_device(1_000.0);
+        let mut t = 0.0;
+        while !d.poll_online(t) {
+            t += 600.0;
+        }
+        let full_pack = d.loan.capacity_j;
+        d.charge(100.0, full_pack);
+        assert!(!d.poll_online(t), "full-pack loan must kill availability");
+        assert_eq!(d.participations, 1);
+        assert_eq!(d.train_time_s, 100.0);
+    }
+
+    #[test]
+    fn shift_changes_the_timeline_not_the_trace() {
+        // a high level gate makes availability track the diurnal level
+        // curve, so a 6h shift must visibly move the online window
+        let mut a = test_device(50_000.0);
+        let mut b = test_device(50_000.0);
+        a.min_level_pct = 95.0;
+        b.min_level_pct = 95.0;
+        b.shift_s = 6.0 * 3600.0;
+        let sa: Vec<bool> =
+            (0..144).map(|i| a.poll_online(i as f64 * 600.0)).collect();
+        let sb: Vec<bool> =
+            (0..144).map(|i| b.poll_online(i as f64 * 600.0)).collect();
+        assert!(sa.iter().any(|&s| s) || sb.iter().any(|&s| s));
+        assert_ne!(sa, sb, "6h shift must move the availability window");
+    }
+
+    #[test]
+    fn cost_multiplier_deterministic_and_bounded() {
+        let d = test_device(50_000.0);
+        let mut hit = 0;
+        for round in 0..200 {
+            let m1 = d.cost_multiplier(0.0, round);
+            let m2 = d.cost_multiplier(1e9, round); // time-independent
+            assert_eq!(m1, m2);
+            assert!(m1 >= 1.0 && m1 <= 2.5 * 1.5 + 1e-9, "m={m1}");
+            if m1 > 1.0 {
+                hit += 1;
+            }
+        }
+        assert!(hit > 10 && hit < 150, "schedule implausible: {hit}/200");
+    }
+
+    #[test]
+    fn fl_client_is_a_fleet_node() {
+        use crate::soc::device::device;
+        use crate::train::data::SyntheticDataset;
+        let tr =
+            resample_trace(&TraceGenerator::default().generate(1, 0)).unwrap();
+        let ds = SyntheticDataset::vision(0);
+        let mut c = FlClient::new(
+            0,
+            device(DeviceId::S10e),
+            tr,
+            ds.partition(0),
+            50_000.0,
+        );
+        assert_eq!(FleetNode::model(&c), DeviceId::S10e);
+        assert!(FleetNode::epoch_steps(&c) >= 1);
+        assert_eq!(c.cost_multiplier(0.0, 0), 1.0);
+        let before = c.participations;
+        FleetNode::charge(&mut c, 10.0, 100.0);
+        assert_eq!(c.participations, before + 1);
+    }
+}

@@ -1,0 +1,521 @@
+//! The sharded event loop: the kernel that steps 100k–1M devices.
+//!
+//! Devices are partitioned round-robin across worker threads
+//! (`std::thread::scope` + mpsc channels; no external crates). Each
+//! round is two parallel phases separated by a control-thread barrier:
+//!
+//! ```text
+//! control                    workers (one per shard)
+//! ───────                    ──────────────────────
+//! Poll(now)      ──────────▶ poll every local device's availability
+//!                ◀──────────  online ids (ascending)
+//! merge, select participants (central RNG keyed on (seed, round)),
+//! resolve §4.2 policy costs in picked order
+//! Step(jobs)     ──────────▶ event queue: BeginEpoch → EpochDone,
+//!                             charging loans, applying interference
+//!                ◀──────────  per-device (time, energy, steps)
+//! fold results in picked order, advance the virtual clock
+//! ```
+//!
+//! **Determinism.** Every stochastic stream is keyed on scenario seed +
+//! device id or round — never on shard layout — device state only ever
+//! depends on its own history, and the control thread performs every
+//! floating-point reduction in a fixed order (global picked order). So
+//! the aggregate metrics are bit-identical for any shard count; the
+//! `fleet_determinism` integration test and the bench both assert it via
+//! [`FleetOutcome::digest`].
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use crate::fl::{select_uniform, FlArm};
+use crate::util::rng::Rng;
+
+use super::coordinator::{CoordinatorPolicy, FleetPolicy, ProfileCoordinator, StepCost};
+use super::device::FleetNode;
+use super::event::{Event, EventKind, EventQueue};
+use super::metrics::FleetOutcome;
+use super::scenario::ScenarioSpec;
+
+/// Virtual wait when nobody is online (mirrors `fl::FlSim`), seconds.
+const EMPTY_ROUND_WAIT_S: f64 = 600.0;
+
+/// Round structure for one kernel run.
+#[derive(Clone, Debug)]
+pub struct DriveConfig {
+    pub scenario: String,
+    pub arm: FlArm,
+    pub seed: u64,
+    pub rounds: usize,
+    pub clients_per_round: usize,
+    pub server_overhead_s: f64,
+}
+
+/// Selection RNG for one round — a function of (seed, round) only, so
+/// resharding can never perturb who gets picked.
+fn round_rng(seed: u64, round: usize) -> Rng {
+    Rng::new(
+        seed ^ 0x5EED_F1EE7
+            ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
+
+struct Shard<N> {
+    /// Local nodes in ascending global-id order; node `k` of shard `s`
+    /// is global device `s + k * n_shards`.
+    nodes: Vec<N>,
+    queue: EventQueue,
+}
+
+/// One participation order for a shard's device.
+#[derive(Clone, Copy, Debug)]
+struct StepJob {
+    device: u32,
+    cost: StepCost,
+    /// One-time §4.2 exploration bill (first device of a model).
+    extra_time_s: f64,
+    extra_energy_j: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct StepResult {
+    device: u32,
+    time_s: f64,
+    energy_j: f64,
+    steps: u32,
+}
+
+enum ShardCmd {
+    Poll { now_s: f64 },
+    Step { now_s: f64, round: usize, jobs: Vec<StepJob> },
+    Stop,
+}
+
+enum ShardReply {
+    Online { online: Vec<u32> },
+    Stepped { results: Vec<StepResult> },
+}
+
+fn shard_worker<N: FleetNode>(
+    shard_idx: usize,
+    n_shards: usize,
+    shard: &mut Shard<N>,
+    rx: Receiver<ShardCmd>,
+    tx: Sender<ShardReply>,
+) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            ShardCmd::Poll { now_s } => {
+                let mut online = Vec::new();
+                for (k, node) in shard.nodes.iter_mut().enumerate() {
+                    if node.poll_online(now_s) {
+                        online.push((shard_idx + k * n_shards) as u32);
+                    }
+                }
+                if tx.send(ShardReply::Online { online }).is_err() {
+                    return;
+                }
+            }
+            ShardCmd::Step { now_s, round, jobs } => {
+                for job in &jobs {
+                    shard.queue.push(Event {
+                        at_s: now_s,
+                        device: job.device,
+                        kind: EventKind::BeginEpoch,
+                    });
+                }
+                let by_dev: HashMap<u32, StepJob> =
+                    jobs.iter().map(|j| (j.device, *j)).collect();
+                let mut results = Vec::with_capacity(jobs.len());
+                while let Some(ev) = shard.queue.pop() {
+                    let local = (ev.device as usize - shard_idx) / n_shards;
+                    match ev.kind {
+                        EventKind::BeginEpoch => {
+                            let job = by_dev[&ev.device];
+                            let node = &shard.nodes[local];
+                            let steps = node.epoch_steps();
+                            let mult = node.cost_multiplier(ev.at_s, round);
+                            let t = job.cost.latency_s * steps as f64 * mult
+                                + job.extra_time_s;
+                            let e = job.cost.energy_j * steps as f64 * mult
+                                + job.extra_energy_j;
+                            shard.queue.push(Event {
+                                at_s: ev.at_s + t,
+                                device: ev.device,
+                                kind: EventKind::EpochDone {
+                                    time_s: t,
+                                    energy_j: e,
+                                    steps: steps as u32,
+                                },
+                            });
+                        }
+                        EventKind::EpochDone {
+                            time_s,
+                            energy_j,
+                            steps,
+                        } => {
+                            shard.nodes[local].charge(time_s, energy_j);
+                            results.push(StepResult {
+                                device: ev.device,
+                                time_s,
+                                energy_j,
+                                steps,
+                            });
+                        }
+                    }
+                }
+                if tx.send(ShardReply::Stepped { results }).is_err() {
+                    return;
+                }
+            }
+            ShardCmd::Stop => return,
+        }
+    }
+}
+
+/// The sharded simulation kernel over any [`FleetNode`] population.
+pub struct ShardedEventLoop<N: FleetNode> {
+    shards: Vec<Shard<N>>,
+    /// SoC model per global device id (for central policy resolution).
+    models: Vec<crate::soc::device::DeviceId>,
+    n_devices: usize,
+}
+
+impl<N: FleetNode> ShardedEventLoop<N> {
+    /// Partition `nodes` (global id = vector index) round-robin across
+    /// `n_shards` worker shards.
+    pub fn new(nodes: Vec<N>, n_shards: usize) -> ShardedEventLoop<N> {
+        let n_shards = n_shards.max(1).min(nodes.len().max(1));
+        let n_devices = nodes.len();
+        let models = nodes.iter().map(|n| n.model()).collect();
+        let mut shards: Vec<Shard<N>> = (0..n_shards)
+            .map(|_| Shard {
+                nodes: Vec::with_capacity(n_devices / n_shards + 1),
+                queue: EventQueue::new(),
+            })
+            .collect();
+        for (i, node) in nodes.into_iter().enumerate() {
+            shards[i % n_shards].nodes.push(node);
+        }
+        ShardedEventLoop {
+            shards,
+            models,
+            n_devices,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    /// Tear down, returning the nodes in global-id order.
+    pub fn into_nodes(self) -> Vec<N> {
+        let n_shards = self.shards.len();
+        let mut slots: Vec<Option<N>> =
+            (0..self.n_devices).map(|_| None).collect();
+        for (si, shard) in self.shards.into_iter().enumerate() {
+            for (k, node) in shard.nodes.into_iter().enumerate() {
+                slots[si + k * n_shards] = Some(node);
+            }
+        }
+        slots.into_iter().map(|s| s.expect("node present")).collect()
+    }
+
+    /// Run `cfg.rounds` rounds of the availability → selection → local
+    /// epoch → clock-advance loop (the scheduler both `fl::FlSim` and
+    /// the fleet CLI share). See the module doc for the determinism
+    /// contract.
+    pub fn drive(
+        &mut self,
+        policy: &mut dyn FleetPolicy,
+        cfg: &DriveConfig,
+    ) -> FleetOutcome {
+        let wall0 = Instant::now();
+        let shards = &mut self.shards;
+        let models = &self.models;
+        let n_shards = shards.len();
+
+        let mut outcome = FleetOutcome {
+            scenario: cfg.scenario.clone(),
+            arm: cfg.arm.name(),
+            devices: self.n_devices,
+            shards: n_shards,
+            ..Default::default()
+        };
+
+        std::thread::scope(|scope| {
+            // One reply channel per shard: a panicked worker drops its
+            // sender, so the control thread's recv fails immediately and
+            // the panic propagates through the scope instead of hanging.
+            let mut cmd_txs: Vec<Sender<ShardCmd>> =
+                Vec::with_capacity(n_shards);
+            let mut reply_rxs: Vec<Receiver<ShardReply>> =
+                Vec::with_capacity(n_shards);
+            for (si, shard) in shards.iter_mut().enumerate() {
+                let (tx, rx) = channel::<ShardCmd>();
+                let (reply_tx, reply_rx) = channel::<ShardReply>();
+                cmd_txs.push(tx);
+                reply_rxs.push(reply_rx);
+                scope.spawn(move || {
+                    shard_worker(si, n_shards, shard, rx, reply_tx)
+                });
+            }
+
+            let mut now_s = 0.0f64;
+            let mut total_energy = 0.0f64;
+            let mut total_steps = 0u64;
+            let mut participations = 0u64;
+
+            for round in 0..cfg.rounds {
+                // 1. availability: every shard polls in parallel
+                for tx in &cmd_txs {
+                    tx.send(ShardCmd::Poll { now_s }).expect("shard alive");
+                }
+                let mut online_by_shard: Vec<Vec<u32>> =
+                    (0..n_shards).map(|_| Vec::new()).collect();
+                for (sid, reply_rx) in reply_rxs.iter().enumerate() {
+                    match reply_rx.recv().expect("shard worker died") {
+                        ShardReply::Online { online } => {
+                            online_by_shard[sid] = online;
+                        }
+                        ShardReply::Stepped { .. } => {
+                            unreachable!("no step outstanding")
+                        }
+                    }
+                }
+                let mut online: Vec<usize> = online_by_shard
+                    .into_iter()
+                    .flatten()
+                    .map(|i| i as usize)
+                    .collect();
+                online.sort_unstable();
+                outcome.online_per_round.push((round, online.len()));
+                if online.is_empty() {
+                    now_s += EMPTY_ROUND_WAIT_S;
+                    continue;
+                }
+
+                // 2. selection: central, keyed on (seed, round) only
+                let mut rng = round_rng(cfg.seed, round);
+                let picked = select_uniform(
+                    &online,
+                    cfg.clients_per_round,
+                    &mut rng,
+                );
+
+                // 3. resolve policy costs centrally, in picked order
+                //    (§4.2 exploration billing is order-sensitive)
+                let mut jobs_by_shard: Vec<Vec<StepJob>> =
+                    (0..n_shards).map(|_| Vec::new()).collect();
+                for &gid in &picked {
+                    let rc = policy.step_cost(models[gid], gid);
+                    jobs_by_shard[gid % n_shards].push(StepJob {
+                        device: gid as u32,
+                        cost: rc.cost,
+                        extra_time_s: rc.exploration_time_s,
+                        extra_energy_j: rc.exploration_energy_j,
+                    });
+                }
+
+                // 4. parallel event-driven local epochs
+                let mut active: Vec<usize> = Vec::new();
+                for (sid, tx) in cmd_txs.iter().enumerate() {
+                    let jobs = std::mem::take(&mut jobs_by_shard[sid]);
+                    if jobs.is_empty() {
+                        continue;
+                    }
+                    active.push(sid);
+                    tx.send(ShardCmd::Step {
+                        now_s,
+                        round,
+                        jobs,
+                    })
+                    .expect("shard alive");
+                }
+                let mut results: HashMap<u32, StepResult> = HashMap::new();
+                for &sid in &active {
+                    match reply_rxs[sid].recv().expect("shard worker died") {
+                        ShardReply::Stepped { results: rs } => {
+                            for r in rs {
+                                results.insert(r.device, r);
+                            }
+                        }
+                        ShardReply::Online { .. } => {
+                            unreachable!("no poll outstanding")
+                        }
+                    }
+                }
+
+                // 5. fold in global picked order — a fixed reduction
+                //    order keeps aggregates bit-identical under any
+                //    sharding (synchronous FL: stragglers pace rounds)
+                let mut round_time = 0.0f64;
+                for &gid in &picked {
+                    let r = &results[&(gid as u32)];
+                    total_energy += r.energy_j;
+                    total_steps += r.steps as u64;
+                    participations += 1;
+                    round_time = round_time.max(r.time_s);
+                }
+                now_s += round_time + cfg.server_overhead_s;
+                outcome.rounds_run = round + 1;
+            }
+
+            for tx in &cmd_txs {
+                let _ = tx.send(ShardCmd::Stop);
+            }
+
+            outcome.total_time_s = now_s;
+            outcome.total_energy_j = total_energy;
+            outcome.total_steps = total_steps;
+            outcome.participations = participations;
+        });
+        outcome.wall_s = wall0.elapsed().as_secs_f64();
+        outcome
+    }
+}
+
+/// Run one scenario end to end: build the fleet, drive it through a
+/// [`ProfileCoordinator`]-backed policy, attach §4.2 accounting.
+pub fn run_scenario(
+    spec: &ScenarioSpec,
+    n_shards: usize,
+    arm: FlArm,
+) -> crate::Result<FleetOutcome> {
+    let workload = crate::workload::load_or_builtin(spec.workload, "artifacts");
+    let mut coord = ProfileCoordinator::new(workload);
+    let nodes = spec.build_fleet()?;
+    let mut engine = ShardedEventLoop::new(nodes, n_shards);
+    let cfg = DriveConfig {
+        scenario: spec.name.clone(),
+        arm,
+        seed: spec.seed,
+        rounds: spec.rounds,
+        clients_per_round: spec.clients_per_round,
+        server_overhead_s: spec.server_overhead_s,
+    };
+    let mut policy = CoordinatorPolicy {
+        coord: &mut coord,
+        arm,
+    };
+    let mut out = engine.drive(&mut policy, &cfg);
+    // §4.2 exploration accounting is a Swan-arm concept: the greedy
+    // baseline never explores (the coordinator may have profiled models
+    // as a side effect, but no baseline device was billed or adopted).
+    if arm == FlArm::Swan {
+        let stats = coord.stats();
+        out.models_explored = stats.models_explored;
+        out.adoptions = stats.adoptions as u64;
+        out.exploration_time_s = stats.exploration_time_s;
+        out.exploration_energy_j = stats.exploration_energy_j;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::scenario::ScenarioSpec;
+
+    fn tiny_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "unit".to_string(),
+            devices: 240,
+            rounds: 8,
+            clients_per_round: 12,
+            trace_users: 2,
+            ..ScenarioSpec::default()
+        }
+    }
+
+    #[test]
+    fn resharding_is_bit_identical() {
+        let spec = tiny_spec();
+        let a = run_scenario(&spec, 1, FlArm::Swan).unwrap();
+        let b = run_scenario(&spec, 3, FlArm::Swan).unwrap();
+        let c = run_scenario(&spec, 7, FlArm::Swan).unwrap();
+        assert_eq!(a.digest(), b.digest(), "1 vs 3 shards");
+        assert_eq!(a.digest(), c.digest(), "1 vs 7 shards");
+        assert_eq!(a.online_per_round, b.online_per_round);
+        assert_eq!(a.total_time_s.to_bits(), c.total_time_s.to_bits());
+        assert_eq!(a.total_energy_j.to_bits(), c.total_energy_j.to_bits());
+    }
+
+    #[test]
+    fn swan_cheaper_than_baseline_at_fleet_scale() {
+        let spec = tiny_spec();
+        let swan = run_scenario(&spec, 2, FlArm::Swan).unwrap();
+        let base = run_scenario(&spec, 2, FlArm::Baseline).unwrap();
+        assert!(swan.participations > 0);
+        assert!(
+            base.total_energy_j > 2.0 * swan.total_energy_j,
+            "shufflenet fleet: baseline {} J vs swan {} J",
+            base.total_energy_j,
+            swan.total_energy_j
+        );
+        assert!(base.total_time_s > swan.total_time_s);
+    }
+
+    #[test]
+    fn exploration_amortizes_across_the_fleet() {
+        let spec = tiny_spec();
+        let out = run_scenario(&spec, 2, FlArm::Swan).unwrap();
+        assert!(out.models_explored >= 1 && out.models_explored <= 5);
+        assert!(
+            out.adoptions as usize
+                >= out.participations as usize - out.models_explored,
+            "all but the explorers must adopt: {} adoptions, {} parts",
+            out.adoptions,
+            out.participations
+        );
+        assert!(out.exploration_time_s > 0.0);
+    }
+
+    #[test]
+    fn into_nodes_restores_global_order() {
+        let spec = ScenarioSpec {
+            devices: 11,
+            trace_users: 1,
+            ..ScenarioSpec::default()
+        };
+        let nodes = spec.build_fleet().unwrap();
+        let engine = ShardedEventLoop::new(nodes, 4);
+        assert_eq!(engine.n_shards(), 4);
+        assert_eq!(engine.n_devices(), 11);
+        let back = engine.into_nodes();
+        for (i, n) in back.iter().enumerate() {
+            assert_eq!(n.id, i);
+        }
+    }
+
+    #[test]
+    fn shard_count_clamped_to_population() {
+        let spec = ScenarioSpec {
+            devices: 3,
+            trace_users: 1,
+            ..ScenarioSpec::default()
+        };
+        let nodes = spec.build_fleet().unwrap();
+        let engine = ShardedEventLoop::new(nodes, 64);
+        assert_eq!(engine.n_shards(), 3);
+    }
+
+    #[test]
+    fn zero_rounds_is_a_clean_noop() {
+        let spec = ScenarioSpec {
+            devices: 10,
+            rounds: 0,
+            trace_users: 1,
+            ..ScenarioSpec::default()
+        };
+        let out = run_scenario(&spec, 2, FlArm::Swan).unwrap();
+        assert_eq!(out.rounds_run, 0);
+        assert_eq!(out.participations, 0);
+        assert_eq!(out.total_time_s, 0.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Deterministic per-shard event queue.
+//!
+//! Each shard of the [`ShardedEventLoop`](super::engine::ShardedEventLoop)
+//! advances its devices by processing timestamped events between global
+//! round barriers. Determinism never *depends* on pop order — devices are
+//! independent between barriers and the control thread folds results in a
+//! fixed order — but the queue still breaks timestamp ties FIFO so a
+//! shard's local trace replays identically run to run.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What can happen to a device inside a round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EventKind {
+    /// A picked device begins its local epoch.
+    BeginEpoch,
+    /// The epoch completes: charge the device, record the metrics.
+    EpochDone {
+        time_s: f64,
+        energy_j: f64,
+        steps: u32,
+    },
+}
+
+/// A timestamped occurrence on one device.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Virtual time the event fires, seconds.
+    pub at_s: f64,
+    /// Global device id.
+    pub device: u32,
+    pub kind: EventKind,
+}
+
+struct Entry {
+    event: Event,
+    seq: u64,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // `BinaryHeap` pops the maximum; invert so the earliest event
+        // (then the first-pushed on ties) is the maximum.
+        other
+            .event
+            .at_s
+            .total_cmp(&self.event.at_s)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of [`Event`]s with FIFO tie-breaking.
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, event: Event) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { event, seq });
+    }
+
+    /// Pop the earliest event (FIFO on equal timestamps).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|e| e.event)
+    }
+
+    /// Timestamp of the next event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.event.at_s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at_s: f64, device: u32) -> Event {
+        Event {
+            at_s,
+            device,
+            kind: EventKind::BeginEpoch,
+        }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(3.0, 0));
+        q.push(ev(1.0, 1));
+        q.push(ev(2.0, 2));
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop())
+            .map(|e| e.device)
+            .collect();
+        assert_eq!(order, vec![1, 2, 0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_times_pop_fifo() {
+        let mut q = EventQueue::new();
+        for d in 0..5u32 {
+            q.push(ev(7.5, d));
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop())
+            .map(|e| e.device)
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(ev(10.0, 0));
+        q.push(ev(5.0, 1));
+        assert_eq!(q.peek_time(), Some(5.0));
+        assert_eq!(q.pop().unwrap().device, 1);
+        q.push(ev(2.0, 2));
+        assert_eq!(q.pop().unwrap().device, 2);
+        assert_eq!(q.pop().unwrap().device, 0);
+        assert_eq!(q.pop().map(|e| e.device), None);
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.len(), 0);
+        q.push(ev(1.0, 0));
+        q.push(ev(2.0, 1));
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn epoch_done_payload_roundtrips() {
+        let mut q = EventQueue::new();
+        q.push(Event {
+            at_s: 1.0,
+            device: 9,
+            kind: EventKind::EpochDone {
+                time_s: 2.5,
+                energy_j: 7.0,
+                steps: 12,
+            },
+        });
+        match q.pop().unwrap().kind {
+            EventKind::EpochDone {
+                time_s,
+                energy_j,
+                steps,
+            } => {
+                assert_eq!(time_s, 2.5);
+                assert_eq!(energy_j, 7.0);
+                assert_eq!(steps, 12);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+}

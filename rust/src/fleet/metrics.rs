@@ -1,0 +1,176 @@
+//! Fleet run outcomes and the throughput figures the bench reports.
+
+use crate::util::json::Value;
+
+/// Everything a fleet run reports.
+///
+/// Aggregates (`total_*`, `online_per_round`, `participations`) are
+/// bit-identical for any shard count — [`digest`](FleetOutcome::digest)
+/// fingerprints exactly that invariant set. `wall_s` and the derived
+/// throughput are the only shard-dependent numbers.
+#[derive(Clone, Debug, Default)]
+pub struct FleetOutcome {
+    pub scenario: String,
+    pub arm: &'static str,
+    pub devices: usize,
+    pub shards: usize,
+    pub rounds_run: usize,
+    /// Device-epochs executed (one per picked device per round).
+    pub participations: u64,
+    /// Total local SGD steps paid across the fleet.
+    pub total_steps: u64,
+    /// Virtual seconds elapsed.
+    pub total_time_s: f64,
+    /// Fleet energy borrowed, joules.
+    pub total_energy_j: f64,
+    /// §4.2 accounting (from the `ProfileCoordinator`).
+    pub models_explored: usize,
+    pub adoptions: u64,
+    pub exploration_time_s: f64,
+    pub exploration_energy_j: f64,
+    /// (round, #online) — the Figs 5b/6b/7b series at fleet scale.
+    pub online_per_round: Vec<(usize, usize)>,
+    /// Wall-clock seconds for the whole drive.
+    pub wall_s: f64,
+}
+
+impl FleetOutcome {
+    /// Device-epochs stepped (the bench's headline unit).
+    pub fn devices_stepped(&self) -> u64 {
+        self.participations
+    }
+
+    /// Throughput: device-epochs per wall-clock second.
+    pub fn devices_stepped_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.participations as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Throughput in local SGD steps per wall-clock second.
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_steps as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn online_first(&self) -> usize {
+        self.online_per_round.first().map(|x| x.1).unwrap_or(0)
+    }
+
+    pub fn online_last(&self) -> usize {
+        self.online_per_round.last().map(|x| x.1).unwrap_or(0)
+    }
+
+    /// Bit-exact fingerprint of the shard-invariant aggregates (virtual
+    /// time + energy bits, step/participation counts, FNV-1a over the
+    /// online series). Two runs of the same scenario must produce equal
+    /// digests regardless of shard count.
+    pub fn digest(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for (r, n) in &self.online_per_round {
+            for x in [*r as u64, *n as u64] {
+                h ^= x;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        format!(
+            "t{:016x}-e{:016x}-s{}-p{}-o{:016x}",
+            self.total_time_s.to_bits(),
+            self.total_energy_j.to_bits(),
+            self.total_steps,
+            self.participations,
+            h
+        )
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("scenario", self.scenario.clone())
+            .set("arm", self.arm)
+            .set("devices", self.devices)
+            .set("shards", self.shards)
+            .set("rounds_run", self.rounds_run)
+            .set("participations", self.participations as f64)
+            .set("total_steps", self.total_steps as f64)
+            .set("total_time_s", self.total_time_s)
+            .set("total_energy_j", self.total_energy_j)
+            .set("models_explored", self.models_explored)
+            .set("adoptions", self.adoptions as f64)
+            .set("exploration_time_s", self.exploration_time_s)
+            .set("exploration_energy_j", self.exploration_energy_j)
+            .set("online_first", self.online_first())
+            .set("online_last", self.online_last())
+            .set("devices_stepped_per_sec", self.devices_stepped_per_sec())
+            .set("wall_s", self.wall_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_sensitive_to_aggregates_only() {
+        let mut a = FleetOutcome {
+            total_time_s: 100.0,
+            total_energy_j: 5.0,
+            total_steps: 10,
+            participations: 2,
+            online_per_round: vec![(0, 5), (1, 4)],
+            wall_s: 1.0,
+            shards: 1,
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        b.wall_s = 99.0; // shard-dependent fields must not matter
+        b.shards = 8;
+        assert_eq!(a.digest(), b.digest());
+        a.total_energy_j += 1e-12; // a single ulp-ish change must show
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn throughput_figures() {
+        let o = FleetOutcome {
+            participations: 500,
+            total_steps: 2_500,
+            wall_s: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(o.devices_stepped(), 500);
+        assert_eq!(o.devices_stepped_per_sec(), 250.0);
+        assert_eq!(o.steps_per_sec(), 1_250.0);
+        let zero = FleetOutcome::default();
+        assert_eq!(zero.devices_stepped_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn online_endpoints() {
+        let o = FleetOutcome {
+            online_per_round: vec![(0, 9), (1, 7), (2, 3)],
+            ..Default::default()
+        };
+        assert_eq!(o.online_first(), 9);
+        assert_eq!(o.online_last(), 3);
+        assert_eq!(FleetOutcome::default().online_first(), 0);
+    }
+
+    #[test]
+    fn json_has_throughput() {
+        let o = FleetOutcome {
+            scenario: "smoke".into(),
+            arm: "swan",
+            participations: 10,
+            wall_s: 1.0,
+            ..Default::default()
+        };
+        let v = o.to_json();
+        assert_eq!(v.req_str("scenario").unwrap(), "smoke");
+        assert!(v.req_f64("devices_stepped_per_sec").unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! The fleet simulation kernel: sharded, event-driven evaluation of
+//! Swan at population scale (100k–1M simulated devices).
+//!
+//! The paper's headline claims rest on *large-scale* FL evaluations
+//! across heterogeneous smartphone SoCs; the seed reproduced them with a
+//! serial per-round loop that cannot reach that scale. This subsystem
+//! supplies the missing machinery:
+//!
+//! - [`scenario`] — [`ScenarioSpec`]: experiment setups as *data*
+//!   (device-model mixes, GreenHub trace assignment, charger/thermal
+//!   envelopes, interference schedules), loadable via `util::json`.
+//! - [`device`] — the [`FleetNode`] abstraction the kernel schedules;
+//!   implemented by both the scenario-instantiated [`FleetDevice`] and
+//!   the FL harness's `fl::FlClient`, so both paths share one scheduler.
+//! - [`event`] — the deterministic per-shard event queue.
+//! - [`coordinator`] — [`ProfileCoordinator`]: §4.2 exploration
+//!   amortized at fleet scale (the first device of each SoC model
+//!   explores and is billed for it; every later device adopts the
+//!   distributed `ChoiceProfile` chain for free).
+//! - [`engine`] — [`ShardedEventLoop`]: devices partitioned round-robin
+//!   across worker threads (`std::thread` + mpsc channels, no external
+//!   crates). Every stochastic stream is keyed on (seed, device id) or
+//!   (seed, round) — never on shard layout — and the control thread
+//!   folds per-device results in a fixed order, so aggregate metrics are
+//!   **bit-identical for any shard count**.
+//! - [`metrics`] — [`FleetOutcome`] + the `devices-stepped/sec`
+//!   throughput figures the `fleet` bench and report emit.
+
+pub mod coordinator;
+pub mod device;
+pub mod engine;
+pub mod event;
+pub mod metrics;
+pub mod scenario;
+
+pub use coordinator::{
+    CoordinatorPolicy, CoordinatorStats, FleetPolicy, ProfileCoordinator,
+    ResolvedCost, StepCost,
+};
+pub use device::{FleetDevice, FleetNode};
+pub use engine::{run_scenario, DriveConfig, ShardedEventLoop};
+pub use event::{Event, EventKind, EventQueue};
+pub use metrics::FleetOutcome;
+pub use scenario::ScenarioSpec;

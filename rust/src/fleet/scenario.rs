@@ -1,0 +1,457 @@
+//! Fleet scenarios as data.
+//!
+//! A [`ScenarioSpec`] describes everything a fleet run needs — device
+//! count, SoC-model mix, GreenHub trace pool + assignment, charger
+//! envelope (daily credit), availability gate, interference and thermal
+//! schedules, and the round structure — so experiment setups live in
+//! JSON instead of hard-coded Rust. Builtin presets cover the scales the
+//! bench and report use (`smoke`, `city`, `metro`, `million`).
+
+use std::sync::Arc;
+
+use crate::fl::energy_loan::EnergyLoan;
+use crate::soc::device::{device, DeviceId};
+use crate::trace::resample::ResampledTrace;
+use crate::util::json::{parse_file, Value};
+use crate::util::rng::Rng;
+use crate::workload::WorkloadName;
+
+use super::device::FleetDevice;
+
+/// A data-driven fleet experiment description.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub seed: u64,
+    /// Fleet size (devices simulated concurrently).
+    pub devices: usize,
+    pub rounds: usize,
+    /// Participants selected per round.
+    pub clients_per_round: usize,
+    /// Local SGD steps each participant pays per round.
+    pub local_steps: usize,
+    /// Device-model mix as (model, weight); normalized at sampling time.
+    pub mix: Vec<(DeviceId, f64)>,
+    pub workload: WorkloadName,
+    /// GreenHub trace pool size; device `i` is assigned trace
+    /// `i % pool` with an `(i / pool) % 24` hourly shift — the Appendix
+    /// A.2 augmentation applied at fleet scale.
+    pub trace_users: usize,
+    /// Charger envelope: daily charger credit available to FL, J/day
+    /// (per-device 0.6–1.6× jitter, the same draw `fl::FlSim` makes).
+    pub daily_credit_j: f64,
+    /// Minimum traced battery level (%) when not charging (§4.1 gate).
+    pub min_level_pct: f64,
+    /// Interference schedule: probability a foreground session overlaps
+    /// a picked device's epoch in a given round, and its slowdown.
+    pub interference_p: f64,
+    pub interference_slowdown: f64,
+    /// Thermal envelope: probability of a DVFS-throttled epoch + derate.
+    pub thermal_throttle_p: f64,
+    pub thermal_derate: f64,
+    pub server_overhead_s: f64,
+}
+
+fn opt_usize(v: &Value, key: &str, dst: &mut usize) -> crate::Result<()> {
+    if let Some(x) = v.get(key) {
+        *dst = x
+            .as_usize()
+            .ok_or_else(|| crate::err!("scenario key '{key}' must be a number"))?;
+    }
+    Ok(())
+}
+
+fn opt_f64(v: &Value, key: &str, dst: &mut f64) -> crate::Result<()> {
+    if let Some(x) = v.get(key) {
+        *dst = x
+            .as_f64()
+            .ok_or_else(|| crate::err!("scenario key '{key}' must be a number"))?;
+    }
+    Ok(())
+}
+
+fn default_mix() -> Vec<(DeviceId, f64)> {
+    vec![
+        (DeviceId::Pixel3, 0.25),
+        (DeviceId::S10e, 0.20),
+        (DeviceId::OnePlus8, 0.20),
+        (DeviceId::TabS6, 0.15),
+        (DeviceId::Mi10, 0.20),
+    ]
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            name: "custom".to_string(),
+            seed: 0,
+            devices: 1_000,
+            rounds: 20,
+            clients_per_round: 50,
+            local_steps: 5,
+            mix: default_mix(),
+            workload: WorkloadName::ShufflenetV2,
+            trace_users: 8,
+            daily_credit_j: 3_000.0,
+            min_level_pct: 20.0,
+            interference_p: 0.15,
+            interference_slowdown: 2.5,
+            thermal_throttle_p: 0.05,
+            thermal_derate: 1.5,
+            server_overhead_s: 0.5,
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Builtin presets: `smoke` (CI scale), `city` (the 100k bench
+    /// scenario), `metro`, `million`.
+    pub fn builtin(key: &str) -> Option<ScenarioSpec> {
+        let mut s = ScenarioSpec {
+            name: key.to_string(),
+            ..ScenarioSpec::default()
+        };
+        match key {
+            "smoke" => {
+                s.devices = 2_000;
+                s.rounds = 25;
+                s.clients_per_round = 100;
+            }
+            "city" => {
+                s.devices = 100_000;
+                s.rounds = 20;
+                s.clients_per_round = 1_000;
+                s.trace_users = 16;
+            }
+            "metro" => {
+                s.devices = 250_000;
+                s.rounds = 15;
+                s.clients_per_round = 2_000;
+                s.trace_users = 24;
+            }
+            "million" => {
+                s.devices = 1_000_000;
+                s.rounds = 10;
+                s.clients_per_round = 5_000;
+                s.trace_users = 32;
+            }
+            _ => return None,
+        }
+        Some(s)
+    }
+
+    /// Parse a spec; only `name` is required, everything else defaults.
+    pub fn from_json(v: &Value) -> crate::Result<ScenarioSpec> {
+        let mut s = ScenarioSpec {
+            name: v.req_str("name")?.to_string(),
+            ..ScenarioSpec::default()
+        };
+        opt_usize(v, "devices", &mut s.devices)?;
+        opt_usize(v, "rounds", &mut s.rounds)?;
+        opt_usize(v, "clients_per_round", &mut s.clients_per_round)?;
+        opt_usize(v, "local_steps", &mut s.local_steps)?;
+        opt_usize(v, "trace_users", &mut s.trace_users)?;
+        // seeds are u64; JSON numbers are f64-backed, so large seeds
+        // travel as strings to stay bit-exact (see `to_json`)
+        if let Some(sv) = v.get("seed") {
+            s.seed = match sv {
+                Value::Num(n) => {
+                    crate::ensure!(
+                        n.fract() == 0.0
+                            && *n >= 0.0
+                            && *n <= (1u64 << 53) as f64,
+                        "scenario 'seed' must be a non-negative integer \
+                         (use a string for seeds above 2^53)"
+                    );
+                    *n as u64
+                }
+                Value::Str(st) => st.parse::<u64>().map_err(|_| {
+                    crate::err!("scenario 'seed' is not a u64: '{st}'")
+                })?,
+                _ => crate::bail!("scenario 'seed' must be a number or string"),
+            };
+        }
+        opt_f64(v, "daily_credit_j", &mut s.daily_credit_j)?;
+        opt_f64(v, "min_level_pct", &mut s.min_level_pct)?;
+        opt_f64(v, "interference_p", &mut s.interference_p)?;
+        opt_f64(v, "interference_slowdown", &mut s.interference_slowdown)?;
+        opt_f64(v, "thermal_throttle_p", &mut s.thermal_throttle_p)?;
+        opt_f64(v, "thermal_derate", &mut s.thermal_derate)?;
+        opt_f64(v, "server_overhead_s", &mut s.server_overhead_s)?;
+        if let Some(w) = v.get("workload").and_then(Value::as_str) {
+            s.workload = WorkloadName::parse(w)
+                .ok_or_else(|| crate::err!("unknown workload '{w}'"))?;
+        }
+        if let Some(mv) = v.get("mix") {
+            let kv = match mv {
+                Value::Obj(kv) => kv,
+                _ => crate::bail!("'mix' must be an object of weights"),
+            };
+            let mut mix = Vec::new();
+            for (k, wv) in kv {
+                let id = DeviceId::parse(k).ok_or_else(|| {
+                    crate::err!("unknown device '{k}' in mix")
+                })?;
+                let w = wv.as_f64().ok_or_else(|| {
+                    crate::err!("mix weight for '{k}' is not a number")
+                })?;
+                crate::ensure!(w >= 0.0, "negative mix weight for '{k}'");
+                mix.push((id, w));
+            }
+            crate::ensure!(
+                mix.iter().any(|(_, w)| *w > 0.0),
+                "mix has no positive weight"
+            );
+            s.mix = mix;
+        }
+        crate::ensure!(s.devices > 0, "scenario needs devices > 0");
+        crate::ensure!(s.clients_per_round > 0, "clients_per_round must be > 0");
+        // negative/NaN envelopes would invert loans or corrupt the
+        // event timeline — reject rather than simulate garbage
+        for (key, x) in [
+            ("daily_credit_j", s.daily_credit_j),
+            ("min_level_pct", s.min_level_pct),
+            ("server_overhead_s", s.server_overhead_s),
+        ] {
+            crate::ensure!(
+                x.is_finite() && x >= 0.0,
+                "scenario '{key}' must be finite and >= 0, got {x}"
+            );
+        }
+        for (key, p) in [
+            ("interference_p", s.interference_p),
+            ("thermal_throttle_p", s.thermal_throttle_p),
+        ] {
+            crate::ensure!(
+                p.is_finite() && (0.0..=1.0).contains(&p),
+                "scenario '{key}' must be a probability in [0, 1], got {p}"
+            );
+        }
+        for (key, m) in [
+            ("interference_slowdown", s.interference_slowdown),
+            ("thermal_derate", s.thermal_derate),
+        ] {
+            crate::ensure!(
+                m.is_finite() && m >= 1.0,
+                "scenario '{key}' must be a multiplier >= 1, got {m}"
+            );
+        }
+        Ok(s)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<ScenarioSpec> {
+        Self::from_json(&parse_file(path)?)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut mix = Value::obj();
+        for (id, w) in &self.mix {
+            mix = mix.set(id.key(), *w);
+        }
+        // seeds above 2^53 don't fit an f64-backed JSON number exactly
+        let seed = if self.seed <= (1u64 << 53) {
+            Value::Num(self.seed as f64)
+        } else {
+            Value::Str(self.seed.to_string())
+        };
+        Value::obj()
+            .set("name", self.name.clone())
+            .set("seed", seed)
+            .set("devices", self.devices)
+            .set("rounds", self.rounds)
+            .set("clients_per_round", self.clients_per_round)
+            .set("local_steps", self.local_steps)
+            .set("workload", self.workload.key())
+            .set("trace_users", self.trace_users)
+            .set("daily_credit_j", self.daily_credit_j)
+            .set("min_level_pct", self.min_level_pct)
+            .set("interference_p", self.interference_p)
+            .set("interference_slowdown", self.interference_slowdown)
+            .set("thermal_throttle_p", self.thermal_throttle_p)
+            .set("thermal_derate", self.thermal_derate)
+            .set("server_overhead_s", self.server_overhead_s)
+            .set("mix", mix)
+    }
+
+    /// Instantiate the fleet: synthesize + A.2-filter + resample the
+    /// trace pool (as `fl::FlSim` does), then stamp out devices with
+    /// deterministic per-device streams — model from the mix, charger
+    /// credit jitter, trace + hourly-shift assignment. Device `i`'s
+    /// state is a function of `(spec, i)` only, never of shard layout.
+    pub fn build_fleet(&self) -> crate::Result<Vec<FleetDevice>> {
+        let want = self.trace_users.max(1);
+        let pool: Vec<Arc<ResampledTrace>> =
+            crate::trace::synthesize_quality_pool(self.seed, want, want * 20)?
+                .into_iter()
+                .map(Arc::new)
+                .collect();
+        crate::ensure!(
+            !pool.is_empty(),
+            "no quality traces generated for scenario '{}'",
+            self.name
+        );
+
+        let weights: Vec<f64> = self.mix.iter().map(|(_, w)| *w).collect();
+        let battery: Vec<(DeviceId, f64)> = self
+            .mix
+            .iter()
+            .map(|(id, _)| (*id, device(*id).battery_mah))
+            .collect();
+
+        let mut out = Vec::with_capacity(self.devices);
+        for i in 0..self.devices {
+            let mut rng = Rng::new(
+                self.seed
+                    ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F),
+            );
+            let (model, mah) = battery[rng.weighted(&weights)];
+            let credit = self.daily_credit_j * rng.range(0.6, 1.6);
+            out.push(FleetDevice {
+                id: i,
+                model,
+                trace: pool[i % pool.len()].clone(),
+                shift_s: ((i / pool.len()) % 24) as f64 * 3600.0,
+                loan: EnergyLoan::new(mah, credit),
+                epoch_steps: self.local_steps.max(1),
+                min_level_pct: self.min_level_pct,
+                interference_p: self.interference_p,
+                interference_slowdown: self.interference_slowdown,
+                thermal_throttle_p: self.thermal_throttle_p,
+                thermal_derate: self.thermal_derate,
+                seed: self.seed
+                    ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                participations: 0,
+                train_time_s: 0.0,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::device::FleetNode;
+
+    #[test]
+    fn builtins_exist_and_scale_up() {
+        let smoke = ScenarioSpec::builtin("smoke").unwrap();
+        let city = ScenarioSpec::builtin("city").unwrap();
+        let million = ScenarioSpec::builtin("million").unwrap();
+        assert!(smoke.devices < city.devices);
+        assert_eq!(city.devices, 100_000);
+        assert_eq!(million.devices, 1_000_000);
+        assert!(ScenarioSpec::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_fields() {
+        let mut spec = ScenarioSpec::builtin("smoke").unwrap();
+        spec.seed = 9;
+        spec.interference_p = 0.33;
+        spec.workload = WorkloadName::MobilenetV2;
+        let v = spec.to_json();
+        let back = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(back.name, "smoke");
+        assert_eq!(back.seed, 9);
+        assert_eq!(back.devices, spec.devices);
+        assert_eq!(back.workload, WorkloadName::MobilenetV2);
+        assert!((back.interference_p - 0.33).abs() < 1e-12);
+        assert_eq!(back.mix.len(), spec.mix.len());
+    }
+
+    #[test]
+    fn huge_seeds_survive_the_json_roundtrip() {
+        // seeds above 2^53 cannot live in an f64 JSON number; they must
+        // travel as strings and come back bit-exact
+        let mut spec = ScenarioSpec::builtin("smoke").unwrap();
+        spec.seed = u64::MAX - 12345;
+        let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.seed, spec.seed);
+    }
+
+    #[test]
+    fn json_text_parses_with_defaults() {
+        let src = r#"{
+            "name": "tiny", "devices": 64, "rounds": 3,
+            "workload": "resnet34",
+            "mix": {"pixel3": 1.0, "s10e": 1.0}
+        }"#;
+        let v = crate::util::json::parse(src).unwrap();
+        let s = ScenarioSpec::from_json(&v).unwrap();
+        assert_eq!(s.devices, 64);
+        assert_eq!(s.workload, WorkloadName::Resnet34);
+        assert_eq!(s.mix.len(), 2);
+        // defaults filled in
+        assert_eq!(s.clients_per_round, 50);
+        assert!(s.daily_credit_j > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for src in [
+            r#"{"devices": 10}"#,                                  // no name
+            r#"{"name": "x", "workload": "gpt5"}"#,                // bad wl
+            r#"{"name": "x", "mix": {"nokia3310": 1.0}}"#,         // bad dev
+            r#"{"name": "x", "mix": {"pixel3": 0.0}}"#,            // zero mix
+            r#"{"name": "x", "devices": 0}"#,                      // empty
+            r#"{"name": "x", "rounds": "500"}"#,                   // typed
+            r#"{"name": "x", "interference_p": true}"#,            // typed
+            r#"{"name": "x", "seed": [1]}"#,                       // typed
+            r#"{"name": "x", "seed": -3}"#,                        // range
+            r#"{"name": "x", "seed": 1.5}"#,                       // range
+            r#"{"name": "x", "interference_p": 1.5}"#,             // range
+            r#"{"name": "x", "interference_slowdown": -2.0}"#,     // range
+            r#"{"name": "x", "daily_credit_j": -1.0}"#,            // range
+        ] {
+            let v = crate::util::json::parse(src).unwrap();
+            assert!(ScenarioSpec::from_json(&v).is_err(), "{src}");
+        }
+    }
+
+    #[test]
+    fn build_fleet_is_deterministic_and_mixed() {
+        let spec = ScenarioSpec {
+            devices: 500,
+            trace_users: 2,
+            ..ScenarioSpec::default()
+        };
+        let a = spec.build_fleet().unwrap();
+        let b = spec.build_fleet().unwrap();
+        assert_eq!(a.len(), 500);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.model, y.model);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.shift_s, y.shift_s);
+        }
+        // every model in the default mix shows up
+        let mut seen = std::collections::HashSet::new();
+        for d in &a {
+            seen.insert(d.model);
+        }
+        assert_eq!(seen.len(), 5, "all five models represented");
+        // trace assignment: 2 traces × 24 shifts cycle
+        assert_eq!(a[0].shift_s, 0.0);
+        assert_eq!(a[2].shift_s, 3600.0);
+    }
+
+    #[test]
+    fn mix_weights_respected() {
+        let spec = ScenarioSpec {
+            devices: 2_000,
+            mix: vec![(DeviceId::Pixel3, 3.0), (DeviceId::S10e, 1.0)],
+            trace_users: 1,
+            ..ScenarioSpec::default()
+        };
+        let fleet = spec.build_fleet().unwrap();
+        let pixel = fleet
+            .iter()
+            .filter(|d| d.model() == DeviceId::Pixel3)
+            .count();
+        let frac = pixel as f64 / fleet.len() as f64;
+        assert!(
+            (0.70..0.80).contains(&frac),
+            "pixel3 fraction {frac} vs expected 0.75"
+        );
+    }
+}

@@ -9,6 +9,8 @@
 //! evaluation.
 //!
 //! Module map (bottom-up):
+//! - [`error`] — the crate-local error type + `err!`/`bail!`/`ensure!`
+//!   (the offline crate set has no `anyhow`).
 //! - [`util`] — zero-dependency substrates: RNG, JSON, PCHIP, stats,
 //!   property-test + bench harnesses (the offline crate set has no
 //!   serde/rand/criterion/proptest); [`cli`] — the hand-rolled launcher.
@@ -21,12 +23,22 @@
 //! - [`swan`] — the paper's contribution: execution choices, the cost
 //!   total order, pruning, the explorer and the migration controller.
 //! - [`baseline`] — the PyTorch greedy policy Swan is compared against.
-//! - [`runtime`] — PJRT loading/execution of `artifacts/*.hlo.txt`
-//!   (real numerics; Python never runs at request time).
+//! - [`xla`] — stub of the PJRT bindings (`xla` is not in the offline
+//!   crate set); [`runtime`] — PJRT loading/execution of
+//!   `artifacts/*.hlo.txt` (real numerics when the bindings are present;
+//!   the stub keeps every simulator-only path fully functional).
 //! - [`train`], [`trace`], [`fl`] — local trainer + synthetic datasets,
 //!   GreenHub-style battery traces, and the FedAvg simulation.
+//! - [`fleet`] — the sharded, event-driven fleet simulation kernel:
+//!   [`fleet::scenario`] data-driven experiment specs (device-model
+//!   mixes, GreenHub trace assignment, charger envelopes, interference
+//!   schedules), [`fleet::engine`] the `ShardedEventLoop` that steps
+//!   100k–1M devices across worker threads with bit-identical results
+//!   at any shard count, and [`fleet::coordinator`] the §4.2
+//!   fleet-scale exploration amortizer. `fl::FlSim` runs on top of it.
 //! - [`report`] — emitters that regenerate every paper table and figure.
 
+pub mod error;
 pub mod util;
 pub mod soc;
 pub mod power;
@@ -34,12 +46,14 @@ pub mod workload;
 pub mod sim;
 pub mod swan;
 pub mod baseline;
+pub mod xla;
 pub mod runtime;
 pub mod train;
 pub mod trace;
 pub mod fl;
+pub mod fleet;
 pub mod report;
 pub mod cli;
 
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, error::Error>;

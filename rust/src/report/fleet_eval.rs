@@ -1,0 +1,92 @@
+//! Fleet-scale evaluation emitter: devices-stepped/sec throughput and
+//! the per-arm fleet aggregates, as a paper-style table. The `swan
+//! report fleet` CLI path and `benches/fleet_throughput.rs` both come
+//! through here.
+
+use crate::fl::FlArm;
+use crate::fleet::{run_scenario, FleetOutcome, ScenarioSpec};
+use crate::util::table::Table;
+
+/// Render fleet outcomes as a table (one row per run).
+pub fn fleet_table(outcomes: &[FleetOutcome]) -> Table {
+    let mut t = Table::new(
+        "Fleet simulation — throughput and aggregates",
+        &[
+            "scenario",
+            "arm",
+            "devices",
+            "shards",
+            "rounds",
+            "steps",
+            "virtual_h",
+            "energy_kJ",
+            "online_first",
+            "online_last",
+            "devices_stepped_per_s",
+        ],
+    );
+    for o in outcomes {
+        t.row(&[
+            o.scenario.clone(),
+            o.arm.to_string(),
+            o.devices.to_string(),
+            o.shards.to_string(),
+            o.rounds_run.to_string(),
+            o.total_steps.to_string(),
+            format!("{:.2}", o.total_time_s / 3600.0),
+            format!("{:.1}", o.total_energy_j / 1e3),
+            o.online_first().to_string(),
+            o.online_last().to_string(),
+            format!("{:.0}", o.devices_stepped_per_sec()),
+        ]);
+    }
+    t
+}
+
+/// Run both arms of a builtin scenario and build the table.
+pub fn fleet_eval_rows(
+    scenario: &str,
+    shards: usize,
+) -> crate::Result<(Vec<FleetOutcome>, Table)> {
+    let spec = ScenarioSpec::builtin(scenario)
+        .ok_or_else(|| crate::err!("unknown scenario '{scenario}'"))?;
+    let mut outs = Vec::new();
+    for arm in [FlArm::Swan, FlArm::Baseline] {
+        outs.push(run_scenario(&spec, shards, arm)?);
+    }
+    let table = fleet_table(&outs);
+    Ok((outs, table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_one_row_per_outcome() {
+        let outs = vec![
+            FleetOutcome {
+                scenario: "smoke".into(),
+                arm: "swan",
+                devices: 10,
+                ..Default::default()
+            },
+            FleetOutcome {
+                scenario: "smoke".into(),
+                arm: "baseline",
+                devices: 10,
+                ..Default::default()
+            },
+        ];
+        let t = fleet_table(&outs);
+        assert_eq!(t.rows.len(), 2);
+        let md = t.to_markdown();
+        assert!(md.contains("devices_stepped_per_s"));
+        assert!(md.contains("baseline"));
+    }
+
+    #[test]
+    fn unknown_scenario_errors() {
+        assert!(fleet_eval_rows("galactic", 2).is_err());
+    }
+}

@@ -49,12 +49,12 @@ pub struct ModelMeta {
 }
 
 impl ModelMeta {
-    pub fn load(meta_path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+    pub fn load(meta_path: impl AsRef<std::path::Path>) -> crate::Result<Self> {
         let v = parse_file(meta_path)?;
         Self::from_json(&v)
     }
 
-    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+    pub fn from_json(v: &Value) -> crate::Result<Self> {
         let mut params = Vec::new();
         for p in v.req_arr("params")? {
             let name = p.req_str("name")?.to_string();
@@ -63,7 +63,7 @@ impl ModelMeta {
                 .iter()
                 .map(|d| d.as_usize().unwrap_or(0))
                 .collect();
-            anyhow::ensure!(
+            crate::ensure!(
                 shape.iter().all(|&d| d > 0),
                 "bad shape for param {name}"
             );
@@ -73,14 +73,14 @@ impl ModelMeta {
                 },
                 "ones" => InitKind::Ones,
                 "zeros" => InitKind::Zeros,
-                other => anyhow::bail!("unknown init kind '{other}'"),
+                other => crate::bail!("unknown init kind '{other}'"),
             };
             params.push(ParamSpec { name, shape, init });
         }
         // aot.py writes sorted names; the executor's positional protocol
         // depends on it, so verify rather than trust.
         for w in params.windows(2) {
-            anyhow::ensure!(
+            crate::ensure!(
                 w[0].name < w[1].name,
                 "params not sorted: {} >= {}",
                 w[0].name,

@@ -4,6 +4,7 @@
 //! (The `xla` crate's `PjRtClient` is a cheap cloneable wrapper around
 //! the underlying C++ client.)
 
+use crate::xla;
 use crate::Result;
 
 pub struct RuntimeClient {
@@ -13,7 +14,7 @@ pub struct RuntimeClient {
 impl RuntimeClient {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+            .map_err(|e| crate::err!("PJRT cpu client: {e}"))?;
         Ok(RuntimeClient { client })
     }
 
@@ -29,12 +30,12 @@ impl RuntimeClient {
     ) -> Result<xla::PjRtLoadedExecutable> {
         let path = path.as_ref();
         let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
-            anyhow::anyhow!("parsing HLO text {}: {e}", path.display())
+            crate::err!("parsing HLO text {}: {e}", path.display())
         })?;
         let comp = xla::XlaComputation::from_proto(&proto);
         self.client
             .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))
+            .map_err(|e| crate::err!("compiling {}: {e}", path.display()))
     }
 
     /// Upload an f32 tensor.
@@ -52,7 +53,7 @@ impl RuntimeClient {
     ) -> Result<xla::PjRtBuffer> {
         self.client
             .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow::anyhow!("upload f32: {e}"))
+            .map_err(|e| crate::err!("upload f32: {e}"))
     }
 
     /// Upload an i32 tensor (same synchronous-copy requirement).
@@ -63,6 +64,6 @@ impl RuntimeClient {
     ) -> Result<xla::PjRtBuffer> {
         self.client
             .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow::anyhow!("upload i32: {e}"))
+            .map_err(|e| crate::err!("upload i32: {e}"))
     }
 }

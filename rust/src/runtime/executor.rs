@@ -13,6 +13,7 @@
 //! (measured in `benches/perf_hotpath.rs`).
 
 use crate::util::rng::Rng;
+use crate::xla;
 use crate::Result;
 
 use super::artifact::{InitKind, ModelMeta, ParamSpec};
@@ -65,10 +66,10 @@ impl<'c> ModelExecutor<'c> {
 
     /// Upload host params to device buffers.
     pub fn state_from_host(&self, host: &[Vec<f32>]) -> Result<TrainState> {
-        anyhow::ensure!(host.len() == self.meta.params.len());
+        crate::ensure!(host.len() == self.meta.params.len());
         let mut params = Vec::with_capacity(host.len());
         for (spec, data) in self.meta.params.iter().zip(host) {
-            anyhow::ensure!(
+            crate::ensure!(
                 data.len() == spec.numel(),
                 "param {} length mismatch",
                 spec.name
@@ -90,10 +91,10 @@ impl<'c> ModelExecutor<'c> {
         for buf in &state.params {
             let lit = buf
                 .to_literal_sync()
-                .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+                .map_err(|e| crate::err!("download: {e}"))?;
             out.push(
                 lit.to_vec::<f32>()
-                    .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?,
+                    .map_err(|e| crate::err!("to_vec: {e}"))?,
             );
         }
         Ok(out)
@@ -115,7 +116,7 @@ impl<'c> ModelExecutor<'c> {
         let mut outs = self
             .train_exe
             .execute_b(&args)
-            .map_err(|e| anyhow::anyhow!("train execute: {e}"))?;
+            .map_err(|e| crate::err!("train execute: {e}"))?;
         let replica = outs.swap_remove(0);
         let n = self.meta.train_outputs;
         if replica.len() == n {
@@ -126,30 +127,30 @@ impl<'c> ModelExecutor<'c> {
             state.steps += 1;
             let loss = loss_buf
                 .to_literal_sync()
-                .map_err(|e| anyhow::anyhow!("loss download: {e}"))?;
+                .map_err(|e| crate::err!("loss download: {e}"))?;
             Ok(first_f32(&loss)?)
         } else if replica.len() == 1 {
             // tuple root: host round-trip fallback
             let tup = replica[0]
                 .to_literal_sync()
-                .map_err(|e| anyhow::anyhow!("tuple download: {e}"))?;
+                .map_err(|e| crate::err!("tuple download: {e}"))?;
             let mut parts = tup
                 .to_tuple()
-                .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
-            anyhow::ensure!(parts.len() == n, "expected {n} tuple elements");
+                .map_err(|e| crate::err!("untuple: {e}"))?;
+            crate::ensure!(parts.len() == n, "expected {n} tuple elements");
             let loss_lit = parts.pop().unwrap();
             let mut new_params = Vec::with_capacity(parts.len());
             for (lit, spec) in parts.into_iter().zip(&self.meta.params) {
                 let host = lit
                     .to_vec::<f32>()
-                    .map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+                    .map_err(|e| crate::err!("to_vec: {e}"))?;
                 new_params.push(self.client.upload_f32(&host, &spec.shape)?);
             }
             state.params = new_params;
             state.steps += 1;
             Ok(first_f32(&loss_lit)?)
         } else {
-            anyhow::bail!(
+            crate::bail!(
                 "unexpected output arity {} (want {n} or 1)",
                 replica.len()
             )
@@ -172,27 +173,27 @@ impl<'c> ModelExecutor<'c> {
         let mut outs = self
             .eval_exe
             .execute_b(&args)
-            .map_err(|e| anyhow::anyhow!("eval execute: {e}"))?;
+            .map_err(|e| crate::err!("eval execute: {e}"))?;
         let replica = outs.swap_remove(0);
         if replica.len() == 2 {
             let loss = first_f32(
                 &replica[0]
                     .to_literal_sync()
-                    .map_err(|e| anyhow::anyhow!("loss: {e}"))?,
+                    .map_err(|e| crate::err!("loss: {e}"))?,
             )?;
             let correct = first_f32(
                 &replica[1]
                     .to_literal_sync()
-                    .map_err(|e| anyhow::anyhow!("correct: {e}"))?,
+                    .map_err(|e| crate::err!("correct: {e}"))?,
             )?;
             Ok((loss, correct))
         } else {
             let tup = replica[0]
                 .to_literal_sync()
-                .map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+                .map_err(|e| crate::err!("tuple: {e}"))?;
             let (l, c) = tup
                 .to_tuple2()
-                .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+                .map_err(|e| crate::err!("untuple: {e}"))?;
             Ok((first_f32(&l)?, first_f32(&c)?))
         }
     }
@@ -200,7 +201,7 @@ impl<'c> ModelExecutor<'c> {
 
 fn first_f32(lit: &xla::Literal) -> Result<f32> {
     lit.get_first_element::<f32>()
-        .map_err(|e| anyhow::anyhow!("scalar read: {e}"))
+        .map_err(|e| crate::err!("scalar read: {e}"))
 }
 
 fn init_tensor(spec: &ParamSpec, rng: &mut Rng) -> Vec<f32> {
@@ -273,7 +274,7 @@ impl<'c> ModelExecutor<'c> {
         let outs = self
             .train_exe
             .execute_b(args)
-            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+            .map_err(|e| crate::err!("execute: {e}"))?;
         Ok(outs[0].len())
     }
 }

@@ -11,7 +11,7 @@ impl Registry {
     /// Locate artifacts via `SWAN_ARTIFACTS` or by walking up from the
     /// current directory (tests run from the crate root, binaries may
     /// run from anywhere in the workspace).
-    pub fn discover() -> anyhow::Result<Registry> {
+    pub fn discover() -> crate::Result<Registry> {
         if let Ok(dir) = std::env::var("SWAN_ARTIFACTS") {
             return Self::open(dir);
         }
@@ -22,7 +22,7 @@ impl Registry {
                 return Self::open(cand);
             }
             if !cur.pop() {
-                anyhow::bail!(
+                crate::bail!(
                     "artifacts/ not found — run `make artifacts` first \
                      (or set SWAN_ARTIFACTS)"
                 );
@@ -30,7 +30,7 @@ impl Registry {
         }
     }
 
-    pub fn open(dir: impl Into<std::path::PathBuf>) -> anyhow::Result<Registry> {
+    pub fn open(dir: impl Into<std::path::PathBuf>) -> crate::Result<Registry> {
         let dir = dir.into();
         let idx = parse_file(dir.join("meta").join("index.json"))?;
         let models = idx

@@ -32,16 +32,16 @@ impl ChoiceProfile {
     pub fn from_json(
         v: &crate::util::json::Value,
         device: &crate::soc::device::Device,
-    ) -> anyhow::Result<ChoiceProfile> {
+    ) -> crate::Result<ChoiceProfile> {
         let label = v.req_str("choice")?;
         let cores: Vec<usize> = label
             .chars()
             .map(|c| {
                 c.to_digit(10)
                     .map(|d| d as usize)
-                    .ok_or_else(|| anyhow::anyhow!("bad choice label '{label}'"))
+                    .ok_or_else(|| crate::err!("bad choice label '{label}'"))
             })
-            .collect::<anyhow::Result<_>>()?;
+            .collect::<crate::Result<_>>()?;
         Ok(ChoiceProfile {
             choice: ExecutionChoice::new(device, cores),
             latency_s: v.req_f64("latency_s")?,

@@ -17,3 +17,36 @@ pub use augment::augment_shifts;
 pub use filter::{passes_quality_filters, FilterStats};
 pub use greenhub::{RawTrace, TraceGenerator};
 pub use resample::{resample_trace, BatteryStateSeq, ResampledTrace};
+
+/// Synthesize raw traces until `want` pass the A.2 quality filters
+/// (bounded by `max_attempts` synthesized users), resampled to the
+/// 10-minute grid — the shared front half of the FL and fleet
+/// pipelines. May return fewer than `want` if attempts run out.
+pub fn synthesize_quality_pool(
+    seed: u64,
+    want: usize,
+    max_attempts: usize,
+) -> crate::Result<Vec<ResampledTrace>> {
+    let gen = TraceGenerator::default();
+    let mut pool = Vec::new();
+    let mut uid = 0usize;
+    while pool.len() < want && uid < max_attempts {
+        let tr = gen.generate(seed, uid);
+        uid += 1;
+        if passes_quality_filters(&tr) {
+            pool.push(resample_trace(&tr)?);
+        }
+    }
+    Ok(pool)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn quality_pool_respects_want_and_cap() {
+        let pool = super::synthesize_quality_pool(42, 3, 60).unwrap();
+        assert_eq!(pool.len(), 3, "generator should fill a small pool");
+        let none = super::synthesize_quality_pool(42, 3, 0).unwrap();
+        assert!(none.is_empty());
+    }
+}

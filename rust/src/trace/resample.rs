@@ -56,8 +56,8 @@ impl ResampledTrace {
 
 /// Appendix A.2: PCHIP-resample `tr` to the 10-minute grid and derive
 /// battery_state from level deltas.
-pub fn resample_trace(tr: &RawTrace) -> anyhow::Result<ResampledTrace> {
-    anyhow::ensure!(tr.t_s.len() >= 2, "trace too short to resample");
+pub fn resample_trace(tr: &RawTrace) -> crate::Result<ResampledTrace> {
+    crate::ensure!(tr.t_s.len() >= 2, "trace too short to resample");
     // PCHIP needs strictly increasing x; drop duplicate timestamps
     let mut xs = Vec::with_capacity(tr.t_s.len());
     let mut ys = Vec::with_capacity(tr.level.len());
@@ -68,7 +68,7 @@ pub fn resample_trace(tr: &RawTrace) -> anyhow::Result<ResampledTrace> {
         }
     }
     let interp = Pchip::new(xs.clone(), ys)
-        .map_err(|e| anyhow::anyhow!("pchip: {e}"))?;
+        .map_err(|e| crate::err!("pchip: {e}"))?;
     let start = xs[0];
     let end = xs[xs.len() - 1];
     let n = ((end - start) / GRID_DT_S).floor() as usize + 1;

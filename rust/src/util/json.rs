@@ -17,19 +17,34 @@ pub enum Value {
     Obj(Vec<(String, Value)>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character '{1}' at byte {0}")]
     Unexpected(usize, char),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape at byte {0}")]
     BadEscape(usize),
-    #[error("trailing characters at byte {0}")]
     Trailing(usize),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof(p) => {
+                write!(f, "unexpected end of input at byte {p}")
+            }
+            JsonError::Unexpected(p, c) => {
+                write!(f, "unexpected character '{c}' at byte {p}")
+            }
+            JsonError::BadNumber(p) => write!(f, "invalid number at byte {p}"),
+            JsonError::BadEscape(p) => write!(f, "invalid escape at byte {p}"),
+            JsonError::Trailing(p) => {
+                write!(f, "trailing characters at byte {p}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Value {
     // -- accessors ----------------------------------------------------------
@@ -76,32 +91,32 @@ impl Value {
         }
     }
 
-    /// Required-field helpers that turn misses into anyhow errors.
-    pub fn req(&self, key: &str) -> anyhow::Result<&Value> {
+    /// Required-field helpers that turn misses into crate errors.
+    pub fn req(&self, key: &str) -> crate::Result<&Value> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing json key '{key}'"))
+            .ok_or_else(|| crate::err!("missing json key '{key}'"))
     }
 
-    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+    pub fn req_f64(&self, key: &str) -> crate::Result<f64> {
         self.req(key)?
             .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a number"))
+            .ok_or_else(|| crate::err!("json key '{key}' is not a number"))
     }
 
-    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+    pub fn req_usize(&self, key: &str) -> crate::Result<usize> {
         Ok(self.req_f64(key)? as usize)
     }
 
-    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+    pub fn req_str(&self, key: &str) -> crate::Result<&str> {
         self.req(key)?
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a string"))
+            .ok_or_else(|| crate::err!("json key '{key}' is not a string"))
     }
 
-    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Value]> {
+    pub fn req_arr(&self, key: &str) -> crate::Result<&[Value]> {
         self.req(key)?
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not an array"))
+            .ok_or_else(|| crate::err!("json key '{key}' is not an array"))
     }
 
     // -- builders ------------------------------------------------------------
@@ -181,12 +196,12 @@ pub fn parse(src: &str) -> Result<Value, JsonError> {
     Ok(v)
 }
 
-pub fn parse_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<Value> {
+pub fn parse_file(path: impl AsRef<std::path::Path>) -> crate::Result<Value> {
     let s = std::fs::read_to_string(path.as_ref()).map_err(|e| {
-        anyhow::anyhow!("reading {}: {e}", path.as_ref().display())
+        crate::err!("reading {}: {e}", path.as_ref().display())
     })?;
     parse(&s).map_err(|e| {
-        anyhow::anyhow!("parsing {}: {e}", path.as_ref().display())
+        crate::err!("parsing {}: {e}", path.as_ref().display())
     })
 }
 

@@ -15,15 +15,30 @@ pub struct Pchip {
     d: Vec<f64>, // derivative at each knot
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PchipError {
-    #[error("need at least 2 points, got {0}")]
     TooFew(usize),
-    #[error("x must be strictly increasing at index {0}")]
     NotIncreasing(usize),
-    #[error("x and y length mismatch: {0} vs {1}")]
     LengthMismatch(usize, usize),
 }
+
+impl std::fmt::Display for PchipError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PchipError::TooFew(n) => {
+                write!(f, "need at least 2 points, got {n}")
+            }
+            PchipError::NotIncreasing(i) => {
+                write!(f, "x must be strictly increasing at index {i}")
+            }
+            PchipError::LengthMismatch(a, b) => {
+                write!(f, "x and y length mismatch: {a} vs {b}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PchipError {}
 
 impl Pchip {
     pub fn new(x: Vec<f64>, y: Vec<f64>) -> Result<Self, PchipError> {

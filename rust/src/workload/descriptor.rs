@@ -120,7 +120,7 @@ impl Workload {
     }
 
     /// Parse a `workload_*.json` emitted by `workloads.py`.
-    pub fn from_json(v: &Value) -> anyhow::Result<Workload> {
+    pub fn from_json(v: &Value) -> crate::Result<Workload> {
         let name = v.req_str("name")?.to_string();
         let batch = v.req_usize("batch")?;
         let param_scalars = v.req_f64("param_scalars")?;
@@ -128,7 +128,7 @@ impl Workload {
         for o in v.req_arr("ops")? {
             let kind_s = o.req_str("kind")?;
             let kind = OpKind::parse(kind_s)
-                .ok_or_else(|| anyhow::anyhow!("unknown op kind '{kind_s}'"))?;
+                .ok_or_else(|| crate::err!("unknown op kind '{kind_s}'"))?;
             ops.push(Op {
                 name: o.req_str("name")?.to_string(),
                 kind,
@@ -136,7 +136,7 @@ impl Workload {
                 bytes: o.req_f64("bytes")?,
             });
         }
-        anyhow::ensure!(!ops.is_empty(), "workload '{name}' has no ops");
+        crate::ensure!(!ops.is_empty(), "workload '{name}' has no ops");
         Ok(Workload {
             name,
             batch,
@@ -145,7 +145,7 @@ impl Workload {
         })
     }
 
-    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Workload> {
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::Result<Workload> {
         let v = crate::util::json::parse_file(path)?;
         Workload::from_json(&v)
     }

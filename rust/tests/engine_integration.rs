@@ -1,6 +1,12 @@
 //! Integration: Swan engine + PJRT numerics on one simulated phone —
 //! the full local story (explore → train → interfere → migrate) with a
 //! real model learning underneath.
+//!
+//! QUARANTINE: every test touching the PJRT runtime is `#[ignore]`d —
+//! the artifacts (`artifacts/*.hlo.txt`) are not checked in and the
+//! offline build links the `src/xla.rs` stub instead of the real
+//! bindings. Run `make artifacts` and build with the real `xla` crate,
+//! then `cargo test -- --ignored`, to exercise them.
 
 use swan::baseline::GreedyBaseline;
 use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
@@ -23,6 +29,7 @@ fn registry_or_skip() -> Option<Registry> {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn swan_trains_faster_and_cheaper_than_baseline_on_s10e() {
     let Some(reg) = registry_or_skip() else { return };
     let client = RuntimeClient::cpu().unwrap();
@@ -80,6 +87,7 @@ fn swan_trains_faster_and_cheaper_than_baseline_on_s10e() {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn engine_migrates_while_really_training() {
     // ResNet-34 on Pixel 3: Swan's best choice is all four big cores, so
     // a 2-thread foreground app cannot be escaped by within-cluster
@@ -125,6 +133,7 @@ fn engine_migrates_while_really_training() {
 
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn swan_single_core_choice_absorbs_interference() {
     // MobileNet on Pixel 3: Swan's best choice is a single big core;
     // under a 2-thread foreground session the affinity remap moves the

@@ -1,5 +1,11 @@
 //! Integration: the FL simulator end to end with real PJRT numerics —
 //! a miniature of the §5.3 evaluation (small fleet, short horizon).
+//!
+//! QUARANTINE: every test touching the PJRT runtime is `#[ignore]`d —
+//! the artifacts (`artifacts/*.hlo.txt`) are not checked in and the
+//! offline build links the `src/xla.rs` stub instead of the real
+//! bindings. Run `make artifacts` and build with the real `xla` crate,
+//! then `cargo test -- --ignored`, to exercise them.
 
 use swan::fl::{FlArm, FlConfig, FlSim};
 use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
@@ -32,6 +38,7 @@ fn tiny_cfg(rounds: usize) -> FlConfig {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn fl_swan_beats_baseline_on_time_and_energy() {
     let Some(reg) = registry_or_skip() else { return };
     let client = RuntimeClient::cpu().unwrap();
@@ -77,6 +84,7 @@ fn fl_swan_beats_baseline_on_time_and_energy() {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn fl_online_population_not_degenerate() {
     let Some(reg) = registry_or_skip() else { return };
     let client = RuntimeClient::cpu().unwrap();
@@ -103,6 +111,7 @@ fn fl_online_population_not_degenerate() {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn fl_deterministic_given_seed() {
     let Some(reg) = registry_or_skip() else { return };
     let client = RuntimeClient::cpu().unwrap();

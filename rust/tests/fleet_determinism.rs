@@ -1,0 +1,142 @@
+//! Integration: the fleet kernel's determinism contract — the same
+//! `ScenarioSpec` must produce bit-identical aggregate metrics at every
+//! shard count — plus `FlSim`'s systems-only path riding the same
+//! kernel. No artifacts required.
+
+use swan::fl::{FlArm, FlConfig, FlOutcome, FlSim};
+use swan::fleet::{run_scenario, ScenarioSpec};
+use swan::train::data::SyntheticDataset;
+use swan::workload::{load_or_builtin, WorkloadName};
+
+fn spec() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "determinism".to_string(),
+        devices: 1_200,
+        rounds: 15,
+        clients_per_round: 60,
+        trace_users: 3,
+        ..ScenarioSpec::default()
+    }
+}
+
+#[test]
+fn scenario_reshard_bit_identical() {
+    let spec = spec();
+    let one = run_scenario(&spec, 1, FlArm::Swan).unwrap();
+    let four = run_scenario(&spec, 4, FlArm::Swan).unwrap();
+    let nine = run_scenario(&spec, 9, FlArm::Swan).unwrap();
+    assert_eq!(one.digest(), four.digest(), "1 vs 4 shards");
+    assert_eq!(one.digest(), nine.digest(), "1 vs 9 shards");
+    assert_eq!(one.online_per_round, four.online_per_round);
+    assert_eq!(one.total_time_s.to_bits(), four.total_time_s.to_bits());
+    assert_eq!(
+        one.total_energy_j.to_bits(),
+        four.total_energy_j.to_bits()
+    );
+    assert_eq!(one.total_steps, four.total_steps);
+    assert_eq!(one.participations, four.participations);
+    // and the run is not degenerate
+    assert!(one.participations > 0, "nobody ever participated");
+    assert!(one.online_first() > 0, "fleet never online");
+}
+
+#[test]
+fn scenario_repeat_run_identical() {
+    let spec = spec();
+    let a = run_scenario(&spec, 4, FlArm::Baseline).unwrap();
+    let b = run_scenario(&spec, 4, FlArm::Baseline).unwrap();
+    assert_eq!(a.digest(), b.digest(), "same spec must replay exactly");
+}
+
+fn fl_outcome_bits(o: &FlOutcome) -> (u64, u64, usize, Vec<(usize, usize)>) {
+    (
+        o.total_time_s.to_bits(),
+        o.total_energy_j.to_bits(),
+        o.rounds_run,
+        o.online_per_round.clone(),
+    )
+}
+
+#[test]
+fn fl_sim_systems_only_reshard_identical() {
+    let workload = load_or_builtin(WorkloadName::ShufflenetV2, "artifacts");
+    let cfg = FlConfig {
+        seed: 11,
+        raw_traces: 16,
+        quality_traces: 4,
+        clients_per_round: 20,
+        daily_credit_j: 800.0,
+        ..FlConfig::default()
+    };
+    let run = |shards: usize| {
+        let ds = SyntheticDataset::vision(cfg.seed);
+        let mut sim =
+            FlSim::new(cfg.clone(), FlArm::Swan, ds, &workload).unwrap();
+        sim.run_systems_only_sharded(300, shards)
+    };
+    let one = run(1);
+    let four = run(4);
+    assert_eq!(fl_outcome_bits(&one), fl_outcome_bits(&four));
+    assert!(one.rounds_run > 0);
+    assert!(one.total_energy_j > 0.0);
+}
+
+#[test]
+fn fl_sim_clients_survive_the_kernel_round_trip() {
+    // run_systems_only moves clients into the kernel and back; the
+    // fleet must come back whole, in order, with loans advanced
+    let workload = load_or_builtin(WorkloadName::MobilenetV2, "artifacts");
+    let cfg = FlConfig {
+        seed: 5,
+        raw_traces: 8,
+        quality_traces: 2,
+        ..FlConfig::default()
+    };
+    let ds = SyntheticDataset::vision(cfg.seed);
+    let mut sim = FlSim::new(cfg, FlArm::Swan, ds, &workload).unwrap();
+    let n = sim.clients.len();
+    let ids: Vec<usize> = sim.clients.iter().map(|c| c.id).collect();
+    let out = sim.run_systems_only(200);
+    assert_eq!(sim.clients.len(), n, "clients lost in the kernel");
+    let ids_after: Vec<usize> = sim.clients.iter().map(|c| c.id).collect();
+    assert_eq!(ids, ids_after, "client order must be restored");
+    let parts: usize = sim.clients.iter().map(|c| c.participations).sum();
+    assert!(parts > 0, "nobody participated over 200 rounds");
+    assert!(out.total_time_s > 0.0);
+}
+
+#[test]
+fn fleet_swan_keeps_more_of_the_fleet_online() {
+    // the Figs 5b/6b mechanism at fleet scale: under a tight charger
+    // envelope the greedy baseline exhausts energy loans faster than
+    // Swan, so its online population decays further
+    let spec = ScenarioSpec {
+        name: "budget".to_string(),
+        devices: 800,
+        rounds: 800,
+        clients_per_round: 400,
+        local_steps: 20,
+        trace_users: 2,
+        daily_credit_j: 300.0,
+        interference_p: 0.0,
+        thermal_throttle_p: 0.0,
+        ..ScenarioSpec::default()
+    };
+    let swan_out = run_scenario(&spec, 4, FlArm::Swan).unwrap();
+    let base_out = run_scenario(&spec, 4, FlArm::Baseline).unwrap();
+    let tail = |o: &swan::fleet::FleetOutcome| {
+        let n = o.online_per_round.len();
+        o.online_per_round[n - 100..]
+            .iter()
+            .map(|(_, c)| *c)
+            .sum::<usize>() as f64
+            / 100.0
+    };
+    assert!(
+        tail(&swan_out) > tail(&base_out),
+        "swan tail {} must beat baseline tail {}",
+        tail(&swan_out),
+        tail(&base_out)
+    );
+    assert!(base_out.total_energy_j > swan_out.total_energy_j);
+}

@@ -7,6 +7,12 @@
 //! (d) the host round-trip of parameters is lossless.
 //!
 //! Skips (with a message) if artifacts aren't built.
+//!
+//! QUARANTINE: every test touching the PJRT runtime is `#[ignore]`d —
+//! the artifacts (`artifacts/*.hlo.txt`) are not checked in and the
+//! offline build links the `src/xla.rs` stub instead of the real
+//! bindings. Run `make artifacts` and build with the real `xla` crate,
+//! then `cargo test -- --ignored`, to exercise them.
 
 use swan::runtime::{ModelExecutor, Registry, RuntimeClient};
 use swan::train::data::SyntheticDataset;
@@ -22,6 +28,7 @@ fn registry_or_skip() -> Option<Registry> {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn shufflenet_trains_loss_decreases() {
     let Some(reg) = registry_or_skip() else { return };
     let client = RuntimeClient::cpu().expect("pjrt cpu client");
@@ -59,6 +66,7 @@ fn shufflenet_trains_loss_decreases() {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn eval_step_counts_correct_in_range() {
     let Some(reg) = registry_or_skip() else { return };
     let client = RuntimeClient::cpu().unwrap();
@@ -74,6 +82,7 @@ fn eval_step_counts_correct_in_range() {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn params_host_roundtrip_lossless() {
     let Some(reg) = registry_or_skip() else { return };
     let client = RuntimeClient::cpu().unwrap();
@@ -88,6 +97,7 @@ fn params_host_roundtrip_lossless() {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn training_is_deterministic_given_seed() {
     let Some(reg) = registry_or_skip() else { return };
     let client = RuntimeClient::cpu().unwrap();
@@ -108,6 +118,7 @@ fn training_is_deterministic_given_seed() {
 }
 
 #[test]
+#[ignore = "needs artifacts/*.hlo.txt (`make artifacts`) + real xla PJRT bindings; the offline build ships the stub in src/xla.rs"]
 fn all_three_models_load_and_step() {
     let Some(reg) = registry_or_skip() else { return };
     let client = RuntimeClient::cpu().unwrap();

@@ -1,0 +1,222 @@
+//! Property suite (via `util::check`) for the two pieces of Swan the
+//! whole scheduler stack leans on: the relinquish-cost **total order**
+//! (§4.3) and `prune_dominated` (§4.3's Pareto chain). A silent bug in
+//! either would skew every policy decision the FL/fleet harnesses make.
+
+use swan::prop_assert;
+use swan::soc::device::{device, DeviceId};
+use swan::swan::choice::enumerate_choices;
+use swan::swan::cost::{cost_key, costlier};
+use swan::swan::profile::ChoiceProfile;
+use swan::swan::prune::prune_dominated;
+use swan::util::check::check;
+
+const DEVICES: [DeviceId; 5] = [
+    DeviceId::Pixel3,
+    DeviceId::S10e,
+    DeviceId::OnePlus8,
+    DeviceId::TabS6,
+    DeviceId::Mi10,
+];
+
+/// Random sub-population of a random device's choice space with random
+/// measured latencies/energies — prune must behave for ANY profile set,
+/// not just the exec-model's.
+fn random_profiles(rng: &mut swan::util::rng::Rng) -> Vec<ChoiceProfile> {
+    let d = device(DEVICES[rng.index(5)]);
+    let mut profs = Vec::new();
+    for ch in enumerate_choices(&d) {
+        if rng.bool(0.75) {
+            profs.push(ChoiceProfile {
+                choice: ch,
+                latency_s: rng.range(0.05, 10.0),
+                energy_j: rng.range(0.05, 10.0),
+                power_w: rng.range(0.5, 10.0),
+                steps_measured: 1 + rng.index(10),
+            });
+        }
+    }
+    profs
+}
+
+#[test]
+fn cost_order_is_total_and_antisymmetric() {
+    check(300, |rng| {
+        let d = device(DEVICES[rng.index(5)]);
+        let all = enumerate_choices(&d);
+        let a = &all[rng.index(all.len())];
+        let b = &all[rng.index(all.len())];
+        if a.label() == b.label() {
+            prop_assert!(
+                !costlier(a, b) && !costlier(b, a),
+                "irreflexivity violated on {}",
+                a.label()
+            );
+        } else {
+            // totality: exactly one of the strict comparisons holds
+            prop_assert!(
+                costlier(a, b) ^ costlier(b, a),
+                "totality violated: {} vs {}",
+                a.label(),
+                b.label()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cost_order_is_transitive() {
+    check(500, |rng| {
+        let d = device(DEVICES[rng.index(5)]);
+        let all = enumerate_choices(&d);
+        let a = &all[rng.index(all.len())];
+        let b = &all[rng.index(all.len())];
+        let c = &all[rng.index(all.len())];
+        if costlier(a, b) && costlier(b, c) {
+            prop_assert!(
+                costlier(a, c),
+                "transitivity violated: {} > {} > {} but not {} > {}",
+                a.label(),
+                b.label(),
+                c.label(),
+                a.label(),
+                c.label()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cost_order_agrees_with_key_comparison() {
+    check(200, |rng| {
+        let d = device(DEVICES[rng.index(5)]);
+        let all = enumerate_choices(&d);
+        let a = &all[rng.index(all.len())];
+        let b = &all[rng.index(all.len())];
+        prop_assert!(
+            costlier(a, b) == (cost_key(a) > cost_key(b)),
+            "costlier() and cost_key() disagree on {} vs {}",
+            a.label(),
+            b.label()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn pruned_chain_is_a_strict_tradeoff_chain() {
+    // the chain must be antichain-free under (latency ↑, cost ↓): every
+    // adjacent pair trades latency for relinquished compute, so no kept
+    // choice dominates another
+    check(300, |rng| {
+        let profs = random_profiles(rng);
+        if profs.is_empty() {
+            return Ok(());
+        }
+        let chain = prune_dominated(profs);
+        prop_assert!(!chain.is_empty(), "chain empty on nonempty input");
+        for w in chain.windows(2) {
+            prop_assert!(
+                w[0].latency_s <= w[1].latency_s,
+                "chain not latency-sorted: {} then {}",
+                w[0].latency_s,
+                w[1].latency_s
+            );
+            prop_assert!(
+                cost_key(&w[1].choice) < cost_key(&w[0].choice),
+                "chain not strictly cheaper: {} then {}",
+                w[0].choice.label(),
+                w[1].choice.label()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pruned_chain_is_pareto_no_kept_choice_dominated() {
+    check(300, |rng| {
+        let profs = random_profiles(rng);
+        if profs.is_empty() {
+            return Ok(());
+        }
+        let chain = prune_dominated(profs.clone());
+        for kept in &chain {
+            for other in &profs {
+                let strictly_faster =
+                    other.latency_s < kept.latency_s - 1e-12;
+                let not_costlier =
+                    cost_key(&other.choice) <= cost_key(&kept.choice);
+                prop_assert!(
+                    !(strictly_faster && not_costlier),
+                    "kept {} is dominated by {}",
+                    kept.choice.label(),
+                    other.choice.label()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prune_keeps_the_fastest_and_only_input_choices() {
+    check(300, |rng| {
+        let profs = random_profiles(rng);
+        if profs.is_empty() {
+            return Ok(());
+        }
+        let fastest = profs
+            .iter()
+            .map(|p| p.latency_s)
+            .fold(f64::INFINITY, f64::min);
+        let labels: Vec<String> =
+            profs.iter().map(|p| p.choice.label()).collect();
+        let chain = prune_dominated(profs);
+        prop_assert!(
+            (chain[0].latency_s - fastest).abs() < 1e-12,
+            "head of chain is not the fastest profile"
+        );
+        prop_assert!(
+            chain.len() <= labels.len(),
+            "prune invented profiles"
+        );
+        for p in &chain {
+            prop_assert!(
+                labels.contains(&p.choice.label()),
+                "prune invented choice {}",
+                p.choice.label()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prune_is_idempotent() {
+    check(200, |rng| {
+        let profs = random_profiles(rng);
+        if profs.is_empty() {
+            return Ok(());
+        }
+        let once = prune_dominated(profs);
+        let twice = prune_dominated(once.clone());
+        prop_assert!(
+            once.len() == twice.len(),
+            "pruning a pruned chain changed it: {} -> {}",
+            once.len(),
+            twice.len()
+        );
+        for (a, b) in once.iter().zip(&twice) {
+            prop_assert!(
+                a.choice.label() == b.choice.label(),
+                "idempotence order broke at {} vs {}",
+                a.choice.label(),
+                b.choice.label()
+            );
+        }
+        Ok(())
+    });
+}
