@@ -1,12 +1,17 @@
 //! Fleet kernel throughput: devices-stepped/sec on the 100k-device
-//! `city` scenario across shard counts, plus the resharding-determinism
-//! check (every shard count must produce a bit-identical aggregate
-//! digest). Pass `--small` to run the 2k-device smoke scenario instead.
+//! `city` scenario across shard counts, for BOTH kernels — the PR 1
+//! message-passing `ShardedEventLoop` (reference) and the PR 2
+//! struct-of-arrays `SoaFleet` — plus the determinism check: every
+//! kernel × shard count must reproduce one bit-identical aggregate
+//! digest, or the harness (and this bench) fails. Emits the
+//! `BENCH_fleet.json` perf-trajectory record and a machine-parseable
+//! `BENCH_fleet {…}` one-liner. Pass `--small` for the 2k-device smoke
+//! scenario (the CI bench-smoke job's configuration).
 
 use swan::fl::FlArm;
-use swan::fleet::{run_scenario, ScenarioSpec};
+use swan::fleet::{run_fleet_bench, run_scenario, ScenarioSpec};
 use swan::report::fleet_table;
-use swan::util::bench::BenchSet;
+use swan::util::bench::{BenchSet, Measurement};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -19,41 +24,52 @@ fn main() {
         spec.name, spec.devices, spec.rounds, spec.clients_per_round
     );
 
+    let shard_counts = [1usize, 2, 4, 8];
+    let report = run_fleet_bench(&spec, &shard_counts, FlArm::Swan, true)
+        .expect("fleet bench (fails on determinism violation)");
+
     let mut set = BenchSet::new("fleet_throughput");
-    let mut outcomes = Vec::new();
-    let mut digests: Vec<(usize, String)> = Vec::new();
-    for shards in [1usize, 2, 4, 8] {
-        let out = run_scenario(&spec, shards, FlArm::Swan).expect("fleet run");
+    for out in report.reference.iter().chain(report.soa.iter()) {
+        // one drive = one sample; throughput flows through the shared
+        // Measurement::per_sec reporting
+        let wall = Measurement {
+            name: format!("{}_{}shard_wall", out.kernel, out.shards),
+            samples: vec![out.wall_s],
+        };
         set.record(
-            &format!("devices_stepped_per_sec_{shards}shard"),
-            out.devices_stepped_per_sec(),
+            &format!(
+                "{}_{}shard_devices_stepped_per_sec",
+                out.kernel, out.shards
+            ),
+            wall.per_sec(out.devices_stepped() as f64),
             "dev/s",
         );
         set.record(
-            &format!("steps_per_sec_{shards}shard"),
-            out.steps_per_sec(),
-            "steps/s",
+            &format!("{}_{}shard_wall_s", out.kernel, out.shards),
+            out.wall_s,
+            "s",
         );
-        set.record(&format!("wall_s_{shards}shard"), out.wall_s, "s");
-        digests.push((shards, out.digest()));
-        outcomes.push(out);
     }
-
-    let (base_shards, base_digest) = digests[0].clone();
-    for (shards, digest) in &digests[1..] {
-        assert_eq!(
-            digest, &base_digest,
-            "{shards}-shard aggregates diverged from {base_shards}-shard"
-        );
+    for (shards, ratio) in report.speedup_same_shards() {
+        println!("speedup vs reference @ {shards} shards: {ratio:.2}x");
+    }
+    if let Some(ratio) = report.speedup_best() {
+        println!("speedup best-vs-best: {ratio:.2}x");
     }
     println!(
-        "determinism: shard counts {:?} all produced digest {base_digest}",
-        digests.iter().map(|(s, _)| *s).collect::<Vec<_>>()
+        "determinism: kernels {{event_loop, soa}} × shards {shard_counts:?} \
+         all produced digest {}",
+        report.digest
     );
 
     // baseline arm for the comparison table
     let base = run_scenario(&spec, 4, FlArm::Baseline).expect("fleet run");
+    let mut outcomes = report.soa.clone();
     outcomes.push(base);
     fleet_table(&outcomes).emit().expect("emit");
     set.write_csv().expect("csv");
+
+    let path = report.write_json("BENCH_fleet.json").expect("bench json");
+    println!("wrote {}", path.display());
+    println!("{}", report.one_line());
 }

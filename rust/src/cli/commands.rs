@@ -7,6 +7,7 @@
 //! swan pcmark  [--artifacts artifacts]
 //! swan fl      --model shufflenet_s --rounds 20 --clients 3
 //! swan fleet   --scenario city --shards 8 --arm both
+//! swan bench   fleet --scenario city --shards 1,2,4,8 --json
 //! swan traces  --users 4
 //! swan report  table2|table3|fig1|fig2|fig3|fleet
 //! ```
@@ -47,6 +48,7 @@ pub fn run_main() -> crate::Result<()> {
         "pcmark" => cmd_pcmark(),
         "fl" => cmd_fl(&rest),
         "fleet" => cmd_fleet(&rest),
+        "bench" => cmd_bench(&rest),
         "traces" => cmd_traces(&rest),
         "report" => cmd_report(&rest),
         "help" | "--help" | "-h" => {
@@ -71,6 +73,7 @@ fn print_help() {
          \x20 pcmark    Fig-3/Table-3 user-experience evaluation\n\
          \x20 fl        federated-learning simulation (§5.3)\n\
          \x20 fleet     sharded fleet simulation (100k–1M devices)\n\
+         \x20 bench     throughput harnesses (bench fleet emits BENCH_fleet.json)\n\
          \x20 traces    generate + preprocess GreenHub-style traces\n\
          \x20 report    regenerate a paper table/figure\n"
     );
@@ -333,6 +336,109 @@ fn cmd_fleet(rest: &[String]) -> crate::Result<()> {
         outcomes.push(out);
     }
     report::fleet_table(&outcomes).emit()?;
+    Ok(())
+}
+
+fn cmd_bench(rest: &[String]) -> crate::Result<()> {
+    let (what, rest) = match rest.split_first() {
+        Some((w, r)) => (w.as_str(), r.to_vec()),
+        None => ("fleet", Vec::new()),
+    };
+    match what {
+        "fleet" => cmd_bench_fleet(&rest),
+        other => crate::bail!("unknown bench '{other}' (fleet)"),
+    }
+}
+
+fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
+    let specs = [
+        opt("scenario", "builtin scenario (smoke|city|metro|million)", Some("city")),
+        opt("file", "load a ScenarioSpec JSON instead of a builtin", None),
+        opt("shards", "comma-separated shard counts", Some("1,2,4,8")),
+        opt("devices", "override device count (0 = scenario value)", Some("0")),
+        opt("rounds", "override round count (0 = scenario value)", Some("0")),
+        opt("arm", "swan|baseline", Some("swan")),
+        opt("out", "record path, implies --json (default BENCH_fleet.json)", None),
+        OptSpec {
+            name: "json",
+            help: "write the BENCH_fleet.json record to --out",
+            default: None,
+            is_switch: true,
+        },
+        OptSpec {
+            name: "no-reference",
+            help: "skip the PR-1 reference-kernel runs (SoA only)",
+            default: None,
+            is_switch: true,
+        },
+    ];
+    let args = parse_args(rest, &specs)?;
+    let mut spec = match args.get("file") {
+        Some(path) => crate::fleet::ScenarioSpec::load(path)?,
+        None => {
+            let key = args.get_str("scenario", "city");
+            crate::fleet::ScenarioSpec::builtin(&key).ok_or_else(|| {
+                crate::err!(
+                    "unknown scenario '{key}' (smoke|city|metro|million)"
+                )
+            })?
+        }
+    };
+    let devices = args.get_usize("devices", 0)?;
+    if devices > 0 {
+        spec.devices = devices;
+    }
+    let rounds = args.get_usize("rounds", 0)?;
+    if rounds > 0 {
+        spec.rounds = rounds;
+    }
+    let shards_arg = args.get_str("shards", "1,2,4,8");
+    let mut shard_counts = Vec::new();
+    for tok in shards_arg.split(',') {
+        let n = tok.trim().parse::<usize>().map_err(|_| {
+            crate::err!("--shards expects comma-separated integers, got '{tok}'")
+        })?;
+        crate::ensure!(n > 0, "--shards entries must be > 0");
+        shard_counts.push(n);
+    }
+    let arm = match args.get_str("arm", "swan").as_str() {
+        "swan" => crate::fl::FlArm::Swan,
+        "baseline" => crate::fl::FlArm::Baseline,
+        other => crate::bail!("unknown --arm '{other}' (swan|baseline)"),
+    };
+
+    println!("bench fleet: scenario {:#}", spec.to_json());
+    let report = crate::fleet::run_fleet_bench(
+        &spec,
+        &shard_counts,
+        arm,
+        !args.has("no-reference"),
+    )?;
+    let outcomes: Vec<crate::fleet::FleetOutcome> = report
+        .reference
+        .iter()
+        .chain(report.soa.iter())
+        .cloned()
+        .collect();
+    report::fleet_table(&outcomes).emit()?;
+    for (shards, ratio) in report.speedup_same_shards() {
+        println!("speedup vs reference @ {shards} shards: {ratio:.2}x");
+    }
+    if let Some(ratio) = report.speedup_best() {
+        println!("speedup best-vs-best: {ratio:.2}x");
+    }
+    println!(
+        "determinism: {} runs reproduced digest {}",
+        outcomes.len(),
+        report.digest
+    );
+    println!("{}", report.one_line());
+    // an explicit --out names a file the user expects to appear, so it
+    // implies --json rather than being silently ignored
+    if args.has("json") || args.get("out").is_some() {
+        let path = report.write_json(args.get_str("out", "BENCH_fleet.json"))?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }
 

@@ -22,9 +22,25 @@ pub fn availability_gate(
     min_level_pct: f64,
 ) -> bool {
     let t = trace.wrap(now_s + trace_offset_s);
-    let charging = trace.is_charging(t);
+    // fused lookup: one grid-index computation yields both reads (this
+    // gate runs once per device per round — the fleet's hottest path)
+    let (level_pct, charging) = trace.sample(t);
+    availability_gate_sampled(loan, now_s, level_pct, charging, min_level_pct)
+}
+
+/// The gate decision given an already-sampled `(level, charging)` — the
+/// shared tail of [`availability_gate`]. The SoA fleet kernel feeds
+/// this from its per-`(trace, shift)` sample cache, so both kernels
+/// gate through one definition and cross-kernel bit-parity holds by
+/// construction.
+pub fn availability_gate_sampled(
+    loan: &mut EnergyLoan,
+    now_s: f64,
+    level_pct: f64,
+    charging: bool,
+    min_level_pct: f64,
+) -> bool {
     loan.tick(now_s, charging);
-    let level_pct = trace.level_at(t);
     let gate = charging || level_pct >= min_level_pct;
     gate && loan.allows_participation(level_pct / 100.0)
 }

@@ -16,6 +16,6 @@ pub mod sim;
 
 pub use availability::FlClient;
 pub use energy_loan::EnergyLoan;
-pub use selection::select_uniform;
+pub use selection::{select_uniform, select_uniform_into};
 pub use server::fedavg;
 pub use sim::{FlArm, FlConfig, FlOutcome, FlSim};

@@ -2,6 +2,8 @@
 //! random selection; Oort-style guided selection is cited as related
 //! work, not used).
 
+use std::collections::HashMap;
+
 use crate::util::rng::Rng;
 
 /// Pick up to `k` distinct indices uniformly from `online`.
@@ -11,6 +13,38 @@ pub fn select_uniform(online: &[usize], k: usize, rng: &mut Rng) -> Vec<usize> {
     }
     let picks = rng.sample_indices(online.len(), k);
     picks.into_iter().map(|i| online[i]).collect()
+}
+
+/// Exactly [`select_uniform`] — same RNG draw sequence, same picks in
+/// the same order — but allocation-free at steady state: the virtual
+/// Fisher–Yates array is kept sparse (only displaced slots live in
+/// `scratch`), so a round costs O(k) instead of materializing an
+/// O(online) index vector. The fleet kernel reuses `scratch`/`out`
+/// across rounds.
+pub fn select_uniform_into(
+    online: &[usize],
+    k: usize,
+    rng: &mut Rng,
+    scratch: &mut HashMap<usize, usize>,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    if online.len() <= k {
+        out.extend_from_slice(online);
+        return;
+    }
+    scratch.clear();
+    let n = online.len();
+    for i in 0..k {
+        // mirror `Rng::sample_indices`: j = i + index(n - i), swap(i, j).
+        // position i is never revisited after iteration i (j >= i), so
+        // its post-swap value is final and can be emitted immediately.
+        let j = i + rng.index(n - i);
+        let vi = scratch.get(&i).copied().unwrap_or(i);
+        let vj = scratch.get(&j).copied().unwrap_or(j);
+        scratch.insert(j, vi);
+        out.push(online[vj]);
+    }
 }
 
 #[cfg(test)]
@@ -34,6 +68,42 @@ mod tests {
         s.dedup();
         assert_eq!(s.len(), 10);
         assert!(sel.iter().all(|c| online.contains(c)));
+    }
+
+    #[test]
+    fn sparse_selection_identical_to_dense() {
+        // the SoA kernel's allocation-free path must replay the exact
+        // picks (values AND order) of the PR 1 dense path
+        let mut scratch = HashMap::new();
+        let mut out = Vec::new();
+        for seed in 0..20u64 {
+            for (n, k) in [(5usize, 5usize), (10, 3), (100, 7), (997, 50)]
+            {
+                let online: Vec<usize> = (0..n).map(|i| i * 3 + 1).collect();
+                let mut a = Rng::new(seed);
+                let mut b = Rng::new(seed);
+                let dense = select_uniform(&online, k, &mut a);
+                select_uniform_into(
+                    &online,
+                    k,
+                    &mut b,
+                    &mut scratch,
+                    &mut out,
+                );
+                assert_eq!(dense, out, "seed={seed} n={n} k={k}");
+                // both paths must leave the RNG in the same state
+                assert_eq!(a.next_u64(), b.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_selection_takes_all_when_few_online() {
+        let mut scratch = HashMap::new();
+        let mut out = vec![99, 98]; // stale content must be cleared
+        let mut rng = Rng::new(0);
+        select_uniform_into(&[3, 7], 5, &mut rng, &mut scratch, &mut out);
+        assert_eq!(out, vec![3, 7]);
     }
 
     #[test]

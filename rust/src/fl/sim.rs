@@ -278,7 +278,9 @@ impl FlSim {
             arm: self.arm,
         };
         let out = engine.drive(&mut policy, &cfg);
-        self.clients = engine.into_nodes();
+        self.clients = engine
+            .into_nodes()
+            .expect("fleet kernel must return the full client population");
         FlOutcome {
             arm: self.arm.name(),
             online_per_round: out.online_per_round,

@@ -1,0 +1,228 @@
+//! The fleet throughput harness behind `swan bench fleet` and
+//! `benches/fleet_throughput.rs`.
+//!
+//! One entry point runs a scenario through both kernels — the PR 1
+//! reference [`ShardedEventLoop`](super::engine::ShardedEventLoop) and
+//! the SoA kernel ([`SoaFleet`](super::soa::SoaFleet)) — across a list
+//! of shard counts, *errors* unless every run produced the same
+//! aggregate digest (the cross-kernel determinism contract), and
+//! renders the result as the `BENCH_fleet.json` record that tracks the
+//! perf trajectory from PR 2 onward.
+
+use std::path::{Path, PathBuf};
+
+use crate::fl::FlArm;
+use crate::util::json::Value;
+
+use super::engine::{run_scenario, run_scenario_reference};
+use super::metrics::FleetOutcome;
+use super::scenario::ScenarioSpec;
+
+/// Everything one harness invocation produced.
+#[derive(Clone, Debug)]
+pub struct FleetBenchReport {
+    pub spec: ScenarioSpec,
+    pub arm: FlArm,
+    /// The shared aggregate digest every run must reproduce.
+    pub digest: String,
+    /// SoA-kernel outcomes, one per requested shard count.
+    pub soa: Vec<FleetOutcome>,
+    /// Reference-kernel outcomes (empty when the caller skipped them).
+    pub reference: Vec<FleetOutcome>,
+}
+
+/// Run `spec` on both kernels across `shard_counts` (reference runs are
+/// skipped when `with_reference` is false — e.g. metro/million scale,
+/// where the PR 1 kernel is the bottleneck being measured around).
+///
+/// Fails if any run's digest diverges: a determinism violation is a
+/// result bug, not a performance data point.
+pub fn run_fleet_bench(
+    spec: &ScenarioSpec,
+    shard_counts: &[usize],
+    arm: FlArm,
+    with_reference: bool,
+) -> crate::Result<FleetBenchReport> {
+    crate::ensure!(
+        !shard_counts.is_empty(),
+        "fleet bench needs at least one shard count"
+    );
+    let mut soa = Vec::new();
+    let mut reference = Vec::new();
+    for &shards in shard_counts {
+        soa.push(run_scenario(spec, shards, arm)?);
+        if with_reference {
+            reference.push(run_scenario_reference(spec, shards, arm)?);
+        }
+    }
+    let digest = soa[0].digest();
+    for o in soa.iter().chain(reference.iter()) {
+        crate::ensure!(
+            o.digest() == digest,
+            "fleet determinism violated: {} kernel at {} shards \
+             produced {} instead of {}",
+            o.kernel,
+            o.shards,
+            o.digest(),
+            digest
+        );
+    }
+    Ok(FleetBenchReport {
+        spec: spec.clone(),
+        arm,
+        digest,
+        soa,
+        reference,
+    })
+}
+
+fn best_of(outs: &[FleetOutcome]) -> Option<&FleetOutcome> {
+    outs.iter().max_by(|a, b| {
+        a.devices_stepped_per_sec()
+            .total_cmp(&b.devices_stepped_per_sec())
+    })
+}
+
+impl FleetBenchReport {
+    /// The fastest SoA run.
+    pub fn best_soa(&self) -> &FleetOutcome {
+        best_of(&self.soa).expect("harness guarantees at least one run")
+    }
+
+    pub fn best_reference(&self) -> Option<&FleetOutcome> {
+        best_of(&self.reference)
+    }
+
+    /// Best-vs-best devices-stepped/sec ratio (None without reference
+    /// runs, or when the reference produced no throughput).
+    pub fn speedup_best(&self) -> Option<f64> {
+        let r = self.best_reference()?.devices_stepped_per_sec();
+        if r > 0.0 {
+            Some(self.best_soa().devices_stepped_per_sec() / r)
+        } else {
+            None
+        }
+    }
+
+    /// Per-shard-count SoA/reference throughput ratios.
+    pub fn speedup_same_shards(&self) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        for s in &self.soa {
+            if let Some(r) =
+                self.reference.iter().find(|r| r.shards == s.shards)
+            {
+                let rr = r.devices_stepped_per_sec();
+                if rr > 0.0 {
+                    out.push((s.shards, s.devices_stepped_per_sec() / rr));
+                }
+            }
+        }
+        out
+    }
+
+    /// The `BENCH_fleet.json` record (schema documented in the README's
+    /// Performance section).
+    pub fn to_json(&self) -> Value {
+        let runs: Vec<Value> = self
+            .soa
+            .iter()
+            .chain(self.reference.iter())
+            .map(|o| o.to_json())
+            .collect();
+        let mut same = Value::obj();
+        for (shards, ratio) in self.speedup_same_shards() {
+            same = same.set(&shards.to_string(), ratio);
+        }
+        let best = self.best_soa();
+        Value::obj()
+            .set("bench", "fleet")
+            .set("schema_version", 1usize)
+            .set("scenario", self.spec.to_json())
+            .set("arm", self.arm.name())
+            .set("digest", self.digest.clone())
+            .set("best_kernel", best.kernel)
+            .set("best_shards", best.shards)
+            .set(
+                "best_devices_stepped_per_sec",
+                best.devices_stepped_per_sec(),
+            )
+            .set(
+                "speedup_vs_reference",
+                match self.speedup_best() {
+                    Some(r) => Value::Num(r),
+                    None => Value::Null,
+                },
+            )
+            .set("speedup_same_shards", same)
+            .set("runs", Value::Arr(runs))
+    }
+
+    /// Machine-parseable single line (`BENCH_fleet {…}`) for log
+    /// scrapers; the bench binary and `swan bench fleet` both print it.
+    pub fn one_line(&self) -> String {
+        format!("BENCH_fleet {}", self.to_json())
+    }
+
+    /// Write the pretty record to `path` (conventionally
+    /// `BENCH_fleet.json` at the repo root).
+    pub fn write_json(&self, path: impl AsRef<Path>) -> crate::Result<PathBuf> {
+        let path = path.as_ref().to_path_buf();
+        std::fs::write(&path, format!("{:#}\n", self.to_json()))?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "bench-unit".to_string(),
+            devices: 240,
+            rounds: 6,
+            clients_per_round: 10,
+            trace_users: 2,
+            ..ScenarioSpec::default()
+        }
+    }
+
+    #[test]
+    fn harness_runs_both_kernels_and_agrees() {
+        let rep =
+            run_fleet_bench(&spec(), &[1, 2], FlArm::Swan, true).unwrap();
+        assert_eq!(rep.soa.len(), 2);
+        assert_eq!(rep.reference.len(), 2);
+        assert!(!rep.digest.is_empty());
+        assert_eq!(rep.speedup_same_shards().len(), 2);
+        assert!(rep.speedup_best().is_some());
+        let v = rep.to_json();
+        assert_eq!(v.req_str("bench").unwrap(), "fleet");
+        assert_eq!(v.req_str("digest").unwrap(), rep.digest);
+        assert_eq!(v.req_arr("runs").unwrap().len(), 4);
+        assert!(v.req_f64("best_devices_stepped_per_sec").unwrap() >= 0.0);
+        // the one-liner is a single line and parses back as JSON
+        let line = rep.one_line();
+        assert!(!line.trim().contains('\n'));
+        let payload = line.strip_prefix("BENCH_fleet ").unwrap();
+        assert!(crate::util::json::parse(payload).is_ok());
+    }
+
+    #[test]
+    fn harness_can_skip_reference_runs() {
+        let rep =
+            run_fleet_bench(&spec(), &[2], FlArm::Baseline, false).unwrap();
+        assert!(rep.reference.is_empty());
+        assert!(rep.speedup_best().is_none());
+        assert!(rep.speedup_same_shards().is_empty());
+        assert!(matches!(
+            rep.to_json().req("speedup_vs_reference").unwrap(),
+            Value::Null
+        ));
+    }
+
+    #[test]
+    fn empty_shard_list_is_an_error() {
+        assert!(run_fleet_bench(&spec(), &[], FlArm::Swan, true).is_err());
+    }
+}

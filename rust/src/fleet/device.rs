@@ -64,6 +64,37 @@ impl FleetNode for FlClient {
     }
 }
 
+/// The deterministic interference/thermal envelope multiplier for one
+/// (device, round): keyed on the device's stream seed and the round
+/// only — identical under any sharding and any scheduling order. This
+/// is THE definition for both kernels: [`FleetDevice::cost_multiplier`]
+/// and the SoA kernel's step sweep call it, so cross-kernel bit-parity
+/// holds by construction.
+///
+/// The round-mixing constant must differ from the id-mixing constant in
+/// `ScenarioSpec::build_fleet`, or the XOR cancels on the id == round
+/// diagonal and those devices' schedules become perfectly correlated.
+pub(crate) fn envelope_multiplier(
+    seed: u64,
+    round: usize,
+    interference_p: f64,
+    interference_slowdown: f64,
+    thermal_throttle_p: f64,
+    thermal_derate: f64,
+) -> f64 {
+    let mut rng = Rng::new(
+        seed ^ (round as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93),
+    );
+    let mut m = 1.0;
+    if rng.f64() < interference_p {
+        m *= interference_slowdown;
+    }
+    if rng.f64() < thermal_throttle_p {
+        m *= thermal_derate;
+    }
+    m
+}
+
 /// A scenario-instantiated device: GreenHub trace (shared, time-shifted
 /// per Appendix A.2), energy loan against its charger envelope, and
 /// deterministic interference/thermal schedules. Light enough to stamp
@@ -113,22 +144,14 @@ impl FleetNode for FleetDevice {
     }
 
     fn cost_multiplier(&self, _now_s: f64, round: usize) -> f64 {
-        // Keyed on (device seed, round) only — identical under any
-        // sharding and any scheduling order. The round-mixing constant
-        // must differ from the id-mixing constant in `build_fleet`, or
-        // the XOR cancels on the id == round diagonal and those
-        // devices' schedules become perfectly correlated.
-        let mut rng = Rng::new(
-            self.seed ^ (round as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93),
-        );
-        let mut m = 1.0;
-        if rng.f64() < self.interference_p {
-            m *= self.interference_slowdown;
-        }
-        if rng.f64() < self.thermal_throttle_p {
-            m *= self.thermal_derate;
-        }
-        m
+        envelope_multiplier(
+            self.seed,
+            round,
+            self.interference_p,
+            self.interference_slowdown,
+            self.thermal_throttle_p,
+            self.thermal_derate,
+        )
     }
 
     fn charge(&mut self, time_s: f64, energy_j: f64) {

@@ -1,4 +1,11 @@
-//! The sharded event loop: the kernel that steps 100k–1M devices.
+//! The sharded event loop: the generic (trait-object) fleet kernel.
+//!
+//! This is the PR 1 kernel, kept as (a) the scheduler for arbitrary
+//! [`FleetNode`] populations — `fl::FlSim`'s clients carry datasets and
+//! can't be decomposed into flat arrays — and (b) the reference
+//! implementation the struct-of-arrays kernel
+//! ([`SoaFleet`](super::soa::SoaFleet), which `run_scenario` now
+//! drives) is benchmarked and parity-checked against.
 //!
 //! Devices are partitioned round-robin across worker threads
 //! (`std::thread::scope` + mpsc channels; no external crates). Each
@@ -39,7 +46,8 @@ use super::metrics::FleetOutcome;
 use super::scenario::ScenarioSpec;
 
 /// Virtual wait when nobody is online (mirrors `fl::FlSim`), seconds.
-const EMPTY_ROUND_WAIT_S: f64 = 600.0;
+/// Shared with the SoA kernel so both advance the clock identically.
+pub(super) const EMPTY_ROUND_WAIT_S: f64 = 600.0;
 
 /// Round structure for one kernel run.
 #[derive(Clone, Debug)]
@@ -53,8 +61,9 @@ pub struct DriveConfig {
 }
 
 /// Selection RNG for one round — a function of (seed, round) only, so
-/// resharding can never perturb who gets picked.
-fn round_rng(seed: u64, round: usize) -> Rng {
+/// resharding can never perturb who gets picked. Shared with the SoA
+/// kernel so both kernels pick identical participants.
+pub(super) fn round_rng(seed: u64, round: usize) -> Rng {
     Rng::new(
         seed ^ 0x5EED_F1EE7
             ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -118,32 +127,33 @@ fn shard_worker<N: FleetNode>(
                 }
             }
             ShardCmd::Step { now_s, round, jobs } => {
-                for job in &jobs {
+                for (ji, job) in jobs.iter().enumerate() {
                     shard.queue.push(Event {
                         at_s: now_s,
                         device: job.device,
-                        kind: EventKind::BeginEpoch,
+                        kind: EventKind::BeginEpoch { job: ji as u32 },
                     });
                 }
-                let by_dev: HashMap<u32, StepJob> =
-                    jobs.iter().map(|j| (j.device, *j)).collect();
                 let mut results = Vec::with_capacity(jobs.len());
                 while let Some(ev) = shard.queue.pop() {
                     let local = (ev.device as usize - shard_idx) / n_shards;
                     match ev.kind {
-                        EventKind::BeginEpoch => {
-                            let job = by_dev[&ev.device];
+                        EventKind::BeginEpoch { job } => {
+                            // dense index into this round's job slice —
+                            // no per-event HashMap routing
+                            let j = jobs[job as usize];
                             let node = &shard.nodes[local];
                             let steps = node.epoch_steps();
                             let mult = node.cost_multiplier(ev.at_s, round);
-                            let t = job.cost.latency_s * steps as f64 * mult
-                                + job.extra_time_s;
-                            let e = job.cost.energy_j * steps as f64 * mult
-                                + job.extra_energy_j;
+                            let t = j.cost.latency_s * steps as f64 * mult
+                                + j.extra_time_s;
+                            let e = j.cost.energy_j * steps as f64 * mult
+                                + j.extra_energy_j;
                             shard.queue.push(Event {
                                 at_s: ev.at_s + t,
                                 device: ev.device,
                                 kind: EventKind::EpochDone {
+                                    job,
                                     time_s: t,
                                     energy_j: e,
                                     steps: steps as u32,
@@ -154,6 +164,7 @@ fn shard_worker<N: FleetNode>(
                             time_s,
                             energy_j,
                             steps,
+                            ..
                         } => {
                             shard.nodes[local].charge(time_s, energy_j);
                             results.push(StepResult {
@@ -214,16 +225,54 @@ impl<N: FleetNode> ShardedEventLoop<N> {
     }
 
     /// Tear down, returning the nodes in global-id order.
-    pub fn into_nodes(self) -> Vec<N> {
+    ///
+    /// The round-robin partition makes the reassembly a stable
+    /// permutation of the shard-order concatenation: taking one node
+    /// from each shard in shard order per "row" of local index `k`
+    /// yields exactly global order `s + k·n_shards`. So nodes are moved
+    /// straight out of the shard vectors — no `Vec<Option<N>>` scatter,
+    /// no per-slot unwrap — and a population mismatch is reported as an
+    /// error instead of a panic.
+    pub fn into_nodes(self) -> crate::Result<Vec<N>> {
         let n_shards = self.shards.len();
-        let mut slots: Vec<Option<N>> =
-            (0..self.n_devices).map(|_| None).collect();
-        for (si, shard) in self.shards.into_iter().enumerate() {
-            for (k, node) in shard.nodes.into_iter().enumerate() {
-                slots[si + k * n_shards] = Some(node);
+        let n = self.n_devices;
+        for (s, shard) in self.shards.iter().enumerate() {
+            // shard s owns global ids {s, s+n_shards, …} ∩ [0, n)
+            let expect = if s < n {
+                (n - s + n_shards - 1) / n_shards
+            } else {
+                0
+            };
+            crate::ensure!(
+                shard.nodes.len() == expect,
+                "fleet kernel lost devices: shard {s} holds {} nodes, \
+                 expected {expect} of {n}",
+                shard.nodes.len()
+            );
+        }
+        let mut columns: Vec<std::vec::IntoIter<N>> = self
+            .shards
+            .into_iter()
+            .map(|sh| sh.nodes.into_iter())
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let before = out.len();
+            for it in columns.iter_mut() {
+                if let Some(node) = it.next() {
+                    out.push(node);
+                }
+            }
+            if out.len() == before {
+                break; // all columns dry — the ensure below reports it
             }
         }
-        slots.into_iter().map(|s| s.expect("node present")).collect()
+        crate::ensure!(
+            out.len() == n && columns.iter_mut().all(|it| it.next().is_none()),
+            "fleet kernel reassembly mismatch: got {} of {n} nodes",
+            out.len()
+        );
+        Ok(out)
     }
 
     /// Run `cfg.rounds` rounds of the availability → selection → local
@@ -245,6 +294,7 @@ impl<N: FleetNode> ShardedEventLoop<N> {
             arm: cfg.arm.name(),
             devices: self.n_devices,
             shards: n_shards,
+            kernel: super::metrics::KERNEL_EVENT_LOOP,
             ..Default::default()
         };
 
@@ -380,8 +430,40 @@ impl<N: FleetNode> ShardedEventLoop<N> {
     }
 }
 
-/// Run one scenario end to end: build the fleet, drive it through a
+/// The round structure a [`ScenarioSpec`] implies.
+pub(super) fn drive_config(spec: &ScenarioSpec, arm: FlArm) -> DriveConfig {
+    DriveConfig {
+        scenario: spec.name.clone(),
+        arm,
+        seed: spec.seed,
+        rounds: spec.rounds,
+        clients_per_round: spec.clients_per_round,
+        server_overhead_s: spec.server_overhead_s,
+    }
+}
+
+/// Attach the coordinator's §4.2 accounting to an outcome. Exploration
+/// is a Swan-arm concept: the greedy baseline never explores (the
+/// coordinator may have profiled models as a side effect, but no
+/// baseline device was billed or adopted).
+pub(super) fn attach_exploration(
+    out: &mut FleetOutcome,
+    coord: &ProfileCoordinator,
+    arm: FlArm,
+) {
+    if arm == FlArm::Swan {
+        let stats = coord.stats();
+        out.models_explored = stats.models_explored;
+        out.adoptions = stats.adoptions as u64;
+        out.exploration_time_s = stats.exploration_time_s;
+        out.exploration_energy_j = stats.exploration_energy_j;
+    }
+}
+
+/// Run one scenario end to end on the struct-of-arrays kernel (the
+/// default since PR 2): build the fleet, drive it through a
 /// [`ProfileCoordinator`]-backed policy, attach §4.2 accounting.
+/// Aggregates are bit-identical to [`run_scenario_reference`].
 pub fn run_scenario(
     spec: &ScenarioSpec,
     n_shards: usize,
@@ -390,30 +472,36 @@ pub fn run_scenario(
     let workload = crate::workload::load_or_builtin(spec.workload, "artifacts");
     let mut coord = ProfileCoordinator::new(workload);
     let nodes = spec.build_fleet()?;
-    let mut engine = ShardedEventLoop::new(nodes, n_shards);
-    let cfg = DriveConfig {
-        scenario: spec.name.clone(),
+    let mut fleet = super::soa::SoaFleet::new(nodes, n_shards);
+    let cfg = drive_config(spec, arm);
+    let mut policy = CoordinatorPolicy {
+        coord: &mut coord,
         arm,
-        seed: spec.seed,
-        rounds: spec.rounds,
-        clients_per_round: spec.clients_per_round,
-        server_overhead_s: spec.server_overhead_s,
     };
+    let mut out = fleet.drive(&mut policy, &cfg);
+    attach_exploration(&mut out, &coord, arm);
+    Ok(out)
+}
+
+/// Same scenario on the PR 1 message-passing [`ShardedEventLoop`] — the
+/// reference the bench compares the SoA kernel against, and the parity
+/// oracle for `tests/fleet_determinism.rs`.
+pub fn run_scenario_reference(
+    spec: &ScenarioSpec,
+    n_shards: usize,
+    arm: FlArm,
+) -> crate::Result<FleetOutcome> {
+    let workload = crate::workload::load_or_builtin(spec.workload, "artifacts");
+    let mut coord = ProfileCoordinator::new(workload);
+    let nodes = spec.build_fleet()?;
+    let mut engine = ShardedEventLoop::new(nodes, n_shards);
+    let cfg = drive_config(spec, arm);
     let mut policy = CoordinatorPolicy {
         coord: &mut coord,
         arm,
     };
     let mut out = engine.drive(&mut policy, &cfg);
-    // §4.2 exploration accounting is a Swan-arm concept: the greedy
-    // baseline never explores (the coordinator may have profiled models
-    // as a side effect, but no baseline device was billed or adopted).
-    if arm == FlArm::Swan {
-        let stats = coord.stats();
-        out.models_explored = stats.models_explored;
-        out.adoptions = stats.adoptions as u64;
-        out.exploration_time_s = stats.exploration_time_s;
-        out.exploration_energy_j = stats.exploration_energy_j;
-    }
+    attach_exploration(&mut out, &coord, arm);
     Ok(out)
 }
 
@@ -487,10 +575,54 @@ mod tests {
         let engine = ShardedEventLoop::new(nodes, 4);
         assert_eq!(engine.n_shards(), 4);
         assert_eq!(engine.n_devices(), 11);
-        let back = engine.into_nodes();
+        let back = engine.into_nodes().unwrap();
+        assert_eq!(back.len(), 11);
         for (i, n) in back.iter().enumerate() {
             assert_eq!(n.id, i);
         }
+    }
+
+    #[test]
+    fn into_nodes_errors_on_missing_slot() {
+        use crate::soc::device::DeviceId;
+
+        struct Stub(usize);
+        impl FleetNode for Stub {
+            fn model(&self) -> DeviceId {
+                DeviceId::Pixel3
+            }
+            fn poll_online(&mut self, _now_s: f64) -> bool {
+                false
+            }
+            fn epoch_steps(&self) -> usize {
+                1
+            }
+            fn charge(&mut self, _time_s: f64, _energy_j: f64) {}
+        }
+
+        // well-formed: 3 devices over 2 shards reassemble in id order
+        let ok = ShardedEventLoop {
+            shards: vec![
+                Shard { nodes: vec![Stub(0), Stub(2)], queue: EventQueue::new() },
+                Shard { nodes: vec![Stub(1)], queue: EventQueue::new() },
+            ],
+            models: vec![DeviceId::Pixel3; 3],
+            n_devices: 3,
+        };
+        let back = ok.into_nodes().unwrap();
+        assert_eq!(back.iter().map(|s| s.0).collect::<Vec<_>>(), vec![0, 1, 2]);
+
+        // a shard lost a node: must be an error, not a panic
+        let broken = ShardedEventLoop {
+            shards: vec![
+                Shard { nodes: vec![Stub(0), Stub(2)], queue: EventQueue::new() },
+                Shard { nodes: vec![], queue: EventQueue::new() },
+            ],
+            models: vec![DeviceId::Pixel3; 3],
+            n_devices: 3,
+        };
+        let err = broken.into_nodes();
+        assert!(err.is_err(), "missing slot must surface as an error");
     }
 
     #[test]

@@ -11,12 +11,18 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// What can happen to a device inside a round.
+///
+/// Both kinds carry `job` — the dense index into the round's job slice
+/// for this shard — so handlers resolve their `StepJob` with one
+/// array load instead of the `HashMap<device, job>` routing the PR 1
+/// kernel paid per event.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum EventKind {
     /// A picked device begins its local epoch.
-    BeginEpoch,
+    BeginEpoch { job: u32 },
     /// The epoch completes: charge the device, record the metrics.
     EpochDone {
+        job: u32,
         time_s: f64,
         energy_j: f64,
         steps: u32,
@@ -117,7 +123,7 @@ mod tests {
         Event {
             at_s,
             device,
-            kind: EventKind::BeginEpoch,
+            kind: EventKind::BeginEpoch { job: device },
         }
     }
 
@@ -177,6 +183,7 @@ mod tests {
             at_s: 1.0,
             device: 9,
             kind: EventKind::EpochDone {
+                job: 4,
                 time_s: 2.5,
                 energy_j: 7.0,
                 steps: 12,
@@ -184,10 +191,12 @@ mod tests {
         });
         match q.pop().unwrap().kind {
             EventKind::EpochDone {
+                job,
                 time_s,
                 energy_j,
                 steps,
             } => {
+                assert_eq!(job, 4);
                 assert_eq!(time_s, 2.5);
                 assert_eq!(energy_j, 7.0);
                 assert_eq!(steps, 12);

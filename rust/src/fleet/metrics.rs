@@ -2,6 +2,10 @@
 
 use crate::util::json::Value;
 
+/// Kernel tags recorded on outcomes (and in `BENCH_fleet.json`).
+pub const KERNEL_EVENT_LOOP: &str = "event_loop";
+pub const KERNEL_SOA: &str = "soa";
+
 /// Everything a fleet run reports.
 ///
 /// Aggregates (`total_*`, `online_per_round`, `participations`) are
@@ -12,6 +16,11 @@ use crate::util::json::Value;
 pub struct FleetOutcome {
     pub scenario: String,
     pub arm: &'static str,
+    /// Which kernel produced this outcome ([`KERNEL_EVENT_LOOP`] or
+    /// [`KERNEL_SOA`]). Informational only — excluded from
+    /// [`digest`](FleetOutcome::digest), which fingerprints exactly the
+    /// aggregates both kernels must agree on bit-for-bit.
+    pub kernel: &'static str,
     pub devices: usize,
     pub shards: usize,
     pub rounds_run: usize,
@@ -92,6 +101,7 @@ impl FleetOutcome {
         Value::obj()
             .set("scenario", self.scenario.clone())
             .set("arm", self.arm)
+            .set("kernel", self.kernel)
             .set("devices", self.devices)
             .set("shards", self.shards)
             .set("rounds_run", self.rounds_run)
@@ -129,6 +139,7 @@ mod tests {
         let mut b = a.clone();
         b.wall_s = 99.0; // shard-dependent fields must not matter
         b.shards = 8;
+        b.kernel = KERNEL_SOA; // nor which kernel produced the run
         assert_eq!(a.digest(), b.digest());
         a.total_energy_j += 1e-12; // a single ulp-ish change must show
         assert_ne!(a.digest(), b.digest());

@@ -12,33 +12,53 @@
 //! - [`device`] — the [`FleetNode`] abstraction the kernel schedules;
 //!   implemented by both the scenario-instantiated [`FleetDevice`] and
 //!   the FL harness's `fl::FlClient`, so both paths share one scheduler.
-//! - [`event`] — the deterministic per-shard event queue.
+//! - [`event`] — the deterministic per-shard event queue; events carry
+//!   dense job indices so routing is an array load, not a hash lookup.
 //! - [`coordinator`] — [`ProfileCoordinator`]: §4.2 exploration
 //!   amortized at fleet scale (the first device of each SoC model
 //!   explores and is billed for it; every later device adopts the
 //!   distributed `ChoiceProfile` chain for free).
-//! - [`engine`] — [`ShardedEventLoop`]: devices partitioned round-robin
-//!   across worker threads (`std::thread` + mpsc channels, no external
-//!   crates). Every stochastic stream is keyed on (seed, device id) or
-//!   (seed, round) — never on shard layout — and the control thread
-//!   folds per-device results in a fixed order, so aggregate metrics are
-//!   **bit-identical for any shard count**.
+//! - [`engine`] — [`ShardedEventLoop`]: the generic trait-object kernel
+//!   (devices partitioned round-robin across worker threads,
+//!   `std::thread` + mpsc channels, no external crates). It schedules
+//!   arbitrary [`FleetNode`]s — `fl::FlSim`'s full clients included —
+//!   and doubles as the reference implementation the SoA kernel is
+//!   parity-checked against.
+//! - [`soa`] — [`SoaFleet`]: the allocation-free struct-of-arrays
+//!   kernel `run_scenario` drives (PR 2). Device state lives in flat
+//!   per-shard arrays, a per-round `(trace, shift)` sample cache
+//!   collapses 100k availability lookups into a few hundred, persistent
+//!   workers exchange preallocated buffers through double-buffered
+//!   mailboxes, and results scatter through dense `seq` arrays. Every
+//!   stochastic stream stays keyed on (seed, device id) or (seed,
+//!   round) — never on shard layout — and the control thread folds
+//!   results in a fixed order, so aggregate metrics are **bit-identical
+//!   for any shard count and across both kernels**.
 //! - [`metrics`] — [`FleetOutcome`] + the `devices-stepped/sec`
 //!   throughput figures the `fleet` bench and report emit.
+//! - [`bench`] — [`run_fleet_bench`]: the throughput harness behind
+//!   `swan bench fleet` and `benches/fleet_throughput.rs`; emits the
+//!   `BENCH_fleet.json` perf-trajectory record.
 
+pub mod bench;
 pub mod coordinator;
 pub mod device;
 pub mod engine;
 pub mod event;
 pub mod metrics;
 pub mod scenario;
+pub mod soa;
 
+pub use bench::{run_fleet_bench, FleetBenchReport};
 pub use coordinator::{
     CoordinatorPolicy, CoordinatorStats, FleetPolicy, ProfileCoordinator,
     ResolvedCost, StepCost,
 };
 pub use device::{FleetDevice, FleetNode};
-pub use engine::{run_scenario, DriveConfig, ShardedEventLoop};
+pub use engine::{
+    run_scenario, run_scenario_reference, DriveConfig, ShardedEventLoop,
+};
 pub use event::{Event, EventKind, EventQueue};
-pub use metrics::FleetOutcome;
+pub use metrics::{FleetOutcome, KERNEL_EVENT_LOOP, KERNEL_SOA};
 pub use scenario::ScenarioSpec;
+pub use soa::SoaFleet;

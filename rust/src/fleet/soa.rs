@@ -1,0 +1,843 @@
+//! The struct-of-arrays fleet kernel: the allocation-free hot path that
+//! steps 100k–1M [`FleetDevice`]s.
+//!
+//! The PR 1 [`ShardedEventLoop`](super::engine::ShardedEventLoop) pays,
+//! per round, an mpsc message-node allocation per phase, fresh
+//! `Vec`/`HashMap`s for job and result routing, a full sort of the
+//! online set, and — dominating everything at 100k devices — a
+//! per-device availability poll that chases an `Arc` into the trace,
+//! computes the same grid index three times, and streams ~150 bytes of
+//! `FleetDevice` per poll. This kernel removes all of that for the
+//! scenario-instantiated population:
+//!
+//! - **Struct-of-arrays state.** Every `FleetDevice` field lives in a
+//!   flat per-shard array (battery/charger state as a dense
+//!   `Vec<EnergyLoan>`, RNG stream seeds, profile/model index,
+//!   interference/thermal envelopes), so the poll sweep touches ~60
+//!   sequential bytes per device instead of a scattered struct.
+//! - **Shared-sample cache.** A scenario fleet reuses a small trace
+//!   pool with hourly shifts, so at most `trace_users × 24` distinct
+//!   `(trace, shift)` combos exist. Each round a shard computes the
+//!   fused `(level, charging)` sample once per combo — a few hundred
+//!   trace lookups instead of one per device — and the per-device poll
+//!   is a cached read plus the energy-loan tick. Values are identical
+//!   to the per-device lookups by construction (the sample is a pure
+//!   function of `(trace, shift, now)`).
+//! - **Persistent workers, double-buffered mailboxes.** One worker per
+//!   shard lives for the whole drive; the control thread exchanges
+//!   preallocated job/online/result buffers through a `Mutex + Condvar`
+//!   mailbox (`std::mem::swap`, zero copies, zero steady-state
+//!   allocation — no mpsc nodes).
+//! - **Dense index routing.** Jobs carry their global picked-order
+//!   `seq` and shard-local device index; events carry the dense job
+//!   index ([`EventKind`]); results scatter into a reused
+//!   per-seq array. The `HashMap<u32, StepJob>` / `HashMap<u32,
+//!   StepResult>` routing of the PR 1 kernel is gone.
+//!
+//! **Determinism.** The guarantee is unchanged *and* cross-kernel: all
+//! stochastic streams stay keyed on (seed, device id) or (seed, round),
+//! selection reuses [`round_rng`] plus an allocation-free
+//! [`select_uniform_into`] proven draw-for-draw identical to the PR 1
+//! selection, and the control thread folds results in global picked
+//! order. Aggregates are bit-identical for any shard count **and**
+//! bit-identical to the PR 1 kernel on the same scenario + seed —
+//! `tests/fleet_determinism.rs` and the fleet bench assert both via
+//! [`FleetOutcome::digest`].
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::fl::availability::availability_gate_sampled;
+use crate::fl::energy_loan::EnergyLoan;
+use crate::fl::selection::select_uniform_into;
+use crate::soc::device::DeviceId;
+use crate::trace::resample::ResampledTrace;
+
+use super::coordinator::{FleetPolicy, StepCost};
+use super::device::{envelope_multiplier, FleetDevice};
+use super::engine::{round_rng, DriveConfig, EMPTY_ROUND_WAIT_S};
+use super::event::{Event, EventKind, EventQueue};
+use super::metrics::{FleetOutcome, KERNEL_SOA};
+
+/// One participation order: dense routing indices + resolved §4.2 cost.
+#[derive(Clone, Copy, Debug)]
+struct SoaJob {
+    /// Index into this round's global picked order (the fold key).
+    seq: u32,
+    /// Global device id (carried on events for traceability).
+    device: u32,
+    /// Shard-local device index (`device / n_shards`).
+    local: u32,
+    cost: StepCost,
+    extra_time_s: f64,
+    extra_energy_j: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct SoaResult {
+    seq: u32,
+    time_s: f64,
+    energy_j: f64,
+    steps: u32,
+}
+
+/// A `(trace, shift)` pair — the unit the per-round sample cache keys on.
+type Combo = (Arc<ResampledTrace>, f64);
+
+/// One shard's device population, one field per array ("SoA row" `k` is
+/// shard-local device `k`, global id `shard_idx + k * n_shards`).
+struct SoaShard {
+    ids: Vec<usize>,
+    models: Vec<DeviceId>,
+    /// Index into the fleet's combo table (profile of trace + shift).
+    combo: Vec<u32>,
+    min_level_pct: Vec<f64>,
+    /// Battery/charger state, dense. Kept as whole `EnergyLoan`s so the
+    /// tick/borrow arithmetic is *the* `fl::EnergyLoan` arithmetic —
+    /// exactness with the PR 1 kernel by construction, not by mirroring.
+    loans: Vec<EnergyLoan>,
+    /// Per-device stream seed (interference/thermal draws).
+    seeds: Vec<u64>,
+    epoch_steps: Vec<u32>,
+    interference_p: Vec<f64>,
+    interference_slowdown: Vec<f64>,
+    thermal_throttle_p: Vec<f64>,
+    thermal_derate: Vec<f64>,
+    participations: Vec<u32>,
+    train_time_s: Vec<f64>,
+    /// Per-shard event queue, reused across rounds (drained each round).
+    queue: EventQueue,
+    /// Per-combo fused samples, refreshed each round.
+    cache_level: Vec<f64>,
+    cache_charging: Vec<bool>,
+}
+
+impl SoaShard {
+    fn with_capacity(cap: usize) -> SoaShard {
+        SoaShard {
+            ids: Vec::with_capacity(cap),
+            models: Vec::with_capacity(cap),
+            combo: Vec::with_capacity(cap),
+            min_level_pct: Vec::with_capacity(cap),
+            loans: Vec::with_capacity(cap),
+            seeds: Vec::with_capacity(cap),
+            epoch_steps: Vec::with_capacity(cap),
+            interference_p: Vec::with_capacity(cap),
+            interference_slowdown: Vec::with_capacity(cap),
+            thermal_throttle_p: Vec::with_capacity(cap),
+            thermal_derate: Vec::with_capacity(cap),
+            participations: Vec::with_capacity(cap),
+            train_time_s: Vec::with_capacity(cap),
+            queue: EventQueue::new(),
+            cache_level: Vec::new(),
+            cache_charging: Vec::new(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn push_device(&mut self, d: FleetDevice, combo: u32) {
+        self.ids.push(d.id);
+        self.models.push(d.model);
+        self.combo.push(combo);
+        self.min_level_pct.push(d.min_level_pct);
+        self.loans.push(d.loan);
+        self.seeds.push(d.seed);
+        self.epoch_steps.push(d.epoch_steps as u32);
+        self.interference_p.push(d.interference_p);
+        self.interference_slowdown.push(d.interference_slowdown);
+        self.thermal_throttle_p.push(d.thermal_throttle_p);
+        self.thermal_derate.push(d.thermal_derate);
+        self.participations.push(d.participations as u32);
+        self.train_time_s.push(d.train_time_s);
+    }
+
+    /// Availability sweep: refresh the combo cache (one fused trace
+    /// sample per distinct `(trace, shift)`), then gate every local
+    /// device through `fl::availability_gate_sampled` — the same tail
+    /// the per-device gate uses, so values match the generic kernel by
+    /// construction. The cache is sound because the sample depends only
+    /// on `(trace, shift, now_s)`, never on device state.
+    fn poll(
+        &mut self,
+        now_s: f64,
+        combos: &[Combo],
+        online: &mut Vec<u32>,
+        shard_idx: usize,
+        n_shards: usize,
+    ) {
+        self.cache_level.resize(combos.len(), 0.0);
+        self.cache_charging.resize(combos.len(), false);
+        for (ci, (trace, shift)) in combos.iter().enumerate() {
+            let t = trace.wrap(now_s + shift);
+            let (level, charging) = trace.sample(t);
+            self.cache_level[ci] = level;
+            self.cache_charging[ci] = charging;
+        }
+        online.clear();
+        for k in 0..self.len() {
+            let ci = self.combo[k] as usize;
+            if availability_gate_sampled(
+                &mut self.loans[k],
+                now_s,
+                self.cache_level[ci],
+                self.cache_charging[ci],
+                self.min_level_pct[k],
+            ) {
+                online.push((shard_idx + k * n_shards) as u32);
+            }
+        }
+    }
+
+    /// Event-driven local epochs for this round's jobs. The arithmetic
+    /// (and its operation order) mirrors the PR 1 worker exactly:
+    /// `cost · steps · multiplier + exploration bill`, with the
+    /// interference/thermal draw keyed on (device seed, round) only.
+    fn step(
+        &mut self,
+        now_s: f64,
+        round: usize,
+        jobs: &[SoaJob],
+        results: &mut Vec<SoaResult>,
+    ) {
+        results.clear();
+        for (ji, job) in jobs.iter().enumerate() {
+            self.queue.push(Event {
+                at_s: now_s,
+                device: job.device,
+                kind: EventKind::BeginEpoch { job: ji as u32 },
+            });
+        }
+        while let Some(ev) = self.queue.pop() {
+            match ev.kind {
+                EventKind::BeginEpoch { job } => {
+                    let j = &jobs[job as usize];
+                    let k = j.local as usize;
+                    let steps = self.epoch_steps[k];
+                    // the same envelope draw FleetDevice::cost_multiplier
+                    // makes, fed from the SoA arrays
+                    let mult = envelope_multiplier(
+                        self.seeds[k],
+                        round,
+                        self.interference_p[k],
+                        self.interference_slowdown[k],
+                        self.thermal_throttle_p[k],
+                        self.thermal_derate[k],
+                    );
+                    let t = j.cost.latency_s * steps as f64 * mult
+                        + j.extra_time_s;
+                    let e = j.cost.energy_j * steps as f64 * mult
+                        + j.extra_energy_j;
+                    self.queue.push(Event {
+                        at_s: ev.at_s + t,
+                        device: ev.device,
+                        kind: EventKind::EpochDone {
+                            job,
+                            time_s: t,
+                            energy_j: e,
+                            steps,
+                        },
+                    });
+                }
+                EventKind::EpochDone {
+                    job,
+                    time_s,
+                    energy_j,
+                    steps,
+                } => {
+                    let j = &jobs[job as usize];
+                    let k = j.local as usize;
+                    // FleetDevice::charge, on the SoA arrays
+                    self.train_time_s[k] += time_s;
+                    self.loans[k].borrow(energy_j);
+                    self.participations[k] += 1;
+                    results.push(SoaResult {
+                        seq: j.seq,
+                        time_s,
+                        energy_j,
+                        steps,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// What the control thread asks a shard worker to do next.
+#[derive(Clone, Copy, Debug)]
+enum Cmd {
+    /// Nothing pending (the worker's wait state).
+    Idle,
+    Poll { now_s: f64 },
+    Step { now_s: f64, round: usize },
+    Stop,
+}
+
+/// The double-buffered exchange slot between control and one worker.
+/// Buffers move by `std::mem::swap` only; after the first round every
+/// round is allocation-free.
+struct Mailbox {
+    cmd: Cmd,
+    /// Worker completed the last command (control's wait predicate).
+    done: bool,
+    /// Worker panicked (set by its drop guard so control can't hang).
+    dead: bool,
+    online: Vec<u32>,
+    jobs: Vec<SoaJob>,
+    results: Vec<SoaResult>,
+}
+
+struct Slot {
+    mx: Mutex<Mailbox>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            mx: Mutex::new(Mailbox {
+                cmd: Cmd::Idle,
+                done: false,
+                dead: false,
+                online: Vec::new(),
+                jobs: Vec::new(),
+                results: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Hand control a command; for `Step`, swap the prepared job buffer in.
+fn send(slot: &Slot, cmd: Cmd, jobs: Option<&mut Vec<SoaJob>>) {
+    let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+    if let Some(j) = jobs {
+        std::mem::swap(&mut g.jobs, j);
+    }
+    g.cmd = cmd;
+    g.done = false;
+    slot.cv.notify_all();
+}
+
+/// Block until shard `si` finishes its command, returning the mailbox
+/// for buffer exchange. A dead worker turns into a control-thread panic
+/// (which [`StopOnDrop`] converts into a fleet-wide release, so the
+/// scope join can't deadlock).
+fn wait_done<'a>(slots: &'a [Slot], si: usize) -> MutexGuard<'a, Mailbox> {
+    let slot = &slots[si];
+    let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+    while !g.done {
+        g = slot.cv.wait(g).expect("soa mailbox poisoned");
+    }
+    if g.dead {
+        drop(g);
+        panic!("soa fleet: shard worker {si} died");
+    }
+    g
+}
+
+/// Releases every worker on drop — normal exit or control-thread
+/// unwind alike. The PR 1 kernel got this for free (dropping the mpsc
+/// senders errored the workers' `recv`); with condvar mailboxes a
+/// control panic (a policy callback, a poisoned lock) would otherwise
+/// leave workers parked forever and deadlock the scope join. Locks are
+/// taken fallibly here: a poisoned mailbox belongs to a worker that
+/// already died and needs no release.
+struct StopOnDrop<'a> {
+    slots: &'a [Slot],
+}
+
+impl Drop for StopOnDrop<'_> {
+    fn drop(&mut self) {
+        for slot in self.slots {
+            if let Ok(mut g) = slot.mx.lock() {
+                g.cmd = Cmd::Stop;
+                slot.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Drop guard that flags the mailbox if the worker unwinds, so the
+/// control thread fails fast instead of waiting forever.
+struct DeathNotice<'a> {
+    slot: &'a Slot,
+}
+
+impl Drop for DeathNotice<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            if let Ok(mut g) = self.slot.mx.lock() {
+                g.dead = true;
+                g.done = true;
+                self.slot.cv.notify_all();
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    shard: &mut SoaShard,
+    slot: &Slot,
+    combos: &[Combo],
+    shard_idx: usize,
+    n_shards: usize,
+) {
+    let _notice = DeathNotice { slot };
+    let mut online: Vec<u32> = Vec::new();
+    let mut jobs: Vec<SoaJob> = Vec::new();
+    let mut results: Vec<SoaResult> = Vec::new();
+    loop {
+        let cmd = {
+            let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+            while matches!(g.cmd, Cmd::Idle) {
+                g = slot.cv.wait(g).expect("soa mailbox poisoned");
+            }
+            let c = g.cmd;
+            g.cmd = Cmd::Idle;
+            if matches!(c, Cmd::Step { .. }) {
+                std::mem::swap(&mut g.jobs, &mut jobs);
+            }
+            c
+        };
+        match cmd {
+            Cmd::Poll { now_s } => {
+                shard.poll(now_s, combos, &mut online, shard_idx, n_shards);
+                let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+                std::mem::swap(&mut g.online, &mut online);
+                g.done = true;
+                slot.cv.notify_all();
+            }
+            Cmd::Step { now_s, round } => {
+                shard.step(now_s, round, &jobs, &mut results);
+                let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+                std::mem::swap(&mut g.results, &mut results);
+                g.done = true;
+                slot.cv.notify_all();
+            }
+            Cmd::Stop => return,
+            Cmd::Idle => unreachable!("Idle is never dispatched"),
+        }
+    }
+}
+
+/// Ascending k-way merge of the per-shard online lists (each already
+/// ascending) into global id order — replaces the PR 1 flatten +
+/// `sort_unstable`, and reuses `cursors`/`out` across rounds.
+fn merge_online(
+    lists: &[Vec<u32>],
+    cursors: &mut [usize],
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    for c in cursors.iter_mut() {
+        *c = 0;
+    }
+    loop {
+        let mut best: Option<(u32, usize)> = None;
+        for (s, list) in lists.iter().enumerate() {
+            if cursors[s] < list.len() {
+                let v = list[cursors[s]];
+                if best.map_or(true, |(bv, _)| v < bv) {
+                    best = Some((v, s));
+                }
+            }
+        }
+        match best {
+            Some((v, s)) => {
+                out.push(v as usize);
+                cursors[s] += 1;
+            }
+            None => break,
+        }
+    }
+}
+
+/// The struct-of-arrays fleet kernel over a [`FleetDevice`] population.
+///
+/// Same drive contract as the generic
+/// [`ShardedEventLoop`](super::engine::ShardedEventLoop) — build with
+/// [`new`](SoaFleet::new), run rounds with [`drive`](SoaFleet::drive),
+/// tear down with [`into_devices`](SoaFleet::into_devices) — but the
+/// hot path is the allocation-free SoA sweep described in the module
+/// docs.
+pub struct SoaFleet {
+    shards: Vec<SoaShard>,
+    /// Distinct `(trace, shift)` profiles across the fleet.
+    combos: Vec<Combo>,
+    /// SoC model per global device id (central policy resolution).
+    models: Vec<DeviceId>,
+    n_devices: usize,
+}
+
+impl SoaFleet {
+    /// Unpack `devices` (global id = vector index) into per-shard flat
+    /// arrays, round-robin across `n_shards` — the same partition (and
+    /// clamp) as the generic kernel.
+    pub fn new(devices: Vec<FleetDevice>, n_shards: usize) -> SoaFleet {
+        let n_shards = n_shards.max(1).min(devices.len().max(1));
+        let n_devices = devices.len();
+        let models: Vec<DeviceId> =
+            devices.iter().map(|d| d.model).collect();
+        let mut combos: Vec<Combo> = Vec::new();
+        let mut combo_of: HashMap<(usize, u64), u32> = HashMap::new();
+        let mut shards: Vec<SoaShard> = (0..n_shards)
+            .map(|_| SoaShard::with_capacity(n_devices / n_shards + 1))
+            .collect();
+        for (i, d) in devices.into_iter().enumerate() {
+            let key = (Arc::as_ptr(&d.trace) as usize, d.shift_s.to_bits());
+            let ci = match combo_of.get(&key) {
+                Some(&c) => c,
+                None => {
+                    let c = combos.len() as u32;
+                    combos.push((d.trace.clone(), d.shift_s));
+                    combo_of.insert(key, c);
+                    c
+                }
+            };
+            shards[i % n_shards].push_device(d, ci);
+        }
+        SoaFleet {
+            shards,
+            combos,
+            models,
+            n_devices,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_devices
+    }
+
+    /// Distinct `(trace, shift)` profiles the sample cache keys on.
+    pub fn n_combos(&self) -> usize {
+        self.combos.len()
+    }
+
+    /// Tear down, repacking the arrays into [`FleetDevice`]s in
+    /// global-id order (errors, rather than panicking, if a shard lost
+    /// devices).
+    pub fn into_devices(self) -> crate::Result<Vec<FleetDevice>> {
+        let n = self.n_devices;
+        let n_shards = self.shards.len();
+        for (s, shard) in self.shards.iter().enumerate() {
+            let expect = if s < n {
+                (n - s + n_shards - 1) / n_shards
+            } else {
+                0
+            };
+            crate::ensure!(
+                shard.len() == expect,
+                "soa fleet lost devices: shard {s} holds {} rows, \
+                 expected {expect} of {n}",
+                shard.len()
+            );
+        }
+        let mut out = Vec::with_capacity(n);
+        for gid in 0..n {
+            let shard = &self.shards[gid % n_shards];
+            let k = gid / n_shards;
+            let (trace, shift) = &self.combos[shard.combo[k] as usize];
+            out.push(FleetDevice {
+                id: shard.ids[k],
+                model: shard.models[k],
+                trace: trace.clone(),
+                shift_s: *shift,
+                loan: shard.loans[k].clone(),
+                epoch_steps: shard.epoch_steps[k] as usize,
+                min_level_pct: shard.min_level_pct[k],
+                interference_p: shard.interference_p[k],
+                interference_slowdown: shard.interference_slowdown[k],
+                thermal_throttle_p: shard.thermal_throttle_p[k],
+                thermal_derate: shard.thermal_derate[k],
+                seed: shard.seeds[k],
+                participations: shard.participations[k] as usize,
+                train_time_s: shard.train_time_s[k],
+            });
+        }
+        Ok(out)
+    }
+
+    /// Run `cfg.rounds` rounds of availability → selection → local
+    /// epoch → clock advance. Scheduling, stochastic streams and fold
+    /// order replicate the generic kernel exactly (see the module
+    /// docs), so the returned aggregates are bit-identical to it at
+    /// every shard count.
+    pub fn drive(
+        &mut self,
+        policy: &mut dyn FleetPolicy,
+        cfg: &DriveConfig,
+    ) -> FleetOutcome {
+        let wall0 = Instant::now();
+        let n_shards = self.shards.len();
+        let shards = &mut self.shards;
+        let combos = &self.combos;
+        let models = &self.models;
+
+        let mut outcome = FleetOutcome {
+            scenario: cfg.scenario.clone(),
+            arm: cfg.arm.name(),
+            devices: self.n_devices,
+            shards: n_shards,
+            kernel: KERNEL_SOA,
+            ..Default::default()
+        };
+
+        let slots: Vec<Slot> = (0..n_shards).map(|_| Slot::new()).collect();
+
+        std::thread::scope(|scope| {
+            for (si, shard) in shards.iter_mut().enumerate() {
+                let slot = &slots[si];
+                scope.spawn(move || {
+                    worker_loop(shard, slot, combos, si, n_shards)
+                });
+            }
+            // from here on, leaving the closure — normally or by panic —
+            // releases every worker (see StopOnDrop)
+            let _stop = StopOnDrop { slots: &slots };
+
+            // Control-side buffers, all reused across rounds: after the
+            // first round the steady state allocates nothing.
+            let mut online_lists: Vec<Vec<u32>> =
+                (0..n_shards).map(|_| Vec::new()).collect();
+            let mut job_bufs: Vec<Vec<SoaJob>> =
+                (0..n_shards).map(|_| Vec::new()).collect();
+            let mut cursors: Vec<usize> = vec![0; n_shards];
+            let mut online: Vec<usize> = Vec::new();
+            let mut picked: Vec<usize> = Vec::new();
+            let mut scratch: HashMap<usize, usize> = HashMap::new();
+            let mut active: Vec<usize> = Vec::new();
+            let mut fold_time: Vec<f64> = Vec::new();
+            let mut fold_energy: Vec<f64> = Vec::new();
+            let mut fold_steps: Vec<u32> = Vec::new();
+
+            let mut now_s = 0.0f64;
+            let mut total_energy = 0.0f64;
+            let mut total_steps = 0u64;
+            let mut participations = 0u64;
+
+            for round in 0..cfg.rounds {
+                // 1. availability: every shard sweeps in parallel
+                for slot in &slots {
+                    send(slot, Cmd::Poll { now_s }, None);
+                }
+                for si in 0..n_shards {
+                    let mut g = wait_done(&slots, si);
+                    std::mem::swap(&mut g.online, &mut online_lists[si]);
+                }
+                merge_online(&online_lists, &mut cursors, &mut online);
+                outcome.online_per_round.push((round, online.len()));
+                if online.is_empty() {
+                    now_s += EMPTY_ROUND_WAIT_S;
+                    continue;
+                }
+
+                // 2. selection: central, keyed on (seed, round) only
+                let mut rng = round_rng(cfg.seed, round);
+                select_uniform_into(
+                    &online,
+                    cfg.clients_per_round,
+                    &mut rng,
+                    &mut scratch,
+                    &mut picked,
+                );
+
+                // 3. resolve policy costs centrally, in picked order
+                //    (§4.2 exploration billing is order-sensitive)
+                for buf in job_bufs.iter_mut() {
+                    buf.clear();
+                }
+                for (seq, &gid) in picked.iter().enumerate() {
+                    let rc = policy.step_cost(models[gid], gid);
+                    job_bufs[gid % n_shards].push(SoaJob {
+                        seq: seq as u32,
+                        device: gid as u32,
+                        local: (gid / n_shards) as u32,
+                        cost: rc.cost,
+                        extra_time_s: rc.exploration_time_s,
+                        extra_energy_j: rc.exploration_energy_j,
+                    });
+                }
+
+                // 4. parallel event-driven local epochs
+                active.clear();
+                for si in 0..n_shards {
+                    if job_bufs[si].is_empty() {
+                        continue;
+                    }
+                    active.push(si);
+                    send(
+                        &slots[si],
+                        Cmd::Step { now_s, round },
+                        Some(&mut job_bufs[si]),
+                    );
+                }
+
+                // 5. scatter results by seq, fold in global picked
+                //    order — the same fixed reduction order as the
+                //    generic kernel, so aggregates are bit-identical
+                fold_time.clear();
+                fold_time.resize(picked.len(), 0.0);
+                fold_energy.clear();
+                fold_energy.resize(picked.len(), 0.0);
+                fold_steps.clear();
+                fold_steps.resize(picked.len(), 0);
+                for &si in &active {
+                    let mut g = wait_done(&slots, si);
+                    for r in g.results.drain(..) {
+                        let s = r.seq as usize;
+                        fold_time[s] = r.time_s;
+                        fold_energy[s] = r.energy_j;
+                        fold_steps[s] = r.steps;
+                    }
+                }
+                let mut round_time = 0.0f64;
+                for s in 0..picked.len() {
+                    total_energy += fold_energy[s];
+                    total_steps += fold_steps[s] as u64;
+                    participations += 1;
+                    round_time = round_time.max(fold_time[s]);
+                }
+                now_s += round_time + cfg.server_overhead_s;
+                outcome.rounds_run = round + 1;
+            }
+
+            outcome.total_time_s = now_s;
+            outcome.total_energy_j = total_energy;
+            outcome.total_steps = total_steps;
+            outcome.participations = participations;
+        });
+        outcome.wall_s = wall0.elapsed().as_secs_f64();
+        outcome
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::FlArm;
+    use crate::fleet::engine::{run_scenario, run_scenario_reference};
+    use crate::fleet::scenario::ScenarioSpec;
+
+    fn tiny_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "soa-unit".to_string(),
+            devices: 300,
+            rounds: 10,
+            clients_per_round: 15,
+            trace_users: 2,
+            ..ScenarioSpec::default()
+        }
+    }
+
+    #[test]
+    fn soa_matches_reference_kernel_bit_for_bit() {
+        let spec = tiny_spec();
+        let reference = run_scenario_reference(&spec, 1, FlArm::Swan).unwrap();
+        for shards in [1usize, 3, 8] {
+            let soa = run_scenario(&spec, shards, FlArm::Swan).unwrap();
+            assert_eq!(
+                soa.digest(),
+                reference.digest(),
+                "soa@{shards} shards vs reference"
+            );
+            assert_eq!(soa.online_per_round, reference.online_per_round);
+            assert_eq!(
+                soa.total_time_s.to_bits(),
+                reference.total_time_s.to_bits()
+            );
+            assert_eq!(
+                soa.total_energy_j.to_bits(),
+                reference.total_energy_j.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn soa_baseline_arm_matches_reference_too() {
+        let spec = tiny_spec();
+        let a = run_scenario(&spec, 4, FlArm::Baseline).unwrap();
+        let b = run_scenario_reference(&spec, 4, FlArm::Baseline).unwrap();
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn device_round_trip_preserves_state_and_order() {
+        let spec = tiny_spec();
+        let devices = spec.build_fleet().unwrap();
+        let expect: Vec<(usize, u64, f64)> = devices
+            .iter()
+            .map(|d| (d.id, d.seed, d.shift_s))
+            .collect();
+        let fleet = SoaFleet::new(devices, 7);
+        assert_eq!(fleet.n_shards(), 7);
+        assert_eq!(fleet.n_devices(), 300);
+        // 2 traces × 24 shifts bound the combo table
+        assert!(fleet.n_combos() <= 48, "combos {}", fleet.n_combos());
+        let back = fleet.into_devices().unwrap();
+        assert_eq!(back.len(), 300);
+        for (d, (id, seed, shift)) in back.iter().zip(&expect) {
+            assert_eq!(d.id, *id);
+            assert_eq!(d.seed, *seed);
+            assert_eq!(d.shift_s, *shift);
+            assert_eq!(d.participations, 0);
+        }
+    }
+
+    #[test]
+    fn round_trip_after_a_drive_keeps_charges() {
+        let spec = tiny_spec();
+        let out = run_scenario(&spec, 2, FlArm::Swan).unwrap();
+        assert!(out.participations > 0);
+        // drive through the raw API to inspect surviving state
+        let workload =
+            crate::workload::load_or_builtin(spec.workload, "artifacts");
+        let mut coord = super::super::coordinator::ProfileCoordinator::new(
+            workload,
+        );
+        let mut policy = super::super::coordinator::CoordinatorPolicy {
+            coord: &mut coord,
+            arm: FlArm::Swan,
+        };
+        let mut fleet = SoaFleet::new(spec.build_fleet().unwrap(), 3);
+        let cfg = super::super::engine::drive_config(&spec, FlArm::Swan);
+        let drove = fleet.drive(&mut policy, &cfg);
+        let back = fleet.into_devices().unwrap();
+        let parts: usize = back.iter().map(|d| d.participations).sum();
+        assert_eq!(parts as u64, drove.participations);
+        let trained: f64 = back.iter().map(|d| d.train_time_s).sum();
+        assert!(trained > 0.0);
+    }
+
+    #[test]
+    fn merge_online_is_an_ascending_merge() {
+        let lists = vec![vec![0u32, 4, 8], vec![1, 5], vec![2], vec![]];
+        let mut cursors = vec![0usize; 4];
+        let mut out = vec![99usize]; // stale content must be cleared
+        merge_online(&lists, &mut cursors, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 4, 5, 8]);
+        // reuse with different content
+        let lists2 = vec![vec![3u32], vec![0, 1, 2]];
+        let mut cursors2 = vec![7usize, 7];
+        merge_online(&lists2, &mut cursors2, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn shard_count_clamped_to_population() {
+        let spec = ScenarioSpec {
+            devices: 3,
+            trace_users: 1,
+            ..ScenarioSpec::default()
+        };
+        let fleet = SoaFleet::new(spec.build_fleet().unwrap(), 64);
+        assert_eq!(fleet.n_shards(), 3);
+    }
+}

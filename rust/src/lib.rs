@@ -29,13 +29,17 @@
 //!   the stub keeps every simulator-only path fully functional).
 //! - [`train`], [`trace`], [`fl`] — local trainer + synthetic datasets,
 //!   GreenHub-style battery traces, and the FedAvg simulation.
-//! - [`fleet`] — the sharded, event-driven fleet simulation kernel:
+//! - [`fleet`] — the sharded, event-driven fleet simulation kernels:
 //!   [`fleet::scenario`] data-driven experiment specs (device-model
 //!   mixes, GreenHub trace assignment, charger envelopes, interference
-//!   schedules), [`fleet::engine`] the `ShardedEventLoop` that steps
-//!   100k–1M devices across worker threads with bit-identical results
-//!   at any shard count, and [`fleet::coordinator`] the §4.2
-//!   fleet-scale exploration amortizer. `fl::FlSim` runs on top of it.
+//!   schedules), [`fleet::soa`] the allocation-free struct-of-arrays
+//!   kernel that steps 100k–1M devices (flat per-shard state, shared
+//!   trace-sample cache, persistent double-buffered workers),
+//!   [`fleet::engine`] the generic `ShardedEventLoop` reference kernel
+//!   `fl::FlSim` rides, and [`fleet::coordinator`] the §4.2 fleet-scale
+//!   exploration amortizer — all bit-identical at any shard count, and
+//!   [`fleet::bench`] the throughput harness emitting
+//!   `BENCH_fleet.json`.
 //! - [`report`] — emitters that regenerate every paper table and figure.
 
 pub mod error;

@@ -2,7 +2,7 @@
 //! battery-state derivation from consecutive level deltas
 //! (charging = +1, not-discharging = 0, discharging = −1).
 
-use crate::util::pchip::Pchip;
+use crate::util::pchip::{Pchip, PchipTable};
 
 use super::greenhub::RawTrace;
 
@@ -36,6 +36,16 @@ impl ResampledTrace {
 
     pub fn level_at(&self, t_s: f64) -> f64 {
         self.level[self.idx(t_s)]
+    }
+
+    /// Fused `(level, is_charging)` lookup: one grid-index computation
+    /// serves both reads. This is the per-poll fast path the fleet
+    /// kernel and the availability gate ride — `level_at` +
+    /// `is_charging` would compute the same index twice.
+    #[inline]
+    pub fn sample(&self, t_s: f64) -> (f64, bool) {
+        let i = self.idx(t_s);
+        (self.level[i], self.state[i] > 0)
     }
 
     /// +1 charging, 0 not-discharging, −1 discharging at time `t_s`.
@@ -72,7 +82,10 @@ pub fn resample_trace(tr: &RawTrace) -> crate::Result<ResampledTrace> {
     let start = xs[0];
     let end = xs[xs.len() - 1];
     let n = ((end - start) / GRID_DT_S).floor() as usize + 1;
-    let mut level = interp.resample(start, GRID_DT_S, n);
+    // one cursor-driven interpolation pass builds the uniform table; all
+    // later per-call lookups are O(1) indexed loads on its values
+    let mut level =
+        PchipTable::build(&interp, start, GRID_DT_S, n).into_values();
     // PCHIP is monotone between knots but fp rounding can still step a
     // hair outside the physical range
     for l in &mut level {
@@ -172,6 +185,18 @@ mod tests {
         // wrap
         let w = rs.wrap(1200.0 + 601.0);
         assert!(w >= 0.0 && w <= 1200.0);
+    }
+
+    #[test]
+    fn fused_sample_matches_split_lookups() {
+        let tr = TraceGenerator::default().generate(4, 3);
+        let rs = resample_trace(&tr).unwrap();
+        for i in 0..600 {
+            let t = rs.start_s + i as f64 * 137.0;
+            let (level, charging) = rs.sample(t);
+            assert_eq!(level.to_bits(), rs.level_at(t).to_bits());
+            assert_eq!(charging, rs.is_charging(t));
+        }
     }
 
     #[test]

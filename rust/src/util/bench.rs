@@ -31,8 +31,26 @@ impl Measurement {
         stats::percentile(&self.samples, 50.0)
     }
 
+    /// Tail latency: the 90th-percentile sample.
+    pub fn p90(&self) -> f64 {
+        stats::percentile(&self.samples, 90.0)
+    }
+
     pub fn min(&self) -> f64 {
         stats::min(&self.samples)
+    }
+
+    /// Throughput for a measurement whose iteration processes `events`
+    /// items: events per mean-iteration second.
+    /// `benches/fleet_throughput.rs` reports devices-stepped/sec
+    /// through this.
+    pub fn per_sec(&self, events: f64) -> f64 {
+        let m = self.mean();
+        if m > 0.0 {
+            events / m
+        } else {
+            0.0
+        }
     }
 }
 
@@ -89,11 +107,12 @@ impl BenchSet {
             samples,
         };
         println!(
-            "{:40} {:>12} ± {:>10}  (min {})",
+            "{:40} {:>12} ± {:>10}  (min {}, p90 {})",
             m.name,
             fmt_secs(m.mean()),
             fmt_secs(m.std()),
             fmt_secs(m.min()),
+            fmt_secs(m.p90()),
         );
         self.results.push(m);
         self.results.last().unwrap()
@@ -109,7 +128,7 @@ impl BenchSet {
         });
     }
 
-    /// Dump CSV (name, mean_s, std_s, min_s) to `target/bench_csv/`.
+    /// Dump CSV (name, mean_s, std_s, min_s, p90_s) to `target/bench_csv/`.
     pub fn write_csv(&self) -> std::io::Result<std::path::PathBuf> {
         let dir = std::path::Path::new("target/bench_csv");
         std::fs::create_dir_all(dir)?;
@@ -119,14 +138,15 @@ impl BenchSet {
             .map(|c| if c.is_alphanumeric() { c } else { '_' })
             .collect();
         let path = dir.join(format!("{safe}.csv"));
-        let mut out = String::from("name,mean_s,std_s,min_s\n");
+        let mut out = String::from("name,mean_s,std_s,min_s,p90_s\n");
         for m in &self.results {
             out.push_str(&format!(
-                "{},{},{},{}\n",
+                "{},{},{},{},{}\n",
                 m.name.replace(',', ";"),
                 m.mean(),
                 m.std(),
-                m.min()
+                m.min(),
+                m.p90()
             ));
         }
         std::fs::write(&path, out)?;
@@ -164,5 +184,21 @@ mod tests {
         let mut set = BenchSet::new("test2");
         set.record("simulated_latency", 1.25, "s(sim)");
         assert_eq!(set.results[0].samples, vec![1.25]);
+    }
+
+    #[test]
+    fn p90_and_throughput() {
+        let m = Measurement {
+            name: "t".to_string(),
+            samples: (1..=10).map(|i| i as f64).collect(),
+        };
+        assert!((m.p90() - 9.1).abs() < 1e-9, "p90={}", m.p90());
+        // mean is 5.5 s/iter; 11 events per iter → 2 events/s
+        assert!((m.per_sec(11.0) - 2.0).abs() < 1e-12);
+        let empty = Measurement {
+            name: "e".to_string(),
+            samples: vec![],
+        };
+        assert_eq!(empty.per_sec(100.0), 0.0);
     }
 }

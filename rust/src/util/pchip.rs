@@ -40,6 +40,14 @@ impl std::fmt::Display for PchipError {
 
 impl std::error::Error for PchipError {}
 
+/// Segment cache for [`Pchip::eval_monotone`]: remembers the last
+/// segment hit so sorted query streams pay an amortized O(1) walk
+/// instead of a binary search per call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PchipCursor {
+    seg: usize,
+}
+
 impl Pchip {
     pub fn new(x: Vec<f64>, y: Vec<f64>) -> Result<Self, PchipError> {
         if x.len() != y.len() {
@@ -58,17 +66,10 @@ impl Pchip {
         Ok(Pchip { x, y, d })
     }
 
-    /// Evaluate at `t`; clamps outside the knot range (flat extrapolation —
-    /// matches how the trace pipeline holds the last battery reading).
-    pub fn eval(&self, t: f64) -> f64 {
+    /// Binary search for the segment with `x[i] <= t < x[i+1]`.
+    /// Caller guarantees `x[0] < t < x[n-1]`.
+    fn segment_of(&self, t: f64) -> usize {
         let n = self.x.len();
-        if t <= self.x[0] {
-            return self.y[0];
-        }
-        if t >= self.x[n - 1] {
-            return self.y[n - 1];
-        }
-        // binary search for the interval with x[i] <= t < x[i+1]
         let mut lo = 0usize;
         let mut hi = n - 1;
         while hi - lo > 1 {
@@ -79,6 +80,13 @@ impl Pchip {
                 hi = mid;
             }
         }
+        lo
+    }
+
+    /// Hermite evaluation on segment `lo` (shared by every eval path so
+    /// cursor and binary-search lookups are bit-identical).
+    #[inline]
+    fn eval_segment(&self, lo: usize, t: f64) -> f64 {
         let h = self.x[lo + 1] - self.x[lo];
         let s = (t - self.x[lo]) / h;
         hermite(
@@ -91,9 +99,119 @@ impl Pchip {
         )
     }
 
-    /// Evaluate on a uniform grid from `t0` with spacing `dt`, `n` points.
+    /// Evaluate at `t`; clamps outside the knot range (flat extrapolation —
+    /// matches how the trace pipeline holds the last battery reading).
+    pub fn eval(&self, t: f64) -> f64 {
+        let n = self.x.len();
+        if t <= self.x[0] {
+            return self.y[0];
+        }
+        if t >= self.x[n - 1] {
+            return self.y[n - 1];
+        }
+        self.eval_segment(self.segment_of(t), t)
+    }
+
+    /// Evaluate at `t` with a segment cursor. For non-decreasing query
+    /// streams the segment is found by a short forward walk from the
+    /// cursor (amortized O(1)); a backward jump falls back to the
+    /// binary search. Always bit-identical to [`eval`](Pchip::eval).
+    pub fn eval_monotone(&self, t: f64, cur: &mut PchipCursor) -> f64 {
+        let n = self.x.len();
+        if t <= self.x[0] {
+            cur.seg = 0;
+            return self.y[0];
+        }
+        if t >= self.x[n - 1] {
+            cur.seg = n - 2;
+            return self.y[n - 1];
+        }
+        let mut lo = cur.seg.min(n - 2);
+        if self.x[lo] > t {
+            // query moved backward: cursor is useless, search fresh
+            lo = self.segment_of(t);
+        } else {
+            while self.x[lo + 1] <= t {
+                lo += 1;
+            }
+        }
+        cur.seg = lo;
+        self.eval_segment(lo, t)
+    }
+
+    /// Evaluate a batch of queries with one forward cursor. Meant for
+    /// sorted (non-decreasing) `ts`, where the whole batch costs one
+    /// pass over the knots; unsorted input still returns exact values
+    /// through the cursor's binary-search fallback.
+    pub fn eval_many(&self, ts: &[f64]) -> Vec<f64> {
+        let mut cur = PchipCursor::default();
+        ts.iter().map(|&t| self.eval_monotone(t, &mut cur)).collect()
+    }
+
+    /// Evaluate on a uniform grid from `t0` with spacing `dt`, `n` points
+    /// (a sorted stream, so this rides the cursor path).
     pub fn resample(&self, t0: f64, dt: f64, n: usize) -> Vec<f64> {
-        (0..n).map(|i| self.eval(t0 + dt * i as f64)).collect()
+        let mut cur = PchipCursor::default();
+        (0..n)
+            .map(|i| self.eval_monotone(t0 + dt * i as f64, &mut cur))
+            .collect()
+    }
+}
+
+/// Precomputed uniform-grid evaluation table: `values[i] = eval(t0 + dt·i)`.
+///
+/// Interpolation is paid once at build time; afterwards a lookup
+/// ([`at`](PchipTable::at)) is one floor-divide and an indexed load.
+/// `trace::resample::resample_trace` builds its grid through this and
+/// moves [`into_values`](PchipTable::into_values) into
+/// `ResampledTrace::level`, whose O(1) indexed lookups the fleet
+/// kernels then ride per poll.
+#[derive(Clone, Debug)]
+pub struct PchipTable {
+    pub t0: f64,
+    pub dt: f64,
+    values: Vec<f64>,
+}
+
+impl PchipTable {
+    /// Evaluate `p` on the uniform grid `(t0, dt, n)` once — a sorted
+    /// batch, so it goes through [`Pchip::eval_many`]'s single forward
+    /// cursor.
+    pub fn build(p: &Pchip, t0: f64, dt: f64, n: usize) -> PchipTable {
+        let ts: Vec<f64> = (0..n).map(|i| t0 + dt * i as f64).collect();
+        PchipTable {
+            t0,
+            dt,
+            values: p.eval_many(&ts),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Consume the table, keeping only the grid values.
+    pub fn into_values(self) -> Vec<f64> {
+        self.values
+    }
+
+    /// O(1) floor-cell lookup, clamped to the grid range.
+    #[inline]
+    pub fn at(&self, t: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let i = (((t - self.t0) / self.dt).floor() as i64)
+            .clamp(0, self.values.len() as i64 - 1) as usize;
+        self.values[i]
     }
 }
 
@@ -252,5 +370,80 @@ mod tests {
         assert_eq!(out.len(), 5);
         assert!((out[2] - 5.0).abs() < 1e-9);
         assert!((out[4] - 10.0).abs() < 1e-9);
+    }
+
+    fn wiggly() -> Pchip {
+        Pchip::new(
+            vec![0.0, 1.0, 2.5, 4.0, 7.0, 9.5, 12.0],
+            vec![1.0, 3.0, 2.0, 2.0, 9.0, 4.0, 6.5],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn eval_monotone_bit_identical_to_eval() {
+        let p = wiggly();
+        let mut cur = PchipCursor::default();
+        for i in 0..=1300 {
+            let t = -0.5 + i as f64 * 0.01; // sorted sweep incl. clamps
+            assert_eq!(
+                p.eval_monotone(t, &mut cur).to_bits(),
+                p.eval(t).to_bits(),
+                "t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn cursor_survives_backward_jumps_and_reset() {
+        let p = wiggly();
+        let mut cur = PchipCursor::default();
+        // walk the cursor to the far end…
+        assert_eq!(p.eval_monotone(11.0, &mut cur).to_bits(), p.eval(11.0).to_bits());
+        // …then jump backwards: must fall back to search, stay exact
+        for t in [0.3, 5.5, 1.7, 8.0, 0.1] {
+            assert_eq!(
+                p.eval_monotone(t, &mut cur).to_bits(),
+                p.eval(t).to_bits(),
+                "t={t}"
+            );
+        }
+        // a fresh cursor re-evaluates from segment 0 identically
+        let mut fresh = PchipCursor::default();
+        assert_eq!(
+            p.eval_monotone(6.0, &mut fresh).to_bits(),
+            p.eval(6.0).to_bits()
+        );
+    }
+
+    #[test]
+    fn eval_many_matches_per_point_eval_and_clamps() {
+        let p = wiggly();
+        let ts: Vec<f64> =
+            (0..200).map(|i| -1.0 + i as f64 * 0.08).collect();
+        let batch = p.eval_many(&ts);
+        assert_eq!(batch.len(), ts.len());
+        for (t, got) in ts.iter().zip(&batch) {
+            assert_eq!(got.to_bits(), p.eval(*t).to_bits(), "t={t}");
+        }
+        // out-of-range clamps flat on both ends
+        let ends = p.eval_many(&[-100.0, 1e9]);
+        assert_eq!(ends[0], 1.0);
+        assert_eq!(ends[1], 6.5);
+    }
+
+    #[test]
+    fn table_matches_resample_and_clamps() {
+        let p = wiggly();
+        let table = PchipTable::build(&p, 0.0, 0.5, 25);
+        assert_eq!(table.len(), 25);
+        assert!(!table.is_empty());
+        let direct = p.resample(0.0, 0.5, 25);
+        assert_eq!(table.values(), &direct[..]);
+        // floor-cell lookups, clamped outside the grid
+        assert_eq!(table.at(0.6).to_bits(), direct[1].to_bits());
+        assert_eq!(table.at(-5.0).to_bits(), direct[0].to_bits());
+        assert_eq!(table.at(1e6).to_bits(), direct[24].to_bits());
+        assert_eq!(table.into_values(), direct);
     }
 }

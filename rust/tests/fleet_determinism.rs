@@ -1,10 +1,15 @@
-//! Integration: the fleet kernel's determinism contract — the same
+//! Integration: the fleet kernels' determinism contract — the same
 //! `ScenarioSpec` must produce bit-identical aggregate metrics at every
-//! shard count — plus `FlSim`'s systems-only path riding the same
-//! kernel. No artifacts required.
+//! shard count, on BOTH kernels (the PR 1 `ShardedEventLoop` reference
+//! and the PR 2 SoA kernel), with the reference as the golden oracle —
+//! plus `FlSim`'s systems-only path riding the generic kernel. No
+//! artifacts required.
 
 use swan::fl::{FlArm, FlConfig, FlOutcome, FlSim};
-use swan::fleet::{run_scenario, ScenarioSpec};
+use swan::fleet::{
+    run_scenario, run_scenario_reference, ScenarioSpec, SoaFleet,
+    KERNEL_EVENT_LOOP, KERNEL_SOA,
+};
 use swan::train::data::SyntheticDataset;
 use swan::workload::{load_or_builtin, WorkloadName};
 
@@ -46,6 +51,78 @@ fn scenario_repeat_run_identical() {
     let a = run_scenario(&spec, 4, FlArm::Baseline).unwrap();
     let b = run_scenario(&spec, 4, FlArm::Baseline).unwrap();
     assert_eq!(a.digest(), b.digest(), "same spec must replay exactly");
+}
+
+#[test]
+fn golden_aggregates_at_1_2_3_7_16_shards_and_kernel_parity() {
+    // the golden aggregate is the 1-shard PR 1 reference-kernel run;
+    // every shard count, on either kernel, must reproduce it bit-exactly
+    let spec = spec();
+    let golden = run_scenario_reference(&spec, 1, FlArm::Swan).unwrap();
+    assert_eq!(golden.kernel, KERNEL_EVENT_LOOP);
+    assert!(golden.participations > 0, "degenerate golden run");
+    for shards in [1usize, 2, 3, 7, 16] {
+        let soa = run_scenario(&spec, shards, FlArm::Swan).unwrap();
+        assert_eq!(soa.kernel, KERNEL_SOA);
+        assert_eq!(
+            soa.digest(),
+            golden.digest(),
+            "soa kernel diverged from golden at {shards} shards"
+        );
+        assert_eq!(soa.online_per_round, golden.online_per_round);
+        assert_eq!(
+            soa.total_time_s.to_bits(),
+            golden.total_time_s.to_bits()
+        );
+        assert_eq!(
+            soa.total_energy_j.to_bits(),
+            golden.total_energy_j.to_bits()
+        );
+        assert_eq!(soa.total_steps, golden.total_steps);
+        assert_eq!(soa.participations, golden.participations);
+    }
+    // …and the reference kernel agrees with itself when resharded
+    for shards in [3usize, 16] {
+        let reference =
+            run_scenario_reference(&spec, shards, FlArm::Swan).unwrap();
+        assert_eq!(
+            reference.digest(),
+            golden.digest(),
+            "reference kernel diverged from golden at {shards} shards"
+        );
+    }
+}
+
+#[test]
+fn soa_reassembly_matches_pr1_reassembly_order() {
+    // the PR 1 reassembly (ShardedEventLoop::into_nodes) and the SoA
+    // teardown (SoaFleet::into_devices) must restore the same global
+    // order from the same population
+    let spec = ScenarioSpec {
+        name: "parity".to_string(),
+        devices: 41,
+        trace_users: 2,
+        ..ScenarioSpec::default()
+    };
+    let via_engine = swan::fleet::ShardedEventLoop::new(
+        spec.build_fleet().unwrap(),
+        5,
+    )
+    .into_nodes()
+    .unwrap();
+    let via_soa = SoaFleet::new(spec.build_fleet().unwrap(), 5)
+        .into_devices()
+        .unwrap();
+    assert_eq!(via_engine.len(), via_soa.len());
+    for (a, b) in via_engine.iter().zip(&via_soa) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.shift_s.to_bits(), b.shift_s.to_bits());
+    }
+    for (i, d) in via_soa.iter().enumerate() {
+        assert_eq!(d.id, i, "global order must be restored");
+    }
 }
 
 fn fl_outcome_bits(o: &FlOutcome) -> (u64, u64, usize, Vec<(usize, usize)>) {
