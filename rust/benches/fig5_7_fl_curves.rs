@@ -128,7 +128,9 @@ fn main() {
             };
             let mut sim2 =
                 FlSim::new(horizon_cfg, arm, ds2, &workload).unwrap();
-            let out2 = sim2.run_systems_only(4000);
+            let out2 = sim2
+                .run_systems_only(4000)
+                .expect("systems-only horizon run");
             let mut online2 = String::from("round,online\n");
             for (r, n) in &out2.online_per_round {
                 online2.push_str(&format!("{r},{n}\n"));

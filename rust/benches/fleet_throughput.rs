@@ -6,7 +6,9 @@
 //! digest, or the harness (and this bench) fails. Emits the
 //! `BENCH_fleet.json` perf-trajectory record and a machine-parseable
 //! `BENCH_fleet {…}` one-liner. Pass `--small` for the 2k-device smoke
-//! scenario (the CI bench-smoke job's configuration).
+//! scenario (the CI bench-smoke job's configuration), or `--million`
+//! for the standing million-device SoA tier (reference kernel skipped —
+//! at that scale it is the bottleneck being measured around).
 
 use swan::fl::FlArm;
 use swan::fleet::{run_fleet_bench, run_scenario, ScenarioSpec};
@@ -16,7 +18,14 @@ use swan::util::bench::{BenchSet, Measurement};
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let small = args.iter().any(|a| a == "--small");
-    let key = if small { "smoke" } else { "city" };
+    let million = args.iter().any(|a| a == "--million");
+    let key = if million {
+        "million"
+    } else if small {
+        "smoke"
+    } else {
+        "city"
+    };
     let spec = ScenarioSpec::builtin(key).expect("builtin scenario");
     println!(
         "fleet_throughput: scenario '{}' — {} devices × {} rounds, \
@@ -24,9 +33,11 @@ fn main() {
         spec.name, spec.devices, spec.rounds, spec.clients_per_round
     );
 
-    let shard_counts = [1usize, 2, 4, 8];
-    let report = run_fleet_bench(&spec, &shard_counts, FlArm::Swan, true)
-        .expect("fleet bench (fails on determinism violation)");
+    let shard_counts: &[usize] =
+        if million { &[4, 8] } else { &[1, 2, 4, 8] };
+    let report =
+        run_fleet_bench(&spec, shard_counts, FlArm::Swan, !million)
+            .expect("fleet bench (fails on determinism violation)");
 
     let mut set = BenchSet::new("fleet_throughput");
     for out in report.reference.iter().chain(report.soa.iter()) {
@@ -56,8 +67,13 @@ fn main() {
     if let Some(ratio) = report.speedup_best() {
         println!("speedup best-vs-best: {ratio:.2}x");
     }
+    let kernels = if million {
+        "{soa}"
+    } else {
+        "{event_loop, soa}"
+    };
     println!(
-        "determinism: kernels {{event_loop, soa}} × shards {shard_counts:?} \
+        "determinism: kernels {kernels} × shards {shard_counts:?} \
          all produced digest {}",
         report.digest
     );

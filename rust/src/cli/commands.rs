@@ -7,7 +7,9 @@
 //! swan pcmark  [--artifacts artifacts]
 //! swan fl      --model shufflenet_s --rounds 20 --clients 3
 //! swan fleet   --scenario city --shards 8 --arm both
+//! swan serve   --port 7077 --scenario smoke --workers 4
 //! swan bench   fleet --scenario city --shards 1,2,4,8 --json
+//! swan bench   serve --scenario smoke --lanes 4 --json
 //! swan traces  --users 4
 //! swan report  table2|table3|fig1|fig2|fig3|fleet
 //! ```
@@ -48,6 +50,7 @@ pub fn run_main() -> crate::Result<()> {
         "pcmark" => cmd_pcmark(),
         "fl" => cmd_fl(&rest),
         "fleet" => cmd_fleet(&rest),
+        "serve" => cmd_serve(&rest),
         "bench" => cmd_bench(&rest),
         "traces" => cmd_traces(&rest),
         "report" => cmd_report(&rest),
@@ -73,7 +76,8 @@ fn print_help() {
          \x20 pcmark    Fig-3/Table-3 user-experience evaluation\n\
          \x20 fl        federated-learning simulation (§5.3)\n\
          \x20 fleet     sharded fleet simulation (100k–1M devices)\n\
-         \x20 bench     throughput harnesses (bench fleet emits BENCH_fleet.json)\n\
+         \x20 serve     run the FL coordinator control plane on TCP\n\
+         \x20 bench     throughput harnesses (BENCH_fleet.json / BENCH_serve.json)\n\
          \x20 traces    generate + preprocess GreenHub-style traces\n\
          \x20 report    regenerate a paper table/figure\n"
     );
@@ -279,25 +283,7 @@ fn cmd_fleet(rest: &[String]) -> crate::Result<()> {
         opt("arm", "swan|baseline|both", Some("both")),
     ];
     let args = parse_args(rest, &specs)?;
-    let mut spec = match args.get("file") {
-        Some(path) => crate::fleet::ScenarioSpec::load(path)?,
-        None => {
-            let key = args.get_str("scenario", "smoke");
-            crate::fleet::ScenarioSpec::builtin(&key).ok_or_else(|| {
-                crate::err!(
-                    "unknown scenario '{key}' (smoke|city|metro|million)"
-                )
-            })?
-        }
-    };
-    let devices = args.get_usize("devices", 0)?;
-    if devices > 0 {
-        spec.devices = devices;
-    }
-    let rounds = args.get_usize("rounds", 0)?;
-    if rounds > 0 {
-        spec.rounds = rounds;
-    }
+    let spec = scenario_arg(&args, "smoke")?;
     let mut shards = args.get_usize("shards", 4)?;
     if shards == 0 {
         shards = std::thread::available_parallelism()
@@ -339,6 +325,81 @@ fn cmd_fleet(rest: &[String]) -> crate::Result<()> {
     Ok(())
 }
 
+/// Load a scenario from `--file` or a builtin key, with the shared
+/// `--devices`/`--rounds` overrides applied.
+fn scenario_arg(
+    args: &Args,
+    default_builtin: &str,
+) -> crate::Result<crate::fleet::ScenarioSpec> {
+    let mut spec = match args.get("file") {
+        Some(path) => crate::fleet::ScenarioSpec::load(path)?,
+        None => {
+            let key = args.get_str("scenario", default_builtin);
+            crate::fleet::ScenarioSpec::builtin(&key).ok_or_else(|| {
+                crate::err!(
+                    "unknown scenario '{key}' (smoke|city|metro|million)"
+                )
+            })?
+        }
+    };
+    let devices = args.get_usize("devices", 0)?;
+    if devices > 0 {
+        spec.devices = devices;
+    }
+    let rounds = args.get_usize("rounds", 0)?;
+    if rounds > 0 {
+        spec.rounds = rounds;
+    }
+    Ok(spec)
+}
+
+fn cmd_serve(rest: &[String]) -> crate::Result<()> {
+    // no --devices/--rounds here: the coordinator serves whatever
+    // fleet connects — only the scenario's seed/K/overhead/workload
+    // shape its config
+    let specs = [
+        opt("scenario", "builtin scenario shaping the coordinator config", Some("smoke")),
+        opt("file", "load a ScenarioSpec JSON instead of a builtin", None),
+        opt("host", "bind address", Some("127.0.0.1")),
+        opt("port", "bind port (0 = ephemeral)", Some("7077")),
+        opt("workers", "IO worker threads (= max concurrent connections)", Some("4")),
+        opt("batch", "check-in coalescing batch size", Some("256")),
+        opt("cap", "per-round admission bound (0 = unbounded)", Some("0")),
+        opt("cache", "LRU profile-cache capacity (contexts)", Some("64")),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let spec = scenario_arg(&args, "smoke")?;
+    let mut cfg = crate::serve::ServeConfig::for_scenario(&spec);
+    cfg.batch_size = args.get_usize("batch", 256)?.max(1);
+    cfg.admit_capacity = args.get_usize("cap", 0)?;
+    cfg.cache_capacity = args.get_usize("cache", 64)?;
+    let workers = args.get_usize("workers", 4)?.max(1);
+    let bind = format!(
+        "{}:{}",
+        args.get_str("host", "127.0.0.1"),
+        args.get_usize("port", 7077)?
+    );
+    let coord =
+        std::sync::Arc::new(crate::serve::Coordinator::new(cfg.clone())?);
+    let handle = crate::serve::serve_tcp(coord, &bind, workers)?;
+    println!(
+        "serve: coordinator for scenario '{}' listening on {} \
+         ({workers} workers, batch {}, cap {}, cache {})",
+        spec.name,
+        handle.addr,
+        cfg.batch_size,
+        cfg.admit_capacity,
+        cfg.cache_capacity
+    );
+    println!(
+        "serve: drive it with `swan bench serve --scenario {}` or any \
+         wire-format client; ctrl-c to stop",
+        spec.name
+    );
+    handle.wait();
+    Ok(())
+}
+
 fn cmd_bench(rest: &[String]) -> crate::Result<()> {
     let (what, rest) = match rest.split_first() {
         Some((w, r)) => (w.as_str(), r.to_vec()),
@@ -346,8 +407,87 @@ fn cmd_bench(rest: &[String]) -> crate::Result<()> {
     };
     match what {
         "fleet" => cmd_bench_fleet(&rest),
-        other => crate::bail!("unknown bench '{other}' (fleet)"),
+        "serve" => cmd_bench_serve(&rest),
+        other => crate::bail!("unknown bench '{other}' (fleet|serve)"),
     }
+}
+
+fn cmd_bench_serve(rest: &[String]) -> crate::Result<()> {
+    let specs = [
+        opt("scenario", "builtin scenario (smoke|city|metro|million)", Some("smoke")),
+        opt("file", "load a ScenarioSpec JSON instead of a builtin", None),
+        opt("devices", "override device count (0 = scenario value)", Some("0")),
+        opt("rounds", "override round count (0 = scenario value)", Some("0")),
+        opt("lanes", "load-generator lanes (threads + TCP connections)", Some("4")),
+        opt("cap", "admission bound (0 = unbounded + oracle parity check)", Some("0")),
+        opt("out", "record path, implies --json (default BENCH_serve.json)", None),
+        OptSpec {
+            name: "json",
+            help: "write the BENCH_serve.json record to --out",
+            default: None,
+            is_switch: true,
+        },
+        OptSpec {
+            name: "no-tcp",
+            help: "skip the loopback-TCP path (in-process + oracle only)",
+            default: None,
+            is_switch: true,
+        },
+    ];
+    let args = parse_args(rest, &specs)?;
+    let spec = scenario_arg(&args, "smoke")?;
+    let lanes = args.get_usize("lanes", 4)?.max(1);
+    let cap = args.get_usize("cap", 0)?;
+
+    println!("bench serve: scenario {:#}", spec.to_json());
+    let report = crate::fleet::run_serve_bench(
+        &spec,
+        lanes,
+        !args.has("no-tcp"),
+        cap,
+    )?;
+    report::serve_table(&report.runs()).emit()?;
+    for run in report.runs() {
+        let lat = crate::util::bench::Measurement::from_samples(
+            &format!("{}_checkin_latency", run.transport),
+            run.latency_samples.clone(),
+        );
+        println!(
+            "{:9} check-in latency: p50 {}, p90 {} over {} burst samples",
+            run.transport,
+            crate::util::bench::fmt_secs(lat.p50()),
+            crate::util::bench::fmt_secs(lat.p90()),
+            lat.samples.len()
+        );
+    }
+    match &report.oracle_digest {
+        Some(d) => println!(
+            "parity: {} run(s) reproduced the fl::server oracle digest {d}",
+            report.runs().len()
+        ),
+        None => println!(
+            "parity: oracle skipped (bounded admission, cap {cap})"
+        ),
+    }
+    println!(
+        "cache: {:.1}% hit rate, {} exploration(s), {} eviction(s)",
+        100.0 * report.cache_hit_rate(),
+        report.stats.cache_misses,
+        report.stats.cache_evictions
+    );
+    if report.inproc.deferred > 0 {
+        println!(
+            "backpressure: {} deferral(s), rate {:.3}",
+            report.inproc.deferred,
+            report.inproc.deferral_rate()
+        );
+    }
+    println!("{}", report.one_line());
+    if args.has("json") || args.get("out").is_some() {
+        let path = report.write_json(args.get_str("out", "BENCH_serve.json"))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
 }
 
 fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
@@ -371,27 +511,15 @@ fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
             default: None,
             is_switch: true,
         },
+        OptSpec {
+            name: "reference",
+            help: "force reference-kernel runs even at metro/million scale",
+            default: None,
+            is_switch: true,
+        },
     ];
     let args = parse_args(rest, &specs)?;
-    let mut spec = match args.get("file") {
-        Some(path) => crate::fleet::ScenarioSpec::load(path)?,
-        None => {
-            let key = args.get_str("scenario", "city");
-            crate::fleet::ScenarioSpec::builtin(&key).ok_or_else(|| {
-                crate::err!(
-                    "unknown scenario '{key}' (smoke|city|metro|million)"
-                )
-            })?
-        }
-    };
-    let devices = args.get_usize("devices", 0)?;
-    if devices > 0 {
-        spec.devices = devices;
-    }
-    let rounds = args.get_usize("rounds", 0)?;
-    if rounds > 0 {
-        spec.rounds = rounds;
-    }
+    let spec = scenario_arg(&args, "city")?;
     let shards_arg = args.get_str("shards", "1,2,4,8");
     let mut shard_counts = Vec::new();
     for tok in shards_arg.split(',') {
@@ -407,12 +535,24 @@ fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
         other => crate::bail!("unknown --arm '{other}' (swan|baseline)"),
     };
 
+    // metro/million are standing SoA bench tiers: at that scale the
+    // PR 1 reference kernel is the bottleneck being measured around, so
+    // it defaults off (--reference forces it, --no-reference still
+    // forces it off for custom specs)
+    let with_reference = if args.has("reference") {
+        true
+    } else if args.has("no-reference") {
+        false
+    } else {
+        !matches!(spec.name.as_str(), "metro" | "million")
+    };
+
     println!("bench fleet: scenario {:#}", spec.to_json());
     let report = crate::fleet::run_fleet_bench(
         &spec,
         &shard_counts,
         arm,
-        !args.has("no-reference"),
+        with_reference,
     )?;
     let outcomes: Vec<crate::fleet::FleetOutcome> = report
         .reference

@@ -228,8 +228,8 @@ impl FlSim {
     /// participation depends only on device, policy and epoch size) —
     /// this is how Figs 5b/6b/7b's week-scale decline is reproduced
     /// without paying week-scale compute. Runs on the fleet kernel
-    /// (single shard).
-    pub fn run_systems_only(&mut self, rounds: usize) -> FlOutcome {
+    /// (single shard). A dead kernel shard surfaces as `Err`.
+    pub fn run_systems_only(&mut self, rounds: usize) -> Result<FlOutcome> {
         self.run_systems_only_sharded(rounds, 1)
     }
 
@@ -240,7 +240,7 @@ impl FlSim {
         &mut self,
         rounds: usize,
         n_shards: usize,
-    ) -> FlOutcome {
+    ) -> Result<FlOutcome> {
         struct TablePolicy<'a> {
             table: &'a PolicyTable,
             arm: FlArm,
@@ -277,18 +277,20 @@ impl FlSim {
             table: &self.policy,
             arm: self.arm,
         };
-        let out = engine.drive(&mut policy, &cfg);
-        self.clients = engine
-            .into_nodes()
-            .expect("fleet kernel must return the full client population");
-        FlOutcome {
+        let drive_result = engine.drive(&mut policy, &cfg);
+        // recover the clients before reporting a drive error, so a
+        // failed run doesn't also strand the simulator with an empty
+        // population
+        self.clients = engine.into_nodes()?;
+        let out = drive_result?;
+        Ok(FlOutcome {
             arm: self.arm.name(),
             online_per_round: out.online_per_round,
             total_energy_j: out.total_energy_j,
             total_time_s: out.total_time_s,
             rounds_run: out.rounds_run,
             ..Default::default()
-        }
+        })
     }
 
     /// Run the configured number of rounds with real numerics through

@@ -1,17 +1,31 @@
-//! The fleet throughput harness behind `swan bench fleet` and
-//! `benches/fleet_throughput.rs`.
+//! The fleet bench harnesses behind `swan bench fleet`, `swan bench
+//! serve` and `benches/fleet_throughput.rs`.
 //!
-//! One entry point runs a scenario through both kernels — the PR 1
+//! [`run_fleet_bench`] runs a scenario through both kernels — the PR 1
 //! reference [`ShardedEventLoop`](super::engine::ShardedEventLoop) and
 //! the SoA kernel ([`SoaFleet`](super::soa::SoaFleet)) — across a list
 //! of shard counts, *errors* unless every run produced the same
 //! aggregate digest (the cross-kernel determinism contract), and
 //! renders the result as the `BENCH_fleet.json` record that tracks the
 //! perf trajectory from PR 2 onward.
+//!
+//! [`run_serve_bench`] is the `serve` load-generator mode: the same
+//! scenario fleet pointed at the coordinator control plane, first
+//! in-process and then (optionally) over loopback TCP, with a
+//! machinery-free oracle replay as the parity reference. Any digest
+//! divergence between oracle, in-process and TCP runs is an *error*,
+//! and the result lands in `BENCH_serve.json` — check-ins/sec, p90
+//! check-in latency and the deferral rate, the first bench in the repo
+//! denominated in requests served rather than devices stepped.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::fl::FlArm;
+use crate::serve::{
+    run_inproc, run_oracle, run_tcp, serve_tcp, Coordinator, ServeConfig,
+    ServeRunOutcome, ServeStats,
+};
 use crate::util::json::Value;
 
 use super::engine::{run_scenario, run_scenario_reference};
@@ -172,6 +186,179 @@ impl FleetBenchReport {
     }
 }
 
+/// Everything one serve-bench invocation produced.
+#[derive(Clone, Debug)]
+pub struct ServeBenchReport {
+    pub spec: ScenarioSpec,
+    pub lanes: usize,
+    /// The oracle replay's digest (None when bounded admission makes
+    /// the oracle inapplicable — deferral order is transport-defined).
+    pub oracle_digest: Option<String>,
+    pub inproc: ServeRunOutcome,
+    pub tcp: Option<ServeRunOutcome>,
+    /// Coordinator-side cache/admission counters from the in-process
+    /// run.
+    pub stats: ServeStats,
+}
+
+/// Drive `spec`'s fleet through the serve control plane with `lanes`
+/// load-generator threads (and connections, on the TCP path).
+///
+/// With unbounded admission (`admit_capacity == 0`) every path must
+/// reproduce the oracle digest — "bit-identical round aggregates vs
+/// `fl::server`" is asserted here, not sampled. A nonzero
+/// `admit_capacity` instead measures overload behaviour (deferral
+/// rate); the oracle check is skipped because which check-ins overflow
+/// a bounded queue is arrival-order-defined, but the TCP-vs-in-process
+/// comparison of *counts* still runs.
+pub fn run_serve_bench(
+    spec: &ScenarioSpec,
+    lanes: usize,
+    with_tcp: bool,
+    admit_capacity: usize,
+) -> crate::Result<ServeBenchReport> {
+    let lanes = lanes.max(1);
+    let mut cfg = ServeConfig::for_scenario(spec);
+    cfg.admit_capacity = admit_capacity;
+
+    let oracle = if admit_capacity == 0 {
+        Some(run_oracle(spec, &cfg)?)
+    } else {
+        None
+    };
+
+    let (inproc, coord) = run_inproc(spec, lanes, &cfg)?;
+    if let Some(o) = &oracle {
+        crate::ensure!(
+            inproc.digest == o.digest,
+            "serve parity violated: in-process path produced {} but the \
+             fl::server oracle produced {}",
+            inproc.digest,
+            o.digest
+        );
+        crate::ensure!(
+            inproc.participations == o.participations,
+            "serve parity violated: {} participations vs oracle {}",
+            inproc.participations,
+            o.participations
+        );
+    }
+    let stats = coord.stats();
+
+    let tcp = if with_tcp {
+        let tcp_coord = Arc::new(Coordinator::new(cfg.clone())?);
+        let handle = serve_tcp(tcp_coord, "127.0.0.1:0", lanes)?;
+        let addr = handle.addr;
+        let out = run_tcp(spec, lanes, addr, cfg.update_dim);
+        // clients are dropped by now (run_tcp owns them), so the pool
+        // drains and the join below cannot hang — even on error
+        handle.shutdown();
+        let out = out?;
+        if admit_capacity == 0 {
+            crate::ensure!(
+                out.digest == inproc.digest,
+                "serve parity violated: loopback-TCP digest {} vs \
+                 in-process {}",
+                out.digest,
+                inproc.digest
+            );
+        } else {
+            // bounded admission: WHICH check-ins overflow the queue is
+            // arrival-order-defined, so transports legitimately diverge
+            // — only the round structure is comparable
+            crate::ensure!(
+                out.rounds_run == inproc.rounds_run,
+                "serve bench: TCP ran {} rounds vs in-process {}",
+                out.rounds_run,
+                inproc.rounds_run
+            );
+        }
+        Some(out)
+    } else {
+        None
+    };
+
+    Ok(ServeBenchReport {
+        spec: spec.clone(),
+        lanes,
+        oracle_digest: oracle.map(|o| o.digest),
+        inproc,
+        tcp,
+        stats,
+    })
+}
+
+impl ServeBenchReport {
+    /// Every load-generator run this bench performed (in-process
+    /// first, then loopback TCP when it ran).
+    pub fn runs(&self) -> Vec<&ServeRunOutcome> {
+        let mut v = vec![&self.inproc];
+        if let Some(t) = &self.tcp {
+            v.push(t);
+        }
+        v
+    }
+
+    /// Profile-cache hit rate across the in-process run.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.stats.cache_hits + self.stats.cache_misses;
+        if total > 0 {
+            self.stats.cache_hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// The `BENCH_serve.json` record (schema documented in the
+    /// README's serve section).
+    pub fn to_json(&self) -> Value {
+        let runs: Vec<Value> =
+            self.runs().iter().map(|o| o.to_json()).collect();
+        Value::obj()
+            .set("bench", "serve")
+            .set("schema_version", 1usize)
+            .set("scenario", self.spec.to_json())
+            .set("lanes", self.lanes)
+            .set("digest", self.inproc.digest.clone())
+            .set(
+                "oracle_digest",
+                match &self.oracle_digest {
+                    Some(d) => Value::Str(d.clone()),
+                    None => Value::Null,
+                },
+            )
+            .set("checkins_per_sec", self.inproc.checkins_per_sec())
+            .set(
+                "tcp_checkins_per_sec",
+                match &self.tcp {
+                    Some(t) => Value::Num(t.checkins_per_sec()),
+                    None => Value::Null,
+                },
+            )
+            .set(
+                "p90_checkin_latency_s",
+                self.inproc.p90_checkin_latency_s(),
+            )
+            .set("deferral_rate", self.inproc.deferral_rate())
+            .set("cache_hit_rate", self.cache_hit_rate())
+            .set("cache_evictions", self.stats.cache_evictions as f64)
+            .set("runs", Value::Arr(runs))
+    }
+
+    /// Machine-parseable single line (`BENCH_serve {…}`).
+    pub fn one_line(&self) -> String {
+        format!("BENCH_serve {}", self.to_json())
+    }
+
+    /// Write the pretty record to `path` (conventionally
+    /// `BENCH_serve.json` at the repo root).
+    pub fn write_json(&self, path: impl AsRef<Path>) -> crate::Result<PathBuf> {
+        let path = path.as_ref().to_path_buf();
+        std::fs::write(&path, format!("{:#}\n", self.to_json()))?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,5 +411,40 @@ mod tests {
     #[test]
     fn empty_shard_list_is_an_error() {
         assert!(run_fleet_bench(&spec(), &[], FlArm::Swan, true).is_err());
+    }
+
+    #[test]
+    fn serve_bench_asserts_parity_and_renders_json() {
+        let rep = run_serve_bench(&spec(), 2, false, 0).unwrap();
+        assert!(rep.oracle_digest.is_some());
+        assert_eq!(
+            rep.oracle_digest.as_deref(),
+            Some(rep.inproc.digest.as_str())
+        );
+        assert!(rep.tcp.is_none());
+        assert!(rep.inproc.participations > 0);
+        assert!(rep.cache_hit_rate() > 0.5, "contexts repeat every round");
+        let v = rep.to_json();
+        assert_eq!(v.req_str("bench").unwrap(), "serve");
+        assert_eq!(v.req_str("digest").unwrap(), rep.inproc.digest);
+        assert_eq!(v.req_arr("runs").unwrap().len(), 1);
+        assert!(v.req_f64("checkins_per_sec").unwrap() >= 0.0);
+        assert_eq!(v.req_f64("deferral_rate").unwrap(), 0.0);
+        let line = rep.one_line();
+        assert!(!line.trim().contains('\n'));
+        let payload = line.strip_prefix("BENCH_serve ").unwrap();
+        assert!(crate::util::json::parse(payload).is_ok());
+    }
+
+    #[test]
+    fn serve_bench_bounded_admission_reports_deferrals() {
+        let rep = run_serve_bench(&spec(), 1, false, 4).unwrap();
+        assert!(rep.oracle_digest.is_none(), "oracle skipped when bounded");
+        assert!(rep.inproc.deferred > 0);
+        assert!(rep.inproc.deferral_rate() > 0.0);
+        assert!(matches!(
+            rep.to_json().req("oracle_digest").unwrap(),
+            Value::Null
+        ));
     }
 }

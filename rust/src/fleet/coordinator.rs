@@ -10,7 +10,7 @@
 //! reports how many devices adopted per exploration.
 
 use crate::fl::FlArm;
-use crate::soc::device::{device, DeviceId};
+use crate::soc::device::{device, Device, DeviceId};
 use crate::soc::exec_model::{estimate, ExecutionContext};
 use crate::swan::choice::enumerate_choices;
 use crate::swan::profile::ChoiceProfile;
@@ -19,6 +19,31 @@ use crate::workload::Workload;
 
 /// Benchmark steps per choice during exploration (§4.2 request minimum).
 pub const EXPLORE_STEPS: usize = 5;
+
+/// Benchmark the full §4.2 choice space of one device on one workload —
+/// THE exploration pipeline (enumerate → estimate per choice), shared
+/// by the fleet [`ProfileCoordinator`] and the serve profile cache
+/// (`serve::cache::plan_cost`) so their chain economics can never
+/// silently diverge. Profiles come back in enumeration order, unpruned.
+pub fn explore_profiles(
+    workload: &Workload,
+    d: &Device,
+) -> Vec<ChoiceProfile> {
+    let ctx = ExecutionContext::exclusive(d.n_cores());
+    enumerate_choices(d)
+        .into_iter()
+        .map(|ch| {
+            let est = estimate(d, workload, &ch.cores, &ctx);
+            ChoiceProfile {
+                choice: ch,
+                latency_s: est.latency_s,
+                energy_j: est.energy_j,
+                power_w: est.avg_power_w,
+                steps_measured: EXPLORE_STEPS,
+            }
+        })
+        .collect()
+}
 
 /// Per-step cost of one device model under one policy arm.
 #[derive(Clone, Copy, Debug, Default)]
@@ -89,24 +114,17 @@ impl ProfileCoordinator {
 
     fn explore(workload: &Workload, model: DeviceId, requester: usize) -> ModelProfile {
         let d = device(model);
-        let ctx = ExecutionContext::exclusive(d.n_cores());
+        let profiles = explore_profiles(workload, &d);
+        // the explorer device pays for every benchmarked choice, in
+        // enumeration order (the same accumulation order as before the
+        // shared-pipeline extraction, so billing stays bit-identical)
         let mut exploration_time_s = 0.0;
         let mut exploration_energy_j = 0.0;
-        let profiles: Vec<ChoiceProfile> = enumerate_choices(&d)
-            .into_iter()
-            .map(|ch| {
-                let est = estimate(&d, workload, &ch.cores, &ctx);
-                exploration_time_s += est.latency_s * EXPLORE_STEPS as f64;
-                exploration_energy_j += est.energy_j * EXPLORE_STEPS as f64;
-                ChoiceProfile {
-                    choice: ch,
-                    latency_s: est.latency_s,
-                    energy_j: est.energy_j,
-                    power_w: est.avg_power_w,
-                    steps_measured: EXPLORE_STEPS,
-                }
-            })
-            .collect();
+        for p in &profiles {
+            exploration_time_s += p.latency_s * EXPLORE_STEPS as f64;
+            exploration_energy_j += p.energy_j * EXPLORE_STEPS as f64;
+        }
+        let ctx = ExecutionContext::exclusive(d.n_cores());
         let greedy_est =
             estimate(&d, workload, &d.low_latency_cores(), &ctx);
         ModelProfile {

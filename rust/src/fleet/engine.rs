@@ -46,8 +46,9 @@ use super::metrics::FleetOutcome;
 use super::scenario::ScenarioSpec;
 
 /// Virtual wait when nobody is online (mirrors `fl::FlSim`), seconds.
-/// Shared with the SoA kernel so both advance the clock identically.
-pub(super) const EMPTY_ROUND_WAIT_S: f64 = 600.0;
+/// Shared with the SoA kernel (and the serve load generator) so all
+/// round drivers advance the clock identically.
+pub(crate) const EMPTY_ROUND_WAIT_S: f64 = 600.0;
 
 /// Round structure for one kernel run.
 #[derive(Clone, Debug)]
@@ -62,8 +63,9 @@ pub struct DriveConfig {
 
 /// Selection RNG for one round — a function of (seed, round) only, so
 /// resharding can never perturb who gets picked. Shared with the SoA
-/// kernel so both kernels pick identical participants.
-pub(super) fn round_rng(seed: u64, round: usize) -> Rng {
+/// kernel (and the serve coordinator/oracle) so every selection path
+/// picks identical participants.
+pub(crate) fn round_rng(seed: u64, round: usize) -> Rng {
     Rng::new(
         seed ^ 0x5EED_F1EE7
             ^ (round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -279,11 +281,16 @@ impl<N: FleetNode> ShardedEventLoop<N> {
     /// epoch → clock-advance loop (the scheduler both `fl::FlSim` and
     /// the fleet CLI share). See the module doc for the determinism
     /// contract.
+    ///
+    /// A dead shard worker (panicked, or its channel torn down) surfaces
+    /// as `Err` — the control thread stops the remaining shards, joins
+    /// every worker, and reports which side failed, instead of aborting
+    /// the whole coordinator through an `expect`.
     pub fn drive(
         &mut self,
         policy: &mut dyn FleetPolicy,
         cfg: &DriveConfig,
-    ) -> FleetOutcome {
+    ) -> crate::Result<FleetOutcome> {
         let wall0 = Instant::now();
         let shards = &mut self.shards;
         let models = &self.models;
@@ -298,22 +305,23 @@ impl<N: FleetNode> ShardedEventLoop<N> {
             ..Default::default()
         };
 
-        std::thread::scope(|scope| {
+        std::thread::scope(|scope| -> crate::Result<()> {
             // One reply channel per shard: a panicked worker drops its
-            // sender, so the control thread's recv fails immediately and
-            // the panic propagates through the scope instead of hanging.
+            // sender, so the control thread's recv fails immediately
+            // and the control loop below turns it into an error.
             let mut cmd_txs: Vec<Sender<ShardCmd>> =
                 Vec::with_capacity(n_shards);
             let mut reply_rxs: Vec<Receiver<ShardReply>> =
                 Vec::with_capacity(n_shards);
+            let mut handles = Vec::with_capacity(n_shards);
             for (si, shard) in shards.iter_mut().enumerate() {
                 let (tx, rx) = channel::<ShardCmd>();
                 let (reply_tx, reply_rx) = channel::<ShardReply>();
                 cmd_txs.push(tx);
                 reply_rxs.push(reply_rx);
-                scope.spawn(move || {
+                handles.push(scope.spawn(move || {
                     shard_worker(si, n_shards, shard, rx, reply_tx)
-                });
+                }));
             }
 
             let mut now_s = 0.0f64;
@@ -321,112 +329,164 @@ impl<N: FleetNode> ShardedEventLoop<N> {
             let mut total_steps = 0u64;
             let mut participations = 0u64;
 
-            for round in 0..cfg.rounds {
-                // 1. availability: every shard polls in parallel
-                for tx in &cmd_txs {
-                    tx.send(ShardCmd::Poll { now_s }).expect("shard alive");
-                }
-                let mut online_by_shard: Vec<Vec<u32>> =
-                    (0..n_shards).map(|_| Vec::new()).collect();
-                for (sid, reply_rx) in reply_rxs.iter().enumerate() {
-                    match reply_rx.recv().expect("shard worker died") {
-                        ShardReply::Online { online } => {
-                            online_by_shard[sid] = online;
-                        }
-                        ShardReply::Stepped { .. } => {
-                            unreachable!("no step outstanding")
+            // The control loop proper, fallible: any send/recv against
+            // a dead shard breaks out with an error naming it.
+            let run = (|| -> crate::Result<()> {
+                for round in 0..cfg.rounds {
+                    // 1. availability: every shard polls in parallel
+                    for (sid, tx) in cmd_txs.iter().enumerate() {
+                        crate::ensure!(
+                            tx.send(ShardCmd::Poll { now_s }).is_ok(),
+                            "fleet shard {sid} hung up before round \
+                             {round}'s poll"
+                        );
+                    }
+                    let mut online_by_shard: Vec<Vec<u32>> =
+                        (0..n_shards).map(|_| Vec::new()).collect();
+                    for (sid, reply_rx) in reply_rxs.iter().enumerate() {
+                        match reply_rx.recv() {
+                            Ok(ShardReply::Online { online }) => {
+                                online_by_shard[sid] = online;
+                            }
+                            Ok(ShardReply::Stepped { .. }) => {
+                                crate::bail!(
+                                    "fleet shard {sid} answered round \
+                                     {round}'s poll with step results"
+                                )
+                            }
+                            Err(_) => crate::bail!(
+                                "fleet shard {sid} died during round \
+                                 {round}'s poll"
+                            ),
                         }
                     }
-                }
-                let mut online: Vec<usize> = online_by_shard
-                    .into_iter()
-                    .flatten()
-                    .map(|i| i as usize)
-                    .collect();
-                online.sort_unstable();
-                outcome.online_per_round.push((round, online.len()));
-                if online.is_empty() {
-                    now_s += EMPTY_ROUND_WAIT_S;
-                    continue;
-                }
-
-                // 2. selection: central, keyed on (seed, round) only
-                let mut rng = round_rng(cfg.seed, round);
-                let picked = select_uniform(
-                    &online,
-                    cfg.clients_per_round,
-                    &mut rng,
-                );
-
-                // 3. resolve policy costs centrally, in picked order
-                //    (§4.2 exploration billing is order-sensitive)
-                let mut jobs_by_shard: Vec<Vec<StepJob>> =
-                    (0..n_shards).map(|_| Vec::new()).collect();
-                for &gid in &picked {
-                    let rc = policy.step_cost(models[gid], gid);
-                    jobs_by_shard[gid % n_shards].push(StepJob {
-                        device: gid as u32,
-                        cost: rc.cost,
-                        extra_time_s: rc.exploration_time_s,
-                        extra_energy_j: rc.exploration_energy_j,
-                    });
-                }
-
-                // 4. parallel event-driven local epochs
-                let mut active: Vec<usize> = Vec::new();
-                for (sid, tx) in cmd_txs.iter().enumerate() {
-                    let jobs = std::mem::take(&mut jobs_by_shard[sid]);
-                    if jobs.is_empty() {
+                    let mut online: Vec<usize> = online_by_shard
+                        .into_iter()
+                        .flatten()
+                        .map(|i| i as usize)
+                        .collect();
+                    online.sort_unstable();
+                    outcome.online_per_round.push((round, online.len()));
+                    if online.is_empty() {
+                        now_s += EMPTY_ROUND_WAIT_S;
                         continue;
                     }
-                    active.push(sid);
-                    tx.send(ShardCmd::Step {
-                        now_s,
-                        round,
-                        jobs,
-                    })
-                    .expect("shard alive");
-                }
-                let mut results: HashMap<u32, StepResult> = HashMap::new();
-                for &sid in &active {
-                    match reply_rxs[sid].recv().expect("shard worker died") {
-                        ShardReply::Stepped { results: rs } => {
-                            for r in rs {
-                                results.insert(r.device, r);
-                            }
+
+                    // 2. selection: central, keyed on (seed, round) only
+                    let mut rng = round_rng(cfg.seed, round);
+                    let picked = select_uniform(
+                        &online,
+                        cfg.clients_per_round,
+                        &mut rng,
+                    );
+
+                    // 3. resolve policy costs centrally, in picked order
+                    //    (§4.2 exploration billing is order-sensitive)
+                    let mut jobs_by_shard: Vec<Vec<StepJob>> =
+                        (0..n_shards).map(|_| Vec::new()).collect();
+                    for &gid in &picked {
+                        let rc = policy.step_cost(models[gid], gid);
+                        jobs_by_shard[gid % n_shards].push(StepJob {
+                            device: gid as u32,
+                            cost: rc.cost,
+                            extra_time_s: rc.exploration_time_s,
+                            extra_energy_j: rc.exploration_energy_j,
+                        });
+                    }
+
+                    // 4. parallel event-driven local epochs
+                    let mut active: Vec<usize> = Vec::new();
+                    for (sid, tx) in cmd_txs.iter().enumerate() {
+                        let jobs = std::mem::take(&mut jobs_by_shard[sid]);
+                        if jobs.is_empty() {
+                            continue;
                         }
-                        ShardReply::Online { .. } => {
-                            unreachable!("no poll outstanding")
+                        active.push(sid);
+                        crate::ensure!(
+                            tx.send(ShardCmd::Step {
+                                now_s,
+                                round,
+                                jobs,
+                            })
+                            .is_ok(),
+                            "fleet shard {sid} hung up before round \
+                             {round}'s step"
+                        );
+                    }
+                    let mut results: HashMap<u32, StepResult> =
+                        HashMap::new();
+                    for &sid in &active {
+                        match reply_rxs[sid].recv() {
+                            Ok(ShardReply::Stepped { results: rs }) => {
+                                for r in rs {
+                                    results.insert(r.device, r);
+                                }
+                            }
+                            Ok(ShardReply::Online { .. }) => {
+                                crate::bail!(
+                                    "fleet shard {sid} answered round \
+                                     {round}'s step with a poll reply"
+                                )
+                            }
+                            Err(_) => crate::bail!(
+                                "fleet shard {sid} died during round \
+                                 {round}'s step"
+                            ),
                         }
                     }
-                }
 
-                // 5. fold in global picked order — a fixed reduction
-                //    order keeps aggregates bit-identical under any
-                //    sharding (synchronous FL: stragglers pace rounds)
-                let mut round_time = 0.0f64;
-                for &gid in &picked {
-                    let r = &results[&(gid as u32)];
-                    total_energy += r.energy_j;
-                    total_steps += r.steps as u64;
-                    participations += 1;
-                    round_time = round_time.max(r.time_s);
+                    // 5. fold in global picked order — a fixed reduction
+                    //    order keeps aggregates bit-identical under any
+                    //    sharding (synchronous FL: stragglers pace
+                    //    rounds)
+                    let mut round_time = 0.0f64;
+                    for &gid in &picked {
+                        let r = results.get(&(gid as u32)).ok_or_else(
+                            || {
+                                crate::err!(
+                                    "fleet: no step result for device \
+                                     {gid} in round {round}"
+                                )
+                            },
+                        )?;
+                        total_energy += r.energy_j;
+                        total_steps += r.steps as u64;
+                        participations += 1;
+                        round_time = round_time.max(r.time_s);
+                    }
+                    now_s += round_time + cfg.server_overhead_s;
+                    outcome.rounds_run = round + 1;
                 }
-                now_s += round_time + cfg.server_overhead_s;
-                outcome.rounds_run = round + 1;
-            }
+                Ok(())
+            })();
 
+            // Release every worker — after an error too — then join
+            // them here so a panicked worker becomes an `Err` from this
+            // scope instead of a coordinator abort at scope exit.
             for tx in &cmd_txs {
                 let _ = tx.send(ShardCmd::Stop);
             }
+            drop(cmd_txs);
+            let mut panicked = 0usize;
+            for h in handles {
+                if h.join().is_err() {
+                    panicked += 1;
+                }
+            }
+            run?;
+            crate::ensure!(
+                panicked == 0,
+                "{panicked} fleet shard worker(s) panicked"
+            );
 
             outcome.total_time_s = now_s;
             outcome.total_energy_j = total_energy;
             outcome.total_steps = total_steps;
             outcome.participations = participations;
-        });
+            Ok(())
+        })?;
         outcome.wall_s = wall0.elapsed().as_secs_f64();
-        outcome
+        Ok(outcome)
     }
 }
 
@@ -500,7 +560,7 @@ pub fn run_scenario_reference(
         coord: &mut coord,
         arm,
     };
-    let mut out = engine.drive(&mut policy, &cfg);
+    let mut out = engine.drive(&mut policy, &cfg)?;
     attach_exploration(&mut out, &coord, arm);
     Ok(out)
 }

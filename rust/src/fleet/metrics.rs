@@ -76,16 +76,15 @@ impl FleetOutcome {
     }
 
     /// Bit-exact fingerprint of the shard-invariant aggregates (virtual
-    /// time + energy bits, step/participation counts, FNV-1a over the
-    /// online series). Two runs of the same scenario must produce equal
-    /// digests regardless of shard count.
+    /// time + energy bits, step/participation counts,
+    /// [`crate::util::fnv::Fnv1a`] over the online series). Two runs of
+    /// the same scenario must produce equal digests regardless of shard
+    /// count.
     pub fn digest(&self) -> String {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut h = crate::util::fnv::Fnv1a::default();
         for (r, n) in &self.online_per_round {
-            for x in [*r as u64, *n as u64] {
-                h ^= x;
-                h = h.wrapping_mul(0x0000_0100_0000_01B3);
-            }
+            h.push(*r as u64);
+            h.push(*n as u64);
         }
         format!(
             "t{:016x}-e{:016x}-s{}-p{}-o{:016x}",
@@ -93,7 +92,7 @@ impl FleetOutcome {
             self.total_energy_j.to_bits(),
             self.total_steps,
             self.participations,
-            h
+            h.h
         )
     }
 

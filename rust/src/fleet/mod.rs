@@ -38,7 +38,11 @@
 //!   throughput figures the `fleet` bench and report emit.
 //! - [`bench`] — [`run_fleet_bench`]: the throughput harness behind
 //!   `swan bench fleet` and `benches/fleet_throughput.rs`; emits the
-//!   `BENCH_fleet.json` perf-trajectory record.
+//!   `BENCH_fleet.json` perf-trajectory record. Also
+//!   [`run_serve_bench`]: the `serve` load-generator mode that points
+//!   this fleet at the [`crate::serve`] coordinator control plane
+//!   (in-process + loopback TCP, digest-parity-gated, emits
+//!   `BENCH_serve.json`).
 
 pub mod bench;
 pub mod coordinator;
@@ -49,10 +53,12 @@ pub mod metrics;
 pub mod scenario;
 pub mod soa;
 
-pub use bench::{run_fleet_bench, FleetBenchReport};
+pub use bench::{
+    run_fleet_bench, run_serve_bench, FleetBenchReport, ServeBenchReport,
+};
 pub use coordinator::{
-    CoordinatorPolicy, CoordinatorStats, FleetPolicy, ProfileCoordinator,
-    ResolvedCost, StepCost,
+    explore_profiles, CoordinatorPolicy, CoordinatorStats, FleetPolicy,
+    ProfileCoordinator, ResolvedCost, StepCost,
 };
 pub use device::{FleetDevice, FleetNode};
 pub use engine::{

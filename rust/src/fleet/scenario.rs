@@ -361,6 +361,76 @@ mod tests {
     }
 
     #[test]
+    fn every_builtin_preset_survives_the_json_roundtrip() {
+        // the presets are the bench tiers (smoke → CI, city → the 100k
+        // bench, metro/million → standing SoA tiers); their specs must
+        // survive to_json → from_json field-for-field or a recorded
+        // BENCH_*.json no longer reproduces the run it claims to
+        for key in ["smoke", "city", "metro", "million"] {
+            let spec = ScenarioSpec::builtin(key).unwrap();
+            let back = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back.name, spec.name, "{key}");
+            assert_eq!(back.seed, spec.seed, "{key}");
+            assert_eq!(back.devices, spec.devices, "{key}");
+            assert_eq!(back.rounds, spec.rounds, "{key}");
+            assert_eq!(
+                back.clients_per_round, spec.clients_per_round,
+                "{key}"
+            );
+            assert_eq!(back.local_steps, spec.local_steps, "{key}");
+            assert_eq!(back.workload, spec.workload, "{key}");
+            assert_eq!(back.trace_users, spec.trace_users, "{key}");
+            assert_eq!(
+                back.daily_credit_j.to_bits(),
+                spec.daily_credit_j.to_bits(),
+                "{key}"
+            );
+            assert_eq!(
+                back.min_level_pct.to_bits(),
+                spec.min_level_pct.to_bits(),
+                "{key}"
+            );
+            assert_eq!(
+                back.interference_p.to_bits(),
+                spec.interference_p.to_bits(),
+                "{key}"
+            );
+            assert_eq!(
+                back.interference_slowdown.to_bits(),
+                spec.interference_slowdown.to_bits(),
+                "{key}"
+            );
+            assert_eq!(
+                back.thermal_throttle_p.to_bits(),
+                spec.thermal_throttle_p.to_bits(),
+                "{key}"
+            );
+            assert_eq!(
+                back.thermal_derate.to_bits(),
+                spec.thermal_derate.to_bits(),
+                "{key}"
+            );
+            assert_eq!(
+                back.server_overhead_s.to_bits(),
+                spec.server_overhead_s.to_bits(),
+                "{key}"
+            );
+            // the mix travels as an object: same weights per model,
+            // regardless of entry order
+            assert_eq!(back.mix.len(), spec.mix.len(), "{key}");
+            for (id, w) in &spec.mix {
+                let wb = back
+                    .mix
+                    .iter()
+                    .find(|(b, _)| b == id)
+                    .map(|(_, w)| *w)
+                    .unwrap_or(f64::NAN);
+                assert_eq!(wb.to_bits(), w.to_bits(), "{key}/{id:?}");
+            }
+        }
+    }
+
+    #[test]
     fn huge_seeds_survive_the_json_roundtrip() {
         // seeds above 2^53 cannot live in an f64 JSON number; they must
         // travel as strings and come back bit-exact

@@ -40,6 +40,17 @@
 //!   exploration amortizer — all bit-identical at any shard count, and
 //!   [`fleet::bench`] the throughput harness emitting
 //!   `BENCH_fleet.json`.
+//! - [`serve`] — the zero-dependency FL coordinator control plane: a
+//!   `std::net` TCP listener + thread-per-worker IO pool behind a
+//!   compact length-prefixed wire format ([`serve::wire`]: `CheckIn`,
+//!   `PlanLease`, `UpdatePush`, `Ack`), batched check-in admission with
+//!   explicit `Retry-After` backpressure, an LRU profile cache keyed on
+//!   (SoC model, thermal band, charger state) sharing §4.2 exploration
+//!   across equivalent devices, FedAvg aggregation through
+//!   [`fl::server`], and the fleet repurposed as its load generator
+//!   ([`serve::loadgen`]) — in-process and loopback-TCP paths are
+//!   digest-parity-checked against a machinery-free oracle
+//!   (`BENCH_serve.json`, `swan serve`, `swan bench serve`).
 //! - [`report`] — emitters that regenerate every paper table and figure.
 
 pub mod error;
@@ -56,6 +67,7 @@ pub mod train;
 pub mod trace;
 pub mod fl;
 pub mod fleet;
+pub mod serve;
 pub mod report;
 pub mod cli;
 

@@ -1,0 +1,80 @@
+//! Serve-plane evaluation emitter: the coordinator control plane's
+//! request-throughput table (check-ins/sec, p90 check-in latency,
+//! deferral rate) — the `swan bench serve` CLI path renders through
+//! here.
+
+use crate::serve::ServeRunOutcome;
+use crate::util::bench::fmt_secs;
+use crate::util::table::Table;
+
+/// Render serve load-generator outcomes as a table (one row per run —
+/// typically the in-process and loopback-TCP paths of one bench).
+pub fn serve_table(outcomes: &[&ServeRunOutcome]) -> Table {
+    let mut t = Table::new(
+        "Serve control plane — request throughput and admission",
+        &[
+            "scenario",
+            "transport",
+            "devices",
+            "lanes",
+            "rounds",
+            "checkins",
+            "admitted",
+            "deferred",
+            "parts",
+            "checkins_per_s",
+            "p90_checkin",
+            "virtual_h",
+            "energy_kJ",
+        ],
+    );
+    for o in outcomes {
+        t.row(&[
+            o.scenario.clone(),
+            o.transport.to_string(),
+            o.devices.to_string(),
+            o.lanes.to_string(),
+            o.rounds_run.to_string(),
+            o.checkins.to_string(),
+            o.admitted.to_string(),
+            o.deferred.to_string(),
+            o.participations.to_string(),
+            format!("{:.0}", o.checkins_per_sec()),
+            fmt_secs(o.p90_checkin_latency_s()),
+            format!("{:.2}", o.total_time_s / 3600.0),
+            format!("{:.1}", o.total_energy_j / 1e3),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_one_row_per_outcome() {
+        let a = ServeRunOutcome {
+            scenario: "smoke".into(),
+            transport: "inproc",
+            devices: 2_000,
+            lanes: 4,
+            rounds_run: 5,
+            checkins: 5_000,
+            admitted: 5_000,
+            participations: 500,
+            checkin_wall_s: 1.0,
+            latency_samples: vec![1e-5, 2e-5],
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        b.transport = "tcp";
+        b.deferred = 7;
+        let t = serve_table(&[&a, &b]);
+        assert_eq!(t.rows.len(), 2);
+        let md = t.to_markdown();
+        assert!(md.contains("checkins_per_s"));
+        assert!(md.contains("tcp"));
+        assert!(md.contains("inproc"));
+    }
+}

@@ -1,0 +1,339 @@
+//! The coordinator's LRU profile cache: §4.2 exploration shared across
+//! equivalent devices.
+//!
+//! At fleet scale, millions of check-ins collapse onto a handful of
+//! *contexts*: (SoC model, thermal band, charger state). The execution
+//! plan Swan would pick — chain head after enumerate → estimate → prune
+//! (§4.2) — is a pure function of that context, so the coordinator
+//! explores each context **once** and serves the cached [`StepCost`] to
+//! every equivalent device instead of recomputing the choice space per
+//! check-in. The cache is a fixed-capacity LRU (intrusive list over a
+//! slot arena + `HashMap` index, no external crates): a deployment that
+//! adds SoC models or finer bands evicts the coldest context instead of
+//! growing without bound, and because [`plan_cost`] is pure, an evicted
+//! entry re-explores to bit-identical values — eviction can never
+//! perturb the digest-parity contract.
+
+use std::collections::HashMap;
+
+use crate::fleet::coordinator::{explore_profiles, StepCost};
+use crate::soc::device::{device, DeviceId};
+use crate::swan::prune::prune_dominated;
+use crate::workload::Workload;
+
+/// Thermal bands a check-in may report (0 = cool … 2 = hot).
+pub const N_THERMAL_BANDS: u8 = 3;
+
+/// Per-band DVFS derate applied to the explored plan cost. Band 0 runs
+/// the plan as profiled; hotter bands pay progressively throttled
+/// clocks.
+pub fn band_derate(band: u8) -> f64 {
+    match band {
+        0 => 1.0,
+        1 => 1.25,
+        _ => 1.5,
+    }
+}
+
+/// Charger-state multiplier: an uncharged device runs its epoch under
+/// the OS's battery-saver cap; a charging device runs the plan as
+/// profiled.
+pub fn charger_relief(charging: bool) -> f64 {
+    if charging {
+        1.0
+    } else {
+        1.1
+    }
+}
+
+/// The profile-cache key: one execution context.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Wire model code (`wire::model_code`).
+    pub model: u8,
+    pub band: u8,
+    pub charging: bool,
+}
+
+impl PlanKey {
+    /// Dense packing for the `HashMap` index.
+    fn pack(self) -> u32 {
+        ((self.model as u32) << 8)
+            | ((self.band as u32) << 1)
+            | self.charging as u32
+    }
+}
+
+/// The §4.2 plan cost for one context — THE definition both the
+/// coordinator (through the cache) and the parity oracle (directly)
+/// evaluate, so their lease arithmetic agrees bit-for-bit. Pure:
+/// explores the full choice space through the same
+/// [`explore_profiles`] pipeline the fleet `ProfileCoordinator` runs,
+/// prunes, takes the chain head, and applies the band/charger
+/// envelope.
+pub fn plan_cost(
+    workload: &Workload,
+    model: DeviceId,
+    band: u8,
+    charging: bool,
+) -> StepCost {
+    let d = device(model);
+    let chain = prune_dominated(explore_profiles(workload, &d));
+    let best = &chain[0];
+    let m = band_derate(band) * charger_relief(charging);
+    StepCost {
+        latency_s: best.latency_s * m,
+        energy_j: best.energy_j * m,
+    }
+}
+
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    key: u32,
+    cost: StepCost,
+    prev: usize,
+    next: usize,
+}
+
+/// Fixed-capacity LRU over [`PlanKey`] → [`StepCost`].
+pub struct ProfileCache {
+    cap: usize,
+    map: HashMap<u32, usize>,
+    slots: Vec<Slot>,
+    /// Most-recently-used slot (NIL when empty).
+    head: usize,
+    /// Least-recently-used slot (the eviction victim).
+    tail: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl ProfileCache {
+    pub fn new(capacity: usize) -> ProfileCache {
+        let cap = capacity.max(1);
+        ProfileCache {
+            cap,
+            map: HashMap::with_capacity(cap),
+            slots: Vec::with_capacity(cap),
+            head: NIL,
+            tail: NIL,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Look `key` up, computing (and inserting) via `explore` on a
+    /// miss; either way the entry becomes most-recently-used. Returns
+    /// the plan cost and whether it was a hit.
+    pub fn get_or_insert_with(
+        &mut self,
+        key: PlanKey,
+        explore: impl FnOnce() -> StepCost,
+    ) -> (StepCost, bool) {
+        let packed = key.pack();
+        if let Some(&i) = self.map.get(&packed) {
+            self.hits += 1;
+            if self.head != i {
+                self.unlink(i);
+                self.push_front(i);
+            }
+            return (self.slots[i].cost, true);
+        }
+        self.misses += 1;
+        let cost = explore();
+        let i = if self.map.len() >= self.cap {
+            // reuse the LRU victim's slot
+            let victim = self.tail;
+            self.evictions += 1;
+            self.unlink(victim);
+            self.map.remove(&self.slots[victim].key);
+            self.slots[victim].key = packed;
+            self.slots[victim].cost = cost;
+            victim
+        } else {
+            self.slots.push(Slot {
+                key: packed,
+                cost,
+                prev: NIL,
+                next: NIL,
+            });
+            self.slots.len() - 1
+        };
+        self.push_front(i);
+        self.map.insert(packed, i);
+        (cost, false)
+    }
+
+    /// Recency order, MRU first (tests + introspection).
+    #[cfg(test)]
+    fn keys_mru_first(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut i = self.head;
+        while i != NIL {
+            out.push(self.slots[i].key);
+            i = self.slots[i].next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{builtin, WorkloadName};
+
+    fn key(model: u8, band: u8, charging: bool) -> PlanKey {
+        PlanKey {
+            model,
+            band,
+            charging,
+        }
+    }
+
+    fn stub(v: f64) -> StepCost {
+        StepCost {
+            latency_s: v,
+            energy_j: 2.0 * v,
+        }
+    }
+
+    #[test]
+    fn shares_exploration_across_equivalent_devices() {
+        let mut c = ProfileCache::new(8);
+        let mut explorations = 0;
+        for _ in 0..100 {
+            let (cost, _) = c.get_or_insert_with(key(1, 0, true), || {
+                explorations += 1;
+                stub(3.0)
+            });
+            assert_eq!(cost.latency_s, 3.0);
+        }
+        assert_eq!(explorations, 1, "one exploration serves all equals");
+        assert_eq!(c.hits, 99);
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.evictions, 0);
+    }
+
+    #[test]
+    fn distinct_contexts_are_distinct_entries() {
+        let mut c = ProfileCache::new(16);
+        c.get_or_insert_with(key(0, 0, false), || stub(1.0));
+        c.get_or_insert_with(key(0, 0, true), || stub(2.0));
+        c.get_or_insert_with(key(0, 1, false), || stub(3.0));
+        c.get_or_insert_with(key(1, 0, false), || stub(4.0));
+        assert_eq!(c.len(), 4);
+        let (back, hit) =
+            c.get_or_insert_with(key(0, 1, false), || unreachable!());
+        assert!(hit);
+        assert_eq!(back.latency_s, 3.0);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = ProfileCache::new(2);
+        c.get_or_insert_with(key(0, 0, false), || stub(1.0));
+        c.get_or_insert_with(key(1, 0, false), || stub(2.0));
+        // touch key 0 so key 1 becomes the LRU victim
+        c.get_or_insert_with(key(0, 0, false), || unreachable!());
+        c.get_or_insert_with(key(2, 0, false), || stub(3.0));
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.len(), 2);
+        assert_eq!(
+            c.keys_mru_first(),
+            vec![
+                key(2, 0, false).pack(),
+                key(0, 0, false).pack()
+            ]
+        );
+        // evicted key 1 must re-explore
+        let (_, hit) = c.get_or_insert_with(key(1, 0, false), || stub(2.0));
+        assert!(!hit);
+        assert_eq!(c.evictions, 2);
+    }
+
+    #[test]
+    fn single_slot_cache_still_correct() {
+        let mut c = ProfileCache::new(0); // clamped to 1
+        assert_eq!(c.capacity(), 1);
+        c.get_or_insert_with(key(0, 0, false), || stub(1.0));
+        let (v, hit) = c.get_or_insert_with(key(1, 1, true), || stub(9.0));
+        assert!(!hit);
+        assert_eq!(v.latency_s, 9.0);
+        assert_eq!(c.len(), 1);
+        let (v0, hit0) = c.get_or_insert_with(key(1, 1, true), || stub(0.0));
+        assert!(hit0);
+        assert_eq!(v0.latency_s, 9.0);
+    }
+
+    #[test]
+    fn plan_cost_is_deterministic_and_band_monotone() {
+        let w = builtin(WorkloadName::ShufflenetV2);
+        let a = plan_cost(&w, DeviceId::S10e, 0, true);
+        let b = plan_cost(&w, DeviceId::S10e, 0, true);
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        // hotter bands and missing charger only ever slow the plan down
+        let warm = plan_cost(&w, DeviceId::S10e, 1, true);
+        let hot = plan_cost(&w, DeviceId::S10e, 2, true);
+        let unplugged = plan_cost(&w, DeviceId::S10e, 0, false);
+        assert!(a.latency_s < warm.latency_s);
+        assert!(warm.latency_s < hot.latency_s);
+        assert!(a.latency_s < unplugged.latency_s);
+        assert!(a.energy_j < hot.energy_j);
+    }
+
+    #[test]
+    fn plan_cost_matches_the_fleet_coordinator_head() {
+        // same chain-head (band 0, charging) as the fleet-scale §4.2
+        // coordinator resolves for the Swan arm
+        let w = builtin(WorkloadName::ShufflenetV2);
+        let mut coord =
+            crate::fleet::coordinator::ProfileCoordinator::new(w.clone());
+        let rc =
+            coord.resolve(DeviceId::Pixel3, 0, crate::fl::FlArm::Swan);
+        let plan = plan_cost(&w, DeviceId::Pixel3, 0, true);
+        assert_eq!(plan.latency_s.to_bits(), rc.cost.latency_s.to_bits());
+        assert_eq!(plan.energy_j.to_bits(), rc.cost.energy_j.to_bits());
+    }
+}

@@ -1,0 +1,233 @@
+//! Client-side transports: one trait, two wirings.
+//!
+//! [`ServeClient`] is the batch-oriented face of the coordinator
+//! protocol the load generator drives. [`InProcClient`] calls straight
+//! into a shared [`Coordinator`] — no sockets, no serialization — and
+//! is the parity baseline; [`TcpClient`] speaks the
+//! [`wire`](super::wire) format over a `TcpStream`, **pipelining**
+//! every batch (write all frames, flush once, read all replies) so a
+//! 2k-device round costs a handful of syscalls per lane instead of a
+//! round-trip per device. The digest-parity assertion in the serve
+//! bench is exactly the claim that these two impls are observationally
+//! identical.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use super::coordinator::Coordinator;
+use super::wire::{
+    read_frame, write_frame, Ack, CheckIn, LeasePoll, Msg, PlanLease,
+    RoundCtl, RoundOp, RoundSummary, UpdatePush,
+};
+
+/// Reply to a lease poll.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LeaseReply {
+    Lease(PlanLease),
+    NotSelected,
+}
+
+/// A connection-shaped handle onto the coordinator, batch-oriented so
+/// transports can pipeline. One client serves many simulated devices.
+pub trait ServeClient: Send {
+    /// One check-in per request, replies in request order.
+    fn check_in_batch(&mut self, reqs: &[CheckIn]) -> crate::Result<Vec<Ack>>;
+
+    /// Ask, for each admitted device, whether it was selected.
+    fn lease_poll_batch(
+        &mut self,
+        devices: &[u64],
+    ) -> crate::Result<Vec<LeaseReply>>;
+
+    /// Push the selected devices' updates; every ack must be `Accepted`.
+    fn push_update_batch(
+        &mut self,
+        pushes: Vec<UpdatePush>,
+    ) -> crate::Result<Vec<Ack>>;
+
+    /// `RoundCtl::Close` — returns the picked count.
+    fn round_close(&mut self, round: u32) -> crate::Result<u32>;
+
+    /// `RoundCtl::Finish` — returns the round summary.
+    fn round_finish(&mut self, round: u32) -> crate::Result<RoundSummary>;
+}
+
+/// Direct in-process wiring: `fleet` devices check in through the
+/// coordinator without sockets.
+pub struct InProcClient {
+    pub coord: Arc<Coordinator>,
+}
+
+impl InProcClient {
+    pub fn new(coord: Arc<Coordinator>) -> InProcClient {
+        InProcClient { coord }
+    }
+}
+
+impl ServeClient for InProcClient {
+    fn check_in_batch(&mut self, reqs: &[CheckIn]) -> crate::Result<Vec<Ack>> {
+        Ok(reqs.iter().map(|ci| self.coord.check_in(*ci)).collect())
+    }
+
+    fn lease_poll_batch(
+        &mut self,
+        devices: &[u64],
+    ) -> crate::Result<Vec<LeaseReply>> {
+        let mut out = Vec::with_capacity(devices.len());
+        for &d in devices {
+            out.push(match self.coord.lease_poll(d)? {
+                Some(l) => LeaseReply::Lease(l),
+                None => LeaseReply::NotSelected,
+            });
+        }
+        Ok(out)
+    }
+
+    fn push_update_batch(
+        &mut self,
+        pushes: Vec<UpdatePush>,
+    ) -> crate::Result<Vec<Ack>> {
+        Ok(pushes
+            .into_iter()
+            .map(|up| self.coord.push_update(up))
+            .collect())
+    }
+
+    fn round_close(&mut self, round: u32) -> crate::Result<u32> {
+        self.coord.close_round(round)
+    }
+
+    fn round_finish(&mut self, round: u32) -> crate::Result<RoundSummary> {
+        self.coord.finish_round(round)
+    }
+}
+
+/// Loopback/remote TCP wiring over the binary wire format.
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl TcpClient {
+    pub fn connect(addr: SocketAddr) -> crate::Result<TcpClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| crate::err!("serve: connect {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(
+            stream.try_clone().map_err(|e| {
+                crate::err!("serve: clone stream for {addr}: {e}")
+            })?,
+        );
+        Ok(TcpClient {
+            reader,
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Frames pipelined per write/flush/read burst. Bounding the burst
+    /// keeps the server's un-read replies within socket buffers even
+    /// for 100k-device rounds — a client that wrote its whole round
+    /// before reading anything could otherwise deadlock against a
+    /// server blocked on its own full send buffer.
+    const MAX_PIPELINE: usize = 512;
+
+    /// Pipeline `reqs` and collect one reply per request.
+    fn exchange(&mut self, reqs: &[Msg]) -> crate::Result<Vec<Msg>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for chunk in reqs.chunks(Self::MAX_PIPELINE) {
+            for m in chunk {
+                write_frame(&mut self.writer, m)?;
+            }
+            self.writer.flush()?;
+            for _ in 0..chunk.len() {
+                match read_frame(&mut self.reader)? {
+                    Some(m) => out.push(m),
+                    None => crate::bail!(
+                        "serve: server closed the connection mid-exchange \
+                         ({}/{} replies)",
+                        out.len(),
+                        reqs.len()
+                    ),
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn expect_ack(m: Msg) -> crate::Result<Ack> {
+        match m {
+            Msg::Ack(a) => Ok(a),
+            other => crate::bail!("serve: expected an ack, got {other:?}"),
+        }
+    }
+}
+
+impl ServeClient for TcpClient {
+    fn check_in_batch(&mut self, reqs: &[CheckIn]) -> crate::Result<Vec<Ack>> {
+        let frames: Vec<Msg> =
+            reqs.iter().map(|ci| Msg::CheckIn(*ci)).collect();
+        self.exchange(&frames)?
+            .into_iter()
+            .map(Self::expect_ack)
+            .collect()
+    }
+
+    fn lease_poll_batch(
+        &mut self,
+        devices: &[u64],
+    ) -> crate::Result<Vec<LeaseReply>> {
+        let frames: Vec<Msg> = devices
+            .iter()
+            .map(|&device| Msg::LeasePoll(LeasePoll { device }))
+            .collect();
+        self.exchange(&frames)?
+            .into_iter()
+            .map(|m| match m {
+                Msg::PlanLease(l) => Ok(LeaseReply::Lease(l)),
+                Msg::Ack(Ack::NotSelected) => Ok(LeaseReply::NotSelected),
+                other => crate::bail!(
+                    "serve: expected a lease or NotSelected, got {other:?}"
+                ),
+            })
+            .collect()
+    }
+
+    fn push_update_batch(
+        &mut self,
+        pushes: Vec<UpdatePush>,
+    ) -> crate::Result<Vec<Ack>> {
+        let frames: Vec<Msg> =
+            pushes.into_iter().map(Msg::UpdatePush).collect();
+        self.exchange(&frames)?
+            .into_iter()
+            .map(Self::expect_ack)
+            .collect()
+    }
+
+    fn round_close(&mut self, round: u32) -> crate::Result<u32> {
+        let reply = self.exchange(&[Msg::RoundCtl(RoundCtl {
+            round,
+            op: RoundOp::Close,
+        })])?;
+        match Self::expect_ack(reply.into_iter().next().unwrap())? {
+            Ack::Closed { picked } => Ok(picked),
+            other => {
+                crate::bail!("serve: close_round({round}) got {other:?}")
+            }
+        }
+    }
+
+    fn round_finish(&mut self, round: u32) -> crate::Result<RoundSummary> {
+        let reply = self.exchange(&[Msg::RoundCtl(RoundCtl {
+            round,
+            op: RoundOp::Finish,
+        })])?;
+        match reply.into_iter().next().unwrap() {
+            Msg::RoundSummary(s) => Ok(s),
+            other => {
+                crate::bail!("serve: finish_round({round}) got {other:?}")
+            }
+        }
+    }
+}

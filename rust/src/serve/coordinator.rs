@@ -1,0 +1,812 @@
+//! The coordinator core: transport-agnostic round logic.
+//!
+//! One [`Coordinator`] owns the whole server-side state machine; the
+//! TCP server ([`super::server`]) and the in-process client
+//! ([`super::client::InProcClient`]) are thin shims over the same five
+//! entry points, which is what makes the loopback-TCP and in-process
+//! digests comparable at all.
+//!
+//! A round is two phases, paced by `RoundCtl` from the deployment's
+//! round driver (the load generator, in this repo):
+//!
+//! ```text
+//! CheckIn phase     devices report (model, thermal band, charger
+//!                   state, epoch size); admission control defers the
+//!                   overflow; admitted check-ins coalesce into
+//!                   fixed-size batches that warm the profile cache
+//!                   under one lock acquisition per batch
+//! -- RoundCtl::Close: sort admitted by device id, select K via the
+//!    fleet kernel's (seed, round)-keyed RNG, resolve leases from the
+//!    (now warm) LRU cache in picked order --
+//! Update phase      selected devices poll their PlanLease, run the
+//!                   epoch, push their weighted update into its dense
+//!                   seq slot
+//! -- RoundCtl::Finish: FedAvg (fl::server) over the seq-ordered
+//!    updates, fold the parity digest, emit the RoundSummary --
+//! ```
+//!
+//! **Determinism.** Everything folded into the digest is independent of
+//! arrival order: selection sees the admitted set sorted by device id,
+//! leases resolve in picked order from a cache whose values are pure
+//! functions of the key, updates aggregate in seq (= picked) order, and
+//! the round RNG is keyed on (seed, round) only. So any interleaving of
+//! lanes, sockets, or batches that delivers the same check-ins produces
+//! the same summary — the property the serve bench asserts between the
+//! in-process and loopback-TCP paths.
+//!
+//! **Backpressure.** Admission is a bounded per-round queue: past
+//! `admit_capacity`, check-ins get `Ack::Deferred` with a Retry-After
+//! delay instead of unbounded queue growth — overload degrades into a
+//! deterministic deferral rate (reported in `BENCH_serve.json`), not
+//! into latency collapse.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::fl::server::fedavg;
+use crate::fl::selection::select_uniform;
+use crate::fleet::engine::{round_rng, EMPTY_ROUND_WAIT_S};
+use crate::fleet::scenario::ScenarioSpec;
+use crate::workload::{load_or_builtin, Workload, WorkloadName};
+
+use super::cache::{plan_cost, PlanKey, ProfileCache};
+use super::wire::{
+    model_from_code, Ack, CheckIn, PlanLease, RoundSummary, UpdatePush,
+};
+
+/// Retry-After delay handed to deferred devices, seconds. Deterministic
+/// (no jitter server-side): dithering retry storms is the client
+/// library's job, deciding *when* capacity exists again is the
+/// server's.
+pub const RETRY_AFTER_S: f32 = 30.0;
+
+/// Coordinator tuning. Derive one from a fleet scenario with
+/// [`ServeConfig::for_scenario`] so the serve path and the fleet kernel
+/// agree on seed, round structure and workload.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub seed: u64,
+    /// Participants selected per round (K).
+    pub clients_per_round: usize,
+    /// Server-side per-round overhead added by the round pacer, seconds.
+    pub server_overhead_s: f64,
+    /// Check-ins coalesced per batch before touching round/cache locks.
+    pub batch_size: usize,
+    /// Per-round admission bound; 0 = unbounded (no deferrals).
+    pub admit_capacity: usize,
+    /// LRU profile-cache capacity (contexts, not devices).
+    pub cache_capacity: usize,
+    /// Parameter count every `UpdatePush` must carry.
+    pub update_dim: usize,
+    pub workload: WorkloadName,
+}
+
+impl ServeConfig {
+    pub fn for_scenario(spec: &ScenarioSpec) -> ServeConfig {
+        ServeConfig {
+            seed: spec.seed,
+            clients_per_round: spec.clients_per_round,
+            server_overhead_s: spec.server_overhead_s,
+            batch_size: 256,
+            admit_capacity: 0,
+            cache_capacity: 64,
+            update_dim: 32,
+            workload: spec.workload,
+        }
+    }
+}
+
+/// FNV-1a fold over the round stream — the parity digest (the repo's
+/// shared [`crate::util::fnv::Fnv1a`] primitive, the same fold the
+/// fleet kernel digests with). The oracle in `serve::loadgen` folds
+/// the identical field sequence from a direct simulation +
+/// `fl::server::fedavg`, so a single flipped bit anywhere in the serve
+/// pipeline (wire codec, batching, cache, selection, aggregation
+/// order) diverges the digest.
+pub use crate::util::fnv::Fnv1a as DigestFold;
+
+/// Hex rendering of a serve parity digest (`serve-<16 hex digits>`).
+pub fn digest_hex(h: u64) -> String {
+    format!("serve-{h:016x}")
+}
+
+/// Check-in intake shared by every connection: the coalescing buffer
+/// plus the per-round admission counters. Held for a push per check-in;
+/// the heavier round/cache locks are only taken once per flushed batch.
+struct Pending {
+    batch: Vec<CheckIn>,
+    checkins: u64,
+    admitted: usize,
+    deferred: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    CheckIn,
+    Update,
+}
+
+struct RoundState {
+    round: u32,
+    phase: Phase,
+    admitted: Vec<CheckIn>,
+    /// Check-ins that arrived after this round closed (free-running
+    /// wire clients racing the round pacer): admitted for the *next*
+    /// round, consistent with their pending-counter accounting.
+    next_admitted: Vec<CheckIn>,
+    /// device → lease, for the picked set only.
+    leases: HashMap<u64, PlanLease>,
+    picked: Vec<u64>,
+    /// Update slots, indexed by lease seq.
+    updates: Vec<Option<(Vec<f32>, f64)>>,
+    received: usize,
+    /// Counters frozen at close time (reported in the summary).
+    round_checkins: u64,
+    round_deferred: u64,
+    // -- run-cumulative state --
+    digest: DigestFold,
+    totals: Totals,
+    last_aggregate: Vec<f32>,
+}
+
+/// Run-cumulative counters (mirrors what the load generator folds from
+/// summaries — exposed for the bench record and tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Totals {
+    pub rounds_run: usize,
+    pub checkins: u64,
+    pub admitted: u64,
+    pub deferred: u64,
+    pub participations: u64,
+    /// Virtual seconds (straggler-paced rounds + overhead / idle waits).
+    pub total_time_s: f64,
+    pub total_energy_j: f64,
+}
+
+/// Cache + admission counters for the bench record.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub totals: Totals,
+}
+
+/// The FL coordinator control plane (see the module docs).
+pub struct Coordinator {
+    cfg: ServeConfig,
+    workload: Workload,
+    cache: Mutex<ProfileCache>,
+    pending: Mutex<Pending>,
+    round: Mutex<RoundState>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: ServeConfig) -> crate::Result<Coordinator> {
+        crate::ensure!(
+            cfg.clients_per_round > 0,
+            "serve: clients_per_round must be > 0"
+        );
+        crate::ensure!(cfg.batch_size > 0, "serve: batch_size must be > 0");
+        crate::ensure!(cfg.update_dim > 0, "serve: update_dim must be > 0");
+        let workload = load_or_builtin(cfg.workload, "artifacts");
+        Ok(Coordinator {
+            cache: Mutex::new(ProfileCache::new(cfg.cache_capacity)),
+            pending: Mutex::new(Pending {
+                batch: Vec::with_capacity(cfg.batch_size),
+                checkins: 0,
+                admitted: 0,
+                deferred: 0,
+            }),
+            round: Mutex::new(RoundState {
+                round: 0,
+                phase: Phase::CheckIn,
+                admitted: Vec::new(),
+                next_admitted: Vec::new(),
+                leases: HashMap::new(),
+                picked: Vec::new(),
+                updates: Vec::new(),
+                received: 0,
+                round_checkins: 0,
+                round_deferred: 0,
+                digest: DigestFold::default(),
+                totals: Totals::default(),
+                last_aggregate: Vec::new(),
+            }),
+            cfg,
+            workload,
+        })
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+        // a poisoned lock means another server thread panicked
+        // mid-round; the state is torn, so propagating the panic to
+        // this connection's thread is the honest move
+        m.lock().expect("serve coordinator lock poisoned")
+    }
+
+    /// Move a coalesced batch into the round state and warm the profile
+    /// cache — the amortization point: one round-lock and one
+    /// cache-lock acquisition per `batch_size` check-ins, and at most
+    /// one exploration per distinct context regardless of batch
+    /// composition.
+    fn flush_batch(&self, batch: Vec<CheckIn>) {
+        if batch.is_empty() {
+            return;
+        }
+        let mut r = Self::lock(&self.round);
+        // a check-in landing after its round closed (free-running
+        // clients racing the pacer) was counted toward the *next*
+        // round's pending counters, so it belongs to the next round's
+        // admitted set — not to the closed round it can no longer join
+        if r.phase == Phase::CheckIn {
+            r.admitted.extend_from_slice(&batch);
+        } else {
+            r.next_admitted.extend_from_slice(&batch);
+        }
+        drop(r);
+        let mut cache = Self::lock(&self.cache);
+        for ci in &batch {
+            if let Some(model) = model_from_code(ci.model) {
+                let key = PlanKey {
+                    model: ci.model,
+                    band: ci.band,
+                    charging: ci.charging,
+                };
+                cache.get_or_insert_with(key, || {
+                    plan_cost(&self.workload, model, ci.band, ci.charging)
+                });
+            }
+        }
+    }
+
+    /// Check-in intake (any thread). Rejects unknown models, defers
+    /// past the admission bound, otherwise admits into the current
+    /// coalescing batch.
+    pub fn check_in(&self, ci: CheckIn) -> Ack {
+        if model_from_code(ci.model).is_none()
+            || ci.band >= super::cache::N_THERMAL_BANDS
+            || ci.steps == 0
+        {
+            return Ack::Rejected;
+        }
+        let full_batch = {
+            let mut p = Self::lock(&self.pending);
+            p.checkins += 1;
+            if self.cfg.admit_capacity > 0
+                && p.admitted >= self.cfg.admit_capacity
+            {
+                p.deferred += 1;
+                return Ack::Deferred {
+                    retry_after_s: RETRY_AFTER_S,
+                };
+            }
+            p.admitted += 1;
+            p.batch.push(ci);
+            if p.batch.len() >= self.cfg.batch_size {
+                std::mem::replace(
+                    &mut p.batch,
+                    Vec::with_capacity(self.cfg.batch_size),
+                )
+            } else {
+                Vec::new()
+            }
+        };
+        self.flush_batch(full_batch);
+        Ack::Admitted
+    }
+
+    /// End the check-in phase of `round`: flush the partial batch, run
+    /// selection, resolve the picked leases. Returns the picked count.
+    pub fn close_round(&self, round: u32) -> crate::Result<u32> {
+        let (batch, checkins, deferred) = {
+            let mut p = Self::lock(&self.pending);
+            let b = std::mem::take(&mut p.batch);
+            let c = std::mem::take(&mut p.checkins);
+            let d = std::mem::take(&mut p.deferred);
+            p.admitted = 0;
+            (b, c, d)
+        };
+        self.flush_batch(batch);
+
+        let mut r = Self::lock(&self.round);
+        crate::ensure!(
+            r.phase == Phase::CheckIn && r.round == round,
+            "serve: close_round({round}) in phase {:?} of round {}",
+            r.phase,
+            r.round
+        );
+        r.round_checkins = checkins;
+        r.round_deferred = deferred;
+
+        // arrival order (lanes, sockets, batches) must not leak into
+        // selection OR lease context: sort by the full payload so a
+        // device that double-checked-in with different payloads (e.g.
+        // a retry racing a thermal change) keeps an arrival-independent
+        // representative, then drop the duplicates
+        r.admitted.sort_by_key(|ci| {
+            (ci.device, ci.model, ci.band, ci.charging, ci.steps)
+        });
+        r.admitted.dedup_by_key(|ci| ci.device);
+
+        let ids: Vec<usize> =
+            r.admitted.iter().map(|ci| ci.device as usize).collect();
+        let mut rng = round_rng(self.cfg.seed, round as usize);
+        let picked_ids =
+            select_uniform(&ids, self.cfg.clients_per_round, &mut rng);
+
+        let mut cache = Self::lock(&self.cache);
+        let mut leases = HashMap::with_capacity(picked_ids.len());
+        for (seq, &gid) in picked_ids.iter().enumerate() {
+            let idx = r
+                .admitted
+                .binary_search_by_key(&(gid as u64), |ci| ci.device)
+                .map_err(|_| {
+                    crate::err!("serve: picked device {gid} not admitted")
+                })?;
+            let ci = r.admitted[idx];
+            let model = model_from_code(ci.model)
+                .expect("validated at check_in");
+            let key = PlanKey {
+                model: ci.model,
+                band: ci.band,
+                charging: ci.charging,
+            };
+            let (cost, _) = cache.get_or_insert_with(key, || {
+                plan_cost(&self.workload, model, ci.band, ci.charging)
+            });
+            leases.insert(
+                ci.device,
+                PlanLease {
+                    device: ci.device,
+                    round,
+                    seq: seq as u32,
+                    steps: ci.steps,
+                    latency_s: cost.latency_s * ci.steps as f64,
+                    energy_j: cost.energy_j * ci.steps as f64,
+                },
+            );
+        }
+        drop(cache);
+
+        let n = picked_ids.len();
+        r.picked = picked_ids.into_iter().map(|g| g as u64).collect();
+        r.leases = leases;
+        r.updates = vec![None; n];
+        r.received = 0;
+        r.phase = Phase::Update;
+        Ok(n as u32)
+    }
+
+    /// An admitted device asks whether it was selected this round.
+    pub fn lease_poll(&self, device: u64) -> crate::Result<Option<PlanLease>> {
+        let r = Self::lock(&self.round);
+        crate::ensure!(
+            r.phase == Phase::Update,
+            "serve: lease_poll before the round closed"
+        );
+        Ok(r.leases.get(&device).copied())
+    }
+
+    /// Accept a leased device's update into its dense seq slot.
+    pub fn push_update(&self, up: UpdatePush) -> Ack {
+        let mut r = Self::lock(&self.round);
+        if r.phase != Phase::Update {
+            return Ack::Rejected;
+        }
+        let ok = match r.leases.get(&up.device) {
+            Some(l) => {
+                l.round == up.round
+                    && l.seq == up.seq
+                    && up.params.len() == self.cfg.update_dim
+                    && up.weight.is_finite()
+                    && up.weight > 0.0
+            }
+            None => false,
+        };
+        let slot = up.seq as usize;
+        if !ok || slot >= r.updates.len() || r.updates[slot].is_some() {
+            return Ack::Rejected;
+        }
+        r.updates[slot] = Some((up.params, up.weight));
+        r.received += 1;
+        Ack::Accepted
+    }
+
+    /// Aggregate the finished round (FedAvg via `fl::server`), fold the
+    /// parity digest, advance to the next round's check-in phase.
+    pub fn finish_round(&self, round: u32) -> crate::Result<RoundSummary> {
+        let mut r = Self::lock(&self.round);
+        crate::ensure!(
+            r.phase == Phase::Update && r.round == round,
+            "serve: finish_round({round}) in phase {:?} of round {}",
+            r.phase,
+            r.round
+        );
+        crate::ensure!(
+            r.received == r.picked.len(),
+            "serve: round {round} finished with {}/{} updates",
+            r.received,
+            r.picked.len()
+        );
+
+        // straggler-paced round time + fleet energy, in picked (= seq)
+        // order so the f64 energy sum is reduction-order deterministic
+        let mut round_time_s = 0.0f64;
+        let mut round_energy_j = 0.0f64;
+        for gid in &r.picked {
+            let l = &r.leases[gid];
+            round_time_s = round_time_s.max(l.latency_s);
+            round_energy_j += l.energy_j;
+        }
+
+        // parity digest: round, admitted count, picked ids, round
+        // time/energy bits, then the aggregate parameter bits — the
+        // exact sequence the oracle folds
+        let admitted = r.admitted.len() as u64;
+        let mut digest = r.digest;
+        digest.push(round as u64);
+        digest.push(admitted);
+        for gid in &r.picked {
+            digest.push(*gid);
+        }
+        digest.push_f64(round_time_s);
+        digest.push_f64(round_energy_j);
+
+        let participants = r.picked.len() as u32;
+        if participants > 0 {
+            let updates: Vec<(Vec<Vec<f32>>, f64)> = r
+                .updates
+                .drain(..)
+                .map(|slot| {
+                    let (params, w) = slot.expect("received == picked");
+                    (vec![params], w)
+                })
+                .collect();
+            let agg = fedavg(&updates);
+            for v in &agg[0] {
+                digest.push_f32(*v);
+            }
+            r.last_aggregate = agg.into_iter().next().unwrap_or_default();
+        } else {
+            r.updates.clear();
+            r.last_aggregate.clear();
+        }
+        r.digest = digest;
+
+        let round_checkins = r.round_checkins;
+        let round_deferred = r.round_deferred;
+        r.totals.rounds_run += 1;
+        r.totals.checkins += round_checkins;
+        r.totals.admitted += admitted;
+        r.totals.deferred += round_deferred;
+        r.totals.participations += participants as u64;
+        r.totals.total_time_s += if admitted == 0 {
+            EMPTY_ROUND_WAIT_S
+        } else {
+            round_time_s + self.cfg.server_overhead_s
+        };
+        r.totals.total_energy_j += round_energy_j;
+
+        let summary = RoundSummary {
+            round,
+            checkins: r.round_checkins,
+            admitted,
+            deferred: r.round_deferred,
+            participants,
+            round_time_s,
+            round_energy_j,
+            digest: r.digest.h,
+        };
+
+        r.round += 1;
+        r.phase = Phase::CheckIn;
+        // late check-ins banked during the update phase open the next
+        // round's admitted set
+        r.admitted = std::mem::take(&mut r.next_admitted);
+        r.leases.clear();
+        r.picked.clear();
+        r.received = 0;
+        r.round_checkins = 0;
+        r.round_deferred = 0;
+        Ok(summary)
+    }
+
+    /// Cumulative parity digest (hex form used in reports/benches).
+    pub fn digest(&self) -> String {
+        digest_hex(Self::lock(&self.round).digest.h)
+    }
+
+    /// The last finished round's FedAvg aggregate (tests compare this
+    /// against a direct `fl::server::fedavg` call bit-for-bit).
+    pub fn last_aggregate(&self) -> Vec<f32> {
+        Self::lock(&self.round).last_aggregate.clone()
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        // lock order: round before cache, matching close_round/flush
+        let r = Self::lock(&self.round);
+        let cache = Self::lock(&self.cache);
+        ServeStats {
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            cache_evictions: cache.evictions,
+            totals: r.totals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::device::DeviceId;
+    use crate::serve::wire::model_code;
+
+    fn cfg(k: usize, cap: usize) -> ServeConfig {
+        ServeConfig {
+            seed: 7,
+            clients_per_round: k,
+            server_overhead_s: 0.5,
+            batch_size: 3,
+            admit_capacity: cap,
+            cache_capacity: 16,
+            update_dim: 4,
+            workload: WorkloadName::ShufflenetV2,
+        }
+    }
+
+    fn ci(device: u64, model: DeviceId) -> CheckIn {
+        CheckIn {
+            device,
+            model: model_code(model),
+            band: 0,
+            charging: true,
+            steps: 5,
+        }
+    }
+
+    fn drive_round(
+        c: &Coordinator,
+        round: u32,
+        devices: &[(u64, DeviceId)],
+    ) -> (RoundSummary, Vec<(Vec<f32>, f64)>) {
+        for &(d, m) in devices {
+            assert_eq!(c.check_in(ci(d, m)), Ack::Admitted);
+        }
+        let picked = c.close_round(round).unwrap();
+        let mut pushed = Vec::new();
+        for &(d, _) in devices {
+            if let Some(l) = c.lease_poll(d).unwrap() {
+                let params: Vec<f32> =
+                    (0..4).map(|i| (d as f32) + i as f32).collect();
+                let w = l.steps as f64;
+                assert_eq!(
+                    c.push_update(UpdatePush {
+                        device: d,
+                        round,
+                        seq: l.seq,
+                        weight: w,
+                        params: params.clone(),
+                    }),
+                    Ack::Accepted
+                );
+                pushed.push((l.seq, params, w));
+            }
+        }
+        assert_eq!(pushed.len(), picked as usize);
+        pushed.sort_by_key(|(seq, _, _)| *seq);
+        let summary = c.finish_round(round).unwrap();
+        (
+            summary,
+            pushed.into_iter().map(|(_, p, w)| (p, w)).collect(),
+        )
+    }
+
+    #[test]
+    fn aggregate_is_bit_identical_to_fl_server_fedavg() {
+        let c = Coordinator::new(cfg(3, 0)).unwrap();
+        let devices: Vec<(u64, DeviceId)> = vec![
+            (0, DeviceId::Pixel3),
+            (1, DeviceId::S10e),
+            (2, DeviceId::OnePlus8),
+            (3, DeviceId::TabS6),
+            (4, DeviceId::Mi10),
+        ];
+        let (summary, updates) = drive_round(&c, 0, &devices);
+        assert_eq!(summary.participants, 3);
+        assert_eq!(summary.admitted, 5);
+        let oracle = fedavg(
+            &updates
+                .iter()
+                .map(|(p, w)| (vec![p.clone()], *w))
+                .collect::<Vec<_>>(),
+        );
+        let got = c.last_aggregate();
+        assert_eq!(got.len(), oracle[0].len());
+        for (a, b) in got.iter().zip(&oracle[0]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "fedavg parity");
+        }
+    }
+
+    #[test]
+    fn admission_bound_defers_deterministically() {
+        let c = Coordinator::new(cfg(2, 2)).unwrap();
+        let mut admitted = 0;
+        let mut deferred = 0;
+        for d in 0..5u64 {
+            match c.check_in(ci(d, DeviceId::Pixel3)) {
+                Ack::Admitted => admitted += 1,
+                Ack::Deferred { retry_after_s } => {
+                    assert!(retry_after_s > 0.0);
+                    deferred += 1;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!((admitted, deferred), (2, 3));
+        let picked = c.close_round(0).unwrap();
+        assert_eq!(picked, 2);
+        for d in 0..5u64 {
+            if let Some(l) = c.lease_poll(d).unwrap() {
+                c.push_update(UpdatePush {
+                    device: d,
+                    round: 0,
+                    seq: l.seq,
+                    weight: 1.0,
+                    params: vec![0.0; 4],
+                });
+            }
+        }
+        let s = c.finish_round(0).unwrap();
+        assert_eq!(s.checkins, 5);
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.deferred, 3);
+        // next round's admission budget is fresh
+        assert_eq!(c.check_in(ci(9, DeviceId::Mi10)), Ack::Admitted);
+    }
+
+    #[test]
+    fn digest_is_independent_of_arrival_order() {
+        let devices: Vec<(u64, DeviceId)> = (0..10)
+            .map(|d| (d as u64, DeviceId::Pixel3))
+            .collect();
+        let mut reversed = devices.clone();
+        reversed.reverse();
+        let a = Coordinator::new(cfg(4, 0)).unwrap();
+        let b = Coordinator::new(cfg(4, 0)).unwrap();
+        let (sa, _) = drive_round(&a, 0, &devices);
+        let (sb, _) = drive_round(&b, 0, &reversed);
+        assert_eq!(sa.digest, sb.digest);
+        assert_eq!(sa.round_time_s.to_bits(), sb.round_time_s.to_bits());
+        assert_eq!(
+            sa.round_energy_j.to_bits(),
+            sb.round_energy_j.to_bits()
+        );
+    }
+
+    #[test]
+    fn protocol_misuse_is_rejected_not_fatal() {
+        let c = Coordinator::new(cfg(1, 0)).unwrap();
+        // unknown model / bad band / zero steps
+        assert_eq!(
+            c.check_in(CheckIn {
+                device: 0,
+                model: 99,
+                band: 0,
+                charging: false,
+                steps: 5
+            }),
+            Ack::Rejected
+        );
+        assert_eq!(
+            c.check_in(CheckIn {
+                device: 0,
+                model: 0,
+                band: 7,
+                charging: false,
+                steps: 5
+            }),
+            Ack::Rejected
+        );
+        // wrong-phase control ops error
+        assert!(c.finish_round(0).is_err());
+        assert!(c.lease_poll(0).is_err());
+        assert!(c.close_round(3).is_err(), "round number mismatch");
+        // a full round with one device
+        assert_eq!(c.check_in(ci(0, DeviceId::Pixel3)), Ack::Admitted);
+        c.close_round(0).unwrap();
+        let l = c.lease_poll(0).unwrap().unwrap();
+        // wrong dim, wrong seq, double push
+        assert_eq!(
+            c.push_update(UpdatePush {
+                device: 0,
+                round: 0,
+                seq: l.seq,
+                weight: 1.0,
+                params: vec![0.0; 3],
+            }),
+            Ack::Rejected
+        );
+        assert!(c.finish_round(0).is_err(), "missing update");
+        assert_eq!(
+            c.push_update(UpdatePush {
+                device: 0,
+                round: 0,
+                seq: l.seq,
+                weight: 1.0,
+                params: vec![0.0; 4],
+            }),
+            Ack::Accepted
+        );
+        assert_eq!(
+            c.push_update(UpdatePush {
+                device: 0,
+                round: 0,
+                seq: l.seq,
+                weight: 1.0,
+                params: vec![0.0; 4],
+            }),
+            Ack::Rejected,
+            "slot already filled"
+        );
+        c.finish_round(0).unwrap();
+    }
+
+    #[test]
+    fn late_checkins_carry_over_to_the_next_round() {
+        // a free-running client racing the round pacer: its check-in
+        // lands between close and finish, so it must neither join nor
+        // inflate the closing round — it opens the next one instead
+        let c = Coordinator::new(cfg(4, 0)).unwrap();
+        assert_eq!(c.check_in(ci(0, DeviceId::Pixel3)), Ack::Admitted);
+        c.close_round(0).unwrap();
+        assert_eq!(
+            c.check_in(ci(1, DeviceId::S10e)),
+            Ack::Admitted,
+            "late check-in is admitted (for the next round)"
+        );
+        let l = c.lease_poll(0).unwrap().unwrap();
+        c.push_update(UpdatePush {
+            device: 0,
+            round: 0,
+            seq: l.seq,
+            weight: 1.0,
+            params: vec![0.0; 4],
+        });
+        let s0 = c.finish_round(0).unwrap();
+        assert_eq!(s0.admitted, 1, "late arrival not billed to round 0");
+        // round 1: the carried device is selectable without re-checking
+        let picked = c.close_round(1).unwrap();
+        assert_eq!(picked, 1);
+        let lease = c.lease_poll(1).unwrap();
+        assert!(lease.is_some(), "carried device holds round 1's lease");
+    }
+
+    #[test]
+    fn empty_round_advances_the_clock_by_the_idle_wait() {
+        let c = Coordinator::new(cfg(3, 0)).unwrap();
+        assert_eq!(c.close_round(0).unwrap(), 0);
+        let s = c.finish_round(0).unwrap();
+        assert_eq!(s.participants, 0);
+        assert_eq!(s.round_time_s, 0.0);
+        let t = c.stats().totals;
+        assert_eq!(t.total_time_s, EMPTY_ROUND_WAIT_S);
+        assert_eq!(t.rounds_run, 1);
+    }
+
+    #[test]
+    fn batching_amortizes_exploration_across_equivalent_devices() {
+        let c = Coordinator::new(cfg(8, 0)).unwrap();
+        // 30 devices, all the same (model, band, charging) context
+        let devices: Vec<(u64, DeviceId)> =
+            (0..30).map(|d| (d as u64, DeviceId::S10e)).collect();
+        drive_round(&c, 0, &devices);
+        let s = c.stats();
+        assert_eq!(s.cache_misses, 1, "one exploration for 30 devices");
+        assert!(s.cache_hits >= 29 + 8 - 1, "hits {}", s.cache_hits);
+    }
+}

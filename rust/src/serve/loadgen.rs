@@ -1,0 +1,598 @@
+//! The serve load generator: the million-device fleet repurposed as
+//! traffic, plus the independent parity oracle.
+//!
+//! A [`ScenarioSpec`] fleet (`fleet::scenario::build_fleet`) is
+//! partitioned round-robin across `lanes` worker threads; each lane
+//! owns one [`ServeClient`] connection and, per round, polls its
+//! devices' availability, checks the online ones in (one pipelined
+//! batch), then lease-polls, charges the leased devices' loans, and
+//! pushes their synthetic updates. Lane 0 paces rounds with
+//! `RoundCtl::Close`/`Finish`. The same driver runs over the in-process
+//! client and loopback TCP — the transport is the only variable.
+//!
+//! [`run_oracle`] replays the identical round semantics with *none* of
+//! the serve machinery: a serial loop over the devices, selection via
+//! the fleet kernel's `round_rng`, plan costs from
+//! [`plan_cost`](super::cache::plan_cost) directly, aggregation via
+//! `fl::server::fedavg`. It folds the same digest field sequence as the
+//! coordinator, so `oracle digest == serve digest` is the claim that
+//! wire codec, batching, admission, the LRU cache and dense-seq
+//! aggregation are all value-transparent.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::fl::selection::select_uniform;
+use crate::fl::server::fedavg;
+use crate::fleet::device::{FleetDevice, FleetNode};
+use crate::fleet::engine::{round_rng, EMPTY_ROUND_WAIT_S};
+use crate::fleet::scenario::ScenarioSpec;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workload::load_or_builtin;
+
+use super::cache::plan_cost;
+use super::client::{InProcClient, LeaseReply, ServeClient, TcpClient};
+use super::coordinator::{digest_hex, Coordinator, DigestFold, ServeConfig};
+use super::wire::{model_code, Ack, CheckIn, UpdatePush};
+
+/// Transport tags recorded in outcomes and `BENCH_serve.json`.
+pub const TRANSPORT_INPROC: &str = "inproc";
+pub const TRANSPORT_TCP: &str = "tcp";
+
+/// Deterministic thermal band for (device stream seed, round) — the
+/// load-side model of the DVFS state a real device would report.
+pub fn thermal_band(seed: u64, round: usize) -> u8 {
+    let mut rng = Rng::new(
+        seed ^ (round as u64).wrapping_mul(0x94D0_49BB_1331_11EB),
+    );
+    rng.index(super::cache::N_THERMAL_BANDS as usize) as u8
+}
+
+/// Deterministic synthetic model update for (scenario seed, device,
+/// round) — what a real device's local SGD would produce, reduced to a
+/// reproducible vector so aggregates are parity-checkable.
+pub fn synth_update(
+    seed: u64,
+    device: u64,
+    round: usize,
+    dim: usize,
+) -> Vec<f32> {
+    let mut rng = Rng::new(
+        seed ^ device.wrapping_mul(0x8E84_86E2_4F32_19A3)
+            ^ (round as u64).wrapping_mul(0xB5AD_4ECE_DA1C_E2A9),
+    );
+    (0..dim).map(|_| (rng.f32() - 0.5) * 2.0).collect()
+}
+
+/// Everything one load-generator run produced.
+#[derive(Clone, Debug, Default)]
+pub struct ServeRunOutcome {
+    pub scenario: String,
+    pub transport: &'static str,
+    pub devices: usize,
+    pub lanes: usize,
+    pub rounds_run: usize,
+    pub checkins: u64,
+    pub admitted: u64,
+    pub deferred: u64,
+    pub participations: u64,
+    /// Virtual seconds (straggler-paced rounds + overhead/idle waits).
+    pub total_time_s: f64,
+    pub total_energy_j: f64,
+    /// The coordinator's cumulative parity digest (hex form).
+    pub digest: String,
+    /// Wall seconds for the whole run.
+    pub wall_s: f64,
+    /// Summed per-round check-in serving windows (slowest lane's
+    /// request burst; availability sweeps excluded) — the
+    /// `checkins_per_sec` denominator measures the coordinator, not
+    /// the load generator's simulation.
+    pub checkin_wall_s: f64,
+    /// Batch-amortized per-check-in round-trip latency samples, one per
+    /// (lane, round) with traffic.
+    pub latency_samples: Vec<f64>,
+}
+
+impl ServeRunOutcome {
+    /// Headline throughput: check-ins served per wall second of
+    /// check-in traffic.
+    pub fn checkins_per_sec(&self) -> f64 {
+        if self.checkin_wall_s > 0.0 {
+            self.checkins as f64 / self.checkin_wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Tail latency: p90 of the batch-amortized check-in samples.
+    pub fn p90_checkin_latency_s(&self) -> f64 {
+        stats::percentile(&self.latency_samples, 90.0)
+    }
+
+    /// Fraction of check-ins answered with `Deferred` backpressure.
+    pub fn deferral_rate(&self) -> f64 {
+        if self.checkins > 0 {
+            self.deferred as f64 / self.checkins as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("scenario", self.scenario.clone())
+            .set("transport", self.transport)
+            .set("devices", self.devices)
+            .set("lanes", self.lanes)
+            .set("rounds_run", self.rounds_run)
+            .set("checkins", self.checkins as f64)
+            .set("admitted", self.admitted as f64)
+            .set("deferred", self.deferred as f64)
+            .set("participations", self.participations as f64)
+            .set("total_time_s", self.total_time_s)
+            .set("total_energy_j", self.total_energy_j)
+            .set("digest", self.digest.clone())
+            .set("wall_s", self.wall_s)
+            .set("checkin_wall_s", self.checkin_wall_s)
+            .set("checkins_per_sec", self.checkins_per_sec())
+            .set("p90_checkin_latency_s", self.p90_checkin_latency_s())
+            .set("deferral_rate", self.deferral_rate())
+    }
+}
+
+/// One load-generator worker: a device partition + its connection.
+struct Lane {
+    lane_idx: usize,
+    n_lanes: usize,
+    devices: Vec<FleetDevice>,
+    client: Box<dyn ServeClient>,
+    reqs: Vec<CheckIn>,
+    admitted: Vec<u64>,
+    latencies: Vec<f64>,
+    /// Wall seconds of this round's check-in burst alone (the request
+    /// traffic, not the availability sweep) — the driver folds the max
+    /// across lanes into `checkin_wall_s`.
+    last_burst_s: f64,
+}
+
+impl Lane {
+    /// Availability poll + pipelined check-in burst for one round.
+    fn checkin_phase(
+        &mut self,
+        now_s: f64,
+        round: usize,
+    ) -> crate::Result<()> {
+        self.reqs.clear();
+        self.admitted.clear();
+        self.last_burst_s = 0.0;
+        for d in self.devices.iter_mut() {
+            if d.poll_online(now_s) {
+                let t = d.trace.wrap(now_s + d.shift_s);
+                let (_, charging) = d.trace.sample(t);
+                self.reqs.push(CheckIn {
+                    device: d.id as u64,
+                    model: model_code(d.model),
+                    band: thermal_band(d.seed, round),
+                    charging,
+                    steps: d.epoch_steps as u32,
+                });
+            }
+        }
+        if self.reqs.is_empty() {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let acks = self.client.check_in_batch(&self.reqs)?;
+        self.last_burst_s = t0.elapsed().as_secs_f64();
+        self.latencies
+            .push(self.last_burst_s / self.reqs.len() as f64);
+        crate::ensure!(
+            acks.len() == self.reqs.len(),
+            "serve loadgen: {} acks for {} check-ins",
+            acks.len(),
+            self.reqs.len()
+        );
+        for (req, ack) in self.reqs.iter().zip(&acks) {
+            match ack {
+                Ack::Admitted => self.admitted.push(req.device),
+                Ack::Deferred { .. } => {}
+                other => crate::bail!(
+                    "serve loadgen: device {} check-in got {other:?}",
+                    req.device
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// Lease poll + local charge + update push for one round.
+    fn update_phase(
+        &mut self,
+        round: u32,
+        seed: u64,
+        dim: usize,
+    ) -> crate::Result<()> {
+        if self.admitted.is_empty() {
+            return Ok(());
+        }
+        let replies = self.client.lease_poll_batch(&self.admitted)?;
+        crate::ensure!(
+            replies.len() == self.admitted.len(),
+            "serve loadgen: {} lease replies for {} polls",
+            replies.len(),
+            self.admitted.len()
+        );
+        let mut pushes = Vec::new();
+        for (&dev, reply) in self.admitted.iter().zip(&replies) {
+            let lease = match reply {
+                LeaseReply::Lease(l) => l,
+                LeaseReply::NotSelected => continue,
+            };
+            crate::ensure!(
+                lease.device == dev && lease.round == round,
+                "serve loadgen: lease {}/{} for poll {dev}/{round}",
+                lease.device,
+                lease.round
+            );
+            // the device pays its leased epoch: loan + train-time
+            // bookkeeping feed the next rounds' availability
+            let local = dev as usize / self.n_lanes;
+            crate::ensure!(
+                dev as usize % self.n_lanes == self.lane_idx
+                    && local < self.devices.len(),
+                "serve loadgen: device {dev} leased to the wrong lane"
+            );
+            self.devices[local].charge(lease.latency_s, lease.energy_j);
+            pushes.push(UpdatePush {
+                device: dev,
+                round,
+                seq: lease.seq,
+                weight: lease.steps as f64,
+                params: synth_update(seed, dev, round as usize, dim),
+            });
+        }
+        if pushes.is_empty() {
+            return Ok(());
+        }
+        let n = pushes.len();
+        let acks = self.client.push_update_batch(pushes)?;
+        crate::ensure!(
+            acks.len() == n && acks.iter().all(|a| *a == Ack::Accepted),
+            "serve loadgen: update push rejected"
+        );
+        Ok(())
+    }
+}
+
+/// Drive `spec.rounds` rounds of the serve protocol through the given
+/// per-lane clients (all pointed at one coordinator). See the module
+/// docs for the round structure.
+pub fn run_loadgen(
+    spec: &ScenarioSpec,
+    clients: Vec<Box<dyn ServeClient>>,
+    transport: &'static str,
+    update_dim: usize,
+) -> crate::Result<ServeRunOutcome> {
+    crate::ensure!(
+        !clients.is_empty(),
+        "serve loadgen needs at least one lane"
+    );
+    let n_lanes = clients.len();
+    let all = spec.build_fleet()?;
+    let n_devices = all.len();
+    let mut partitions: Vec<Vec<FleetDevice>> =
+        (0..n_lanes).map(|_| Vec::new()).collect();
+    for d in all {
+        partitions[d.id % n_lanes].push(d);
+    }
+    let mut lanes: Vec<Lane> = partitions
+        .into_iter()
+        .zip(clients)
+        .enumerate()
+        .map(|(lane_idx, (devices, client))| Lane {
+            lane_idx,
+            n_lanes,
+            devices,
+            client,
+            reqs: Vec::new(),
+            admitted: Vec::new(),
+            latencies: Vec::new(),
+            last_burst_s: 0.0,
+        })
+        .collect();
+
+    let mut out = ServeRunOutcome {
+        scenario: spec.name.clone(),
+        transport,
+        devices: n_devices,
+        lanes: n_lanes,
+        ..Default::default()
+    };
+    let wall0 = Instant::now();
+    let mut now_s = 0.0f64;
+    // same basis as the oracle's fold, so a zero-round run still
+    // digest-matches instead of reporting a bare 0
+    let mut digest_u64 = DigestFold::default().h;
+
+    for round in 0..spec.rounds {
+        std::thread::scope(|s| -> crate::Result<()> {
+            let mut handles = Vec::with_capacity(lanes.len());
+            for lane in lanes.iter_mut() {
+                handles.push(s.spawn(move || lane.checkin_phase(now_s, round)));
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| crate::err!("serve loadgen lane panicked"))??;
+            }
+            Ok(())
+        })?;
+        // concurrent lanes: the round's request-serving window is the
+        // slowest lane's burst (availability sweep excluded, so
+        // checkins_per_sec measures the coordinator, not the simulator)
+        out.checkin_wall_s += lanes
+            .iter()
+            .map(|l| l.last_burst_s)
+            .fold(0.0f64, f64::max);
+
+        lanes[0].client.round_close(round as u32)?;
+
+        let seed = spec.seed;
+        std::thread::scope(|s| -> crate::Result<()> {
+            let mut handles = Vec::with_capacity(lanes.len());
+            for lane in lanes.iter_mut() {
+                handles.push(s.spawn(move || {
+                    lane.update_phase(round as u32, seed, update_dim)
+                }));
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| crate::err!("serve loadgen lane panicked"))??;
+            }
+            Ok(())
+        })?;
+
+        let summary = lanes[0].client.round_finish(round as u32)?;
+        out.checkins += summary.checkins;
+        out.admitted += summary.admitted;
+        out.deferred += summary.deferred;
+        out.participations += summary.participants as u64;
+        out.total_energy_j += summary.round_energy_j;
+        now_s += if summary.admitted == 0 {
+            EMPTY_ROUND_WAIT_S
+        } else {
+            summary.round_time_s + spec.server_overhead_s
+        };
+        digest_u64 = summary.digest;
+        out.rounds_run = round + 1;
+    }
+
+    out.total_time_s = now_s;
+    out.wall_s = wall0.elapsed().as_secs_f64();
+    out.digest = digest_hex(digest_u64);
+    for lane in lanes.iter_mut() {
+        out.latency_samples.append(&mut lane.latencies);
+    }
+    Ok(out)
+}
+
+/// In-process wiring: `lanes` [`InProcClient`]s over one shared
+/// coordinator. Returns the coordinator too so callers can read cache
+/// stats.
+pub fn run_inproc(
+    spec: &ScenarioSpec,
+    lanes: usize,
+    cfg: &ServeConfig,
+) -> crate::Result<(ServeRunOutcome, Arc<Coordinator>)> {
+    let coord = Arc::new(Coordinator::new(cfg.clone())?);
+    let clients: Vec<Box<dyn ServeClient>> = (0..lanes.max(1))
+        .map(|_| {
+            Box::new(InProcClient::new(Arc::clone(&coord)))
+                as Box<dyn ServeClient>
+        })
+        .collect();
+    let out = run_loadgen(spec, clients, TRANSPORT_INPROC, cfg.update_dim)?;
+    Ok((out, coord))
+}
+
+/// Loopback/remote TCP wiring: `lanes` connections to `addr`.
+pub fn run_tcp(
+    spec: &ScenarioSpec,
+    lanes: usize,
+    addr: std::net::SocketAddr,
+    update_dim: usize,
+) -> crate::Result<ServeRunOutcome> {
+    let mut clients: Vec<Box<dyn ServeClient>> = Vec::new();
+    for _ in 0..lanes.max(1) {
+        clients.push(Box::new(TcpClient::connect(addr)?));
+    }
+    run_loadgen(spec, clients, TRANSPORT_TCP, update_dim)
+}
+
+/// What the oracle replay produced.
+#[derive(Clone, Debug, Default)]
+pub struct OracleOutcome {
+    pub digest: String,
+    pub rounds_run: usize,
+    pub participations: u64,
+    pub total_time_s: f64,
+    pub total_energy_j: f64,
+}
+
+/// Serial replay of the serve round semantics with no coordinator, no
+/// cache, no wire format: availability → `round_rng` selection →
+/// direct [`plan_cost`] leases → `fl::server::fedavg` aggregation,
+/// folding the digest field-for-field as the coordinator does. Only
+/// valid against runs with unbounded admission (deferrals are a serve
+/// concept the oracle doesn't model).
+pub fn run_oracle(
+    spec: &ScenarioSpec,
+    cfg: &ServeConfig,
+) -> crate::Result<OracleOutcome> {
+    let workload = load_or_builtin(cfg.workload, "artifacts");
+    let mut devices = spec.build_fleet()?;
+    let mut fold = DigestFold::default();
+    let mut out = OracleOutcome::default();
+    let mut now_s = 0.0f64;
+
+    for round in 0..spec.rounds {
+        let mut online: Vec<usize> = Vec::new();
+        for d in devices.iter_mut() {
+            if d.poll_online(now_s) {
+                online.push(d.id);
+            }
+        }
+        let mut rng = round_rng(cfg.seed, round);
+        let picked =
+            select_uniform(&online, cfg.clients_per_round, &mut rng);
+
+        fold.push(round as u64);
+        fold.push(online.len() as u64);
+        for &gid in &picked {
+            fold.push(gid as u64);
+        }
+
+        let mut round_time_s = 0.0f64;
+        let mut round_energy_j = 0.0f64;
+        let mut updates: Vec<(Vec<Vec<f32>>, f64)> =
+            Vec::with_capacity(picked.len());
+        let mut charges: Vec<(usize, f64, f64)> =
+            Vec::with_capacity(picked.len());
+        for &gid in &picked {
+            let d = &devices[gid];
+            let t = d.trace.wrap(now_s + d.shift_s);
+            let (_, charging) = d.trace.sample(t);
+            let band = thermal_band(d.seed, round);
+            let cost = plan_cost(&workload, d.model, band, charging);
+            let steps = d.epoch_steps as u32;
+            let latency_s = cost.latency_s * steps as f64;
+            let energy_j = cost.energy_j * steps as f64;
+            round_time_s = round_time_s.max(latency_s);
+            round_energy_j += energy_j;
+            charges.push((gid, latency_s, energy_j));
+            updates.push((
+                vec![synth_update(
+                    cfg.seed,
+                    gid as u64,
+                    round,
+                    cfg.update_dim,
+                )],
+                steps as f64,
+            ));
+        }
+        for (gid, t, e) in charges {
+            devices[gid].charge(t, e);
+        }
+
+        fold.push_f64(round_time_s);
+        fold.push_f64(round_energy_j);
+        if !updates.is_empty() {
+            let agg = fedavg(&updates);
+            for v in &agg[0] {
+                fold.push_f32(*v);
+            }
+        }
+
+        out.participations += picked.len() as u64;
+        out.total_energy_j += round_energy_j;
+        now_s += if online.is_empty() {
+            EMPTY_ROUND_WAIT_S
+        } else {
+            round_time_s + spec.server_overhead_s
+        };
+        out.rounds_run = round + 1;
+    }
+    out.total_time_s = now_s;
+    out.digest = digest_hex(fold.h);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "serve-unit".to_string(),
+            devices: 180,
+            rounds: 5,
+            clients_per_round: 12,
+            trace_users: 2,
+            ..ScenarioSpec::default()
+        }
+    }
+
+    #[test]
+    fn inproc_digest_matches_the_oracle_at_any_lane_count() {
+        let spec = tiny_spec();
+        let cfg = ServeConfig::for_scenario(&spec);
+        let oracle = run_oracle(&spec, &cfg).unwrap();
+        assert!(oracle.participations > 0);
+        for lanes in [1usize, 3] {
+            let (out, _) = run_inproc(&spec, lanes, &cfg).unwrap();
+            assert_eq!(
+                out.digest, oracle.digest,
+                "inproc@{lanes} lanes vs oracle"
+            );
+            assert_eq!(out.participations, oracle.participations);
+            assert_eq!(
+                out.total_time_s.to_bits(),
+                oracle.total_time_s.to_bits()
+            );
+            assert_eq!(
+                out.total_energy_j.to_bits(),
+                oracle.total_energy_j.to_bits()
+            );
+            assert_eq!(out.deferred, 0);
+            assert_eq!(out.admitted, out.checkins);
+        }
+    }
+
+    #[test]
+    fn bounded_admission_defers_and_still_completes() {
+        let spec = tiny_spec();
+        let mut cfg = ServeConfig::for_scenario(&spec);
+        cfg.admit_capacity = 5;
+        let (out, _) = run_inproc(&spec, 2, &cfg).unwrap();
+        assert!(out.deferred > 0, "tiny capacity must defer");
+        assert!(out.deferral_rate() > 0.0 && out.deferral_rate() < 1.0);
+        assert!(out.admitted <= 5 * out.rounds_run as u64);
+        assert_eq!(out.rounds_run, spec.rounds);
+    }
+
+    #[test]
+    fn synthetic_streams_are_deterministic() {
+        assert_eq!(synth_update(1, 2, 3, 8), synth_update(1, 2, 3, 8));
+        assert_ne!(synth_update(1, 2, 3, 8), synth_update(1, 2, 4, 8));
+        assert_ne!(synth_update(1, 5, 3, 8), synth_update(1, 2, 3, 8));
+        assert_eq!(synth_update(0, 0, 0, 16).len(), 16);
+        assert_eq!(thermal_band(9, 4), thermal_band(9, 4));
+        let bands: Vec<u8> =
+            (0..64).map(|r| thermal_band(1234, r)).collect();
+        assert!(bands.iter().all(|b| *b < 3));
+        assert!(
+            bands.windows(2).any(|w| w[0] != w[1]),
+            "band schedule must actually vary"
+        );
+    }
+
+    #[test]
+    fn outcome_metrics_derive_sanely() {
+        let out = ServeRunOutcome {
+            checkins: 100,
+            deferred: 25,
+            checkin_wall_s: 2.0,
+            latency_samples: (1..=10).map(|i| i as f64 * 1e-3).collect(),
+            ..Default::default()
+        };
+        assert_eq!(out.checkins_per_sec(), 50.0);
+        assert_eq!(out.deferral_rate(), 0.25);
+        let p90 = out.p90_checkin_latency_s();
+        assert!((p90 - 9.1e-3).abs() < 1e-9, "p90={p90}");
+        let v = out.to_json();
+        assert!(v.req_f64("checkins_per_sec").unwrap() > 0.0);
+        assert_eq!(ServeRunOutcome::default().checkins_per_sec(), 0.0);
+        assert_eq!(ServeRunOutcome::default().deferral_rate(), 0.0);
+    }
+}

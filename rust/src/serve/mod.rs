@@ -1,0 +1,59 @@
+//! `serve` — the zero-dependency FL coordinator control plane.
+//!
+//! The paper's deployment context (§2, §5) is a central coordinator
+//! admitting, profiling and aggregating check-ins from millions of
+//! smartphones. PR 1–2 built the *fleet side* of that loop at scale;
+//! this subsystem supplies the *server side* and repurposes the fleet
+//! as its load generator — the repo's first subsystem whose throughput
+//! is measured in requests served, not devices stepped.
+//!
+//! - [`wire`] — the compact length-prefixed binary wire format
+//!   (`CheckIn`, `PlanLease`, `UpdatePush`, `Ack`, round control);
+//!   f64/f32 fields travel as raw bits so values round-trip exactly.
+//! - [`cache`] — the LRU **profile cache** keyed on (SoC model,
+//!   thermal band, charger state): §4.2 exploration runs once per
+//!   context and is shared across every equivalent device.
+//! - [`coordinator`] — the transport-agnostic round state machine:
+//!   bounded admission with `Retry-After` deferrals (overload degrades
+//!   into a deterministic deferral rate), check-ins coalesced into
+//!   fixed-size batches (one round/cache lock acquisition per batch),
+//!   (seed, round)-keyed selection via the fleet kernel's `round_rng`,
+//!   and FedAvg aggregation through `fl::server` over dense seq slots.
+//! - [`server`] — the `std::net` TCP listener with a thread-per-worker
+//!   accept/IO pool; pipelining-aware framing (flush only when the
+//!   reader would block).
+//! - [`client`] — the [`ServeClient`] trait with both wirings:
+//!   [`InProcClient`] (fleet devices check in with no sockets) and
+//!   [`TcpClient`] (pipelined batches over loopback/remote TCP).
+//! - [`loadgen`] — the fleet-as-traffic load generator (lane threads
+//!   over a `ScenarioSpec` fleet) and [`run_oracle`], the serial
+//!   machinery-free replay whose digest the serve paths must reproduce
+//!   bit-for-bit.
+//!
+//! **Parity contract.** Everything the coordinator folds into its
+//! digest is arrival-order independent, so three independently wired
+//! runs — oracle, in-process, loopback TCP — must produce one digest.
+//! `fleet::bench::run_serve_bench` (behind `swan bench serve` and the
+//! CI `serve-smoke` job) errors on any divergence.
+
+pub mod cache;
+pub mod client;
+pub mod coordinator;
+pub mod loadgen;
+pub mod server;
+pub mod wire;
+
+pub use cache::{plan_cost, PlanKey, ProfileCache};
+pub use client::{InProcClient, LeaseReply, ServeClient, TcpClient};
+pub use coordinator::{
+    Coordinator, DigestFold, ServeConfig, ServeStats, RETRY_AFTER_S,
+};
+pub use loadgen::{
+    run_inproc, run_loadgen, run_oracle, run_tcp, synth_update,
+    thermal_band, OracleOutcome, ServeRunOutcome,
+};
+pub use server::{serve_tcp, TcpServeHandle};
+pub use wire::{
+    model_code, model_from_code, Ack, CheckIn, Msg, PlanLease,
+    RoundSummary, UpdatePush,
+};

@@ -1,0 +1,311 @@
+//! The TCP face of the coordinator: a `std::net` listener with a
+//! thread-per-worker accept/IO pool (no async runtime, no external
+//! crates).
+//!
+//! One accept thread hands connections to a fixed pool of IO workers
+//! through a bounded queue. A connection is owned by one worker for its
+//! whole life (the load generator holds one connection per lane), so
+//! the pool size bounds concurrent connections — when the queue is
+//! full, the accept thread writes a `Deferred` ack and closes, which is
+//! the transport-level face of the same deterministic-degradation
+//! policy the admission queue applies per check-in.
+//!
+//! The per-connection loop is a plain frame → dispatch → reply cycle
+//! over the [`wire`](super::wire) codec, with one latency-critical
+//! detail: replies buffer in a `BufWriter` and only flush when the
+//! reader is about to block, so a pipelined burst of N check-ins costs
+//! O(1) syscalls instead of 2N.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::coordinator::{Coordinator, RETRY_AFTER_S};
+use super::wire::{read_frame, write_frame, Ack, Msg, RoundOp};
+
+/// A running TCP coordinator. Dropping the handle does NOT stop the
+/// server; call [`shutdown`](TcpServeHandle::shutdown) (benches) or
+/// [`wait`](TcpServeHandle::wait) (the `swan serve` CLI).
+pub struct TcpServeHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Serve `coord` on `bind_addr` (e.g. `"127.0.0.1:0"` for an ephemeral
+/// loopback port) with `workers` IO threads.
+pub fn serve_tcp(
+    coord: Arc<Coordinator>,
+    bind_addr: &str,
+    workers: usize,
+) -> crate::Result<TcpServeHandle> {
+    let workers = workers.max(1);
+    let listener = TcpListener::bind(bind_addr)
+        .map_err(|e| crate::err!("serve: bind {bind_addr}: {e}"))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let (tx, rx) = sync_channel::<TcpStream>(workers);
+    let rx = Arc::new(Mutex::new(rx));
+
+    let mut worker_handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let rx = Arc::clone(&rx);
+        let coord = Arc::clone(&coord);
+        worker_handles.push(std::thread::spawn(move || loop {
+            // take the receiver lock only to pull the next connection
+            let conn = {
+                let guard: std::sync::MutexGuard<'_, Receiver<TcpStream>> =
+                    rx.lock().expect("serve conn queue poisoned");
+                guard.recv()
+            };
+            match conn {
+                Ok(stream) => serve_conn(&coord, stream),
+                Err(_) => return, // accept thread gone: drain complete
+            }
+        }));
+    }
+
+    let stop_accept = Arc::clone(&stop);
+    let accept = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if stop_accept.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => {
+                    // persistent accept errors (e.g. fd exhaustion)
+                    // return immediately — back off instead of
+                    // busy-spinning the accept thread at 100% CPU
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(50),
+                    );
+                    continue;
+                }
+            };
+            match tx.try_send(stream) {
+                Ok(()) => {}
+                Err(TrySendError::Full(mut s)) => {
+                    // every worker is owned by a live connection:
+                    // degrade deterministically instead of queueing
+                    let _ = write_frame(
+                        &mut s,
+                        &Msg::Ack(Ack::Deferred {
+                            retry_after_s: RETRY_AFTER_S,
+                        }),
+                    );
+                    let _ = s.flush();
+                }
+                Err(TrySendError::Disconnected(_)) => break,
+            }
+        }
+        // tx drops here; idle workers' recv() errors and they exit
+    });
+
+    Ok(TcpServeHandle {
+        addr,
+        stop,
+        accept: Some(accept),
+        workers: worker_handles,
+    })
+}
+
+/// One connection's frame loop. IO or protocol-codec errors end the
+/// connection (one peer's corruption never takes down the server);
+/// coordinator-level refusals travel back as `Rejected` acks.
+fn serve_conn(coord: &Arc<Coordinator>, stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        // about to block on the socket? push out buffered replies
+        // first, or a pipelining peer deadlocks waiting for them
+        if reader.buffer().is_empty() && writer.flush().is_err() {
+            return;
+        }
+        let msg = match read_frame(&mut reader) {
+            Ok(Some(m)) => m,
+            Ok(None) => {
+                let _ = writer.flush();
+                return; // clean EOF
+            }
+            Err(_) => return, // corrupt frame: drop the connection
+        };
+        let reply = dispatch(coord, msg);
+        if write_frame(&mut writer, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+fn dispatch(coord: &Arc<Coordinator>, msg: Msg) -> Msg {
+    match msg {
+        Msg::CheckIn(ci) => Msg::Ack(coord.check_in(ci)),
+        Msg::LeasePoll(lp) => match coord.lease_poll(lp.device) {
+            Ok(Some(lease)) => Msg::PlanLease(lease),
+            Ok(None) => Msg::Ack(Ack::NotSelected),
+            Err(_) => Msg::Ack(Ack::Rejected),
+        },
+        Msg::UpdatePush(up) => Msg::Ack(coord.push_update(up)),
+        Msg::RoundCtl(ctl) => match ctl.op {
+            RoundOp::Close => match coord.close_round(ctl.round) {
+                Ok(picked) => Msg::Ack(Ack::Closed { picked }),
+                Err(_) => Msg::Ack(Ack::Rejected),
+            },
+            RoundOp::Finish => match coord.finish_round(ctl.round) {
+                Ok(summary) => Msg::RoundSummary(summary),
+                Err(_) => Msg::Ack(Ack::Rejected),
+            },
+        },
+        // server-to-client message types arriving inbound are misuse
+        Msg::PlanLease(_) | Msg::Ack(_) | Msg::RoundSummary(_) => {
+            Msg::Ack(Ack::Rejected)
+        }
+    }
+}
+
+impl TcpServeHandle {
+    /// Stop accepting, wake the accept thread, and join the pool.
+    /// Callers must have closed their client connections first —
+    /// workers finish serving any still-open connection before
+    /// exiting.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // the accept loop is parked in accept(2); poke it
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the accept thread exits (the `swan serve` CLI's
+    /// foreground mode — effectively forever, until the process dies).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::client::{ServeClient, TcpClient};
+    use crate::serve::coordinator::ServeConfig;
+    use crate::serve::wire::CheckIn;
+    use crate::workload::WorkloadName;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            seed: 3,
+            clients_per_round: 2,
+            server_overhead_s: 0.5,
+            batch_size: 4,
+            admit_capacity: 0,
+            cache_capacity: 16,
+            update_dim: 4,
+            workload: WorkloadName::ShufflenetV2,
+        }
+    }
+
+    #[test]
+    fn a_full_round_over_loopback() {
+        let coord = Arc::new(Coordinator::new(cfg()).unwrap());
+        let handle =
+            serve_tcp(Arc::clone(&coord), "127.0.0.1:0", 2).unwrap();
+        {
+            let mut c = TcpClient::connect(handle.addr).unwrap();
+            let reqs: Vec<CheckIn> = (0..6u64)
+                .map(|d| CheckIn {
+                    device: d,
+                    model: (d % 5) as u8,
+                    band: 0,
+                    charging: true,
+                    steps: 5,
+                })
+                .collect();
+            let acks = c.check_in_batch(&reqs).unwrap();
+            assert!(acks.iter().all(|a| *a == Ack::Admitted));
+            let picked = c.round_close(0).unwrap();
+            assert_eq!(picked, 2);
+            let devices: Vec<u64> = reqs.iter().map(|r| r.device).collect();
+            let replies = c.lease_poll_batch(&devices).unwrap();
+            let mut pushes = Vec::new();
+            for r in &replies {
+                if let crate::serve::client::LeaseReply::Lease(l) = r {
+                    pushes.push(crate::serve::wire::UpdatePush {
+                        device: l.device,
+                        round: 0,
+                        seq: l.seq,
+                        weight: l.steps as f64,
+                        params: vec![1.0, 2.0, 3.0, 4.0],
+                    });
+                }
+            }
+            assert_eq!(pushes.len(), 2);
+            let acks = c.push_update_batch(pushes).unwrap();
+            assert!(acks.iter().all(|a| *a == Ack::Accepted));
+            let s = c.round_finish(0).unwrap();
+            assert_eq!(s.participants, 2);
+            assert_eq!(s.admitted, 6);
+            assert_eq!(s.digest, {
+                // the handle's digest is readable in-process too
+                u64::from_str_radix(
+                    coord.digest().strip_prefix("serve-").unwrap(),
+                    16,
+                )
+                .unwrap()
+            });
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn overflow_connections_get_a_deferral_frame() {
+        let coord = Arc::new(Coordinator::new(cfg()).unwrap());
+        let handle = serve_tcp(coord, "127.0.0.1:0", 1).unwrap();
+        // occupy the only worker with a live connection
+        let held = TcpClient::connect(handle.addr).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // with the worker busy and a 1-slot queue, at most one of the
+        // next two connections can be queued; the overflow one must
+        // receive a deterministic Deferred frame (the queued one just
+        // never gets served, so its read times out)
+        let overflow: Vec<TcpStream> = (0..2)
+            .map(|_| {
+                let s = TcpStream::connect(handle.addr).unwrap();
+                s.set_read_timeout(Some(
+                    std::time::Duration::from_millis(500),
+                ))
+                .unwrap();
+                s
+            })
+            .collect();
+        let mut deferred = 0;
+        let mut readers: Vec<BufReader<TcpStream>> =
+            overflow.into_iter().map(BufReader::new).collect();
+        for r in readers.iter_mut() {
+            if let Ok(Some(Msg::Ack(Ack::Deferred { retry_after_s }))) =
+                read_frame(r)
+            {
+                assert!(retry_after_s > 0.0);
+                deferred += 1;
+            }
+        }
+        assert!(deferred >= 1, "overload must surface as a deferral");
+        drop(held);
+        drop(readers);
+        handle.shutdown();
+    }
+}

@@ -1,0 +1,583 @@
+//! The coordinator wire format: compact length-prefixed binary frames.
+//!
+//! Every frame is `u32-LE body length | body`, where the body is a
+//! one-byte message tag followed by fixed-width little-endian fields
+//! (f64/f32 travel as raw bits, so values round-trip bit-exactly — the
+//! digest-parity contract between the in-process and loopback-TCP paths
+//! depends on that). No serde, no varints, no text: a `CheckIn` is 20
+//! bytes on the wire (4 length + 1 tag + 15 payload) and decoding is a
+//! handful of array loads.
+//!
+//! Message set (tag):
+//!
+//! | tag | message        | direction | payload |
+//! |-----|----------------|-----------|---------|
+//! | 1   | `CheckIn`      | c → s     | device u64, model u8, band u8, charging u8, steps u32 |
+//! | 2   | `LeasePoll`    | c → s     | device u64 |
+//! | 3   | `PlanLease`    | s → c     | device u64, round u32, seq u32, steps u32, latency f64, energy f64 |
+//! | 4   | `UpdatePush`   | c → s     | device u64, round u32, seq u32, weight f64, n u32, n×f32 |
+//! | 5   | `Ack`          | s → c     | kind u8 (+ retry f32 / picked u32) |
+//! | 6   | `RoundCtl`     | c → s     | round u32, op u8 (1 = close, 2 = finish) |
+//! | 7   | `RoundSummary` | s → c     | round u32, checkins u64, admitted u64, deferred u64, participants u32, round_time f64, round_energy f64, digest u64 |
+//!
+//! Oversized or malformed frames are decode errors, never panics: a
+//! hostile or corrupt peer costs the server one connection, not the
+//! process.
+
+use std::io::{Read, Write};
+
+use crate::soc::device::DeviceId;
+
+/// Hard ceiling on a frame body (guards against corrupt length
+/// prefixes allocating gigabytes). 16 MiB fits ~4M-parameter updates.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+/// A device's round-start report: who it is and what context it is in.
+/// `band`/`charging` are the profile-cache key axes (§4.2 sharing).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckIn {
+    pub device: u64,
+    /// SoC model wire code (see [`model_code`]).
+    pub model: u8,
+    /// Thermal band 0 (cool) / 1 (warm) / 2 (hot).
+    pub band: u8,
+    pub charging: bool,
+    /// Local SGD steps this device runs if leased.
+    pub steps: u32,
+}
+
+/// After `RoundCtl::Close`, an admitted device asks whether it was
+/// selected.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LeasePoll {
+    pub device: u64,
+}
+
+/// A participation lease: the resolved §4.2 plan cost for this device's
+/// whole local epoch, plus the dense slot (`seq`) its update must fill.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanLease {
+    pub device: u64,
+    pub round: u32,
+    /// Index into the round's picked order — the aggregation fold key.
+    pub seq: u32,
+    pub steps: u32,
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+/// A leased device's model update (one flat parameter leaf + weight).
+#[derive(Clone, Debug, PartialEq)]
+pub struct UpdatePush {
+    pub device: u64,
+    pub round: u32,
+    pub seq: u32,
+    pub weight: f64,
+    pub params: Vec<f32>,
+}
+
+/// Server verdicts. `Deferred` is the explicit-backpressure path: the
+/// admission queue is full and the device should retry after the given
+/// delay instead of hammering the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Ack {
+    Admitted,
+    Deferred { retry_after_s: f32 },
+    NotSelected,
+    Accepted,
+    Rejected,
+    Closed { picked: u32 },
+}
+
+/// Round-phase control (driven by the load generator / deployment
+/// round pacer): close check-ins → run selection; finish → aggregate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RoundOp {
+    Close,
+    Finish,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundCtl {
+    pub round: u32,
+    pub op: RoundOp,
+}
+
+/// What one finished round produced. `digest` is the coordinator's
+/// cumulative parity digest after folding this round.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundSummary {
+    pub round: u32,
+    pub checkins: u64,
+    pub admitted: u64,
+    pub deferred: u64,
+    pub participants: u32,
+    /// Straggler-paced round duration (max lease latency), seconds.
+    pub round_time_s: f64,
+    pub round_energy_j: f64,
+    pub digest: u64,
+}
+
+/// One wire frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    CheckIn(CheckIn),
+    LeasePoll(LeasePoll),
+    PlanLease(PlanLease),
+    UpdatePush(UpdatePush),
+    Ack(Ack),
+    RoundCtl(RoundCtl),
+    RoundSummary(RoundSummary),
+}
+
+/// SoC model → wire code. The codes are part of the wire format: do not
+/// reorder.
+pub fn model_code(id: DeviceId) -> u8 {
+    match id {
+        DeviceId::Pixel3 => 0,
+        DeviceId::S10e => 1,
+        DeviceId::OnePlus8 => 2,
+        DeviceId::TabS6 => 3,
+        DeviceId::Mi10 => 4,
+    }
+}
+
+/// Wire code → SoC model (None for unknown codes — a decode-time
+/// rejection, not a panic).
+pub fn model_from_code(code: u8) -> Option<DeviceId> {
+    match code {
+        0 => Some(DeviceId::Pixel3),
+        1 => Some(DeviceId::S10e),
+        2 => Some(DeviceId::OnePlus8),
+        3 => Some(DeviceId::TabS6),
+        4 => Some(DeviceId::Mi10),
+        _ => None,
+    }
+}
+
+const TAG_CHECK_IN: u8 = 1;
+const TAG_LEASE_POLL: u8 = 2;
+const TAG_PLAN_LEASE: u8 = 3;
+const TAG_UPDATE_PUSH: u8 = 4;
+const TAG_ACK: u8 = 5;
+const TAG_ROUND_CTL: u8 = 6;
+const TAG_ROUND_SUMMARY: u8 = 7;
+
+const ACK_ADMITTED: u8 = 1;
+const ACK_DEFERRED: u8 = 2;
+const ACK_NOT_SELECTED: u8 = 3;
+const ACK_ACCEPTED: u8 = 4;
+const ACK_REJECTED: u8 = 5;
+const ACK_CLOSED: u8 = 6;
+
+// -- encoding ---------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append `msg` as one frame (length prefix included) to `buf`.
+pub fn encode_into(msg: &Msg, buf: &mut Vec<u8>) {
+    let start = buf.len();
+    put_u32(buf, 0); // length placeholder, patched below
+    match msg {
+        Msg::CheckIn(m) => {
+            buf.push(TAG_CHECK_IN);
+            put_u64(buf, m.device);
+            buf.push(m.model);
+            buf.push(m.band);
+            buf.push(m.charging as u8);
+            put_u32(buf, m.steps);
+        }
+        Msg::LeasePoll(m) => {
+            buf.push(TAG_LEASE_POLL);
+            put_u64(buf, m.device);
+        }
+        Msg::PlanLease(m) => {
+            buf.push(TAG_PLAN_LEASE);
+            put_u64(buf, m.device);
+            put_u32(buf, m.round);
+            put_u32(buf, m.seq);
+            put_u32(buf, m.steps);
+            put_f64(buf, m.latency_s);
+            put_f64(buf, m.energy_j);
+        }
+        Msg::UpdatePush(m) => {
+            buf.push(TAG_UPDATE_PUSH);
+            put_u64(buf, m.device);
+            put_u32(buf, m.round);
+            put_u32(buf, m.seq);
+            put_f64(buf, m.weight);
+            put_u32(buf, m.params.len() as u32);
+            for p in &m.params {
+                put_f32(buf, *p);
+            }
+        }
+        Msg::Ack(a) => {
+            buf.push(TAG_ACK);
+            match a {
+                Ack::Admitted => buf.push(ACK_ADMITTED),
+                Ack::Deferred { retry_after_s } => {
+                    buf.push(ACK_DEFERRED);
+                    put_f32(buf, *retry_after_s);
+                }
+                Ack::NotSelected => buf.push(ACK_NOT_SELECTED),
+                Ack::Accepted => buf.push(ACK_ACCEPTED),
+                Ack::Rejected => buf.push(ACK_REJECTED),
+                Ack::Closed { picked } => {
+                    buf.push(ACK_CLOSED);
+                    put_u32(buf, *picked);
+                }
+            }
+        }
+        Msg::RoundCtl(m) => {
+            buf.push(TAG_ROUND_CTL);
+            put_u32(buf, m.round);
+            buf.push(match m.op {
+                RoundOp::Close => 1,
+                RoundOp::Finish => 2,
+            });
+        }
+        Msg::RoundSummary(m) => {
+            buf.push(TAG_ROUND_SUMMARY);
+            put_u32(buf, m.round);
+            put_u64(buf, m.checkins);
+            put_u64(buf, m.admitted);
+            put_u64(buf, m.deferred);
+            put_u32(buf, m.participants);
+            put_f64(buf, m.round_time_s);
+            put_f64(buf, m.round_energy_j);
+            put_u64(buf, m.digest);
+        }
+    }
+    let body_len = (buf.len() - start - 4) as u32;
+    buf[start..start + 4].copy_from_slice(&body_len.to_le_bytes());
+}
+
+/// Encode `msg` as a standalone frame.
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32);
+    encode_into(msg, &mut buf);
+    buf
+}
+
+// -- decoding ---------------------------------------------------------------
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        crate::ensure!(
+            self.pos + n <= self.b.len(),
+            "wire: truncated frame (need {n} bytes at offset {}, body is {})",
+            self.pos,
+            self.b.len()
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f32(&mut self) -> crate::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn done(&self) -> crate::Result<()> {
+        crate::ensure!(
+            self.pos == self.b.len(),
+            "wire: {} trailing bytes after message",
+            self.b.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+/// Decode one frame body (the bytes after the length prefix).
+pub fn decode_body(body: &[u8]) -> crate::Result<Msg> {
+    let mut c = Cursor { b: body, pos: 0 };
+    let tag = c.u8()?;
+    let msg = match tag {
+        TAG_CHECK_IN => Msg::CheckIn(CheckIn {
+            device: c.u64()?,
+            model: c.u8()?,
+            band: c.u8()?,
+            charging: c.u8()? != 0,
+            steps: c.u32()?,
+        }),
+        TAG_LEASE_POLL => Msg::LeasePoll(LeasePoll { device: c.u64()? }),
+        TAG_PLAN_LEASE => Msg::PlanLease(PlanLease {
+            device: c.u64()?,
+            round: c.u32()?,
+            seq: c.u32()?,
+            steps: c.u32()?,
+            latency_s: c.f64()?,
+            energy_j: c.f64()?,
+        }),
+        TAG_UPDATE_PUSH => {
+            let device = c.u64()?;
+            let round = c.u32()?;
+            let seq = c.u32()?;
+            let weight = c.f64()?;
+            let n = c.u32()? as usize;
+            // divide instead of multiply: `n * 4` could wrap on 32-bit
+            // targets and bypass the allocation bound
+            crate::ensure!(
+                n <= body.len() / 4,
+                "wire: update claims {n} params in a {}-byte body",
+                body.len()
+            );
+            let mut params = Vec::with_capacity(n);
+            for _ in 0..n {
+                params.push(c.f32()?);
+            }
+            Msg::UpdatePush(UpdatePush {
+                device,
+                round,
+                seq,
+                weight,
+                params,
+            })
+        }
+        TAG_ACK => {
+            let kind = c.u8()?;
+            Msg::Ack(match kind {
+                ACK_ADMITTED => Ack::Admitted,
+                ACK_DEFERRED => Ack::Deferred {
+                    retry_after_s: c.f32()?,
+                },
+                ACK_NOT_SELECTED => Ack::NotSelected,
+                ACK_ACCEPTED => Ack::Accepted,
+                ACK_REJECTED => Ack::Rejected,
+                ACK_CLOSED => Ack::Closed { picked: c.u32()? },
+                other => crate::bail!("wire: unknown ack kind {other}"),
+            })
+        }
+        TAG_ROUND_CTL => {
+            let round = c.u32()?;
+            let op = match c.u8()? {
+                1 => RoundOp::Close,
+                2 => RoundOp::Finish,
+                other => crate::bail!("wire: unknown round op {other}"),
+            };
+            Msg::RoundCtl(RoundCtl { round, op })
+        }
+        TAG_ROUND_SUMMARY => Msg::RoundSummary(RoundSummary {
+            round: c.u32()?,
+            checkins: c.u64()?,
+            admitted: c.u64()?,
+            deferred: c.u64()?,
+            participants: c.u32()?,
+            round_time_s: c.f64()?,
+            round_energy_j: c.f64()?,
+            digest: c.u64()?,
+        }),
+        other => crate::bail!("wire: unknown message tag {other}"),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+/// Write one frame to `w` (no flush — callers batch frames and flush
+/// once per pipeline burst).
+pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> crate::Result<()> {
+    let buf = encode(msg);
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read one frame from `r`. `Ok(None)` means the peer closed the
+/// connection cleanly at a frame boundary; EOF mid-frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> crate::Result<Option<Msg>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        let n = r.read(&mut len_buf[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None); // clean EOF between frames
+            }
+            crate::bail!("wire: EOF inside a frame header ({got}/4 bytes)");
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    crate::ensure!(
+        (1..=MAX_FRAME_BYTES).contains(&len),
+        "wire: frame body of {len} bytes outside 1..={MAX_FRAME_BYTES}"
+    );
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .map_err(|e| crate::err!("wire: EOF inside a {len}-byte frame: {e}"))?;
+    decode_body(&body).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let bytes = encode(&msg);
+        let len =
+            u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+        assert_eq!(len as usize + 4, bytes.len(), "length prefix");
+        let back = decode_body(&bytes[4..]).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip(Msg::CheckIn(CheckIn {
+            device: u64::MAX - 3,
+            model: 4,
+            band: 2,
+            charging: true,
+            steps: 7,
+        }));
+        roundtrip(Msg::LeasePoll(LeasePoll { device: 9 }));
+        roundtrip(Msg::PlanLease(PlanLease {
+            device: 1,
+            round: 2,
+            seq: 3,
+            steps: 4,
+            latency_s: 0.1 + 0.2, // a value with ugly low bits
+            energy_j: f64::MIN_POSITIVE,
+        }));
+        roundtrip(Msg::UpdatePush(UpdatePush {
+            device: 5,
+            round: 6,
+            seq: 0,
+            weight: 12.5,
+            params: vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0],
+        }));
+        for ack in [
+            Ack::Admitted,
+            Ack::Deferred { retry_after_s: 30.0 },
+            Ack::NotSelected,
+            Ack::Accepted,
+            Ack::Rejected,
+            Ack::Closed { picked: 1000 },
+        ] {
+            roundtrip(Msg::Ack(ack));
+        }
+        for op in [RoundOp::Close, RoundOp::Finish] {
+            roundtrip(Msg::RoundCtl(RoundCtl { round: 19, op }));
+        }
+        roundtrip(Msg::RoundSummary(RoundSummary {
+            round: 3,
+            checkins: 2_000,
+            admitted: 1_900,
+            deferred: 100,
+            participants: 100,
+            round_time_s: 123.456,
+            round_energy_j: 9.75,
+            digest: 0xDEAD_BEEF_CAFE_F00D,
+        }));
+    }
+
+    #[test]
+    fn floats_roundtrip_bit_exactly() {
+        let lease = PlanLease {
+            device: 0,
+            round: 0,
+            seq: 0,
+            steps: 1,
+            latency_s: f64::from_bits(0x3FF0_0000_0000_0001), // 1.0 + 1 ulp
+            energy_j: -0.0,
+        };
+        let bytes = encode(&Msg::PlanLease(lease));
+        match decode_body(&bytes[4..]).unwrap() {
+            Msg::PlanLease(back) => {
+                assert_eq!(back.latency_s.to_bits(), lease.latency_s.to_bits());
+                assert_eq!(back.energy_j.to_bits(), lease.energy_j.to_bits());
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_framing_and_clean_eof() {
+        let mut buf = Vec::new();
+        let a = Msg::Ack(Ack::Admitted);
+        let b = Msg::LeasePoll(LeasePoll { device: 42 });
+        encode_into(&a, &mut buf);
+        encode_into(&b, &mut buf);
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Some(a));
+        assert_eq!(read_frame(&mut r).unwrap(), Some(b));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn malformed_frames_error_not_panic() {
+        // unknown tag
+        assert!(decode_body(&[99]).is_err());
+        // truncated body
+        assert!(decode_body(&[TAG_LEASE_POLL, 1, 2]).is_err());
+        // trailing garbage
+        let mut bytes = encode(&Msg::Ack(Ack::Accepted));
+        bytes.push(0);
+        let len = (bytes.len() - 4) as u32;
+        bytes[0..4].copy_from_slice(&len.to_le_bytes());
+        assert!(decode_body(&bytes[4..]).is_err());
+        // EOF mid-header and mid-frame
+        let mut r: &[u8] = &[1, 0];
+        assert!(read_frame(&mut r).is_err());
+        let good = encode(&Msg::Ack(Ack::Accepted));
+        let mut r2 = &good[..good.len() - 1];
+        assert!(read_frame(&mut r2).is_err());
+        // absurd length prefix rejected before allocation
+        let mut r3: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF, 0, 0];
+        assert!(read_frame(&mut r3).is_err());
+        // update param count inconsistent with body size
+        let mut body = vec![TAG_UPDATE_PUSH];
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&1.0f64.to_bits().to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_body(&body).is_err());
+    }
+
+    #[test]
+    fn model_codes_are_a_bijection() {
+        for d in crate::soc::device::all_devices() {
+            assert_eq!(model_from_code(model_code(d.id)), Some(d.id));
+        }
+        assert_eq!(model_from_code(200), None);
+    }
+}

@@ -19,6 +19,16 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Wrap externally collected samples (e.g. the serve load
+    /// generator's per-check-in latencies) so they flow through the
+    /// same percentile/CSV reporting as timed closures.
+    pub fn from_samples(name: &str, samples: Vec<f64>) -> Measurement {
+        Measurement {
+            name: name.to_string(),
+            samples,
+        }
+    }
+
     pub fn mean(&self) -> f64 {
         stats::mean(&self.samples)
     }

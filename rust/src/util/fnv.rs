@@ -1,0 +1,74 @@
+//! FNV-1a — the repo's one order-sensitive fold for determinism
+//! fingerprints.
+//!
+//! Both the fleet kernel's aggregate digest
+//! (`fleet::metrics::FleetOutcome::digest`) and the serve control
+//! plane's parity digest (`serve::coordinator::DigestFold`) fold their
+//! field streams through this primitive, so the offset-basis/prime
+//! constants live in exactly one place. FNV-1a is deliberately not a
+//! cryptographic hash: the digests detect *divergence between runs
+//! that should be identical* (resharding, transport changes), not
+//! adversarial collisions.
+
+/// An incremental FNV-1a fold over 64-bit words. Floats are folded as
+/// raw bits, so a single-ulp difference changes the digest.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a {
+    pub h: u64,
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a {
+            h: 0xcbf2_9ce4_8422_2325, // FNV-1a 64-bit offset basis
+        }
+    }
+}
+
+impl Fnv1a {
+    pub fn push(&mut self, x: u64) {
+        self.h ^= x;
+        self.h = self.h.wrapping_mul(0x0000_0100_0000_01B3); // FNV prime
+    }
+
+    pub fn push_f64(&mut self, x: f64) {
+        self.push(x.to_bits());
+    }
+
+    pub fn push_f32(&mut self, x: f32) {
+        self.push(x.to_bits() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_is_order_sensitive_and_ulp_sensitive() {
+        let mut a = Fnv1a::default();
+        a.push(1);
+        a.push(2);
+        let mut b = Fnv1a::default();
+        b.push(2);
+        b.push(1);
+        assert_ne!(a.h, b.h, "order must matter");
+
+        let mut x = Fnv1a::default();
+        x.push_f64(1.0);
+        let mut y = Fnv1a::default();
+        y.push_f64(f64::from_bits(1.0f64.to_bits() + 1));
+        assert_ne!(x.h, y.h, "one ulp must matter");
+
+        let mut z = Fnv1a::default();
+        z.push_f32(1.5);
+        let mut w = Fnv1a::default();
+        w.push(1.5f32.to_bits() as u64);
+        assert_eq!(z.h, w.h, "push_f32 folds the raw bits");
+    }
+
+    #[test]
+    fn empty_fold_is_the_offset_basis() {
+        assert_eq!(Fnv1a::default().h, 0xcbf2_9ce4_8422_2325);
+    }
+}

@@ -6,11 +6,12 @@
 //! JSON parser/writer ([`json`]), the PCHIP monotone-cubic interpolator
 //! the paper's trace pipeline uses ([`pchip`]), summary statistics
 //! ([`stats`]), a randomized property-test harness ([`check`]), a
-//! wall-clock bench harness ([`bench`]) and table/CSV emitters
-//! ([`table`]).
+//! wall-clock bench harness ([`bench`]), table/CSV emitters
+//! ([`table`]) and the FNV-1a determinism-digest fold ([`fnv`]).
 
 pub mod bench;
 pub mod check;
+pub mod fnv;
 pub mod json;
 pub mod pchip;
 pub mod rng;

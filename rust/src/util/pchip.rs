@@ -417,6 +417,74 @@ mod tests {
     }
 
     #[test]
+    fn cursor_boundary_cases_pin_the_knot_edges() {
+        let p = wiggly(); // knots span [0, 12]
+        // exactly at / below the first knot: clamp branch, cursor reset
+        let mut cur = PchipCursor::default();
+        assert_eq!(p.eval_monotone(11.0, &mut cur).to_bits(), p.eval(11.0).to_bits());
+        assert_eq!(p.eval_monotone(0.0, &mut cur).to_bits(), p.y[0].to_bits());
+        assert_eq!(cur.seg, 0, "at-first-knot query must reset the cursor");
+        assert_eq!(p.eval_monotone(-3.0, &mut cur).to_bits(), p.y[0].to_bits());
+        assert_eq!(cur.seg, 0);
+        // just inside the first segment after a clamp: forward walk
+        assert_eq!(
+            p.eval_monotone(0.5, &mut cur).to_bits(),
+            p.eval(0.5).to_bits()
+        );
+        // exactly at / above the last knot: clamp branch, cursor parked
+        // on the final segment
+        let n = p.x.len();
+        assert_eq!(
+            p.eval_monotone(12.0, &mut cur).to_bits(),
+            p.y[n - 1].to_bits()
+        );
+        assert_eq!(cur.seg, n - 2, "at-last-knot query parks on last seg");
+        assert_eq!(
+            p.eval_monotone(1e12, &mut cur).to_bits(),
+            p.y[n - 1].to_bits()
+        );
+        // interior knots hit exactly must match eval bit-for-bit too
+        let mut fresh = PchipCursor::default();
+        for &t in &p.x {
+            assert_eq!(
+                p.eval_monotone(t, &mut fresh).to_bits(),
+                p.eval(t).to_bits(),
+                "knot t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_segment_interpolant_and_table() {
+        // two knots = one segment: the smallest legal Pchip; the cursor
+        // has nowhere to walk and must still agree with eval everywhere
+        let p = Pchip::new(vec![2.0, 4.0], vec![10.0, 20.0]).unwrap();
+        let mut cur = PchipCursor::default();
+        for i in 0..=60 {
+            let t = 1.0 + i as f64 * 0.1; // sweeps below, across, above
+            assert_eq!(
+                p.eval_monotone(t, &mut cur).to_bits(),
+                p.eval(t).to_bits(),
+                "t={t}"
+            );
+            assert_eq!(cur.seg, 0, "only one segment exists");
+        }
+        // midpoint of linear data stays linear
+        assert!((p.eval(3.0) - 15.0).abs() < 1e-12);
+
+        // a one-cell table: every query clamps onto the single value
+        let single = PchipTable::build(&p, 2.0, 1.0, 1);
+        assert_eq!(single.len(), 1);
+        for t in [-1e9, 2.0, 2.5, 1e9] {
+            assert_eq!(single.at(t).to_bits(), p.eval(2.0).to_bits());
+        }
+        // an empty table reports NaN rather than indexing out of range
+        let empty = PchipTable::build(&p, 2.0, 1.0, 0);
+        assert!(empty.is_empty());
+        assert!(empty.at(2.0).is_nan());
+    }
+
+    #[test]
     fn eval_many_matches_per_point_eval_and_clamps() {
         let p = wiggly();
         let ts: Vec<f64> =

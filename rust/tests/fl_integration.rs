@@ -152,7 +152,7 @@ fn fl_baseline_loses_clients_swan_keeps_them() {
     let run = |arm: FlArm| {
         let ds = SyntheticDataset::vision(cfg.seed);
         let mut sim = FlSim::new(cfg.clone(), arm, ds, &workload).unwrap();
-        sim.run_systems_only(4000)
+        sim.run_systems_only(4000).unwrap()
     };
     let swan = run(FlArm::Swan);
     let base = run(FlArm::Baseline);

@@ -149,7 +149,7 @@ fn fl_sim_systems_only_reshard_identical() {
         let ds = SyntheticDataset::vision(cfg.seed);
         let mut sim =
             FlSim::new(cfg.clone(), FlArm::Swan, ds, &workload).unwrap();
-        sim.run_systems_only_sharded(300, shards)
+        sim.run_systems_only_sharded(300, shards).unwrap()
     };
     let one = run(1);
     let four = run(4);
@@ -173,7 +173,7 @@ fn fl_sim_clients_survive_the_kernel_round_trip() {
     let mut sim = FlSim::new(cfg, FlArm::Swan, ds, &workload).unwrap();
     let n = sim.clients.len();
     let ids: Vec<usize> = sim.clients.iter().map(|c| c.id).collect();
-    let out = sim.run_systems_only(200);
+    let out = sim.run_systems_only(200).unwrap();
     assert_eq!(sim.clients.len(), n, "clients lost in the kernel");
     let ids_after: Vec<usize> = sim.clients.iter().map(|c| c.id).collect();
     assert_eq!(ids, ids_after, "client order must be restored");

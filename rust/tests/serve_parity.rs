@@ -1,0 +1,108 @@
+//! Serve control-plane parity: the acceptance contract of the serve
+//! subsystem.
+//!
+//! 1. The **in-process** serve path (fleet devices checking in through
+//!    the coordinator with no sockets) must produce bit-identical round
+//!    aggregates to a machinery-free replay that aggregates with
+//!    `fl::server::fedavg` — wire structs, batching, admission, the
+//!    LRU profile cache and dense-seq aggregation must all be
+//!    value-transparent.
+//! 2. The **loopback-TCP** path must reproduce the in-process digest —
+//!    the binary wire format and the pipelined server round-trip every
+//!    bit (the CI `serve-smoke` job asserts the same at 2k devices).
+//!
+//! The full `smoke` preset runs here; `city` (100k devices) carries
+//! `#[ignore]` because debug-mode builds make it minutes-slow — run it
+//! with `cargo test --release -- --ignored`, or via
+//! `swan bench serve --scenario city --no-tcp`, which performs the
+//! identical assertion in release mode.
+
+use swan::fleet::{run_serve_bench, ScenarioSpec};
+use swan::serve::{run_inproc, run_oracle, ServeConfig};
+
+#[test]
+fn smoke_scenario_inproc_matches_fl_server_oracle() {
+    // the full `smoke` builtin (2k devices × 25 rounds), not a
+    // miniature: this is acceptance criterion #1 at its stated scale
+    let spec = ScenarioSpec::builtin("smoke").expect("builtin");
+    let cfg = ServeConfig::for_scenario(&spec);
+    let oracle = run_oracle(&spec, &cfg).expect("oracle replay");
+    let (out, coord) = run_inproc(&spec, 4, &cfg).expect("inproc serve");
+    assert_eq!(out.digest, oracle.digest, "smoke: serve vs fl::server");
+    assert_eq!(out.participations, oracle.participations);
+    assert_eq!(
+        out.total_energy_j.to_bits(),
+        oracle.total_energy_j.to_bits()
+    );
+    assert_eq!(out.total_time_s.to_bits(), oracle.total_time_s.to_bits());
+    assert_eq!(out.rounds_run, spec.rounds);
+    assert!(out.participations > 0, "smoke must select participants");
+    // §4.2 sharing: a 2k-device run explores at most the full context
+    // space (5 models × 3 bands × 2 charger states), never per-device
+    let stats = coord.stats();
+    assert!(
+        stats.cache_misses <= 30,
+        "explorations {} exceed the context space",
+        stats.cache_misses
+    );
+    assert!(stats.cache_hits > stats.cache_misses * 10);
+}
+
+#[test]
+fn loopback_tcp_matches_the_inproc_digest() {
+    // small scale: this test pins the wire format + server round-trip,
+    // CI's serve-smoke job covers the 2k-device version in release
+    let spec = ScenarioSpec {
+        name: "serve-tcp-unit".to_string(),
+        devices: 240,
+        rounds: 4,
+        clients_per_round: 16,
+        trace_users: 2,
+        ..ScenarioSpec::default()
+    };
+    let report =
+        run_serve_bench(&spec, 2, true, 0).expect("serve bench with TCP");
+    let tcp = report.tcp.expect("TCP run present");
+    assert_eq!(tcp.digest, report.inproc.digest);
+    assert_eq!(
+        report.oracle_digest.as_deref(),
+        Some(report.inproc.digest.as_str())
+    );
+    assert_eq!(tcp.participations, report.inproc.participations);
+    assert_eq!(tcp.checkins, report.inproc.checkins);
+    assert_eq!(tcp.deferred, 0);
+}
+
+#[test]
+fn lane_count_cannot_perturb_the_digest() {
+    let spec = ScenarioSpec {
+        name: "serve-lanes-unit".to_string(),
+        devices: 300,
+        rounds: 5,
+        clients_per_round: 20,
+        trace_users: 2,
+        ..ScenarioSpec::default()
+    };
+    let cfg = ServeConfig::for_scenario(&spec);
+    let (one, _) = run_inproc(&spec, 1, &cfg).expect("1 lane");
+    let (eight, _) = run_inproc(&spec, 8, &cfg).expect("8 lanes");
+    assert_eq!(one.digest, eight.digest, "1 vs 8 lanes");
+    assert_eq!(one.participations, eight.participations);
+}
+
+#[test]
+#[ignore = "city = 100k devices; minutes-slow in debug builds — run with \
+            --release -- --ignored, or `swan bench serve --scenario city \
+            --no-tcp` which asserts the same parity"]
+fn city_scenario_inproc_matches_fl_server_oracle() {
+    let spec = ScenarioSpec::builtin("city").expect("builtin");
+    let cfg = ServeConfig::for_scenario(&spec);
+    let oracle = run_oracle(&spec, &cfg).expect("oracle replay");
+    let (out, _) = run_inproc(&spec, 8, &cfg).expect("inproc serve");
+    assert_eq!(out.digest, oracle.digest, "city: serve vs fl::server");
+    assert_eq!(out.participations, oracle.participations);
+    assert_eq!(
+        out.total_energy_j.to_bits(),
+        oracle.total_energy_j.to_bits()
+    );
+}
