@@ -35,8 +35,13 @@ fn main() {
 
     let shard_counts: &[usize] =
         if million { &[4, 8] } else { &[1, 2, 4, 8] };
+    let obs = if args.iter().any(|a| a == "--events") {
+        swan::obs::Obs::stderr()
+    } else {
+        swan::obs::Obs::off()
+    };
     let report =
-        run_fleet_bench(&spec, shard_counts, FlArm::Swan, !million)
+        run_fleet_bench(&spec, shard_counts, FlArm::Swan, !million, &obs)
             .expect("fleet bench (fails on determinism violation)");
 
     let mut set = BenchSet::new("fleet_throughput");

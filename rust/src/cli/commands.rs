@@ -7,12 +7,19 @@
 //! swan pcmark  [--artifacts artifacts]
 //! swan fl      --model shufflenet_s --rounds 20 --clients 3
 //! swan fleet   --scenario city --shards 8 --arm both
-//! swan serve   --port 7077 --scenario smoke --workers 4
+//! swan serve   --port 7077 --scenario smoke --workers 4 --events serve.ndjson
 //! swan bench   fleet --scenario city --shards 1,2,4,8 --json
 //! swan bench   serve --scenario smoke --lanes 4 --json
+//! swan bench   floor --floors ci/perf_floors.json
+//! swan obs     check events.ndjson
 //! swan traces  --users 4
 //! swan report  table2|table3|fig1|fig2|fig3|fleet
 //! ```
+//!
+//! `--events <path>` (fleet/serve/bench) streams the telemetry spine's
+//! NDJSON event stream to a file; `--events stderr` (or `-`) streams to
+//! stderr. `swan obs check` validates a captured stream; `swan bench
+//! floor` enforces the committed CI perf floors against bench records.
 
 use crate::report;
 use crate::runtime::{ModelExecutor, Registry, RuntimeClient};
@@ -52,6 +59,7 @@ pub fn run_main() -> crate::Result<()> {
         "fleet" => cmd_fleet(&rest),
         "serve" => cmd_serve(&rest),
         "bench" => cmd_bench(&rest),
+        "obs" => cmd_obs(&rest),
         "traces" => cmd_traces(&rest),
         "report" => cmd_report(&rest),
         "help" | "--help" | "-h" => {
@@ -78,6 +86,7 @@ fn print_help() {
          \x20 fleet     sharded fleet simulation (100k–1M devices)\n\
          \x20 serve     run the FL coordinator control plane on TCP\n\
          \x20 bench     throughput harnesses (BENCH_fleet.json / BENCH_serve.json)\n\
+         \x20 obs       telemetry utilities (obs check <events.ndjson>)\n\
          \x20 traces    generate + preprocess GreenHub-style traces\n\
          \x20 report    regenerate a paper table/figure\n"
     );
@@ -281,9 +290,11 @@ fn cmd_fleet(rest: &[String]) -> crate::Result<()> {
         opt("devices", "override device count (0 = scenario value)", Some("0")),
         opt("rounds", "override round count (0 = scenario value)", Some("0")),
         opt("arm", "swan|baseline|both", Some("both")),
+        opt("events", EVENTS_HELP, None),
     ];
     let args = parse_args(rest, &specs)?;
     let spec = scenario_arg(&args, "smoke")?;
+    let obs = obs_arg(&args)?;
     let mut shards = args.get_usize("shards", 4)?;
     if shards == 0 {
         shards = std::thread::available_parallelism()
@@ -302,7 +313,7 @@ fn cmd_fleet(rest: &[String]) -> crate::Result<()> {
     println!("scenario: {:#}", spec.to_json());
     let mut outcomes = Vec::new();
     for arm in arms {
-        let out = crate::fleet::run_scenario(&spec, shards, arm)?;
+        let out = crate::fleet::run_scenario_obs(&spec, shards, arm, &obs)?;
         println!(
             "[{}] {} devices × {} rounds on {} shards: vt={:.1}h \
              energy={:.1}kJ steps={} online {}→{} | \
@@ -322,6 +333,16 @@ fn cmd_fleet(rest: &[String]) -> crate::Result<()> {
         outcomes.push(out);
     }
     report::fleet_table(&outcomes).emit()?;
+    for out in &outcomes {
+        report::obs_table(
+            &format!(
+                "fleet phase breakdown [{}] {} shards",
+                out.arm, out.shards
+            ),
+            &out.spans,
+        )
+        .emit()?;
+    }
     Ok(())
 }
 
@@ -353,6 +374,20 @@ fn scenario_arg(
     Ok(spec)
 }
 
+/// Resolve the telemetry sink from the shared `--events` opt: a path
+/// streams NDJSON to that file, the literal `stderr` (or `-`) streams
+/// to stderr, and no flag leaves telemetry off.
+fn obs_arg(args: &Args) -> crate::Result<crate::obs::Obs> {
+    match args.get("events") {
+        None => Ok(crate::obs::Obs::off()),
+        Some("stderr") | Some("-") => Ok(crate::obs::Obs::stderr()),
+        Some(path) => crate::obs::Obs::to_file(path),
+    }
+}
+
+const EVENTS_HELP: &str =
+    "stream NDJSON telemetry to a file path, or 'stderr'";
+
 fn cmd_serve(rest: &[String]) -> crate::Result<()> {
     // no --devices/--rounds here: the coordinator serves whatever
     // fleet connects — only the scenario's seed/K/overhead/workload
@@ -366,9 +401,11 @@ fn cmd_serve(rest: &[String]) -> crate::Result<()> {
         opt("batch", "check-in coalescing batch size", Some("256")),
         opt("cap", "per-round admission bound (0 = unbounded)", Some("0")),
         opt("cache", "LRU profile-cache capacity (contexts)", Some("64")),
+        opt("events", EVENTS_HELP, None),
     ];
     let args = parse_args(rest, &specs)?;
     let spec = scenario_arg(&args, "smoke")?;
+    let obs = obs_arg(&args)?;
     let mut cfg = crate::serve::ServeConfig::for_scenario(&spec);
     cfg.batch_size = args.get_usize("batch", 256)?.max(1);
     cfg.admit_capacity = args.get_usize("cap", 0)?;
@@ -379,8 +416,10 @@ fn cmd_serve(rest: &[String]) -> crate::Result<()> {
         args.get_str("host", "127.0.0.1"),
         args.get_usize("port", 7077)?
     );
-    let coord =
-        std::sync::Arc::new(crate::serve::Coordinator::new(cfg.clone())?);
+    let coord = std::sync::Arc::new(crate::serve::Coordinator::with_obs(
+        cfg.clone(),
+        obs,
+    )?);
     let handle = crate::serve::serve_tcp(coord, &bind, workers)?;
     println!(
         "serve: coordinator for scenario '{}' listening on {} \
@@ -408,7 +447,10 @@ fn cmd_bench(rest: &[String]) -> crate::Result<()> {
     match what {
         "fleet" => cmd_bench_fleet(&rest),
         "serve" => cmd_bench_serve(&rest),
-        other => crate::bail!("unknown bench '{other}' (fleet|serve)"),
+        "floor" => cmd_bench_floor(&rest),
+        other => {
+            crate::bail!("unknown bench '{other}' (fleet|serve|floor)")
+        }
     }
 }
 
@@ -433,9 +475,11 @@ fn cmd_bench_serve(rest: &[String]) -> crate::Result<()> {
             default: None,
             is_switch: true,
         },
+        opt("events", EVENTS_HELP, None),
     ];
     let args = parse_args(rest, &specs)?;
     let spec = scenario_arg(&args, "smoke")?;
+    let obs = obs_arg(&args)?;
     let lanes = args.get_usize("lanes", 4)?.max(1);
     let cap = args.get_usize("cap", 0)?;
 
@@ -445,19 +489,17 @@ fn cmd_bench_serve(rest: &[String]) -> crate::Result<()> {
         lanes,
         !args.has("no-tcp"),
         cap,
+        &obs,
     )?;
     report::serve_table(&report.runs()).emit()?;
     for run in report.runs() {
-        let lat = crate::util::bench::Measurement::from_samples(
-            &format!("{}_checkin_latency", run.transport),
-            run.latency_samples.clone(),
-        );
+        let h = &run.latency_hist;
         println!(
             "{:9} check-in latency: p50 {}, p90 {} over {} burst samples",
             run.transport,
-            crate::util::bench::fmt_secs(lat.p50()),
-            crate::util::bench::fmt_secs(lat.p90()),
-            lat.samples.len()
+            crate::util::bench::fmt_secs(h.quantile(0.50)),
+            crate::util::bench::fmt_secs(h.quantile(0.90)),
+            h.count()
         );
     }
     match &report.oracle_digest {
@@ -517,9 +559,11 @@ fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
             default: None,
             is_switch: true,
         },
+        opt("events", EVENTS_HELP, None),
     ];
     let args = parse_args(rest, &specs)?;
     let spec = scenario_arg(&args, "city")?;
+    let obs = obs_arg(&args)?;
     let shards_arg = args.get_str("shards", "1,2,4,8");
     let mut shard_counts = Vec::new();
     for tok in shards_arg.split(',') {
@@ -553,6 +597,7 @@ fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
         &shard_counts,
         arm,
         with_reference,
+        &obs,
     )?;
     let outcomes: Vec<crate::fleet::FleetOutcome> = report
         .reference
@@ -561,6 +606,17 @@ fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
         .cloned()
         .collect();
     report::fleet_table(&outcomes).emit()?;
+    let best = report.best_soa();
+    report::obs_table(
+        &format!("fleet phase breakdown (soa, {} shards)", best.shards),
+        &best.spans,
+    )
+    .emit()?;
+    report::obs_metrics_table(
+        &format!("fleet counters (soa, {} shards)", best.shards),
+        &best.metrics,
+    )
+    .emit()?;
     for (shards, ratio) in report.speedup_same_shards() {
         println!("speedup vs reference @ {shards} shards: {ratio:.2}x");
     }
@@ -579,6 +635,113 @@ fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
         let path = report.write_json(args.get_str("out", "BENCH_fleet.json"))?;
         println!("wrote {}", path.display());
     }
+    Ok(())
+}
+
+/// `swan bench floor` — the CI perf-floor gate: fail when a freshly
+/// emitted bench record regresses below the committed floors.
+fn cmd_bench_floor(rest: &[String]) -> crate::Result<()> {
+    let specs = [
+        opt("floors", "perf-floor policy JSON", Some("ci/perf_floors.json")),
+        opt("fleet", "BENCH_fleet.json record to gate ('' = skip)", Some("BENCH_fleet.json")),
+        opt("serve", "BENCH_serve.json record to gate ('' = skip)", Some("BENCH_serve.json")),
+        opt("min-fleet", "override the fleet floor, devices-stepped/sec (0 = use policy)", Some("0")),
+        opt("min-serve", "override the serve floor, checkins/sec (0 = use policy)", Some("0")),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let floors_path = args.get_str("floors", "ci/perf_floors.json");
+    let floors = crate::util::json::parse_file(&floors_path)?;
+
+    let fleet_path = args.get_str("fleet", "BENCH_fleet.json");
+    if !fleet_path.is_empty() {
+        let rec = crate::util::json::parse_file(&fleet_path)?;
+        let got = rec.req_f64("best_devices_stepped_per_sec")?;
+        let over = args.get_f64("min-fleet", 0.0)?;
+        let floor = if over > 0.0 {
+            over
+        } else {
+            floors.req_f64("fleet_devices_stepped_per_sec_min")?
+        };
+        crate::ensure!(
+            got >= floor,
+            "perf floor violated: {fleet_path} reports {got:.0} \
+             devices-stepped/sec, floor is {floor:.0} ({floors_path})"
+        );
+        println!(
+            "perf floor ok: fleet {got:.0} >= {floor:.0} \
+             devices-stepped/sec"
+        );
+    }
+
+    let serve_path = args.get_str("serve", "BENCH_serve.json");
+    if !serve_path.is_empty() {
+        let rec = crate::util::json::parse_file(&serve_path)?;
+        let got = rec.req_f64("checkins_per_sec")?;
+        let over = args.get_f64("min-serve", 0.0)?;
+        let floor = if over > 0.0 {
+            over
+        } else {
+            floors.req_f64("serve_checkins_per_sec_min")?
+        };
+        crate::ensure!(
+            got >= floor,
+            "perf floor violated: {serve_path} reports {got:.0} \
+             checkins/sec, floor is {floor:.0} ({floors_path})"
+        );
+        println!("perf floor ok: serve {got:.0} >= {floor:.0} checkins/sec");
+    }
+    Ok(())
+}
+
+fn cmd_obs(rest: &[String]) -> crate::Result<()> {
+    match rest.split_first() {
+        Some((what, r)) if what == "check" => cmd_obs_check(r),
+        Some((other, _)) => {
+            crate::bail!("unknown obs subcommand '{other}' (check)")
+        }
+        None => crate::bail!("usage: swan obs check <events.ndjson>"),
+    }
+}
+
+/// `swan obs check <file>` — validate a captured NDJSON event stream:
+/// every line parses as a JSON object with a string `reason` and a
+/// numeric `seq`, and `seq` never decreases in file order (the sink
+/// assigns seq under the same lock that orders the writes).
+fn cmd_obs_check(rest: &[String]) -> crate::Result<()> {
+    let path = rest.first().ok_or_else(|| {
+        crate::err!("usage: swan obs check <events.ndjson>")
+    })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| crate::err!("reading {path}: {e}"))?;
+    let mut events = 0usize;
+    let mut last_seq = -1.0f64;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        let v = crate::util::json::parse(line)
+            .map_err(|e| crate::err!("{path}:{lineno}: bad JSON: {e}"))?;
+        let reason = v
+            .req_str("reason")
+            .map_err(|e| crate::err!("{path}:{lineno}: {e}"))?;
+        crate::ensure!(
+            !reason.is_empty(),
+            "{path}:{lineno}: empty reason"
+        );
+        let seq = v
+            .req_f64("seq")
+            .map_err(|e| crate::err!("{path}:{lineno}: {e}"))?;
+        crate::ensure!(
+            seq >= last_seq,
+            "{path}:{lineno}: seq {seq} after {last_seq} — stream \
+             ordering violated"
+        );
+        last_seq = seq;
+        events += 1;
+    }
+    crate::ensure!(events > 0, "{path}: no events in stream");
+    println!("obs check: {events} well-formed event(s) in {path}");
     Ok(())
 }
 

@@ -272,6 +272,7 @@ impl FlSim {
             rounds,
             clients_per_round: self.cfg.clients_per_round,
             server_overhead_s: self.cfg.server_overhead_s,
+            obs: crate::obs::Obs::off(),
         };
         let mut policy = TablePolicy {
             table: &self.policy,

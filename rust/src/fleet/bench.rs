@@ -22,13 +22,14 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::fl::FlArm;
+use crate::obs::{BenchResult, Obs};
 use crate::serve::{
-    run_inproc, run_oracle, run_tcp, serve_tcp, Coordinator, ServeConfig,
-    ServeRunOutcome, ServeStats,
+    run_inproc_with, run_oracle, run_tcp, serve_tcp, Coordinator,
+    ServeConfig, ServeRunOutcome, ServeStats,
 };
 use crate::util::json::Value;
 
-use super::engine::{run_scenario, run_scenario_reference};
+use super::engine::{run_scenario_obs, run_scenario_reference_obs};
 use super::metrics::FleetOutcome;
 use super::scenario::ScenarioSpec;
 
@@ -56,6 +57,7 @@ pub fn run_fleet_bench(
     shard_counts: &[usize],
     arm: FlArm,
     with_reference: bool,
+    obs: &Obs,
 ) -> crate::Result<FleetBenchReport> {
     crate::ensure!(
         !shard_counts.is_empty(),
@@ -64,9 +66,10 @@ pub fn run_fleet_bench(
     let mut soa = Vec::new();
     let mut reference = Vec::new();
     for &shards in shard_counts {
-        soa.push(run_scenario(spec, shards, arm)?);
+        soa.push(run_scenario_obs(spec, shards, arm, obs)?);
         if with_reference {
-            reference.push(run_scenario_reference(spec, shards, arm)?);
+            reference
+                .push(run_scenario_reference_obs(spec, shards, arm, obs)?);
         }
     }
     let digest = soa[0].digest();
@@ -81,13 +84,20 @@ pub fn run_fleet_bench(
             digest
         );
     }
-    Ok(FleetBenchReport {
+    let report = FleetBenchReport {
         spec: spec.clone(),
         arm,
         digest,
         soa,
         reference,
-    })
+    };
+    if obs.enabled() {
+        obs.emit(&BenchResult {
+            bench: "fleet",
+            record: report.to_json(),
+        });
+    }
+    Ok(report)
 }
 
 fn best_of(outs: &[FleetOutcome]) -> Option<&FleetOutcome> {
@@ -216,6 +226,7 @@ pub fn run_serve_bench(
     lanes: usize,
     with_tcp: bool,
     admit_capacity: usize,
+    obs: &Obs,
 ) -> crate::Result<ServeBenchReport> {
     let lanes = lanes.max(1);
     let mut cfg = ServeConfig::for_scenario(spec);
@@ -227,7 +238,7 @@ pub fn run_serve_bench(
         None
     };
 
-    let (inproc, coord) = run_inproc(spec, lanes, &cfg)?;
+    let (inproc, coord) = run_inproc_with(spec, lanes, &cfg, obs)?;
     if let Some(o) = &oracle {
         crate::ensure!(
             inproc.digest == o.digest,
@@ -246,7 +257,8 @@ pub fn run_serve_bench(
     let stats = coord.stats();
 
     let tcp = if with_tcp {
-        let tcp_coord = Arc::new(Coordinator::new(cfg.clone())?);
+        let tcp_coord =
+            Arc::new(Coordinator::with_obs(cfg.clone(), obs.clone())?);
         let handle = serve_tcp(tcp_coord, "127.0.0.1:0", lanes)?;
         let addr = handle.addr;
         let out = run_tcp(spec, lanes, addr, cfg.update_dim);
@@ -278,14 +290,21 @@ pub fn run_serve_bench(
         None
     };
 
-    Ok(ServeBenchReport {
+    let report = ServeBenchReport {
         spec: spec.clone(),
         lanes,
         oracle_digest: oracle.map(|o| o.digest),
         inproc,
         tcp,
         stats,
-    })
+    };
+    if obs.enabled() {
+        obs.emit(&BenchResult {
+            bench: "serve",
+            record: report.to_json(),
+        });
+    }
+    Ok(report)
 }
 
 impl ServeBenchReport {
@@ -377,7 +396,8 @@ mod tests {
     #[test]
     fn harness_runs_both_kernels_and_agrees() {
         let rep =
-            run_fleet_bench(&spec(), &[1, 2], FlArm::Swan, true).unwrap();
+            run_fleet_bench(&spec(), &[1, 2], FlArm::Swan, true, &Obs::off())
+                .unwrap();
         assert_eq!(rep.soa.len(), 2);
         assert_eq!(rep.reference.len(), 2);
         assert!(!rep.digest.is_empty());
@@ -397,8 +417,14 @@ mod tests {
 
     #[test]
     fn harness_can_skip_reference_runs() {
-        let rep =
-            run_fleet_bench(&spec(), &[2], FlArm::Baseline, false).unwrap();
+        let rep = run_fleet_bench(
+            &spec(),
+            &[2],
+            FlArm::Baseline,
+            false,
+            &Obs::off(),
+        )
+        .unwrap();
         assert!(rep.reference.is_empty());
         assert!(rep.speedup_best().is_none());
         assert!(rep.speedup_same_shards().is_empty());
@@ -410,12 +436,20 @@ mod tests {
 
     #[test]
     fn empty_shard_list_is_an_error() {
-        assert!(run_fleet_bench(&spec(), &[], FlArm::Swan, true).is_err());
+        assert!(run_fleet_bench(
+            &spec(),
+            &[],
+            FlArm::Swan,
+            true,
+            &Obs::off()
+        )
+        .is_err());
     }
 
     #[test]
     fn serve_bench_asserts_parity_and_renders_json() {
-        let rep = run_serve_bench(&spec(), 2, false, 0).unwrap();
+        let rep =
+            run_serve_bench(&spec(), 2, false, 0, &Obs::off()).unwrap();
         assert!(rep.oracle_digest.is_some());
         assert_eq!(
             rep.oracle_digest.as_deref(),
@@ -438,7 +472,8 @@ mod tests {
 
     #[test]
     fn serve_bench_bounded_admission_reports_deferrals() {
-        let rep = run_serve_bench(&spec(), 1, false, 4).unwrap();
+        let rep =
+            run_serve_bench(&spec(), 1, false, 4, &Obs::off()).unwrap();
         assert!(rep.oracle_digest.is_none(), "oracle skipped when bounded");
         assert!(rep.inproc.deferred > 0);
         assert!(rep.inproc.deferral_rate() > 0.0);

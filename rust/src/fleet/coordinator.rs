@@ -98,6 +98,7 @@ pub struct CoordinatorStats {
 pub struct ProfileCoordinator {
     workload: Workload,
     entries: Vec<(DeviceId, ModelProfile)>,
+    obs: crate::obs::Obs,
 }
 
 impl ProfileCoordinator {
@@ -105,11 +106,30 @@ impl ProfileCoordinator {
         ProfileCoordinator {
             workload,
             entries: Vec::new(),
+            obs: crate::obs::Obs::off(),
         }
     }
 
     pub fn workload(&self) -> &Workload {
         &self.workload
+    }
+
+    /// Attach a telemetry sink: each first-time exploration emits a
+    /// `profile-explored` event. Adoptions are *not* emitted here —
+    /// they happen inside the per-device policy resolution hot loop;
+    /// the drive emits aggregated `profile-adopted` records at the end
+    /// (see [`adoption_counts`](ProfileCoordinator::adoption_counts)).
+    pub fn set_obs(&mut self, obs: crate::obs::Obs) {
+        self.obs = obs;
+    }
+
+    /// (model, adoptions) in exploration order — the aggregate feed for
+    /// end-of-run `profile-adopted` events.
+    pub fn adoption_counts(&self) -> Vec<(DeviceId, usize)> {
+        self.entries
+            .iter()
+            .map(|(m, e)| (*m, e.adoptions))
+            .collect()
     }
 
     fn explore(workload: &Workload, model: DeviceId, requester: usize) -> ModelProfile {
@@ -154,6 +174,15 @@ impl ProfileCoordinator {
         let fresh = !self.entries.iter().any(|(m, _)| *m == model);
         if fresh {
             let entry = Self::explore(&self.workload, model, requester);
+            if self.obs.enabled() {
+                self.obs.emit(&crate::obs::ProfileExplored {
+                    model: model.key(),
+                    requester,
+                    chain_len: entry.chain.len(),
+                    exploration_time_s: entry.exploration_time_s,
+                    exploration_energy_j: entry.exploration_energy_j,
+                });
+            }
             self.entries.push((model, entry));
         }
         let entry = self

@@ -37,6 +37,9 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
 use crate::fl::{select_uniform, FlArm};
+use crate::obs::{
+    Obs, ProfileAdopted, RoundEnd, RoundStart, ShardProgress, SpanSummary,
+};
 use crate::util::rng::Rng;
 
 use super::coordinator::{CoordinatorPolicy, FleetPolicy, ProfileCoordinator, StepCost};
@@ -59,6 +62,11 @@ pub struct DriveConfig {
     pub rounds: usize,
     pub clients_per_round: usize,
     pub server_overhead_s: f64,
+    /// Telemetry sink. `Obs::off()` (the default) makes every emission
+    /// a no-op; either way the digest is bit-identical — telemetry only
+    /// observes existing barriers, never adds RNG draws or reorders
+    /// float folds.
+    pub obs: Obs,
 }
 
 /// Selection RNG for one round — a function of (seed, round) only, so
@@ -72,11 +80,24 @@ pub(crate) fn round_rng(seed: u64, round: usize) -> Rng {
     )
 }
 
+/// Shard-local telemetry counters. Workers bump these lock-free on
+/// their own state; the control thread folds them into the outcome's
+/// registry **in shard order** after the workers are joined — the same
+/// barrier discipline as the FNV digest, so recording costs the hot
+/// path nothing.
+#[derive(Clone, Copy, Debug, Default)]
+struct ShardTally {
+    polled: u64,
+    online: u64,
+    stepped: u64,
+}
+
 struct Shard<N> {
     /// Local nodes in ascending global-id order; node `k` of shard `s`
     /// is global device `s + k * n_shards`.
     nodes: Vec<N>,
     queue: EventQueue,
+    tally: ShardTally,
 }
 
 /// One participation order for a shard's device.
@@ -124,11 +145,14 @@ fn shard_worker<N: FleetNode>(
                         online.push((shard_idx + k * n_shards) as u32);
                     }
                 }
+                shard.tally.polled += shard.nodes.len() as u64;
+                shard.tally.online += online.len() as u64;
                 if tx.send(ShardReply::Online { online }).is_err() {
                     return;
                 }
             }
             ShardCmd::Step { now_s, round, jobs } => {
+                shard.tally.stepped += jobs.len() as u64;
                 for (ji, job) in jobs.iter().enumerate() {
                     shard.queue.push(Event {
                         at_s: now_s,
@@ -206,6 +230,7 @@ impl<N: FleetNode> ShardedEventLoop<N> {
             .map(|_| Shard {
                 nodes: Vec::with_capacity(n_devices / n_shards + 1),
                 queue: EventQueue::new(),
+                tally: ShardTally::default(),
             })
             .collect();
         for (i, node) in nodes.into_iter().enumerate() {
@@ -295,6 +320,9 @@ impl<N: FleetNode> ShardedEventLoop<N> {
         let shards = &mut self.shards;
         let models = &self.models;
         let n_shards = shards.len();
+        for shard in shards.iter_mut() {
+            shard.tally = ShardTally::default();
+        }
 
         let mut outcome = FleetOutcome {
             scenario: cfg.scenario.clone(),
@@ -329,10 +357,33 @@ impl<N: FleetNode> ShardedEventLoop<N> {
             let mut total_steps = 0u64;
             let mut participations = 0u64;
 
+            // Telemetry locals: phase spans and the control-side
+            // registry. Wall-clock only — never fed back into the
+            // simulation, so the digest cannot see them.
+            let mut spans = crate::obs::Spans::default();
+            let sp_avail = spans.span(crate::obs::PHASE_AVAILABILITY);
+            let sp_select = spans.span(crate::obs::PHASE_SELECT);
+            let sp_step = spans.span(crate::obs::PHASE_STEP);
+            let sp_agg = spans.span(crate::obs::PHASE_AGGREGATE);
+            let mut metrics = crate::obs::MetricsRegistry::default();
+            let c_online = metrics.counter("fleet.online");
+            let c_picked = metrics.counter("fleet.picked");
+            let h_round = metrics
+                .hist("fleet.round_wall_s", crate::obs::LATENCY_BUCKETS_S);
+
             // The control loop proper, fallible: any send/recv against
             // a dead shard breaks out with an error naming it.
             let run = (|| -> crate::Result<()> {
                 for round in 0..cfg.rounds {
+                    let round_t0 = Instant::now();
+                    if cfg.obs.enabled() {
+                        cfg.obs.emit(&RoundStart {
+                            scenario: &cfg.scenario,
+                            round,
+                            now_s,
+                        });
+                    }
+                    let phase_t0 = Instant::now();
                     // 1. availability: every shard polls in parallel
                     for (sid, tx) in cmd_txs.iter().enumerate() {
                         crate::ensure!(
@@ -360,6 +411,16 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                             ),
                         }
                     }
+                    if cfg.obs.enabled() {
+                        for (sid, o) in online_by_shard.iter().enumerate()
+                        {
+                            cfg.obs.emit(&ShardProgress {
+                                round,
+                                shard: sid,
+                                online: o.len(),
+                            });
+                        }
+                    }
                     let mut online: Vec<usize> = online_by_shard
                         .into_iter()
                         .flatten()
@@ -367,18 +428,39 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                         .collect();
                     online.sort_unstable();
                     outcome.online_per_round.push((round, online.len()));
+                    spans.record(
+                        sp_avail,
+                        phase_t0.elapsed().as_secs_f64(),
+                    );
+                    metrics.add(c_online, online.len() as u64);
                     if online.is_empty() {
                         now_s += EMPTY_ROUND_WAIT_S;
+                        metrics.observe(
+                            h_round,
+                            round_t0.elapsed().as_secs_f64(),
+                        );
+                        if cfg.obs.enabled() {
+                            cfg.obs.emit(&RoundEnd {
+                                round,
+                                online: 0,
+                                picked: 0,
+                                round_time_s: 0.0,
+                                round_energy_j: 0.0,
+                                now_s,
+                            });
+                        }
                         continue;
                     }
 
                     // 2. selection: central, keyed on (seed, round) only
+                    let phase_t0 = Instant::now();
                     let mut rng = round_rng(cfg.seed, round);
                     let picked = select_uniform(
                         &online,
                         cfg.clients_per_round,
                         &mut rng,
                     );
+                    metrics.add(c_picked, picked.len() as u64);
 
                     // 3. resolve policy costs centrally, in picked order
                     //    (§4.2 exploration billing is order-sensitive)
@@ -393,8 +475,13 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                             extra_energy_j: rc.exploration_energy_j,
                         });
                     }
+                    spans.record(
+                        sp_select,
+                        phase_t0.elapsed().as_secs_f64(),
+                    );
 
                     // 4. parallel event-driven local epochs
+                    let phase_t0 = Instant::now();
                     let mut active: Vec<usize> = Vec::new();
                     for (sid, tx) in cmd_txs.iter().enumerate() {
                         let jobs = std::mem::take(&mut jobs_by_shard[sid]);
@@ -435,11 +522,18 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                         }
                     }
 
+                    spans.record(
+                        sp_step,
+                        phase_t0.elapsed().as_secs_f64(),
+                    );
+
                     // 5. fold in global picked order — a fixed reduction
                     //    order keeps aggregates bit-identical under any
                     //    sharding (synchronous FL: stragglers pace
                     //    rounds)
+                    let phase_t0 = Instant::now();
                     let mut round_time = 0.0f64;
+                    let mut round_energy = 0.0f64;
                     for &gid in &picked {
                         let r = results.get(&(gid as u32)).ok_or_else(
                             || {
@@ -450,12 +544,31 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                             },
                         )?;
                         total_energy += r.energy_j;
+                        round_energy += r.energy_j;
                         total_steps += r.steps as u64;
                         participations += 1;
                         round_time = round_time.max(r.time_s);
                     }
                     now_s += round_time + cfg.server_overhead_s;
                     outcome.rounds_run = round + 1;
+                    spans.record(
+                        sp_agg,
+                        phase_t0.elapsed().as_secs_f64(),
+                    );
+                    metrics.observe(
+                        h_round,
+                        round_t0.elapsed().as_secs_f64(),
+                    );
+                    if cfg.obs.enabled() {
+                        cfg.obs.emit(&RoundEnd {
+                            round,
+                            online: online.len(),
+                            picked: picked.len(),
+                            round_time_s: round_time,
+                            round_energy_j: round_energy,
+                            now_s,
+                        });
+                    }
                 }
                 Ok(())
             })();
@@ -483,15 +596,36 @@ impl<N: FleetNode> ShardedEventLoop<N> {
             outcome.total_energy_j = total_energy;
             outcome.total_steps = total_steps;
             outcome.participations = participations;
+            outcome.spans = spans;
+            outcome.metrics = metrics;
             Ok(())
         })?;
         outcome.wall_s = wall0.elapsed().as_secs_f64();
+        // Shard-local tallies, folded in shard order now that the
+        // workers are joined and the shard borrows are back.
+        for shard in &self.shards {
+            outcome.metrics.inc("fleet.shard_polls", shard.tally.polled);
+            outcome
+                .metrics
+                .inc("fleet.shard_online", shard.tally.online);
+            outcome.metrics.inc("fleet.shard_steps", shard.tally.stepped);
+        }
+        if cfg.obs.enabled() {
+            cfg.obs.emit(&SpanSummary {
+                scope: "fleet-drive",
+                spans: &outcome.spans,
+            });
+        }
         Ok(outcome)
     }
 }
 
 /// The round structure a [`ScenarioSpec`] implies.
-pub(super) fn drive_config(spec: &ScenarioSpec, arm: FlArm) -> DriveConfig {
+pub(super) fn drive_config(
+    spec: &ScenarioSpec,
+    arm: FlArm,
+    obs: Obs,
+) -> DriveConfig {
     DriveConfig {
         scenario: spec.name.clone(),
         arm,
@@ -499,6 +633,7 @@ pub(super) fn drive_config(spec: &ScenarioSpec, arm: FlArm) -> DriveConfig {
         rounds: spec.rounds,
         clients_per_round: spec.clients_per_round,
         server_overhead_s: spec.server_overhead_s,
+        obs,
     }
 }
 
@@ -520,6 +655,24 @@ pub(super) fn attach_exploration(
     }
 }
 
+/// End-of-run §4.2 adoption events — one `profile-adopted` record per
+/// model whose cached chain was reused at least once. Aggregated here
+/// rather than per-adoption: adoptions happen inside the per-device
+/// policy resolution loop, far too hot for an event each.
+fn emit_adoptions(obs: &Obs, coord: &ProfileCoordinator, arm: FlArm) {
+    if !obs.enabled() || arm != FlArm::Swan {
+        return;
+    }
+    for (model, adoptions) in coord.adoption_counts() {
+        if adoptions > 0 {
+            obs.emit(&ProfileAdopted {
+                model: model.key(),
+                adoptions: adoptions as u64,
+            });
+        }
+    }
+}
+
 /// Run one scenario end to end on the struct-of-arrays kernel (the
 /// default since PR 2): build the fleet, drive it through a
 /// [`ProfileCoordinator`]-backed policy, attach §4.2 accounting.
@@ -529,17 +682,32 @@ pub fn run_scenario(
     n_shards: usize,
     arm: FlArm,
 ) -> crate::Result<FleetOutcome> {
+    run_scenario_obs(spec, n_shards, arm, &Obs::off())
+}
+
+/// [`run_scenario`] with a telemetry sink: NDJSON round lifecycle +
+/// §4.2 exploration events, phase spans and merged shard metrics on
+/// the outcome. Digest-neutral — `tests/obs_stream.rs` asserts the
+/// enabled and disabled runs are bit-identical.
+pub fn run_scenario_obs(
+    spec: &ScenarioSpec,
+    n_shards: usize,
+    arm: FlArm,
+    obs: &Obs,
+) -> crate::Result<FleetOutcome> {
     let workload = crate::workload::load_or_builtin(spec.workload, "artifacts");
     let mut coord = ProfileCoordinator::new(workload);
+    coord.set_obs(obs.clone());
     let nodes = spec.build_fleet()?;
     let mut fleet = super::soa::SoaFleet::new(nodes, n_shards);
-    let cfg = drive_config(spec, arm);
+    let cfg = drive_config(spec, arm, obs.clone());
     let mut policy = CoordinatorPolicy {
         coord: &mut coord,
         arm,
     };
     let mut out = fleet.drive(&mut policy, &cfg);
     attach_exploration(&mut out, &coord, arm);
+    emit_adoptions(obs, &coord, arm);
     Ok(out)
 }
 
@@ -551,17 +719,29 @@ pub fn run_scenario_reference(
     n_shards: usize,
     arm: FlArm,
 ) -> crate::Result<FleetOutcome> {
+    run_scenario_reference_obs(spec, n_shards, arm, &Obs::off())
+}
+
+/// [`run_scenario_reference`] with a telemetry sink.
+pub fn run_scenario_reference_obs(
+    spec: &ScenarioSpec,
+    n_shards: usize,
+    arm: FlArm,
+    obs: &Obs,
+) -> crate::Result<FleetOutcome> {
     let workload = crate::workload::load_or_builtin(spec.workload, "artifacts");
     let mut coord = ProfileCoordinator::new(workload);
+    coord.set_obs(obs.clone());
     let nodes = spec.build_fleet()?;
     let mut engine = ShardedEventLoop::new(nodes, n_shards);
-    let cfg = drive_config(spec, arm);
+    let cfg = drive_config(spec, arm, obs.clone());
     let mut policy = CoordinatorPolicy {
         coord: &mut coord,
         arm,
     };
     let mut out = engine.drive(&mut policy, &cfg)?;
     attach_exploration(&mut out, &coord, arm);
+    emit_adoptions(obs, &coord, arm);
     Ok(out)
 }
 
@@ -660,11 +840,19 @@ mod tests {
             fn charge(&mut self, _time_s: f64, _energy_j: f64) {}
         }
 
+        fn shard_of(nodes: Vec<Stub>) -> Shard<Stub> {
+            Shard {
+                nodes,
+                queue: EventQueue::new(),
+                tally: ShardTally::default(),
+            }
+        }
+
         // well-formed: 3 devices over 2 shards reassemble in id order
         let ok = ShardedEventLoop {
             shards: vec![
-                Shard { nodes: vec![Stub(0), Stub(2)], queue: EventQueue::new() },
-                Shard { nodes: vec![Stub(1)], queue: EventQueue::new() },
+                shard_of(vec![Stub(0), Stub(2)]),
+                shard_of(vec![Stub(1)]),
             ],
             models: vec![DeviceId::Pixel3; 3],
             n_devices: 3,
@@ -675,8 +863,8 @@ mod tests {
         // a shard lost a node: must be an error, not a panic
         let broken = ShardedEventLoop {
             shards: vec![
-                Shard { nodes: vec![Stub(0), Stub(2)], queue: EventQueue::new() },
-                Shard { nodes: vec![], queue: EventQueue::new() },
+                shard_of(vec![Stub(0), Stub(2)]),
+                shard_of(vec![]),
             ],
             models: vec![DeviceId::Pixel3; 3],
             n_devices: 3,

@@ -41,6 +41,13 @@ pub struct FleetOutcome {
     pub online_per_round: Vec<(usize, usize)>,
     /// Wall-clock seconds for the whole drive.
     pub wall_s: f64,
+    /// Phase timers (availability / select / step / aggregate) from the
+    /// control loop. Wall-clock-derived, so — like `wall_s` — excluded
+    /// from [`digest`](FleetOutcome::digest).
+    pub spans: crate::obs::Spans,
+    /// Shard-local counters + histograms merged in shard order at the
+    /// end of the drive. Excluded from the digest.
+    pub metrics: crate::obs::MetricsRegistry,
 }
 
 impl FleetOutcome {
@@ -116,6 +123,8 @@ impl FleetOutcome {
             .set("online_last", self.online_last())
             .set("devices_stepped_per_sec", self.devices_stepped_per_sec())
             .set("wall_s", self.wall_s)
+            .set("spans", self.spans.to_json())
+            .set("metrics", self.metrics.to_json())
     }
 }
 

@@ -62,7 +62,8 @@ pub use coordinator::{
 };
 pub use device::{FleetDevice, FleetNode};
 pub use engine::{
-    run_scenario, run_scenario_reference, DriveConfig, ShardedEventLoop,
+    run_scenario, run_scenario_obs, run_scenario_reference,
+    run_scenario_reference_obs, DriveConfig, ShardedEventLoop,
 };
 pub use event::{Event, EventKind, EventQueue};
 pub use metrics::{FleetOutcome, KERNEL_EVENT_LOOP, KERNEL_SOA};

@@ -85,6 +85,18 @@ struct SoaResult {
 /// A `(trace, shift)` pair — the unit the per-round sample cache keys on.
 type Combo = (Arc<ResampledTrace>, f64);
 
+/// Shard-local telemetry counters, bumped lock-free inside the worker's
+/// own sweep/step and folded into the outcome registry in shard order
+/// after the workers are parked — the FNV-digest barrier discipline, so
+/// the allocation-free hot path never sees a lock or an atomic for
+/// telemetry's sake.
+#[derive(Clone, Copy, Debug, Default)]
+struct SoaTally {
+    polled: u64,
+    online: u64,
+    stepped: u64,
+}
+
 /// One shard's device population, one field per array ("SoA row" `k` is
 /// shard-local device `k`, global id `shard_idx + k * n_shards`).
 struct SoaShard {
@@ -111,6 +123,7 @@ struct SoaShard {
     /// Per-combo fused samples, refreshed each round.
     cache_level: Vec<f64>,
     cache_charging: Vec<bool>,
+    tally: SoaTally,
 }
 
 impl SoaShard {
@@ -132,6 +145,7 @@ impl SoaShard {
             queue: EventQueue::new(),
             cache_level: Vec::new(),
             cache_charging: Vec::new(),
+            tally: SoaTally::default(),
         }
     }
 
@@ -190,6 +204,8 @@ impl SoaShard {
                 online.push((shard_idx + k * n_shards) as u32);
             }
         }
+        self.tally.polled += self.len() as u64;
+        self.tally.online += online.len() as u64;
     }
 
     /// Event-driven local epochs for this round's jobs. The arithmetic
@@ -204,6 +220,7 @@ impl SoaShard {
         results: &mut Vec<SoaResult>,
     ) {
         results.clear();
+        self.tally.stepped += jobs.len() as u64;
         for (ji, job) in jobs.iter().enumerate() {
             self.queue.push(Event {
                 at_s: now_s,
@@ -580,6 +597,9 @@ impl SoaFleet {
         let shards = &mut self.shards;
         let combos = &self.combos;
         let models = &self.models;
+        for shard in shards.iter_mut() {
+            shard.tally = SoaTally::default();
+        }
 
         let mut outcome = FleetOutcome {
             scenario: cfg.scenario.clone(),
@@ -623,8 +643,30 @@ impl SoaFleet {
             let mut total_steps = 0u64;
             let mut participations = 0u64;
 
+            // Telemetry locals — wall-clock observers only, never fed
+            // back into the simulation, so the digest cannot see them.
+            let mut spans = crate::obs::Spans::default();
+            let sp_avail = spans.span(crate::obs::PHASE_AVAILABILITY);
+            let sp_select = spans.span(crate::obs::PHASE_SELECT);
+            let sp_step = spans.span(crate::obs::PHASE_STEP);
+            let sp_agg = spans.span(crate::obs::PHASE_AGGREGATE);
+            let mut metrics = crate::obs::MetricsRegistry::default();
+            let c_online = metrics.counter("fleet.online");
+            let c_picked = metrics.counter("fleet.picked");
+            let h_round = metrics
+                .hist("fleet.round_wall_s", crate::obs::LATENCY_BUCKETS_S);
+
             for round in 0..cfg.rounds {
+                let round_t0 = Instant::now();
+                if cfg.obs.enabled() {
+                    cfg.obs.emit(&crate::obs::RoundStart {
+                        scenario: &cfg.scenario,
+                        round,
+                        now_s,
+                    });
+                }
                 // 1. availability: every shard sweeps in parallel
+                let phase_t0 = Instant::now();
                 for slot in &slots {
                     send(slot, Cmd::Poll { now_s }, None);
                 }
@@ -632,14 +674,40 @@ impl SoaFleet {
                     let mut g = wait_done(&slots, si);
                     std::mem::swap(&mut g.online, &mut online_lists[si]);
                 }
+                if cfg.obs.enabled() {
+                    for (si, list) in online_lists.iter().enumerate() {
+                        cfg.obs.emit(&crate::obs::ShardProgress {
+                            round,
+                            shard: si,
+                            online: list.len(),
+                        });
+                    }
+                }
                 merge_online(&online_lists, &mut cursors, &mut online);
                 outcome.online_per_round.push((round, online.len()));
+                spans.record(sp_avail, phase_t0.elapsed().as_secs_f64());
+                metrics.add(c_online, online.len() as u64);
                 if online.is_empty() {
                     now_s += EMPTY_ROUND_WAIT_S;
+                    metrics.observe(
+                        h_round,
+                        round_t0.elapsed().as_secs_f64(),
+                    );
+                    if cfg.obs.enabled() {
+                        cfg.obs.emit(&crate::obs::RoundEnd {
+                            round,
+                            online: 0,
+                            picked: 0,
+                            round_time_s: 0.0,
+                            round_energy_j: 0.0,
+                            now_s,
+                        });
+                    }
                     continue;
                 }
 
                 // 2. selection: central, keyed on (seed, round) only
+                let phase_t0 = Instant::now();
                 let mut rng = round_rng(cfg.seed, round);
                 select_uniform_into(
                     &online,
@@ -648,6 +716,7 @@ impl SoaFleet {
                     &mut scratch,
                     &mut picked,
                 );
+                metrics.add(c_picked, picked.len() as u64);
 
                 // 3. resolve policy costs centrally, in picked order
                 //    (§4.2 exploration billing is order-sensitive)
@@ -666,7 +735,10 @@ impl SoaFleet {
                     });
                 }
 
+                spans.record(sp_select, phase_t0.elapsed().as_secs_f64());
+
                 // 4. parallel event-driven local epochs
+                let phase_t0 = Instant::now();
                 active.clear();
                 for si in 0..n_shards {
                     if job_bufs[si].is_empty() {
@@ -698,23 +770,57 @@ impl SoaFleet {
                         fold_steps[s] = r.steps;
                     }
                 }
+                spans.record(sp_step, phase_t0.elapsed().as_secs_f64());
+                let phase_t0 = Instant::now();
                 let mut round_time = 0.0f64;
+                let mut round_energy = 0.0f64;
                 for s in 0..picked.len() {
                     total_energy += fold_energy[s];
+                    round_energy += fold_energy[s];
                     total_steps += fold_steps[s] as u64;
                     participations += 1;
                     round_time = round_time.max(fold_time[s]);
                 }
                 now_s += round_time + cfg.server_overhead_s;
                 outcome.rounds_run = round + 1;
+                spans.record(sp_agg, phase_t0.elapsed().as_secs_f64());
+                metrics
+                    .observe(h_round, round_t0.elapsed().as_secs_f64());
+                if cfg.obs.enabled() {
+                    cfg.obs.emit(&crate::obs::RoundEnd {
+                        round,
+                        online: online.len(),
+                        picked: picked.len(),
+                        round_time_s: round_time,
+                        round_energy_j: round_energy,
+                        now_s,
+                    });
+                }
             }
 
             outcome.total_time_s = now_s;
             outcome.total_energy_j = total_energy;
             outcome.total_steps = total_steps;
             outcome.participations = participations;
+            outcome.spans = spans;
+            outcome.metrics = metrics;
         });
         outcome.wall_s = wall0.elapsed().as_secs_f64();
+        // Worker tallies, folded in shard order now that every worker
+        // is parked (the scope joined them) and the borrows are back.
+        for shard in &self.shards {
+            outcome.metrics.inc("fleet.shard_polls", shard.tally.polled);
+            outcome
+                .metrics
+                .inc("fleet.shard_online", shard.tally.online);
+            outcome.metrics.inc("fleet.shard_steps", shard.tally.stepped);
+        }
+        if cfg.obs.enabled() {
+            cfg.obs.emit(&crate::obs::SpanSummary {
+                scope: "fleet-drive",
+                spans: &outcome.spans,
+            });
+        }
         outcome
     }
 }
@@ -807,7 +913,11 @@ mod tests {
             arm: FlArm::Swan,
         };
         let mut fleet = SoaFleet::new(spec.build_fleet().unwrap(), 3);
-        let cfg = super::super::engine::drive_config(&spec, FlArm::Swan);
+        let cfg = super::super::engine::drive_config(
+            &spec,
+            FlArm::Swan,
+            crate::obs::Obs::off(),
+        );
         let drove = fleet.drive(&mut policy, &cfg);
         let back = fleet.into_devices().unwrap();
         let parts: usize = back.iter().map(|d| d.participations).sum();

@@ -51,6 +51,12 @@
 //!   ([`serve::loadgen`]) — in-process and loopback-TCP paths are
 //!   digest-parity-checked against a machinery-free oracle
 //!   (`BENCH_serve.json`, `swan serve`, `swan bench serve`).
+//! - [`obs`] — the zero-dependency telemetry spine: `machine_message`
+//!   NDJSON events (`reason` + `seq`, stderr / `--events <path>` /
+//!   capture sinks), shard-local counter + fixed-bucket-histogram
+//!   registries merged deterministically at round barriers, and scoped
+//!   phase spans — all digest-neutral by construction, feeding
+//!   `report::obs_table` and the CI perf-floor gate.
 //! - [`report`] — emitters that regenerate every paper table and figure.
 
 pub mod error;
@@ -67,6 +73,7 @@ pub mod train;
 pub mod trace;
 pub mod fl;
 pub mod fleet;
+pub mod obs;
 pub mod serve;
 pub mod report;
 pub mod cli;

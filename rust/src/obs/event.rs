@@ -1,0 +1,482 @@
+//! Layer 1 of the telemetry spine: the NDJSON event stream.
+//!
+//! Follows cargo's `machine_message` idiom: every record is one JSON
+//! object per line with a leading `"reason"` discriminator, built from
+//! [`crate::util::json::Value`] (no serde in the offline crate set).
+//! The sink assigns a monotonically increasing `seq` under the same
+//! lock that writes the line, so file order always equals seq order.
+//!
+//! [`Obs`] is a cheap cloneable handle; [`Obs::off`] (the `Default`)
+//! makes every emit a no-op behind a single `Option` check, which is
+//! what lets telemetry be compiled into the hot paths while staying
+//! digest-neutral and cost-free when disabled.
+
+use crate::util::json::Value;
+use std::fmt;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::{Arc, Mutex};
+
+/// A typed telemetry record: a `'static` reason plus a JSON payload.
+/// Payloads should be `Value::Obj`s — their fields are inlined after
+/// `reason`/`seq` in the emitted line.
+pub trait ObsEvent {
+    fn reason(&self) -> &'static str;
+    fn payload(&self) -> Value;
+}
+
+enum Target {
+    Stderr,
+    File(BufWriter<File>),
+    Capture(Vec<String>),
+}
+
+struct SinkState {
+    seq: u64,
+    target: Target,
+}
+
+struct Sink {
+    state: Mutex<SinkState>,
+}
+
+/// Handle to the shared event sink. Clones share one sequence counter
+/// and one output. `Obs::off()` is a null handle.
+#[derive(Clone, Default)]
+pub struct Obs {
+    inner: Option<Arc<Sink>>,
+}
+
+impl fmt::Debug for Obs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.inner {
+            None => f.write_str("Obs(off)"),
+            Some(s) => {
+                let kind = match s.state.lock() {
+                    Ok(st) => match st.target {
+                        Target::Stderr => "stderr",
+                        Target::File(_) => "file",
+                        Target::Capture(_) => "capture",
+                    },
+                    Err(_) => "poisoned",
+                };
+                write!(f, "Obs({kind})")
+            }
+        }
+    }
+}
+
+impl Obs {
+    /// Disabled sink: every emit is a no-op.
+    pub fn off() -> Obs {
+        Obs { inner: None }
+    }
+
+    fn with_target(target: Target) -> Obs {
+        Obs {
+            inner: Some(Arc::new(Sink {
+                state: Mutex::new(SinkState { seq: 0, target }),
+            })),
+        }
+    }
+
+    /// Emit NDJSON lines to stderr (keeps stdout clean for tables and
+    /// `--json` report bodies).
+    pub fn stderr() -> Obs {
+        Obs::with_target(Target::Stderr)
+    }
+
+    /// Emit NDJSON lines to a file, truncating any existing content.
+    pub fn to_file(
+        path: impl AsRef<std::path::Path>,
+    ) -> crate::Result<Obs> {
+        let f = File::create(path.as_ref()).map_err(|e| {
+            crate::err!(
+                "obs: cannot open events file {}: {e}",
+                path.as_ref().display()
+            )
+        })?;
+        Ok(Obs::with_target(Target::File(BufWriter::new(f))))
+    }
+
+    /// In-memory sink for tests; read back with
+    /// [`Obs::captured_lines`].
+    pub fn capture() -> Obs {
+        Obs::with_target(Target::Capture(Vec::new()))
+    }
+
+    /// True when emits actually go somewhere — gate for any payload
+    /// construction that is not free.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Serialize and write one event line. Telemetry is best-effort:
+    /// IO errors and poisoned locks are swallowed, never surfaced into
+    /// the workload.
+    pub fn emit(&self, ev: &dyn ObsEvent) {
+        let Some(sink) = &self.inner else { return };
+        let mut fields: Vec<(String, Value)> = vec![
+            ("reason".to_string(), Value::from(ev.reason())),
+            ("seq".to_string(), Value::from(0.0)),
+        ];
+        match ev.payload() {
+            Value::Obj(kv) => fields.extend(kv),
+            Value::Null => {}
+            other => fields.push(("payload".to_string(), other)),
+        }
+        let Ok(mut st) = sink.state.lock() else { return };
+        fields[1].1 = Value::from(st.seq as f64);
+        st.seq += 1;
+        let line = format!("{}", Value::Obj(fields));
+        match &mut st.target {
+            Target::Stderr => eprintln!("{line}"),
+            Target::File(w) => {
+                let _ = writeln!(w, "{line}");
+                let _ = w.flush();
+            }
+            Target::Capture(lines) => lines.push(line),
+        }
+    }
+
+    /// Lines captured so far (capture sinks only; empty otherwise).
+    pub fn captured_lines(&self) -> Vec<String> {
+        match &self.inner {
+            Some(sink) => match sink.state.lock() {
+                Ok(st) => match &st.target {
+                    Target::Capture(lines) => lines.clone(),
+                    _ => Vec::new(),
+                },
+                Err(_) => Vec::new(),
+            },
+            None => Vec::new(),
+        }
+    }
+}
+
+// -- typed records ----------------------------------------------------------
+
+/// Fleet round opened: the control loop is about to sweep availability.
+pub struct RoundStart<'a> {
+    pub scenario: &'a str,
+    pub round: usize,
+    pub now_s: f64,
+}
+
+impl ObsEvent for RoundStart<'_> {
+    fn reason(&self) -> &'static str {
+        "round-start"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("scenario", self.scenario)
+            .set("round", self.round)
+            .set("now_s", self.now_s)
+    }
+}
+
+/// Per-shard availability result for one round.
+pub struct ShardProgress {
+    pub round: usize,
+    pub shard: usize,
+    pub online: usize,
+}
+
+impl ObsEvent for ShardProgress {
+    fn reason(&self) -> &'static str {
+        "shard-progress"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("round", self.round)
+            .set("shard", self.shard)
+            .set("online", self.online)
+    }
+}
+
+/// Fleet round closed: what the round paid.
+pub struct RoundEnd {
+    pub round: usize,
+    pub online: usize,
+    pub picked: usize,
+    pub round_time_s: f64,
+    pub round_energy_j: f64,
+    pub now_s: f64,
+}
+
+impl ObsEvent for RoundEnd {
+    fn reason(&self) -> &'static str {
+        "round-end"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("round", self.round)
+            .set("online", self.online)
+            .set("picked", self.picked)
+            .set("round_time_s", self.round_time_s)
+            .set("round_energy_j", self.round_energy_j)
+            .set("now_s", self.now_s)
+    }
+}
+
+/// §4.2: a device model's Pareto chain was explored for the first time.
+pub struct ProfileExplored<'a> {
+    pub model: &'a str,
+    /// Global id of the device billed for the exploration.
+    pub requester: usize,
+    pub chain_len: usize,
+    pub exploration_time_s: f64,
+    pub exploration_energy_j: f64,
+}
+
+impl ObsEvent for ProfileExplored<'_> {
+    fn reason(&self) -> &'static str {
+        "profile-explored"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("model", self.model)
+            .set("requester", self.requester)
+            .set("chain_len", self.chain_len)
+            .set("exploration_time_s", self.exploration_time_s)
+            .set("exploration_energy_j", self.exploration_energy_j)
+    }
+}
+
+/// §4.2: end-of-run adoption count for one model's cached profile.
+pub struct ProfileAdopted<'a> {
+    pub model: &'a str,
+    pub adoptions: u64,
+}
+
+impl ObsEvent for ProfileAdopted<'_> {
+    fn reason(&self) -> &'static str {
+        "profile-adopted"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("model", self.model)
+            .set("adoptions", self.adoptions as f64)
+    }
+}
+
+/// Serve-side profile cache traffic, cumulative at a round boundary.
+pub struct CacheHitMiss {
+    pub round: u32,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl ObsEvent for CacheHitMiss {
+    fn reason(&self) -> &'static str {
+        "cache-hit-miss"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("round", self.round as f64)
+            .set("hits", self.hits as f64)
+            .set("misses", self.misses as f64)
+            .set("evictions", self.evictions as f64)
+    }
+}
+
+/// Serve admission: one check-in batch flushed into a round.
+pub struct CheckinBatch {
+    pub round: u32,
+    pub size: usize,
+}
+
+impl ObsEvent for CheckinBatch {
+    fn reason(&self) -> &'static str {
+        "checkin-batch"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("round", self.round as f64)
+            .set("size", self.size)
+    }
+}
+
+/// Serve admission: devices turned away at round close.
+pub struct Deferral {
+    pub round: u32,
+    pub deferred: u64,
+    pub retry_after_s: f64,
+}
+
+impl ObsEvent for Deferral {
+    fn reason(&self) -> &'static str {
+        "deferral"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("round", self.round as f64)
+            .set("deferred", self.deferred as f64)
+            .set("retry_after_s", self.retry_after_s)
+    }
+}
+
+/// Serve admission: check-ins that arrived during Update and carried
+/// into the next round.
+pub struct LateCarryover {
+    pub round: u32,
+    pub carried: usize,
+}
+
+impl ObsEvent for LateCarryover {
+    fn reason(&self) -> &'static str {
+        "late-carryover"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("round", self.round as f64)
+            .set("carried", self.carried)
+    }
+}
+
+/// Serve round closed: the round's admission/aggregate summary.
+pub struct ServeRoundEnd {
+    pub round: u32,
+    pub checkins: u64,
+    pub admitted: usize,
+    pub deferred: u64,
+    pub participants: usize,
+    pub round_time_s: f64,
+    pub round_energy_j: f64,
+}
+
+impl ObsEvent for ServeRoundEnd {
+    fn reason(&self) -> &'static str {
+        "round-end"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("round", self.round as f64)
+            .set("checkins", self.checkins as f64)
+            .set("admitted", self.admitted)
+            .set("deferred", self.deferred as f64)
+            .set("participants", self.participants)
+            .set("round_time_s", self.round_time_s)
+            .set("round_energy_j", self.round_energy_j)
+    }
+}
+
+/// The TCP control plane came up.
+pub struct ServeStart {
+    pub addr: String,
+    pub workers: usize,
+}
+
+impl ObsEvent for ServeStart {
+    fn reason(&self) -> &'static str {
+        "serve-start"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("addr", self.addr.as_str())
+            .set("workers", self.workers)
+    }
+}
+
+/// Terminal bench record: the full `BENCH_*.json` body, nested so the
+/// stream stays one-object-per-line.
+pub struct BenchResult<'a> {
+    pub bench: &'a str,
+    pub record: Value,
+}
+
+impl ObsEvent for BenchResult<'_> {
+    fn reason(&self) -> &'static str {
+        "bench-result"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("bench", self.bench)
+            .set("record", self.record.clone())
+    }
+}
+
+/// End-of-run phase-timer rollup (also rendered by `report::obs_table`).
+pub struct SpanSummary<'a> {
+    pub scope: &'a str,
+    pub spans: &'a super::Spans,
+}
+
+impl ObsEvent for SpanSummary<'_> {
+    fn reason(&self) -> &'static str {
+        "span-summary"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("scope", self.scope)
+            .set("spans", self.spans.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn emitted_lines_parse_and_seq_is_monotone() {
+        let obs = Obs::capture();
+        obs.emit(&RoundStart {
+            scenario: "smoke",
+            round: 0,
+            now_s: 0.0,
+        });
+        obs.emit(&CheckinBatch { round: 1, size: 256 });
+        let lines = obs.captured_lines();
+        assert_eq!(lines.len(), 2);
+        let mut last_seq = -1.0;
+        for line in &lines {
+            let v = json::parse(line).expect("line must parse");
+            let seq = v.req_f64("seq").unwrap();
+            assert!(seq > last_seq, "seq not increasing");
+            last_seq = seq;
+            v.req_str("reason").unwrap();
+        }
+        let first = json::parse(&lines[0]).unwrap();
+        assert_eq!(first.req_str("reason").unwrap(), "round-start");
+        assert_eq!(first.req_str("scenario").unwrap(), "smoke");
+    }
+
+    #[test]
+    fn hostile_scenario_names_round_trip() {
+        let obs = Obs::capture();
+        let name = "ci\"ty\nnew\\line\t{}";
+        obs.emit(&RoundStart {
+            scenario: name,
+            round: 3,
+            now_s: 1.5,
+        });
+        let line = &obs.captured_lines()[0];
+        assert!(!line.contains('\n'), "NDJSON line must be one line");
+        let v = json::parse(line).expect("escaped line must parse");
+        assert_eq!(v.req_str("scenario").unwrap(), name);
+    }
+
+    #[test]
+    fn off_sink_is_inert() {
+        let obs = Obs::off();
+        assert!(!obs.enabled());
+        obs.emit(&CheckinBatch { round: 0, size: 1 });
+        assert!(obs.captured_lines().is_empty());
+        assert_eq!(format!("{obs:?}"), "Obs(off)");
+    }
+
+    #[test]
+    fn clones_share_one_seq_counter() {
+        let a = Obs::capture();
+        let b = a.clone();
+        a.emit(&CheckinBatch { round: 0, size: 1 });
+        b.emit(&CheckinBatch { round: 0, size: 2 });
+        let lines = a.captured_lines();
+        assert_eq!(lines.len(), 2);
+        let s0 = json::parse(&lines[0]).unwrap().req_f64("seq").unwrap();
+        let s1 = json::parse(&lines[1]).unwrap().req_f64("seq").unwrap();
+        assert_eq!((s0, s1), (0.0, 1.0));
+    }
+}

@@ -1,0 +1,324 @@
+//! Layer 2 of the telemetry spine: named counters and fixed-bucket
+//! latency histograms.
+//!
+//! The registry is deliberately *not* shared-mutable: each shard (or
+//! serve lane) records into its own local [`MetricsRegistry`] and the
+//! control thread merges them **in shard order at the round barrier** —
+//! the same discipline the FNV determinism digest uses — so recording
+//! never takes a lock on the SoA hot path and never perturbs scheduling.
+//! Hot loops pre-register names once ([`MetricsRegistry::counter`] /
+//! [`MetricsRegistry::hist`]) and then bump by index.
+
+use crate::util::json::Value;
+
+/// Fixed latency bucket upper bounds (seconds), 1-2-5 series from 1 µs
+/// to 10 s plus an implicit overflow bucket. Shared by every latency
+/// histogram in the crate so merges are always bucket-compatible.
+pub const LATENCY_BUCKETS_S: &[f64] = &[
+    1e-6, 2e-6, 5e-6, 1e-5, 2e-5, 5e-5, 1e-4, 2e-4, 5e-4, 1e-3, 2e-3,
+    5e-3, 1e-2, 2e-2, 5e-2, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0,
+];
+
+/// Index handle returned by [`MetricsRegistry::counter`]; bumping via the
+/// handle is a single array index, cheap enough for per-device loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Index handle returned by [`MetricsRegistry::hist`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistId(usize);
+
+/// Fixed-bound bucket histogram. A sample lands in the first bucket
+/// whose upper bound is `>= value`; larger samples land in the overflow
+/// bucket. Quantiles interpolate linearly inside a bucket, which is the
+/// usual fixed-bucket tradeoff: cheap, mergeable, bounded error.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    counts: Vec<u64>,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new(LATENCY_BUCKETS_S)
+    }
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Arithmetic mean of observed samples; 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    /// Largest observed sample; 0.0 when empty.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile estimate, `q` in [0, 1]; 0.0 when empty. Interpolates
+    /// within the bucket holding the target rank and clamps to the
+    /// observed max (overflow-bucket hits report the max itself).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target =
+            ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut before = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            if before + c >= target {
+                if i == self.bounds.len() {
+                    return self.max;
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = (target - before) as f64 / *c as f64;
+                return (lo + frac * (hi - lo)).min(self.max);
+            }
+            before += c;
+        }
+        self.max
+    }
+
+    /// Fold another histogram in. Both sides must use the same bounds —
+    /// in practice everything uses [`LATENCY_BUCKETS_S`].
+    pub fn merge_from(&mut self, other: &Histogram) {
+        assert_eq!(
+            self.bounds.len(),
+            other.bounds.len(),
+            "histogram bucket mismatch"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("count", self.count() as f64)
+            .set("sum_s", self.sum)
+            .set("max_s", self.max)
+            .set("p50_s", self.quantile(0.50))
+            .set("p90_s", self.quantile(0.90))
+            .set("p99_s", self.quantile(0.99))
+    }
+}
+
+/// Name-addressed counters + histograms. Lookup by name is linear — the
+/// registry holds a handful of entries and hot paths go through the
+/// pre-registered [`CounterId`]/[`HistId`] handles instead.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Vec<(String, u64)>,
+    hists: Vec<(String, Histogram)>,
+}
+
+impl MetricsRegistry {
+    /// Find-or-create a counter, returning its cheap bump handle.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        if let Some(i) =
+            self.counters.iter().position(|(n, _)| n == name)
+        {
+            return CounterId(i);
+        }
+        self.counters.push((name.to_string(), 0));
+        CounterId(self.counters.len() - 1)
+    }
+
+    pub fn add(&mut self, id: CounterId, n: u64) {
+        self.counters[id.0].1 += n;
+    }
+
+    /// Cold-path convenience: find-or-create and bump in one call.
+    pub fn inc(&mut self, name: &str, n: u64) {
+        let id = self.counter(name);
+        self.add(id, n);
+    }
+
+    pub fn counter_value(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Find-or-create a histogram with the given bounds.
+    pub fn hist(
+        &mut self,
+        name: &str,
+        bounds: &'static [f64],
+    ) -> HistId {
+        if let Some(i) = self.hists.iter().position(|(n, _)| n == name)
+        {
+            return HistId(i);
+        }
+        self.hists.push((name.to_string(), Histogram::new(bounds)));
+        HistId(self.hists.len() - 1)
+    }
+
+    pub fn observe(&mut self, id: HistId, v: f64) {
+        self.hists[id.0].1.observe(v);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(n, v)| (n.as_str(), *v))
+    }
+
+    pub fn histograms(
+        &self,
+    ) -> impl Iterator<Item = (&str, &Histogram)> {
+        self.hists.iter().map(|(n, h)| (n.as_str(), h))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.hists.is_empty()
+    }
+
+    /// Fold another registry in by name. Names already present merge in
+    /// place; unseen names append in `other`'s order — so merging shard
+    /// registries in shard order is deterministic.
+    pub fn merge_from(&mut self, other: &MetricsRegistry) {
+        for (name, v) in &other.counters {
+            let id = self.counter(name);
+            self.add(id, *v);
+        }
+        for (name, h) in &other.hists {
+            let id = self.hist(name, h.bounds);
+            self.hists[id.0].1.merge_from(h);
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut counters = Value::obj();
+        for (n, v) in &self.counters {
+            counters = counters.set(n.as_str(), *v as f64);
+        }
+        let mut hists = Value::obj();
+        for (n, h) in &self.hists {
+            hists = hists.set(n.as_str(), h.to_json());
+        }
+        Value::obj().set("counters", counters).set("hists", hists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_interpolate_within_buckets() {
+        let mut h = Histogram::default();
+        for i in 1..=10 {
+            h.observe(i as f64 * 1e-3); // 1ms..10ms
+        }
+        assert_eq!(h.count(), 10);
+        let p90 = h.quantile(0.90);
+        // true p90 is 9.1e-3; the bucket holding rank 9 is (5e-3, 1e-2]
+        assert!(p90 > 5e-3 && p90 <= 1e-2, "p90 = {p90}");
+        assert!((h.quantile(1.0) - h.max()).abs() < 1e-12);
+        assert!((h.mean() - 5.5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_empty_and_overflow_are_defined() {
+        let mut h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        h.observe(1e9); // beyond the last bound -> overflow bucket
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), 1e9);
+    }
+
+    #[test]
+    fn histogram_merge_equals_single_stream() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut whole = Histogram::default();
+        for i in 0..100 {
+            let v = (i as f64 + 0.5) * 1e-4;
+            whole.observe(v);
+            if i % 2 == 0 {
+                a.observe(v);
+            } else {
+                b.observe(v);
+            }
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.quantile(0.9), whole.quantile(0.9));
+        assert!((a.sum() - whole.sum()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_handles_and_merge_are_deterministic() {
+        let mut a = MetricsRegistry::default();
+        let id = a.counter("steps");
+        a.add(id, 3);
+        a.inc("steps", 2);
+        assert_eq!(a.counter_value("steps"), 5);
+        assert_eq!(a.counter_value("absent"), 0);
+
+        let mut b = MetricsRegistry::default();
+        b.inc("polls", 7);
+        b.inc("steps", 1);
+        let h = b.hist("lat", LATENCY_BUCKETS_S);
+        b.observe(h, 3e-3);
+
+        a.merge_from(&b);
+        assert_eq!(a.counter_value("steps"), 6);
+        assert_eq!(a.counter_value("polls"), 7);
+        assert_eq!(a.histogram("lat").unwrap().count(), 1);
+        // merge order: existing names keep position, new ones append
+        let names: Vec<&str> =
+            a.counters().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["steps", "polls"]);
+    }
+}

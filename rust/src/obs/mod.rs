@@ -1,0 +1,38 @@
+//! `obs` — the zero-dependency telemetry spine.
+//!
+//! Three layers share one sink:
+//!
+//! 1. **events** ([`event`]): cargo `machine_message`-style NDJSON —
+//!    every record is one JSON object per line with a `"reason"`
+//!    discriminator and a monotone `"seq"`, written to stderr, an
+//!    `--events <path>` file, or an in-memory capture for tests.
+//! 2. **metrics** ([`metrics`]): named counters and fixed-bucket
+//!    latency histograms, recorded shard-/lane-locally and merged
+//!    deterministically at round barriers (the FNV-digest discipline),
+//!    so recording never takes a lock on the SoA hot path.
+//! 3. **spans** ([`span`]): scoped phase timers (availability sweep,
+//!    select, step, aggregate, flush) that land in both the event
+//!    stream and `report::obs_table`.
+//!
+//! The load-bearing invariant is **digest neutrality**: enabling any
+//! of this must not change a single bit of `FleetOutcome` digests or
+//! the serve coordinator's aggregate digest. Telemetry therefore only
+//! *observes* existing control-flow boundaries — it never adds RNG
+//! draws, reorders float folds, or injects barriers of its own.
+
+pub mod event;
+pub mod metrics;
+pub mod span;
+
+pub use event::{
+    BenchResult, CacheHitMiss, CheckinBatch, Deferral, LateCarryover,
+    Obs, ObsEvent, ProfileAdopted, ProfileExplored, RoundEnd,
+    RoundStart, ServeRoundEnd, ServeStart, ShardProgress, SpanSummary,
+};
+pub use metrics::{
+    CounterId, HistId, Histogram, MetricsRegistry, LATENCY_BUCKETS_S,
+};
+pub use span::{
+    SpanEntry, SpanId, Spans, PHASE_AGGREGATE, PHASE_AVAILABILITY,
+    PHASE_CLOSE, PHASE_FINISH, PHASE_FLUSH, PHASE_SELECT, PHASE_STEP,
+};

@@ -1,0 +1,161 @@
+//! Layer 3 of the telemetry spine: scoped phase timers.
+//!
+//! A [`Spans`] accumulates wall-clock totals per named phase
+//! (availability sweep, select, step, aggregate, flush). It is a plain
+//! local value — the control thread owns it, records around its own
+//! phase boundaries, and the result lands in both the event stream
+//! ([`super::SpanSummary`]) and `report::obs_table`. Nothing here runs
+//! on worker threads, so spans cannot perturb the SoA hot path.
+
+use crate::util::json::Value;
+use std::time::Instant;
+
+/// Canonical fleet-drive phase names.
+pub const PHASE_AVAILABILITY: &str = "availability";
+pub const PHASE_SELECT: &str = "select";
+pub const PHASE_STEP: &str = "step";
+pub const PHASE_AGGREGATE: &str = "aggregate";
+/// Canonical serve phase names.
+pub const PHASE_FLUSH: &str = "flush";
+pub const PHASE_CLOSE: &str = "close";
+pub const PHASE_FINISH: &str = "finish";
+
+/// Index handle returned by [`Spans::span`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanId(usize);
+
+#[derive(Clone, Debug)]
+pub struct SpanEntry {
+    pub name: String,
+    pub count: u64,
+    pub total_s: f64,
+    pub max_s: f64,
+}
+
+/// Accumulated per-phase timings, in registration order.
+#[derive(Clone, Debug, Default)]
+pub struct Spans {
+    entries: Vec<SpanEntry>,
+}
+
+impl Spans {
+    /// Find-or-create a phase, returning its record handle.
+    pub fn span(&mut self, name: &str) -> SpanId {
+        if let Some(i) =
+            self.entries.iter().position(|e| e.name == name)
+        {
+            return SpanId(i);
+        }
+        self.entries.push(SpanEntry {
+            name: name.to_string(),
+            count: 0,
+            total_s: 0.0,
+            max_s: 0.0,
+        });
+        SpanId(self.entries.len() - 1)
+    }
+
+    pub fn record(&mut self, id: SpanId, secs: f64) {
+        let e = &mut self.entries[id.0];
+        e.count += 1;
+        e.total_s += secs;
+        if secs > e.max_s {
+            e.max_s = secs;
+        }
+    }
+
+    /// Time a closure and record it under `id`, passing the result
+    /// through.
+    pub fn time<T>(
+        &mut self,
+        id: SpanId,
+        f: impl FnOnce() -> T,
+    ) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(id, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn entries(&self) -> &[SpanEntry] {
+        &self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sum of all phase totals — the denominator for share-% columns.
+    pub fn total_s(&self) -> f64 {
+        self.entries.iter().map(|e| e.total_s).sum()
+    }
+
+    /// Fold another span set in by phase name; unseen phases append in
+    /// `other`'s order.
+    pub fn merge_from(&mut self, other: &Spans) {
+        for o in &other.entries {
+            let id = self.span(&o.name);
+            let e = &mut self.entries[id.0];
+            e.count += o.count;
+            e.total_s += o.total_s;
+            if o.max_s > e.max_s {
+                e.max_s = o.max_s;
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut obj = Value::obj();
+        for e in &self.entries {
+            obj = obj.set(
+                e.name.as_str(),
+                Value::obj()
+                    .set("count", e.count as f64)
+                    .set("total_s", e.total_s)
+                    .set("max_s", e.max_s),
+            );
+        }
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate_and_merge() {
+        let mut s = Spans::default();
+        let step = s.span(PHASE_STEP);
+        let sel = s.span(PHASE_SELECT);
+        s.record(step, 0.5);
+        s.record(step, 1.5);
+        s.record(sel, 0.25);
+        assert_eq!(s.entries()[0].count, 2);
+        assert!((s.entries()[0].total_s - 2.0).abs() < 1e-12);
+        assert!((s.entries()[0].max_s - 1.5).abs() < 1e-12);
+        assert!((s.total_s() - 2.25).abs() < 1e-12);
+
+        let mut t = Spans::default();
+        let agg = t.span(PHASE_AGGREGATE);
+        t.record(agg, 0.1);
+        t.merge_from(&s);
+        let names: Vec<&str> =
+            t.entries().iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![PHASE_AGGREGATE, PHASE_STEP, PHASE_SELECT]
+        );
+        assert_eq!(t.entries()[1].count, 2);
+    }
+
+    #[test]
+    fn time_records_elapsed() {
+        let mut s = Spans::default();
+        let id = s.span("work");
+        let out = s.time(id, || 41 + 1);
+        assert_eq!(out, 42);
+        assert_eq!(s.entries()[0].count, 1);
+        assert!(s.entries()[0].total_s >= 0.0);
+    }
+}

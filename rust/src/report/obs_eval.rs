@@ -1,0 +1,112 @@
+//! Observability report emitters: render a drive's phase-span
+//! breakdown ([`crate::obs::Spans`]) and counter/histogram registry
+//! ([`crate::obs::MetricsRegistry`]) as the repo's standard tables —
+//! the human face of the telemetry the NDJSON stream carries for
+//! machines. `swan bench fleet` prints the span table under the
+//! throughput table so "where did the round wall-clock go" is answered
+//! in the same terminal scroll.
+
+use crate::obs::{MetricsRegistry, Spans};
+use crate::util::bench::fmt_secs;
+use crate::util::table::Table;
+
+/// Phase-span breakdown: one row per span, with each phase's share of
+/// the total recorded wall time.
+pub fn obs_table(title: &str, spans: &Spans) -> Table {
+    let mut t = Table::new(
+        title,
+        &["phase", "count", "total", "mean", "max", "share"],
+    );
+    let total = spans.total_s();
+    for e in spans.entries() {
+        let mean = if e.count > 0 {
+            e.total_s / e.count as f64
+        } else {
+            0.0
+        };
+        let share = if total > 0.0 {
+            100.0 * e.total_s / total
+        } else {
+            0.0
+        };
+        t.row(&[
+            e.name.clone(),
+            e.count.to_string(),
+            fmt_secs(e.total_s),
+            fmt_secs(mean),
+            fmt_secs(e.max_s),
+            format!("{share:.1}%"),
+        ]);
+    }
+    t
+}
+
+/// Counter + histogram summary: counters one row each, histograms as
+/// count/mean/p90/max rows.
+pub fn obs_metrics_table(title: &str, metrics: &MetricsRegistry) -> Table {
+    let mut t = Table::new(
+        title,
+        &["metric", "count", "mean", "p90", "max"],
+    );
+    for (name, v) in metrics.counters() {
+        t.row(&[
+            name.to_string(),
+            v.to_string(),
+            "-".to_string(),
+            "-".to_string(),
+            "-".to_string(),
+        ]);
+    }
+    for (name, h) in metrics.histograms() {
+        t.row(&[
+            name.to_string(),
+            h.count().to_string(),
+            fmt_secs(h.mean()),
+            fmt_secs(h.quantile(0.90)),
+            fmt_secs(h.max()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_table_reports_shares_that_sum_to_one() {
+        let mut spans = Spans::default();
+        let a = spans.span("availability");
+        let b = spans.span("step");
+        spans.record(a, 1.0);
+        spans.record(b, 3.0);
+        let t = obs_table("spans", &spans);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][5], "25.0%");
+        assert_eq!(t.rows[1][5], "75.0%");
+        let md = t.to_markdown();
+        assert!(md.contains("availability"));
+    }
+
+    #[test]
+    fn metrics_table_mixes_counters_and_histograms() {
+        let mut m = MetricsRegistry::default();
+        m.inc("fleet.online", 42);
+        let h = m.hist("fleet.round_wall_s", crate::obs::LATENCY_BUCKETS_S);
+        m.observe(h, 2e-3);
+        let t = obs_metrics_table("metrics", &m);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "fleet.online");
+        assert_eq!(t.rows[0][1], "42");
+        assert_eq!(t.rows[1][0], "fleet.round_wall_s");
+        assert_eq!(t.rows[1][1], "1");
+    }
+
+    #[test]
+    fn empty_inputs_render_headers_only() {
+        assert!(obs_table("t", &Spans::default()).rows.is_empty());
+        assert!(obs_metrics_table("t", &MetricsRegistry::default())
+            .rows
+            .is_empty());
+    }
+}

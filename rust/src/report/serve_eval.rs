@@ -64,7 +64,12 @@ mod tests {
             admitted: 5_000,
             participations: 500,
             checkin_wall_s: 1.0,
-            latency_samples: vec![1e-5, 2e-5],
+            latency_hist: {
+                let mut h = crate::obs::Histogram::default();
+                h.observe(1e-5);
+                h.observe(2e-5);
+                h
+            },
             ..Default::default()
         };
         let mut b = a.clone();

@@ -42,6 +42,7 @@
 
 use std::collections::HashMap;
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::fl::server::fedavg;
 use crate::fl::selection::select_uniform;
@@ -145,7 +146,11 @@ struct RoundState {
     round_deferred: u64,
     // -- run-cumulative state --
     digest: DigestFold,
-    totals: Totals,
+    /// Cumulative counters + control-plane latency histograms
+    /// (telemetry; wall-clock only, excluded from the parity digest).
+    metrics: crate::obs::MetricsRegistry,
+    total_time_s: f64,
+    total_energy_j: f64,
     last_aggregate: Vec<f32>,
 }
 
@@ -179,10 +184,23 @@ pub struct Coordinator {
     cache: Mutex<ProfileCache>,
     pending: Mutex<Pending>,
     round: Mutex<RoundState>,
+    obs: crate::obs::Obs,
 }
 
 impl Coordinator {
     pub fn new(cfg: ServeConfig) -> crate::Result<Coordinator> {
+        Self::with_obs(cfg, crate::obs::Obs::off())
+    }
+
+    /// Like [`new`](Coordinator::new), with a telemetry sink attached:
+    /// admission batches, deferrals, late carryovers, cache traffic and
+    /// round lifecycle stream as NDJSON events. Telemetry observes the
+    /// existing round barriers and never reorders them, so the parity
+    /// digest is bit-identical with the sink on or off.
+    pub fn with_obs(
+        cfg: ServeConfig,
+        obs: crate::obs::Obs,
+    ) -> crate::Result<Coordinator> {
         crate::ensure!(
             cfg.clients_per_round > 0,
             "serve: clients_per_round must be > 0"
@@ -210,16 +228,24 @@ impl Coordinator {
                 round_checkins: 0,
                 round_deferred: 0,
                 digest: DigestFold::default(),
-                totals: Totals::default(),
+                metrics: crate::obs::MetricsRegistry::default(),
+                total_time_s: 0.0,
+                total_energy_j: 0.0,
                 last_aggregate: Vec::new(),
             }),
             cfg,
             workload,
+            obs,
         })
     }
 
     pub fn config(&self) -> &ServeConfig {
         &self.cfg
+    }
+
+    /// The attached telemetry sink (off by default).
+    pub fn obs(&self) -> &crate::obs::Obs {
+        &self.obs
     }
 
     fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
@@ -238,16 +264,20 @@ impl Coordinator {
         if batch.is_empty() {
             return;
         }
+        let t0 = Instant::now();
+        let size = batch.len();
         let mut r = Self::lock(&self.round);
         // a check-in landing after its round closed (free-running
         // clients racing the pacer) was counted toward the *next*
         // round's pending counters, so it belongs to the next round's
         // admitted set — not to the closed round it can no longer join
-        if r.phase == Phase::CheckIn {
+        let lands_in = if r.phase == Phase::CheckIn {
             r.admitted.extend_from_slice(&batch);
+            r.round
         } else {
             r.next_admitted.extend_from_slice(&batch);
-        }
+            r.round + 1
+        };
         drop(r);
         let mut cache = Self::lock(&self.cache);
         for ci in &batch {
@@ -261,6 +291,19 @@ impl Coordinator {
                     plan_cost(&self.workload, model, ci.band, ci.charging)
                 });
             }
+        }
+        drop(cache);
+        let mut r = Self::lock(&self.round);
+        let h = r
+            .metrics
+            .hist("serve.flush_s", crate::obs::LATENCY_BUCKETS_S);
+        r.metrics.observe(h, t0.elapsed().as_secs_f64());
+        drop(r);
+        if self.obs.enabled() {
+            self.obs.emit(&crate::obs::CheckinBatch {
+                round: lands_in,
+                size,
+            });
         }
     }
 
@@ -303,6 +346,7 @@ impl Coordinator {
     /// End the check-in phase of `round`: flush the partial batch, run
     /// selection, resolve the picked leases. Returns the picked count.
     pub fn close_round(&self, round: u32) -> crate::Result<u32> {
+        let t0 = Instant::now();
         let (batch, checkins, deferred) = {
             let mut p = Self::lock(&self.pending);
             let b = std::mem::take(&mut p.batch);
@@ -379,6 +423,18 @@ impl Coordinator {
         r.updates = vec![None; n];
         r.received = 0;
         r.phase = Phase::Update;
+        let h = r
+            .metrics
+            .hist("serve.close_s", crate::obs::LATENCY_BUCKETS_S);
+        r.metrics.observe(h, t0.elapsed().as_secs_f64());
+        drop(r);
+        if deferred > 0 && self.obs.enabled() {
+            self.obs.emit(&crate::obs::Deferral {
+                round,
+                deferred,
+                retry_after_s: RETRY_AFTER_S as f64,
+            });
+        }
         Ok(n as u32)
     }
 
@@ -420,6 +476,7 @@ impl Coordinator {
     /// Aggregate the finished round (FedAvg via `fl::server`), fold the
     /// parity digest, advance to the next round's check-in phase.
     pub fn finish_round(&self, round: u32) -> crate::Result<RoundSummary> {
+        let t0 = Instant::now();
         let mut r = Self::lock(&self.round);
         crate::ensure!(
             r.phase == Phase::Update && r.round == round,
@@ -480,17 +537,17 @@ impl Coordinator {
 
         let round_checkins = r.round_checkins;
         let round_deferred = r.round_deferred;
-        r.totals.rounds_run += 1;
-        r.totals.checkins += round_checkins;
-        r.totals.admitted += admitted;
-        r.totals.deferred += round_deferred;
-        r.totals.participations += participants as u64;
-        r.totals.total_time_s += if admitted == 0 {
+        r.metrics.inc("serve.rounds", 1);
+        r.metrics.inc("serve.checkins", round_checkins);
+        r.metrics.inc("serve.admitted", admitted);
+        r.metrics.inc("serve.deferred", round_deferred);
+        r.metrics.inc("serve.participations", participants as u64);
+        r.total_time_s += if admitted == 0 {
             EMPTY_ROUND_WAIT_S
         } else {
             round_time_s + self.cfg.server_overhead_s
         };
-        r.totals.total_energy_j += round_energy_j;
+        r.total_energy_j += round_energy_j;
 
         let summary = RoundSummary {
             round,
@@ -503,6 +560,7 @@ impl Coordinator {
             digest: r.digest.h,
         };
 
+        let carried = r.next_admitted.len();
         r.round += 1;
         r.phase = Phase::CheckIn;
         // late check-ins banked during the update phase open the next
@@ -513,6 +571,37 @@ impl Coordinator {
         r.received = 0;
         r.round_checkins = 0;
         r.round_deferred = 0;
+        let h = r
+            .metrics
+            .hist("serve.finish_s", crate::obs::LATENCY_BUCKETS_S);
+        r.metrics.observe(h, t0.elapsed().as_secs_f64());
+        if self.obs.enabled() {
+            // lock order: round before cache, matching stats()
+            let (hits, misses, evictions) = {
+                let cache = Self::lock(&self.cache);
+                (cache.hits, cache.misses, cache.evictions)
+            };
+            drop(r);
+            self.obs.emit(&crate::obs::ServeRoundEnd {
+                round,
+                checkins: round_checkins,
+                admitted: admitted as usize,
+                deferred: round_deferred,
+                participants: participants as usize,
+                round_time_s,
+                round_energy_j,
+            });
+            if carried > 0 {
+                self.obs
+                    .emit(&crate::obs::LateCarryover { round, carried });
+            }
+            self.obs.emit(&crate::obs::CacheHitMiss {
+                round,
+                hits,
+                misses,
+                evictions,
+            });
+        }
         Ok(summary)
     }
 
@@ -535,8 +624,27 @@ impl Coordinator {
             cache_hits: cache.hits,
             cache_misses: cache.misses,
             cache_evictions: cache.evictions,
-            totals: r.totals,
+            totals: Totals {
+                rounds_run: r.metrics.counter_value("serve.rounds")
+                    as usize,
+                checkins: r.metrics.counter_value("serve.checkins"),
+                admitted: r.metrics.counter_value("serve.admitted"),
+                deferred: r.metrics.counter_value("serve.deferred"),
+                participations: r
+                    .metrics
+                    .counter_value("serve.participations"),
+                total_time_s: r.total_time_s,
+                total_energy_j: r.total_energy_j,
+            },
         }
+    }
+
+    /// Snapshot of the cumulative counter/histogram registry (the
+    /// telemetry superset behind [`stats`](Coordinator::stats):
+    /// `serve.*` counters plus `serve.flush_s` / `serve.close_s` /
+    /// `serve.finish_s` control-plane latency histograms).
+    pub fn metrics(&self) -> crate::obs::MetricsRegistry {
+        Self::lock(&self.round).metrics.clone()
     }
 }
 

@@ -27,9 +27,9 @@ use crate::fl::server::fedavg;
 use crate::fleet::device::{FleetDevice, FleetNode};
 use crate::fleet::engine::{round_rng, EMPTY_ROUND_WAIT_S};
 use crate::fleet::scenario::ScenarioSpec;
+use crate::obs::{Histogram, Obs};
 use crate::util::json::Value;
 use crate::util::rng::Rng;
-use crate::util::stats;
 use crate::workload::load_or_builtin;
 
 use super::cache::plan_cost;
@@ -90,9 +90,10 @@ pub struct ServeRunOutcome {
     /// `checkins_per_sec` denominator measures the coordinator, not
     /// the load generator's simulation.
     pub checkin_wall_s: f64,
-    /// Batch-amortized per-check-in round-trip latency samples, one per
-    /// (lane, round) with traffic.
-    pub latency_samples: Vec<f64>,
+    /// Batch-amortized per-check-in round-trip latencies, one
+    /// observation per (lane, round) with traffic, in the crate's
+    /// fixed latency buckets (merged across lanes in lane order).
+    pub latency_hist: Histogram,
 }
 
 impl ServeRunOutcome {
@@ -106,9 +107,9 @@ impl ServeRunOutcome {
         }
     }
 
-    /// Tail latency: p90 of the batch-amortized check-in samples.
+    /// Tail latency: p90 of the batch-amortized check-in observations.
     pub fn p90_checkin_latency_s(&self) -> f64 {
-        stats::percentile(&self.latency_samples, 90.0)
+        self.latency_hist.quantile(0.90)
     }
 
     /// Fraction of check-ins answered with `Deferred` backpressure.
@@ -139,6 +140,7 @@ impl ServeRunOutcome {
             .set("checkins_per_sec", self.checkins_per_sec())
             .set("p90_checkin_latency_s", self.p90_checkin_latency_s())
             .set("deferral_rate", self.deferral_rate())
+            .set("checkin_latency_hist", self.latency_hist.to_json())
     }
 }
 
@@ -150,7 +152,7 @@ struct Lane {
     client: Box<dyn ServeClient>,
     reqs: Vec<CheckIn>,
     admitted: Vec<u64>,
-    latencies: Vec<f64>,
+    latencies: Histogram,
     /// Wall seconds of this round's check-in burst alone (the request
     /// traffic, not the availability sweep) — the driver folds the max
     /// across lanes into `checkin_wall_s`.
@@ -187,7 +189,7 @@ impl Lane {
         let acks = self.client.check_in_batch(&self.reqs)?;
         self.last_burst_s = t0.elapsed().as_secs_f64();
         self.latencies
-            .push(self.last_burst_s / self.reqs.len() as f64);
+            .observe(self.last_burst_s / self.reqs.len() as f64);
         crate::ensure!(
             acks.len() == self.reqs.len(),
             "serve loadgen: {} acks for {} check-ins",
@@ -298,7 +300,7 @@ pub fn run_loadgen(
             client,
             reqs: Vec::new(),
             admitted: Vec::new(),
-            latencies: Vec::new(),
+            latencies: Histogram::default(),
             last_burst_s: 0.0,
         })
         .collect();
@@ -371,8 +373,10 @@ pub fn run_loadgen(
     out.total_time_s = now_s;
     out.wall_s = wall0.elapsed().as_secs_f64();
     out.digest = digest_hex(digest_u64);
-    for lane in lanes.iter_mut() {
-        out.latency_samples.append(&mut lane.latencies);
+    // fixed lane order: merged histograms are identical no matter how
+    // the lane threads interleaved
+    for lane in lanes.iter() {
+        out.latency_hist.merge_from(&lane.latencies);
     }
     Ok(out)
 }
@@ -385,7 +389,20 @@ pub fn run_inproc(
     lanes: usize,
     cfg: &ServeConfig,
 ) -> crate::Result<(ServeRunOutcome, Arc<Coordinator>)> {
-    let coord = Arc::new(Coordinator::new(cfg.clone())?);
+    run_inproc_with(spec, lanes, cfg, &Obs::off())
+}
+
+/// [`run_inproc`] with a telemetry sink attached to the coordinator:
+/// check-in batches, deferrals, carryovers, cache traffic and round
+/// lifecycle stream as NDJSON while the run is in flight.
+pub fn run_inproc_with(
+    spec: &ScenarioSpec,
+    lanes: usize,
+    cfg: &ServeConfig,
+    obs: &Obs,
+) -> crate::Result<(ServeRunOutcome, Arc<Coordinator>)> {
+    let coord =
+        Arc::new(Coordinator::with_obs(cfg.clone(), obs.clone())?);
     let clients: Vec<Box<dyn ServeClient>> = (0..lanes.max(1))
         .map(|_| {
             Box::new(InProcClient::new(Arc::clone(&coord)))
@@ -579,20 +596,35 @@ mod tests {
 
     #[test]
     fn outcome_metrics_derive_sanely() {
+        let mut hist = Histogram::default();
+        for i in 1..=10 {
+            hist.observe(i as f64 * 1e-3);
+        }
         let out = ServeRunOutcome {
             checkins: 100,
             deferred: 25,
             checkin_wall_s: 2.0,
-            latency_samples: (1..=10).map(|i| i as f64 * 1e-3).collect(),
+            latency_hist: hist,
             ..Default::default()
         };
         assert_eq!(out.checkins_per_sec(), 50.0);
         assert_eq!(out.deferral_rate(), 0.25);
+        // target rank 9 of 10 interpolates 4/5 into the (5ms, 10ms]
+        // bucket: 5e-3 + 0.8 * 5e-3 = 9e-3
         let p90 = out.p90_checkin_latency_s();
-        assert!((p90 - 9.1e-3).abs() < 1e-9, "p90={p90}");
+        assert!((p90 - 9e-3).abs() < 1e-9, "p90={p90}");
         let v = out.to_json();
         assert!(v.req_f64("checkins_per_sec").unwrap() > 0.0);
+        assert!(
+            v.get("checkin_latency_hist").is_some(),
+            "hist missing from the bench record"
+        );
         assert_eq!(ServeRunOutcome::default().checkins_per_sec(), 0.0);
         assert_eq!(ServeRunOutcome::default().deferral_rate(), 0.0);
+        assert_eq!(
+            ServeRunOutcome::default().p90_checkin_latency_s(),
+            0.0,
+            "empty histogram p90 is defined"
+        );
     }
 }

@@ -49,8 +49,8 @@ pub use coordinator::{
     Coordinator, DigestFold, ServeConfig, ServeStats, RETRY_AFTER_S,
 };
 pub use loadgen::{
-    run_inproc, run_loadgen, run_oracle, run_tcp, synth_update,
-    thermal_band, OracleOutcome, ServeRunOutcome,
+    run_inproc, run_inproc_with, run_loadgen, run_oracle, run_tcp,
+    synth_update, thermal_band, OracleOutcome, ServeRunOutcome,
 };
 pub use server::{serve_tcp, TcpServeHandle};
 pub use wire::{

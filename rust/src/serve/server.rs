@@ -47,6 +47,12 @@ pub fn serve_tcp(
     let listener = TcpListener::bind(bind_addr)
         .map_err(|e| crate::err!("serve: bind {bind_addr}: {e}"))?;
     let addr = listener.local_addr()?;
+    if coord.obs().enabled() {
+        coord.obs().emit(&crate::obs::ServeStart {
+            addr: addr.to_string(),
+            workers,
+        });
+    }
     let stop = Arc::new(AtomicBool::new(false));
 
     let (tx, rx) = sync_channel::<TcpStream>(workers);

@@ -19,9 +19,8 @@ pub struct Measurement {
 }
 
 impl Measurement {
-    /// Wrap externally collected samples (e.g. the serve load
-    /// generator's per-check-in latencies) so they flow through the
-    /// same percentile/CSV reporting as timed closures.
+    /// Wrap externally collected samples so they flow through the same
+    /// percentile/CSV reporting as timed closures.
     pub fn from_samples(name: &str, samples: Vec<f64>) -> Measurement {
         Measurement {
             name: name.to_string(),
@@ -210,5 +209,20 @@ mod tests {
             samples: vec![],
         };
         assert_eq!(empty.per_sec(100.0), 0.0);
+    }
+
+    #[test]
+    fn empty_measurement_stays_finite() {
+        // a bench that never sampled must not write inf/NaN into the
+        // CSV or JSON snapshots
+        let m = Measurement::from_samples("empty", vec![]);
+        assert_eq!(m.mean(), 0.0);
+        assert_eq!(m.std(), 0.0);
+        assert_eq!(m.p50(), 0.0);
+        assert_eq!(m.p90(), 0.0);
+        assert_eq!(m.min(), 0.0);
+        for v in [m.mean(), m.std(), m.p50(), m.p90(), m.min()] {
+            assert!(v.is_finite());
+        }
     }
 }

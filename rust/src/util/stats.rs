@@ -19,13 +19,15 @@ pub fn std(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
-/// Linear-interpolated percentile, p in [0, 100].
+/// Linear-interpolated percentile, p in [0, 100]; 0.0 for empty input.
+/// Sorts with `total_cmp` so a stray NaN sample cannot panic the
+/// reporting path (NaNs sort last and only perturb the top ranks).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -36,11 +38,20 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Smallest sample; 0.0 for empty input (±INFINITY would poison the
+/// CSV/JSON emitters, which have no representation for it).
 pub fn min(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
 
+/// Largest sample; 0.0 for empty input (see [`min`]).
 pub fn max(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }
 
@@ -129,6 +140,21 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+        // empty min/max must return finite values: ±INFINITY is not
+        // representable in the JSON/CSV the bench emitters write
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+        assert!(min(&[]).is_finite() && max(&[]).is_finite());
+    }
+
+    #[test]
+    fn nan_samples_cannot_panic_percentile() {
+        // partial_cmp().unwrap() used to panic here; total_cmp sorts
+        // NaN last instead
+        let xs = [3.0, f64::NAN, 1.0];
+        let p0 = percentile(&xs, 0.0);
+        assert_eq!(p0, 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
     }
 
     #[test]

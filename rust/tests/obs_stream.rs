@@ -1,0 +1,215 @@
+//! Telemetry-spine acceptance tests.
+//!
+//! Two contracts are pinned here:
+//!
+//! 1. **NDJSON well-formedness** — every line the fleet drive emits
+//!    must parse back through `util::json`, carry a non-empty string
+//!    `reason` and a monotonically increasing numeric `seq`, and stay
+//!    one physical line even when scenario names contain quotes,
+//!    newlines or backslashes (property-style over random specs,
+//!    matching the `swan_properties` idiom).
+//! 2. **Digest neutrality** — turning telemetry on must not perturb a
+//!    single bit of any aggregate, at 1 and 4 shards/lanes, on both
+//!    the fleet and serve paths. Telemetry only observes existing
+//!    barriers; it never draws RNG or reorders folds.
+//!
+//! Plus the bench contract: the `bench-result` event nested in the
+//! stream must agree with the `BENCH_fleet.json` snapshot the same run
+//! writes.
+
+use swan::fl::FlArm;
+use swan::fleet::{
+    run_fleet_bench, run_scenario, run_scenario_obs, ScenarioSpec,
+};
+use swan::obs::Obs;
+use swan::prop_assert;
+use swan::serve::{run_inproc, run_inproc_with, ServeConfig};
+use swan::util::check::check;
+use swan::util::json;
+
+fn tiny_spec(name: &str, devices: usize, rounds: usize) -> ScenarioSpec {
+    ScenarioSpec {
+        name: name.to_string(),
+        devices,
+        rounds,
+        clients_per_round: 8,
+        trace_users: 2,
+        ..ScenarioSpec::default()
+    }
+}
+
+#[test]
+fn every_emitted_line_is_well_formed_ndjson() {
+    // hostile names exercise the writer's escaping: embedded quotes,
+    // newlines, tabs, backslashes and braces must all stay inside one
+    // escaped JSON string on one physical line
+    const NAMES: [&str; 4] = [
+        "plain",
+        "qu\"ote{d}",
+        "new\nline\twith\\slash",
+        "µ-unicode",
+    ];
+    check(6, |rng| {
+        let spec = ScenarioSpec {
+            name: NAMES[rng.index(NAMES.len())].to_string(),
+            devices: 12 + rng.index(37),
+            rounds: 1 + rng.index(3),
+            clients_per_round: 4,
+            trace_users: 1 + rng.index(2),
+            seed: rng.next_u64(),
+            ..ScenarioSpec::default()
+        };
+        let shards = 1 + rng.index(3);
+        let arm = if rng.bool(0.5) {
+            FlArm::Swan
+        } else {
+            FlArm::Baseline
+        };
+        let obs = Obs::capture();
+        run_scenario_obs(&spec, shards, arm, &obs)
+            .map_err(|e| e.to_string())?;
+        let lines = obs.captured_lines();
+        prop_assert!(!lines.is_empty(), "run emitted no events");
+        let mut last_seq = -1.0f64;
+        let mut reasons: Vec<String> = Vec::new();
+        for line in &lines {
+            prop_assert!(
+                !line.contains('\n'),
+                "NDJSON record spans lines: {line:?}"
+            );
+            let v = json::parse(line)
+                .map_err(|e| format!("bad JSON ({e}): {line}"))?;
+            let reason =
+                v.req_str("reason").map_err(|e| e.to_string())?;
+            prop_assert!(!reason.is_empty(), "empty reason: {line}");
+            reasons.push(reason.to_string());
+            let seq = v.req_f64("seq").map_err(|e| e.to_string())?;
+            prop_assert!(
+                seq > last_seq,
+                "seq not increasing: {seq} after {last_seq}"
+            );
+            last_seq = seq;
+            // events that carry the scenario name must round-trip it
+            if let Some(s) = v.get("scenario").and_then(|s| s.as_str())
+            {
+                prop_assert!(
+                    s == spec.name,
+                    "scenario name mangled: {s:?} vs {:?}",
+                    spec.name
+                );
+            }
+        }
+        // the stream must carry the round lifecycle + terminal rollup
+        for want in ["round-start", "round-end", "span-summary"] {
+            prop_assert!(
+                reasons.iter().any(|r| r == want),
+                "missing '{want}' event in {reasons:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fleet_telemetry_is_digest_neutral() {
+    let spec = tiny_spec("obs-neutral", 240, 4);
+    for shards in [1usize, 4] {
+        let off = run_scenario(&spec, shards, FlArm::Swan)
+            .expect("telemetry-off run");
+        let obs = Obs::capture();
+        let on = run_scenario_obs(&spec, shards, FlArm::Swan, &obs)
+            .expect("telemetry-on run");
+        assert!(!obs.captured_lines().is_empty(), "capture saw events");
+        assert_eq!(off.digest(), on.digest(), "{shards} shards");
+        assert_eq!(
+            off.total_time_s.to_bits(),
+            on.total_time_s.to_bits(),
+            "{shards} shards: virtual time"
+        );
+        assert_eq!(
+            off.total_energy_j.to_bits(),
+            on.total_energy_j.to_bits(),
+            "{shards} shards: energy"
+        );
+        assert_eq!(off.total_steps, on.total_steps);
+        assert_eq!(off.participations, on.participations);
+        assert_eq!(off.online_per_round, on.online_per_round);
+    }
+}
+
+#[test]
+fn serve_telemetry_is_digest_neutral() {
+    let spec = tiny_spec("obs-serve-neutral", 240, 4);
+    let cfg = ServeConfig::for_scenario(&spec);
+    for lanes in [1usize, 4] {
+        let (off, _) =
+            run_inproc(&spec, lanes, &cfg).expect("telemetry-off run");
+        let obs = Obs::capture();
+        let (on, _) = run_inproc_with(&spec, lanes, &cfg, &obs)
+            .expect("telemetry-on run");
+        assert_eq!(off.digest, on.digest, "{lanes} lanes");
+        assert_eq!(off.participations, on.participations);
+        assert_eq!(off.rounds_run, on.rounds_run);
+        assert_eq!(
+            off.total_time_s.to_bits(),
+            on.total_time_s.to_bits(),
+            "{lanes} lanes: virtual time"
+        );
+        assert_eq!(
+            off.total_energy_j.to_bits(),
+            on.total_energy_j.to_bits(),
+            "{lanes} lanes: energy"
+        );
+        // the serve stream carries admission + cache telemetry
+        let reasons: Vec<String> = obs
+            .captured_lines()
+            .iter()
+            .map(|l| {
+                json::parse(l)
+                    .expect("well-formed line")
+                    .req_str("reason")
+                    .expect("reason present")
+                    .to_string()
+            })
+            .collect();
+        for want in ["checkin-batch", "round-end", "cache-hit-miss"] {
+            assert!(
+                reasons.iter().any(|r| r == want),
+                "{lanes} lanes: missing '{want}' in {reasons:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bench_result_event_agrees_with_the_written_snapshot() {
+    let spec = tiny_spec("obs-bench-agree", 240, 4);
+    let obs = Obs::capture();
+    let report = run_fleet_bench(&spec, &[2], FlArm::Swan, false, &obs)
+        .expect("fleet bench");
+    let path = std::env::temp_dir().join(format!(
+        "obs_stream_BENCH_fleet_{}.json",
+        std::process::id()
+    ));
+    report.write_json(&path).expect("write snapshot");
+    let from_file = json::parse_file(&path).expect("snapshot parses");
+    std::fs::remove_file(&path).ok();
+
+    let mut records = Vec::new();
+    for line in obs.captured_lines() {
+        let v = json::parse(&line).expect("well-formed line");
+        if v.req_str("reason").unwrap() == "bench-result" {
+            assert_eq!(v.req_str("bench").unwrap(), "fleet");
+            records.push(v.req("record").unwrap().clone());
+        }
+    }
+    assert_eq!(records.len(), 1, "exactly one bench-result event");
+    // the nested record and the BENCH_fleet.json snapshot are the same
+    // report: value-identical after the file round-trip
+    assert_eq!(records[0], from_file);
+    assert_eq!(records[0].req_str("digest").unwrap(), report.digest);
+    assert_eq!(
+        from_file.req_f64("best_devices_stepped_per_sec").unwrap(),
+        report.best_soa().devices_stepped_per_sec()
+    );
+}

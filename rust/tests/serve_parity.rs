@@ -61,7 +61,8 @@ fn loopback_tcp_matches_the_inproc_digest() {
         ..ScenarioSpec::default()
     };
     let report =
-        run_serve_bench(&spec, 2, true, 0).expect("serve bench with TCP");
+        run_serve_bench(&spec, 2, true, 0, &swan::obs::Obs::off())
+            .expect("serve bench with TCP");
     let tcp = report.tcp.expect("TCP run present");
     assert_eq!(tcp.digest, report.inproc.digest);
     assert_eq!(
