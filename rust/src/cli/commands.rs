@@ -559,9 +559,23 @@ fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
             default: None,
             is_switch: true,
         },
+        OptSpec {
+            name: "no-pin",
+            help: "disable shard-worker core pinning (shared machines)",
+            default: None,
+            is_switch: true,
+        },
+        opt(
+            "expect-digest",
+            "fail unless the run reproduces this golden digest",
+            None,
+        ),
         opt("events", EVENTS_HELP, None),
     ];
     let args = parse_args(rest, &specs)?;
+    if args.has("no-pin") {
+        crate::util::affinity::set_pinning(false);
+    }
     let spec = scenario_arg(&args, "city")?;
     let obs = obs_arg(&args)?;
     let shards_arg = args.get_str("shards", "1,2,4,8");
@@ -628,6 +642,10 @@ fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
         outcomes.len(),
         report.digest
     );
+    if let Some(want) = args.get("expect-digest") {
+        report.assert_digest(want)?;
+        println!("digest matches --expect-digest");
+    }
     println!("{}", report.one_line());
     // an explicit --out names a file the user expects to appear, so it
     // implies --json rather than being silently ignored

@@ -4,7 +4,7 @@ use crate::soc::device::{Device, DeviceId};
 use crate::trace::resample::ResampledTrace;
 use crate::train::data::Partition;
 
-use super::energy_loan::EnergyLoan;
+use super::energy_loan::{EnergyLoan, LoanBank};
 
 /// Minimum traced battery level (%) for participation when not charging
 /// (the same §4.1 gate local admission uses).
@@ -43,6 +43,41 @@ pub fn availability_gate_sampled(
     loan.tick(now_s, charging);
     let gate = charging || level_pct >= min_level_pct;
     gate && loan.allows_participation(level_pct / 100.0)
+}
+
+/// Batch twin of [`availability_gate_sampled`] over a [`LoanBank`]:
+/// evaluates the gate for every row into `mask` (cleared, then
+/// refilled). The caller must have already advanced the bank with
+/// `bank.tick_all(now_s, charging)` — splitting tick from gate keeps
+/// each loop branch-free. Uses non-short-circuiting `&`/`|` so every
+/// lane does identical work; this is decision-identical to the scalar
+/// gate because `allows_participation` is pure (evaluating it when the
+/// level gate already failed cannot change state), and the effective-
+/// level comparison is written with the exact same operation order
+/// (`level/100 − loan/capacity > critical`).
+pub fn availability_gate_many(
+    bank: &LoanBank,
+    level_pct: &[f64],
+    charging: &[bool],
+    min_level_pct: &[f64],
+    mask: &mut Vec<bool>,
+) {
+    mask.clear();
+    let n = bank.len();
+    debug_assert_eq!(level_pct.len(), n);
+    debug_assert_eq!(charging.len(), n);
+    debug_assert_eq!(min_level_pct.len(), n);
+    let loan = &bank.loan_j[..n];
+    let cap = &bank.capacity_j[..n];
+    let crit = &bank.critical_level[..n];
+    let level_pct = &level_pct[..n];
+    let charging = &charging[..n];
+    let min_level_pct = &min_level_pct[..n];
+    for k in 0..n {
+        let gate = charging[k] | (level_pct[k] >= min_level_pct[k]);
+        let allow = level_pct[k] / 100.0 - loan[k] / cap[k] > crit[k];
+        mask.push(gate & allow);
+    }
 }
 
 pub struct FlClient {
@@ -115,6 +150,56 @@ mod tests {
             resample_trace(&TraceGenerator::default().generate(1, 0)).unwrap();
         let ds = SyntheticDataset::vision(0);
         FlClient::new(0, device(DeviceId::Pixel3), tr, ds.partition(0), credit)
+    }
+
+    #[test]
+    fn gate_many_matches_scalar_gate_over_random_streams() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x6A7E_BA9);
+        let n = 96;
+        let mut scalars: Vec<EnergyLoan> = (0..n)
+            .map(|i| {
+                let mut l = EnergyLoan::new(
+                    1500.0 + 40.0 * i as f64,
+                    rng.range(1_000.0, 30_000.0),
+                );
+                l.borrow(rng.range(0.0, l.capacity_j * 0.3));
+                l
+            })
+            .collect();
+        let mut bank = LoanBank::with_capacity(n);
+        for l in &scalars {
+            bank.push(l);
+        }
+        let level: Vec<f64> =
+            (0..n).map(|_| rng.range(0.0, 100.0)).collect();
+        let charging: Vec<bool> =
+            (0..n).map(|_| rng.bool(0.4)).collect();
+        let min_level: Vec<f64> =
+            (0..n).map(|_| rng.range(5.0, 60.0)).collect();
+        let mut now = 0.0;
+        let mut mask = Vec::new();
+        for _ in 0..25 {
+            now += rng.range(0.0, 10_000.0);
+            bank.tick_all(now, &charging);
+            availability_gate_many(
+                &bank, &level, &charging, &min_level, &mut mask,
+            );
+            for k in 0..n {
+                let want = availability_gate_sampled(
+                    &mut scalars[k],
+                    now,
+                    level[k],
+                    charging[k],
+                    min_level[k],
+                );
+                assert_eq!(mask[k], want, "row {k} at now={now}");
+                assert_eq!(
+                    bank.loan_j[k].to_bits(),
+                    scalars[k].loan_j.to_bits()
+                );
+            }
+        }
     }
 
     #[test]

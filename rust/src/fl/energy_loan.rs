@@ -62,6 +62,100 @@ impl EnergyLoan {
     }
 }
 
+/// Structure-of-arrays twin of [`EnergyLoan`] for the fleet kernel's
+/// batch passes: one `Vec<f64>` per field so the per-round tick runs as
+/// a straight-line loop over flat slices instead of chasing one struct
+/// per device.
+///
+/// [`tick_all`](LoanBank::tick_all) is the SIMD-izable rewrite of
+/// [`EnergyLoan::tick`]: the plan (`dt`, `repay`, clamped remainder) is
+/// computed unconditionally and the charging branch becomes a select,
+/// with no early-outs and no `&mut` aliasing between slices. This is
+/// bit-identical to the scalar branch: when `loan_j == +0.0` and the
+/// device is charging, `(0.0 - repay).max(0.0)` is `+0.0` — the same
+/// bits the skipped branch would have left — and `loan_j` can never be
+/// `-0.0` or NaN (borrow adds non-negative amounts to `+0.0`, and the
+/// clamp floor is `+0.0`).
+#[derive(Clone, Debug, Default)]
+pub struct LoanBank {
+    pub capacity_j: Vec<f64>,
+    pub loan_j: Vec<f64>,
+    pub daily_credit_j: Vec<f64>,
+    pub critical_level: Vec<f64>,
+    pub total_borrowed_j: Vec<f64>,
+    last_update_s: Vec<f64>,
+}
+
+impl LoanBank {
+    pub fn with_capacity(n: usize) -> Self {
+        LoanBank {
+            capacity_j: Vec::with_capacity(n),
+            loan_j: Vec::with_capacity(n),
+            daily_credit_j: Vec::with_capacity(n),
+            critical_level: Vec::with_capacity(n),
+            total_borrowed_j: Vec::with_capacity(n),
+            last_update_s: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.loan_j.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.loan_j.is_empty()
+    }
+
+    /// Append a device's loan state (column-wise copy of `l`).
+    pub fn push(&mut self, l: &EnergyLoan) {
+        self.capacity_j.push(l.capacity_j);
+        self.loan_j.push(l.loan_j);
+        self.daily_credit_j.push(l.daily_credit_j);
+        self.critical_level.push(l.critical_level);
+        self.total_borrowed_j.push(l.total_borrowed_j);
+        self.last_update_s.push(l.last_update_s);
+    }
+
+    /// Reassemble row `k` as a scalar [`EnergyLoan`] (round-trip path
+    /// for `SoaFleet::into_devices`).
+    pub fn get(&self, k: usize) -> EnergyLoan {
+        EnergyLoan {
+            capacity_j: self.capacity_j[k],
+            loan_j: self.loan_j[k],
+            daily_credit_j: self.daily_credit_j[k],
+            critical_level: self.critical_level[k],
+            total_borrowed_j: self.total_borrowed_j[k],
+            last_update_s: self.last_update_s[k],
+        }
+    }
+
+    /// Row-wise [`EnergyLoan::borrow`].
+    pub fn borrow(&mut self, k: usize, j: f64) {
+        debug_assert!(j >= 0.0);
+        self.loan_j[k] += j;
+        self.total_borrowed_j[k] += j;
+    }
+
+    /// Bank-wide [`EnergyLoan::tick`]: advance every row to `now_s`,
+    /// repaying rows whose trace says they charge. Branch-free body
+    /// (see the type docs for the bit-identity argument).
+    pub fn tick_all(&mut self, now_s: f64, charging: &[bool]) {
+        let n = self.len();
+        debug_assert_eq!(charging.len(), n);
+        let loan = &mut self.loan_j[..n];
+        let last = &mut self.last_update_s[..n];
+        let credit = &self.daily_credit_j[..n];
+        let charging = &charging[..n];
+        for k in 0..n {
+            let dt = (now_s - last[k]).max(0.0);
+            last[k] = now_s;
+            let repay = credit[k] * dt / 86_400.0;
+            let repaid = (loan[k] - repay).max(0.0);
+            loan[k] = if charging[k] { repaid } else { loan[k] };
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,6 +196,93 @@ mod tests {
         l.tick(0.0, true);
         l.tick(86_400.0, true);
         assert_eq!(l.loan_j, 0.0);
+    }
+
+    #[test]
+    fn bank_tick_all_bit_identical_to_scalar_tick() {
+        use crate::util::rng::Rng;
+        // random interleavings of tick/borrow across a mixed bank must
+        // leave every field bit-identical to per-device scalar loans —
+        // this is the contract the fleet kernel's batch pass rides
+        let mut rng = Rng::new(0xBA_4C0FFEE);
+        let mut scalars: Vec<EnergyLoan> = (0..64)
+            .map(|i| {
+                EnergyLoan::new(
+                    1500.0 + 50.0 * i as f64,
+                    rng.range(1_000.0, 30_000.0),
+                )
+            })
+            .collect();
+        let mut bank = LoanBank::with_capacity(scalars.len());
+        for l in &scalars {
+            bank.push(l);
+        }
+        let mut now = 0.0;
+        let mut charging = vec![false; scalars.len()];
+        for _ in 0..40 {
+            now += rng.range(0.0, 20_000.0);
+            for c in &mut charging {
+                *c = rng.bool(0.5);
+            }
+            for (k, l) in scalars.iter_mut().enumerate() {
+                l.tick(now, charging[k]);
+            }
+            bank.tick_all(now, &charging);
+            // sprinkle borrows on a random subset, both representations
+            for _ in 0..8 {
+                let k = rng.index(scalars.len());
+                let j = rng.range(0.0, 5_000.0);
+                scalars[k].borrow(j);
+                bank.borrow(k, j);
+            }
+        }
+        for (k, l) in scalars.iter().enumerate() {
+            let b = bank.get(k);
+            assert_eq!(b.loan_j.to_bits(), l.loan_j.to_bits(), "row {k}");
+            assert_eq!(
+                b.total_borrowed_j.to_bits(),
+                l.total_borrowed_j.to_bits()
+            );
+            assert_eq!(
+                b.last_update_s.to_bits(),
+                l.last_update_s.to_bits()
+            );
+            assert_eq!(b.capacity_j.to_bits(), l.capacity_j.to_bits());
+        }
+    }
+
+    #[test]
+    fn bank_zero_loan_charging_tick_keeps_positive_zero() {
+        // the one case where the branch-free select takes a different
+        // path from the scalar branch: both must produce +0.0 bits
+        let l = EnergyLoan::new(3000.0, 20_000.0);
+        let mut bank = LoanBank::with_capacity(1);
+        bank.push(&l);
+        bank.tick_all(86_400.0, &[true]);
+        assert_eq!(bank.loan_j[0].to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    #[ignore] // microbench: cargo test -- --ignored --nocapture
+    fn bank_tick_microbench() {
+        // criterion-free check that the batched tick stays in the
+        // nanoseconds-per-row regime (plan/commit with no branches)
+        let n = 100_000;
+        let proto = EnergyLoan::new(3000.0, 10_000.0);
+        let mut bank = LoanBank::with_capacity(n);
+        for _ in 0..n {
+            bank.push(&proto);
+        }
+        let charging: Vec<bool> = (0..n).map(|k| k % 3 == 0).collect();
+        let reps = 200;
+        let start = std::time::Instant::now();
+        for r in 0..reps {
+            bank.tick_all(600.0 * (r + 1) as f64, &charging);
+        }
+        let ns_per_row =
+            start.elapsed().as_nanos() as f64 / (reps * n) as f64;
+        println!("LoanBank::tick_all: {ns_per_row:.2} ns/row");
+        assert!(bank.loan_j.iter().all(|l| *l == 0.0));
     }
 
     #[test]

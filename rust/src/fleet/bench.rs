@@ -117,6 +117,22 @@ impl FleetBenchReport {
         best_of(&self.reference)
     }
 
+    /// Gate this run's determinism digest against a golden value (the
+    /// CLI's `--expect-digest`, wired into CI's bench-smoke). A kernel
+    /// bug that perturbs simulation arithmetic then fails loudly as a
+    /// parity error instead of surfacing as an unexplained perf dip.
+    pub fn assert_digest(&self, want: &str) -> crate::Result<()> {
+        crate::ensure!(
+            self.digest == want,
+            "fleet bench digest mismatch: got {} want {want} \
+             (scenario {}, arm {})",
+            self.digest,
+            self.spec.name,
+            self.arm.name()
+        );
+        Ok(())
+    }
+
     /// Best-vs-best devices-stepped/sec ratio (None without reference
     /// runs, or when the reference produced no throughput).
     pub fn speedup_best(&self) -> Option<f64> {
@@ -391,6 +407,24 @@ mod tests {
             trace_users: 2,
             ..ScenarioSpec::default()
         }
+    }
+
+    #[test]
+    fn assert_digest_gates_on_the_golden_string() {
+        let rep = run_fleet_bench(
+            &spec(),
+            &[1],
+            FlArm::Swan,
+            false,
+            &Obs::off(),
+        )
+        .unwrap();
+        rep.assert_digest(&rep.digest.clone()).unwrap();
+        let err = rep.assert_digest("t00000000-bogus").unwrap_err();
+        assert!(
+            err.to_string().contains("digest mismatch"),
+            "unexpected error: {err}"
+        );
     }
 
     #[test]

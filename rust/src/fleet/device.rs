@@ -82,16 +82,57 @@ pub(crate) fn envelope_multiplier(
     thermal_throttle_p: f64,
     thermal_derate: f64,
 ) -> f64 {
+    let (d0, d1) = envelope_draws(seed, round);
+    envelope_apply(
+        d0,
+        d1,
+        interference_p,
+        interference_slowdown,
+        thermal_throttle_p,
+        thermal_derate,
+    )
+}
+
+/// The RNG half of [`envelope_multiplier`]: the two uniform draws for
+/// one `(device seed, round)` cell, in draw order. Split out so the SoA
+/// kernel's batched RNG stage can pre-draw a whole shard into dense
+/// arrays; each cell gets a fresh generator keyed only on `(seed,
+/// round)`, so drawing in any batch order reproduces the scalar
+/// sequence exactly.
+#[inline]
+pub(crate) fn envelope_draws(seed: u64, round: usize) -> (f64, f64) {
     let mut rng = Rng::new(
         seed ^ (round as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93),
     );
+    (rng.f64(), rng.f64())
+}
+
+/// The arithmetic half of [`envelope_multiplier`]: fold two pre-drawn
+/// uniforms into the cost multiplier. Written as selects (`×1.0` on the
+/// miss lane) rather than branches so the batched step sweep stays
+/// lane-parallel — bit-identical to the branching form because
+/// multiplying by exactly `1.0` is an IEEE identity for these finite
+/// positive factors.
+#[inline]
+pub(crate) fn envelope_apply(
+    d0: f64,
+    d1: f64,
+    interference_p: f64,
+    interference_slowdown: f64,
+    thermal_throttle_p: f64,
+    thermal_derate: f64,
+) -> f64 {
     let mut m = 1.0;
-    if rng.f64() < interference_p {
-        m *= interference_slowdown;
-    }
-    if rng.f64() < thermal_throttle_p {
-        m *= thermal_derate;
-    }
+    m *= if d0 < interference_p {
+        interference_slowdown
+    } else {
+        1.0
+    };
+    m *= if d1 < thermal_throttle_p {
+        thermal_derate
+    } else {
+        1.0
+    };
     m
 }
 
@@ -242,6 +283,25 @@ mod tests {
             }
         }
         assert!(hit > 10 && hit < 150, "schedule implausible: {hit}/200");
+    }
+
+    #[test]
+    fn envelope_split_recomposes_bit_identically() {
+        // the batched draw/apply split must reproduce the fused scalar
+        // multiplier for every (seed, round, params) cell
+        let mut rng = Rng::new(0xE57);
+        for _ in 0..500 {
+            let seed = rng.next_u64();
+            let round = rng.index(10_000);
+            let ip = rng.f64() * 0.6;
+            let is = 1.0 + rng.f64() * 2.0;
+            let tp = rng.f64() * 0.4;
+            let td = 1.0 + rng.f64();
+            let fused = envelope_multiplier(seed, round, ip, is, tp, td);
+            let (d0, d1) = envelope_draws(seed, round);
+            let split = envelope_apply(d0, d1, ip, is, tp, td);
+            assert_eq!(split.to_bits(), fused.to_bits());
+        }
     }
 
     #[test]

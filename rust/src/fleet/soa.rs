@@ -11,28 +11,38 @@
 //! scenario-instantiated population:
 //!
 //! - **Struct-of-arrays state.** Every `FleetDevice` field lives in a
-//!   flat per-shard array (battery/charger state as a dense
-//!   `Vec<EnergyLoan>`, RNG stream seeds, profile/model index,
+//!   flat per-shard array (battery/charger state as a column-wise
+//!   [`LoanBank`], RNG stream seeds, profile/model index,
 //!   interference/thermal envelopes), so the poll sweep touches ~60
 //!   sequential bytes per device instead of a scattered struct.
-//! - **Shared-sample cache.** A scenario fleet reuses a small trace
-//!   pool with hourly shifts, so at most `trace_users × 24` distinct
-//!   `(trace, shift)` combos exist. Each round a shard computes the
-//!   fused `(level, charging)` sample once per combo — a few hundred
-//!   trace lookups instead of one per device — and the per-device poll
-//!   is a cached read plus the energy-loan tick. Values are identical
-//!   to the per-device lookups by construction (the sample is a pure
-//!   function of `(trace, shift, now)`).
-//! - **Persistent workers, double-buffered mailboxes.** One worker per
-//!   shard lives for the whole drive; the control thread exchanges
-//!   preallocated job/online/result buffers through a `Mutex + Condvar`
-//!   mailbox (`std::mem::swap`, zero copies, zero steady-state
-//!   allocation — no mpsc nodes).
+//! - **Staged batch passes, not per-device loops.** `poll` runs five
+//!   lane-friendly stages: one batched `sample_many` call per distinct
+//!   trace refreshes the `(level, charging)` combo cache (sound because
+//!   the sample is a pure function of `(trace, shift, now)`); a gather
+//!   pass widens the cache into per-device lanes; `LoanBank::tick_all`
+//!   advances every loan branch-free; `availability_gate_many` writes a
+//!   dense online bitmap with non-short-circuit mask arithmetic; a
+//!   compaction pass emits the ascending online list. `step` likewise
+//!   splits into a **batched RNG stage** (both envelope uniforms
+//!   pre-drawn per job via [`envelope_draws`] — a fresh generator per
+//!   `(seed, round)` cell, so batch order cannot change the stream), a
+//!   pure **plan** loop (select-based [`envelope_apply`], no branches),
+//!   and a **commit** loop (state writes + result scatter). Each stage
+//!   body is straight-line arithmetic over flat slices that rustc
+//!   auto-vectorizes.
+//! - **Core-pinned persistent workers, double-buffered mailboxes.** One
+//!   worker per shard lives for the whole drive, pinned to a CPU via
+//!   [`util::affinity`](crate::util::affinity) (graceful no-op where
+//!   unsupported); the control thread exchanges preallocated
+//!   job/online/result buffers through a `Mutex + Condvar` mailbox
+//!   (`std::mem::swap`, zero copies, zero steady-state allocation — no
+//!   mpsc nodes).
 //! - **Dense index routing.** Jobs carry their global picked-order
-//!   `seq` and shard-local device index; events carry the dense job
-//!   index ([`EventKind`]); results scatter into a reused
-//!   per-seq array. The `HashMap<u32, StepJob>` / `HashMap<u32,
-//!   StepResult>` routing of the PR 1 kernel is gone.
+//!   `seq` and shard-local device index; results scatter into a reused
+//!   per-seq array; the online lists k-way merge through a reused
+//!   min-heap. The `HashMap<u32, StepJob>` / `HashMap<u32, StepResult>`
+//!   routing of the PR 1 kernel is gone, and the steady-state round
+//!   path performs no allocation at all.
 //!
 //! **Determinism.** The guarantee is unchanged *and* cross-kernel: all
 //! stochastic streams stay keyed on (seed, device id) or (seed, round),
@@ -48,16 +58,16 @@ use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
-use crate::fl::availability::availability_gate_sampled;
-use crate::fl::energy_loan::EnergyLoan;
+use crate::fl::availability::availability_gate_many;
+use crate::fl::energy_loan::LoanBank;
 use crate::fl::selection::select_uniform_into;
 use crate::soc::device::DeviceId;
 use crate::trace::resample::ResampledTrace;
+use crate::util::affinity;
 
 use super::coordinator::{FleetPolicy, StepCost};
-use super::device::{envelope_multiplier, FleetDevice};
+use super::device::{envelope_apply, envelope_draws, FleetDevice};
 use super::engine::{round_rng, DriveConfig, EMPTY_ROUND_WAIT_S};
-use super::event::{Event, EventKind, EventQueue};
 use super::metrics::{FleetOutcome, KERNEL_SOA};
 
 /// One participation order: dense routing indices + resolved §4.2 cost.
@@ -85,6 +95,15 @@ struct SoaResult {
 /// A `(trace, shift)` pair — the unit the per-round sample cache keys on.
 type Combo = (Arc<ResampledTrace>, f64);
 
+/// All combos sharing one underlying trace, so the per-round cache
+/// refresh is one batched [`ResampledTrace::sample_many`] call per
+/// distinct trace instead of one scalar `sample` per combo.
+struct TraceGroup {
+    trace: Arc<ResampledTrace>,
+    /// `(combo index, shift)` in combo-table order.
+    members: Vec<(u32, f64)>,
+}
+
 /// Shard-local telemetry counters, bumped lock-free inside the worker's
 /// own sweep/step and folded into the outcome registry in shard order
 /// after the workers are parked — the FNV-digest barrier discipline, so
@@ -95,6 +114,10 @@ struct SoaTally {
     polled: u64,
     online: u64,
     stepped: u64,
+    /// Envelope uniforms pre-drawn by the batched RNG stage.
+    rng_draws: u64,
+    /// 1 if this shard's worker successfully pinned to a CPU.
+    pinned: u64,
 }
 
 /// One shard's device population, one field per array ("SoA row" `k` is
@@ -105,10 +128,11 @@ struct SoaShard {
     /// Index into the fleet's combo table (profile of trace + shift).
     combo: Vec<u32>,
     min_level_pct: Vec<f64>,
-    /// Battery/charger state, dense. Kept as whole `EnergyLoan`s so the
-    /// tick/borrow arithmetic is *the* `fl::EnergyLoan` arithmetic —
+    /// Battery/charger state as flat columns. The tick/borrow
+    /// arithmetic is *the* `fl::LoanBank` arithmetic, proven
+    /// bit-identical to scalar `EnergyLoan` in `fl::energy_loan` —
     /// exactness with the PR 1 kernel by construction, not by mirroring.
-    loans: Vec<EnergyLoan>,
+    bank: LoanBank,
     /// Per-device stream seed (interference/thermal draws).
     seeds: Vec<u64>,
     epoch_steps: Vec<u32>,
@@ -118,11 +142,26 @@ struct SoaShard {
     thermal_derate: Vec<f64>,
     participations: Vec<u32>,
     train_time_s: Vec<f64>,
-    /// Per-shard event queue, reused across rounds (drained each round).
-    queue: EventQueue,
     /// Per-combo fused samples, refreshed each round.
     cache_level: Vec<f64>,
     cache_charging: Vec<bool>,
+    // Batch-pass scratch columns, all reused across rounds.
+    /// Per-device level lanes (gathered from the combo cache).
+    lvl: Vec<f64>,
+    /// Per-device charging lanes.
+    chg: Vec<bool>,
+    /// Dense online bitmap the gate sweep writes.
+    mask: Vec<bool>,
+    /// Per-group wrapped sample times / sampled values.
+    scratch_ts: Vec<f64>,
+    scratch_lvl: Vec<f64>,
+    scratch_chg: Vec<bool>,
+    /// Pre-drawn envelope uniforms, one pair per job.
+    draw0: Vec<f64>,
+    draw1: Vec<f64>,
+    /// Planned per-job cost, plan → commit.
+    plan_time: Vec<f64>,
+    plan_energy: Vec<f64>,
     tally: SoaTally,
 }
 
@@ -133,7 +172,7 @@ impl SoaShard {
             models: Vec::with_capacity(cap),
             combo: Vec::with_capacity(cap),
             min_level_pct: Vec::with_capacity(cap),
-            loans: Vec::with_capacity(cap),
+            bank: LoanBank::with_capacity(cap),
             seeds: Vec::with_capacity(cap),
             epoch_steps: Vec::with_capacity(cap),
             interference_p: Vec::with_capacity(cap),
@@ -142,9 +181,18 @@ impl SoaShard {
             thermal_derate: Vec::with_capacity(cap),
             participations: Vec::with_capacity(cap),
             train_time_s: Vec::with_capacity(cap),
-            queue: EventQueue::new(),
             cache_level: Vec::new(),
             cache_charging: Vec::new(),
+            lvl: Vec::new(),
+            chg: Vec::new(),
+            mask: Vec::new(),
+            scratch_ts: Vec::new(),
+            scratch_lvl: Vec::new(),
+            scratch_chg: Vec::new(),
+            draw0: Vec::new(),
+            draw1: Vec::new(),
+            plan_time: Vec::new(),
+            plan_energy: Vec::new(),
             tally: SoaTally::default(),
         }
     }
@@ -158,7 +206,7 @@ impl SoaShard {
         self.models.push(d.model);
         self.combo.push(combo);
         self.min_level_pct.push(d.min_level_pct);
-        self.loans.push(d.loan);
+        self.bank.push(&d.loan);
         self.seeds.push(d.seed);
         self.epoch_steps.push(d.epoch_steps as u32);
         self.interference_p.push(d.interference_p);
@@ -169,116 +217,139 @@ impl SoaShard {
         self.train_time_s.push(d.train_time_s);
     }
 
-    /// Availability sweep: refresh the combo cache (one fused trace
-    /// sample per distinct `(trace, shift)`), then gate every local
-    /// device through `fl::availability_gate_sampled` — the same tail
-    /// the per-device gate uses, so values match the generic kernel by
-    /// construction. The cache is sound because the sample depends only
-    /// on `(trace, shift, now_s)`, never on device state.
+    /// Availability sweep as five staged batch passes (module docs):
+    /// combo-cache refresh via one `sample_many` per distinct trace,
+    /// a per-device gather into dense lanes, the branch-free
+    /// `LoanBank::tick_all`, the branch-free `availability_gate_many`
+    /// mask sweep, and a compaction pass into the ascending online
+    /// list. Decision-identical to gating each device through
+    /// `fl::availability_gate_sampled`: the cache is sound because the
+    /// sample depends only on `(trace, shift, now_s)`, and
+    /// tick-then-gate is the scalar gate's own statement order.
     fn poll(
         &mut self,
         now_s: f64,
-        combos: &[Combo],
+        n_combos: usize,
+        groups: &[TraceGroup],
         online: &mut Vec<u32>,
         shard_idx: usize,
         n_shards: usize,
     ) {
-        self.cache_level.resize(combos.len(), 0.0);
-        self.cache_charging.resize(combos.len(), false);
-        for (ci, (trace, shift)) in combos.iter().enumerate() {
-            let t = trace.wrap(now_s + shift);
-            let (level, charging) = trace.sample(t);
-            self.cache_level[ci] = level;
-            self.cache_charging[ci] = charging;
+        // stage 1: combo cache refresh, one batched sample per trace
+        self.cache_level.resize(n_combos, 0.0);
+        self.cache_charging.resize(n_combos, false);
+        for g in groups {
+            self.scratch_ts.clear();
+            self.scratch_ts.extend(
+                g.members
+                    .iter()
+                    .map(|&(_, shift)| g.trace.wrap(now_s + shift)),
+            );
+            g.trace.sample_many(
+                &self.scratch_ts,
+                &mut self.scratch_lvl,
+                &mut self.scratch_chg,
+            );
+            for (m, &(ci, _)) in g.members.iter().enumerate() {
+                self.cache_level[ci as usize] = self.scratch_lvl[m];
+                self.cache_charging[ci as usize] = self.scratch_chg[m];
+            }
         }
-        online.clear();
-        for k in 0..self.len() {
+        // stage 2: gather per-device (level, charging) lanes
+        let n = self.len();
+        self.lvl.clear();
+        self.chg.clear();
+        for k in 0..n {
             let ci = self.combo[k] as usize;
-            if availability_gate_sampled(
-                &mut self.loans[k],
-                now_s,
-                self.cache_level[ci],
-                self.cache_charging[ci],
-                self.min_level_pct[k],
-            ) {
+            self.lvl.push(self.cache_level[ci]);
+            self.chg.push(self.cache_charging[ci]);
+        }
+        // stage 3: branch-free loan tick across the whole shard
+        self.bank.tick_all(now_s, &self.chg);
+        // stage 4: branch-free gate sweep into the dense bitmap
+        availability_gate_many(
+            &self.bank,
+            &self.lvl,
+            &self.chg,
+            &self.min_level_pct,
+            &mut self.mask,
+        );
+        // stage 5: compact the bitmap into ascending global ids
+        online.clear();
+        for (k, &hit) in self.mask.iter().enumerate() {
+            if hit {
                 online.push((shard_idx + k * n_shards) as u32);
             }
         }
-        self.tally.polled += self.len() as u64;
+        self.tally.polled += n as u64;
         self.tally.online += online.len() as u64;
     }
 
-    /// Event-driven local epochs for this round's jobs. The arithmetic
-    /// (and its operation order) mirrors the PR 1 worker exactly:
-    /// `cost · steps · multiplier + exploration bill`, with the
-    /// interference/thermal draw keyed on (device seed, round) only.
+    /// Local epochs for this round's jobs as three staged batch passes:
+    /// batched RNG (pre-draw both envelope uniforms per job — a fresh
+    /// generator per `(seed, round)` cell, so the scalar draw sequence
+    /// is reproduced exactly), a pure plan loop (select-based
+    /// [`envelope_apply`], `cost · steps · multiplier + exploration
+    /// bill` in the PR 1 worker's operation order), and a commit loop
+    /// (state writes + result scatter). Replaces the per-job event
+    /// queue bit-identically: every job's cost is independent of the
+    /// others, each device is picked at most once per round, and the
+    /// control thread scatters results by `seq` — so intra-shard
+    /// completion order was never observable.
     fn step(
         &mut self,
-        now_s: f64,
+        _now_s: f64,
         round: usize,
         jobs: &[SoaJob],
         results: &mut Vec<SoaResult>,
     ) {
         results.clear();
         self.tally.stepped += jobs.len() as u64;
-        for (ji, job) in jobs.iter().enumerate() {
-            self.queue.push(Event {
-                at_s: now_s,
-                device: job.device,
-                kind: EventKind::BeginEpoch { job: ji as u32 },
-            });
+        // stage 1: batched RNG
+        self.draw0.clear();
+        self.draw1.clear();
+        for j in jobs {
+            let (d0, d1) =
+                envelope_draws(self.seeds[j.local as usize], round);
+            self.draw0.push(d0);
+            self.draw1.push(d1);
         }
-        while let Some(ev) = self.queue.pop() {
-            match ev.kind {
-                EventKind::BeginEpoch { job } => {
-                    let j = &jobs[job as usize];
-                    let k = j.local as usize;
-                    let steps = self.epoch_steps[k];
-                    // the same envelope draw FleetDevice::cost_multiplier
-                    // makes, fed from the SoA arrays
-                    let mult = envelope_multiplier(
-                        self.seeds[k],
-                        round,
-                        self.interference_p[k],
-                        self.interference_slowdown[k],
-                        self.thermal_throttle_p[k],
-                        self.thermal_derate[k],
-                    );
-                    let t = j.cost.latency_s * steps as f64 * mult
-                        + j.extra_time_s;
-                    let e = j.cost.energy_j * steps as f64 * mult
-                        + j.extra_energy_j;
-                    self.queue.push(Event {
-                        at_s: ev.at_s + t,
-                        device: ev.device,
-                        kind: EventKind::EpochDone {
-                            job,
-                            time_s: t,
-                            energy_j: e,
-                            steps,
-                        },
-                    });
-                }
-                EventKind::EpochDone {
-                    job,
-                    time_s,
-                    energy_j,
-                    steps,
-                } => {
-                    let j = &jobs[job as usize];
-                    let k = j.local as usize;
-                    // FleetDevice::charge, on the SoA arrays
-                    self.train_time_s[k] += time_s;
-                    self.loans[k].borrow(energy_j);
-                    self.participations[k] += 1;
-                    results.push(SoaResult {
-                        seq: j.seq,
-                        time_s,
-                        energy_j,
-                        steps,
-                    });
-                }
-            }
+        self.tally.rng_draws += 2 * jobs.len() as u64;
+        // stage 2: plan — pure, branch-free cost arithmetic
+        self.plan_time.clear();
+        self.plan_energy.clear();
+        for (ji, j) in jobs.iter().enumerate() {
+            let k = j.local as usize;
+            let steps = self.epoch_steps[k];
+            let mult = envelope_apply(
+                self.draw0[ji],
+                self.draw1[ji],
+                self.interference_p[k],
+                self.interference_slowdown[k],
+                self.thermal_throttle_p[k],
+                self.thermal_derate[k],
+            );
+            self.plan_time.push(
+                j.cost.latency_s * steps as f64 * mult + j.extra_time_s,
+            );
+            self.plan_energy.push(
+                j.cost.energy_j * steps as f64 * mult + j.extra_energy_j,
+            );
+        }
+        // stage 3: commit — FleetDevice::charge on the SoA columns
+        for (ji, j) in jobs.iter().enumerate() {
+            let k = j.local as usize;
+            let t = self.plan_time[ji];
+            let e = self.plan_energy[ji];
+            self.train_time_s[k] += t;
+            self.bank.borrow(k, e);
+            self.participations[k] += 1;
+            results.push(SoaResult {
+                seq: j.seq,
+                time_s: t,
+                energy_j: e,
+                steps: self.epoch_steps[k],
+            });
         }
     }
 }
@@ -399,11 +470,20 @@ impl Drop for DeathNotice<'_> {
 fn worker_loop(
     shard: &mut SoaShard,
     slot: &Slot,
-    combos: &[Combo],
+    n_combos: usize,
+    groups: &[TraceGroup],
     shard_idx: usize,
     n_shards: usize,
 ) {
     let _notice = DeathNotice { slot };
+    // Pin this worker to a fixed CPU so its shard's SoA columns stay
+    // hot in one core's caches across rounds. Best-effort: a refusal
+    // (unsupported platform, --no-pin, restrictive cpuset) only costs
+    // the telemetry bit — never correctness (the digest can't see it).
+    if affinity::pin_current_thread(shard_idx % affinity::available_cpus())
+    {
+        shard.tally.pinned = 1;
+    }
     let mut online: Vec<u32> = Vec::new();
     let mut jobs: Vec<SoaJob> = Vec::new();
     let mut results: Vec<SoaResult> = Vec::new();
@@ -422,7 +502,10 @@ fn worker_loop(
         };
         match cmd {
             Cmd::Poll { now_s } => {
-                shard.poll(now_s, combos, &mut online, shard_idx, n_shards);
+                shard.poll(
+                    now_s, n_combos, groups, &mut online, shard_idx,
+                    n_shards,
+                );
                 let mut g = slot.mx.lock().expect("soa mailbox poisoned");
                 std::mem::swap(&mut g.online, &mut online);
                 g.done = true;
@@ -443,33 +526,60 @@ fn worker_loop(
 
 /// Ascending k-way merge of the per-shard online lists (each already
 /// ascending) into global id order — replaces the PR 1 flatten +
-/// `sort_unstable`, and reuses `cursors`/`out` across rounds.
+/// `sort_unstable`. O(n log k) via a hand-rolled min-heap of
+/// `(value, shard)` heads; `cursors`, `heap` and `out` are all
+/// caller-owned and reused across rounds, so the steady-state merge
+/// allocates nothing. Values are globally unique device ids, so no
+/// tie-break is needed.
 fn merge_online(
     lists: &[Vec<u32>],
     cursors: &mut [usize],
+    heap: &mut Vec<(u32, u32)>,
     out: &mut Vec<usize>,
 ) {
     out.clear();
-    for c in cursors.iter_mut() {
-        *c = 0;
+    heap.clear();
+    for (s, list) in lists.iter().enumerate() {
+        cursors[s] = 0;
+        if !list.is_empty() {
+            heap.push((list[0], s as u32));
+            cursors[s] = 1;
+        }
     }
+    for i in (0..heap.len() / 2).rev() {
+        sift_down(heap, i);
+    }
+    while let Some(&(v, s)) = heap.first() {
+        out.push(v as usize);
+        let si = s as usize;
+        if cursors[si] < lists[si].len() {
+            heap[0] = (lists[si][cursors[si]], s);
+            cursors[si] += 1;
+        } else {
+            let last = heap.len() - 1;
+            heap.swap(0, last);
+            heap.pop();
+        }
+        sift_down(heap, 0);
+    }
+}
+
+fn sift_down(heap: &mut [(u32, u32)], mut i: usize) {
     loop {
-        let mut best: Option<(u32, usize)> = None;
-        for (s, list) in lists.iter().enumerate() {
-            if cursors[s] < list.len() {
-                let v = list[cursors[s]];
-                if best.map_or(true, |(bv, _)| v < bv) {
-                    best = Some((v, s));
-                }
-            }
+        let l = 2 * i + 1;
+        let r = l + 1;
+        let mut m = i;
+        if l < heap.len() && heap[l].0 < heap[m].0 {
+            m = l;
         }
-        match best {
-            Some((v, s)) => {
-                out.push(v as usize);
-                cursors[s] += 1;
-            }
-            None => break,
+        if r < heap.len() && heap[r].0 < heap[m].0 {
+            m = r;
         }
+        if m == i {
+            return;
+        }
+        heap.swap(i, m);
+        i = m;
     }
 }
 
@@ -485,6 +595,8 @@ pub struct SoaFleet {
     shards: Vec<SoaShard>,
     /// Distinct `(trace, shift)` profiles across the fleet.
     combos: Vec<Combo>,
+    /// Combos grouped by underlying trace (batched cache refresh).
+    groups: Vec<TraceGroup>,
     /// SoC model per global device id (central policy resolution).
     models: Vec<DeviceId>,
     n_devices: usize,
@@ -517,9 +629,24 @@ impl SoaFleet {
             };
             shards[i % n_shards].push_device(d, ci);
         }
+        let mut groups: Vec<TraceGroup> = Vec::new();
+        let mut group_of: HashMap<usize, usize> = HashMap::new();
+        for (ci, (trace, shift)) in combos.iter().enumerate() {
+            let gi = *group_of
+                .entry(Arc::as_ptr(trace) as usize)
+                .or_insert_with(|| {
+                    groups.push(TraceGroup {
+                        trace: trace.clone(),
+                        members: Vec::new(),
+                    });
+                    groups.len() - 1
+                });
+            groups[gi].members.push((ci as u32, *shift));
+        }
         SoaFleet {
             shards,
             combos,
+            groups,
             models,
             n_devices,
         }
@@ -567,7 +694,7 @@ impl SoaFleet {
                 model: shard.models[k],
                 trace: trace.clone(),
                 shift_s: *shift,
-                loan: shard.loans[k].clone(),
+                loan: shard.bank.get(k),
                 epoch_steps: shard.epoch_steps[k] as usize,
                 min_level_pct: shard.min_level_pct[k],
                 interference_p: shard.interference_p[k],
@@ -595,7 +722,8 @@ impl SoaFleet {
         let wall0 = Instant::now();
         let n_shards = self.shards.len();
         let shards = &mut self.shards;
-        let combos = &self.combos;
+        let n_combos = self.combos.len();
+        let groups = &self.groups;
         let models = &self.models;
         for shard in shards.iter_mut() {
             shard.tally = SoaTally::default();
@@ -616,7 +744,7 @@ impl SoaFleet {
             for (si, shard) in shards.iter_mut().enumerate() {
                 let slot = &slots[si];
                 scope.spawn(move || {
-                    worker_loop(shard, slot, combos, si, n_shards)
+                    worker_loop(shard, slot, n_combos, groups, si, n_shards)
                 });
             }
             // from here on, leaving the closure — normally or by panic —
@@ -630,6 +758,7 @@ impl SoaFleet {
             let mut job_bufs: Vec<Vec<SoaJob>> =
                 (0..n_shards).map(|_| Vec::new()).collect();
             let mut cursors: Vec<usize> = vec![0; n_shards];
+            let mut merge_heap: Vec<(u32, u32)> = Vec::new();
             let mut online: Vec<usize> = Vec::new();
             let mut picked: Vec<usize> = Vec::new();
             let mut scratch: HashMap<usize, usize> = HashMap::new();
@@ -683,7 +812,12 @@ impl SoaFleet {
                         });
                     }
                 }
-                merge_online(&online_lists, &mut cursors, &mut online);
+                merge_online(
+                    &online_lists,
+                    &mut cursors,
+                    &mut merge_heap,
+                    &mut online,
+                );
                 outcome.online_per_round.push((round, online.len()));
                 spans.record(sp_avail, phase_t0.elapsed().as_secs_f64());
                 metrics.add(c_online, online.len() as u64);
@@ -814,6 +948,10 @@ impl SoaFleet {
                 .metrics
                 .inc("fleet.shard_online", shard.tally.online);
             outcome.metrics.inc("fleet.shard_steps", shard.tally.stepped);
+            outcome.metrics.inc("fleet.rng_draws", shard.tally.rng_draws);
+            outcome
+                .metrics
+                .inc("fleet.workers_pinned", shard.tally.pinned);
         }
         if cfg.obs.enabled() {
             cfg.obs.emit(&crate::obs::SpanSummary {
@@ -930,14 +1068,38 @@ mod tests {
     fn merge_online_is_an_ascending_merge() {
         let lists = vec![vec![0u32, 4, 8], vec![1, 5], vec![2], vec![]];
         let mut cursors = vec![0usize; 4];
+        let mut heap = vec![(77u32, 77u32)]; // stale scratch is cleared
         let mut out = vec![99usize]; // stale content must be cleared
-        merge_online(&lists, &mut cursors, &mut out);
+        merge_online(&lists, &mut cursors, &mut heap, &mut out);
         assert_eq!(out, vec![0, 1, 2, 4, 5, 8]);
         // reuse with different content
         let lists2 = vec![vec![3u32], vec![0, 1, 2]];
         let mut cursors2 = vec![7usize, 7];
-        merge_online(&lists2, &mut cursors2, &mut out);
+        merge_online(&lists2, &mut cursors2, &mut heap, &mut out);
         assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn merge_online_heap_matches_a_sort_on_random_round_robin_lists() {
+        // the round-robin partition the fleet actually produces:
+        // shard s holds ids ≡ s (mod k), each list ascending
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x4E46);
+        for &k in &[1usize, 3, 8] {
+            let mut lists: Vec<Vec<u32>> = vec![Vec::new(); k];
+            let mut want: Vec<usize> = Vec::new();
+            for gid in 0..500u32 {
+                if rng.bool(0.3) {
+                    lists[gid as usize % k].push(gid);
+                    want.push(gid as usize);
+                }
+            }
+            let mut cursors = vec![0usize; k];
+            let mut heap = Vec::new();
+            let mut out = Vec::new();
+            merge_online(&lists, &mut cursors, &mut heap, &mut out);
+            assert_eq!(out, want, "k={k}");
+        }
     }
 
     #[test]

@@ -42,15 +42,7 @@ impl Battery {
 
     /// Open-circuit voltage: piecewise-linear Li-ion curve 3.3–4.35 V.
     pub fn voltage(&self) -> f64 {
-        let s = self.soc();
-        // steep knee below 10%, plateau 3.7–3.9, fast rise above 90%
-        if s < 0.10 {
-            3.30 + s / 0.10 * 0.35
-        } else if s < 0.90 {
-            3.65 + (s - 0.10) / 0.80 * 0.35
-        } else {
-            4.00 + (s - 0.90) / 0.10 * 0.35
-        }
+        voltage_curve(self.soc())
     }
 
     pub fn state(&self) -> BatteryState {
@@ -93,6 +85,156 @@ impl Battery {
 
     pub fn is_empty(&self) -> bool {
         self.charge_c <= 0.0
+    }
+}
+
+/// The Li-ion OCV curve as a free function of SoC, shared by
+/// [`Battery::voltage`] and the [`BatteryBank`] batch passes so both
+/// representations read the exact same piecewise-linear curve (steep
+/// knee below 10%, plateau 3.7–3.9, fast rise above 90%). The if-chain
+/// lowers to selects — every arm is pure arithmetic.
+#[inline]
+pub fn voltage_curve(s: f64) -> f64 {
+    if s < 0.10 {
+        3.30 + s / 0.10 * 0.35
+    } else if s < 0.90 {
+        3.65 + (s - 0.10) / 0.80 * 0.35
+    } else {
+        4.00 + (s - 0.90) / 0.10 * 0.35
+    }
+}
+
+/// Structure-of-arrays twin of [`Battery`] for batch simulation: the
+/// per-device drain/charge updates become split plan/commit loops over
+/// flat `f64` slices — the plan pass derives each row's transferred
+/// charge from pre-update voltage into a private scratch column, the
+/// commit pass applies it — so no loop carries a branch or `&mut`
+/// aliasing between columns, and each pass auto-vectorizes. Rows are
+/// independent, and within a row the plan→commit order is exactly the
+/// statement order of the scalar methods, so results are bit-identical
+/// to calling [`Battery::drain`]/[`Battery::charge`] per device.
+#[derive(Clone, Debug, Default)]
+pub struct BatteryBank {
+    pub capacity_c: Vec<f64>,
+    pub charge_c: Vec<f64>,
+    state: Vec<BatteryState>,
+    plan_c: Vec<f64>, // per-row transferred charge, plan → commit
+}
+
+impl BatteryBank {
+    pub fn with_capacity(n: usize) -> Self {
+        BatteryBank {
+            capacity_c: Vec::with_capacity(n),
+            charge_c: Vec::with_capacity(n),
+            state: Vec::with_capacity(n),
+            plan_c: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.charge_c.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.charge_c.is_empty()
+    }
+
+    /// Append a pack (column-wise copy of `b`).
+    pub fn push(&mut self, b: &Battery) {
+        self.capacity_c.push(b.capacity_c);
+        self.charge_c.push(b.charge_c);
+        self.state.push(b.state);
+    }
+
+    /// Reassemble row `k` as a scalar [`Battery`].
+    pub fn get(&self, k: usize) -> Battery {
+        Battery {
+            capacity_c: self.capacity_c[k],
+            charge_c: self.charge_c[k],
+            state: self.state[k],
+        }
+    }
+
+    pub fn soc(&self, k: usize) -> f64 {
+        (self.charge_c[k] / self.capacity_c[k]).clamp(0.0, 1.0)
+    }
+
+    pub fn state(&self, k: usize) -> BatteryState {
+        self.state[k]
+    }
+
+    /// Bank-wide [`Battery::drain`]: drain `power_w[k]` for `dt_s[k]`
+    /// on every row, writing the energy actually removed (joules) into
+    /// `energy_out`. Three passes: plan (transferred charge from
+    /// pre-update voltage), commit (subtract), energy (post-update
+    /// voltage × charge) — mirroring the scalar method's
+    /// voltage-before / voltage-after statement order exactly.
+    pub fn drain_all(
+        &mut self,
+        power_w: &[f64],
+        dt_s: &[f64],
+        energy_out: &mut Vec<f64>,
+    ) {
+        let n = self.len();
+        debug_assert_eq!(power_w.len(), n);
+        debug_assert_eq!(dt_s.len(), n);
+        self.plan_c.clear();
+        self.plan_c.resize(n, 0.0);
+        energy_out.clear();
+        {
+            let plan = &mut self.plan_c[..n];
+            let charge = &self.charge_c[..n];
+            let cap = &self.capacity_c[..n];
+            for k in 0..n {
+                let v = voltage_curve((charge[k] / cap[k]).clamp(0.0, 1.0));
+                let want_c = power_w[k] / v * dt_s[k];
+                plan[k] = want_c.min(charge[k]);
+            }
+        }
+        for k in 0..n {
+            self.charge_c[k] -= self.plan_c[k];
+            self.state[k] = BatteryState::Discharging;
+        }
+        {
+            let plan = &self.plan_c[..n];
+            let charge = &self.charge_c[..n];
+            let cap = &self.capacity_c[..n];
+            energy_out.extend((0..n).map(|k| {
+                plan[k]
+                    * voltage_curve((charge[k] / cap[k]).clamp(0.0, 1.0))
+            }));
+        }
+    }
+
+    /// Bank-wide [`Battery::charge`]: plan the added charge from
+    /// pre-update voltage, then commit with the capacity cap and the
+    /// full/maintenance state select.
+    pub fn charge_all(&mut self, power_w: &[f64], dt_s: &[f64]) {
+        let n = self.len();
+        debug_assert_eq!(power_w.len(), n);
+        debug_assert_eq!(dt_s.len(), n);
+        self.plan_c.clear();
+        self.plan_c.resize(n, 0.0);
+        {
+            let plan = &mut self.plan_c[..n];
+            let charge = &self.charge_c[..n];
+            let cap = &self.capacity_c[..n];
+            for k in 0..n {
+                let v = voltage_curve((charge[k] / cap[k]).clamp(0.0, 1.0));
+                plan[k] = power_w[k] / v * dt_s[k];
+            }
+        }
+        for k in 0..n {
+            self.charge_c[k] =
+                (self.charge_c[k] + self.plan_c[k]).min(self.capacity_c[k]);
+            let soc =
+                (self.charge_c[k] / self.capacity_c[k]).clamp(0.0, 1.0);
+            self.state[k] = if soc >= 0.999 {
+                BatteryState::NotDischarging
+            } else {
+                BatteryState::Charging
+            };
+        }
     }
 }
 
@@ -150,6 +292,62 @@ mod tests {
         }
         assert!((b.soc() - 1.0).abs() < 1e-9);
         assert_eq!(b.state(), BatteryState::NotDischarging);
+    }
+
+    #[test]
+    fn bank_drain_and_charge_bit_identical_to_scalar() {
+        check(25, |rng| {
+            let n = 1 + rng.index(40);
+            let mut scalars: Vec<Battery> = (0..n)
+                .map(|_| {
+                    Battery::new(
+                        rng.range(800.0, 5000.0),
+                        rng.range(0.02, 1.0),
+                    )
+                })
+                .collect();
+            let mut bank = BatteryBank::with_capacity(n);
+            for b in &scalars {
+                bank.push(b);
+            }
+            let mut energy = Vec::new();
+            for _ in 0..12 {
+                let power: Vec<f64> =
+                    (0..n).map(|_| rng.range(0.1, 8.0)).collect();
+                let dt: Vec<f64> =
+                    (0..n).map(|_| rng.range(1.0, 4000.0)).collect();
+                if rng.bool(0.5) {
+                    bank.drain_all(&power, &dt, &mut energy);
+                    for (k, b) in scalars.iter_mut().enumerate() {
+                        let want = b.drain(power[k], dt[k]);
+                        crate::prop_assert!(
+                            energy[k].to_bits() == want.to_bits(),
+                            "drain energy row {k}: {} vs {want}",
+                            energy[k]
+                        );
+                    }
+                } else {
+                    bank.charge_all(&power, &dt);
+                    for (k, b) in scalars.iter_mut().enumerate() {
+                        b.charge(power[k], dt[k]);
+                    }
+                }
+                for (k, b) in scalars.iter().enumerate() {
+                    let row = bank.get(k);
+                    crate::prop_assert!(
+                        row.charge_c.to_bits() == b.charge_c.to_bits(),
+                        "charge_c row {k}: {} vs {}",
+                        row.charge_c,
+                        b.charge_c
+                    );
+                    crate::prop_assert!(
+                        row.state() == b.state(),
+                        "state row {k}"
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

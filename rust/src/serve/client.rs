@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use super::coordinator::Coordinator;
 use super::wire::{
-    read_frame, write_frame, Ack, CheckIn, LeasePoll, Msg, PlanLease,
+    encode_into, read_frame, Ack, CheckIn, LeasePoll, Msg, PlanLease,
     RoundCtl, RoundOp, RoundSummary, UpdatePush,
 };
 
@@ -107,6 +107,10 @@ impl ServeClient for InProcClient {
 pub struct TcpClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Persistent encode buffer: a whole pipeline chunk's frames
+    /// serialize here and go out as one `write_all`, so small frames
+    /// coalesce and the steady state allocates nothing per frame.
+    enc: Vec<u8>,
 }
 
 impl TcpClient {
@@ -122,6 +126,7 @@ impl TcpClient {
         Ok(TcpClient {
             reader,
             writer: BufWriter::new(stream),
+            enc: Vec::new(),
         })
     }
 
@@ -136,9 +141,11 @@ impl TcpClient {
     fn exchange(&mut self, reqs: &[Msg]) -> crate::Result<Vec<Msg>> {
         let mut out = Vec::with_capacity(reqs.len());
         for chunk in reqs.chunks(Self::MAX_PIPELINE) {
+            self.enc.clear();
             for m in chunk {
-                write_frame(&mut self.writer, m)?;
+                encode_into(m, &mut self.enc);
             }
+            self.writer.write_all(&self.enc)?;
             self.writer.flush()?;
             for _ in 0..chunk.len() {
                 match read_frame(&mut self.reader)? {

@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use super::coordinator::{Coordinator, RETRY_AFTER_S};
-use super::wire::{read_frame, write_frame, Ack, Msg, RoundOp};
+use super::wire::{encode_into, read_frame, write_frame, Ack, Msg, RoundOp};
 
 /// A running TCP coordinator. Dropping the handle does NOT stop the
 /// server; call [`shutdown`](TcpServeHandle::shutdown) (benches) or
@@ -98,7 +98,10 @@ pub fn serve_tcp(
                 Ok(()) => {}
                 Err(TrySendError::Full(mut s)) => {
                     // every worker is owned by a live connection:
-                    // degrade deterministically instead of queueing
+                    // degrade deterministically instead of queueing.
+                    // Without nodelay, Nagle holds this tiny frame for
+                    // an RTT and the overflowing client retries late.
+                    s.set_nodelay(true).ok();
                     let _ = write_frame(
                         &mut s,
                         &Msg::Ack(Ack::Deferred {
@@ -131,6 +134,11 @@ fn serve_conn(coord: &Arc<Coordinator>, stream: TcpStream) {
     };
     let mut reader = BufReader::new(read_half);
     let mut writer = BufWriter::new(stream);
+    // persistent encode buffer: replies (mostly small Acks) serialize
+    // here and append to the BufWriter in one write, so a pipelined
+    // burst coalesces into the existing flush batching with no
+    // per-frame Vec allocation
+    let mut enc: Vec<u8> = Vec::new();
     loop {
         // about to block on the socket? push out buffered replies
         // first, or a pipelining peer deadlocks waiting for them
@@ -146,7 +154,9 @@ fn serve_conn(coord: &Arc<Coordinator>, stream: TcpStream) {
             Err(_) => return, // corrupt frame: drop the connection
         };
         let reply = dispatch(coord, msg);
-        if write_frame(&mut writer, &reply).is_err() {
+        enc.clear();
+        encode_into(&reply, &mut enc);
+        if writer.write_all(&enc).is_err() {
             return;
         }
     }

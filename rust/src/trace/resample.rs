@@ -2,7 +2,7 @@
 //! battery-state derivation from consecutive level deltas
 //! (charging = +1, not-discharging = 0, discharging = −1).
 
-use crate::util::pchip::{Pchip, PchipTable};
+use crate::util::pchip::{grid_cell, Pchip, PchipTable};
 
 use super::greenhub::RawTrace;
 
@@ -30,8 +30,7 @@ impl ResampledTrace {
         if self.level.is_empty() {
             return 0;
         }
-        (((t_s - self.start_s) / self.dt_s).floor() as i64)
-            .clamp(0, self.level.len() as i64 - 1) as usize
+        grid_cell(self.start_s, self.dt_s, self.level.len(), t_s)
     }
 
     pub fn level_at(&self, t_s: f64) -> f64 {
@@ -55,6 +54,32 @@ impl ResampledTrace {
 
     pub fn is_charging(&self, t_s: f64) -> bool {
         self.state_at(t_s) > 0
+    }
+
+    /// Batch twin of [`sample`](ResampledTrace::sample): one pass over
+    /// `ts` writing fused `(level, charging)` reads into the caller's
+    /// reusable buffers (cleared, then refilled — no steady-state
+    /// allocation). Each lane is the same clamp + two indexed loads as
+    /// the scalar path, elementwise bit-identical; the fleet kernel's
+    /// availability sweep runs one call per distinct trace instead of
+    /// one `sample` per device.
+    pub fn sample_many(
+        &self,
+        ts: &[f64],
+        levels: &mut Vec<f64>,
+        charging: &mut Vec<bool>,
+    ) {
+        levels.clear();
+        charging.clear();
+        if self.level.is_empty() {
+            return;
+        }
+        let (t0, dt, n) = (self.start_s, self.dt_s, self.level.len());
+        for &t in ts {
+            let i = grid_cell(t0, dt, n, t);
+            levels.push(self.level[i]);
+            charging.push(self.state[i] > 0);
+        }
     }
 
     /// Wrap time around the trace (FL runs can outlast a 28-day trace).
@@ -196,6 +221,30 @@ mod tests {
             let (level, charging) = rs.sample(t);
             assert_eq!(level.to_bits(), rs.level_at(t).to_bits());
             assert_eq!(charging, rs.is_charging(t));
+        }
+    }
+
+    #[test]
+    fn sample_many_matches_scalar_sample_bitwise() {
+        let rs = resample_trace(&TraceGenerator::default().generate(5, 7))
+            .unwrap();
+        // unsorted queries incl. both clamp ends and exact cell edges
+        let mut ts: Vec<f64> = (0..500)
+            .map(|i| rs.start_s + (i * 977 % 331) as f64 * 431.0 - 3600.0)
+            .collect();
+        ts.push(-1e12);
+        ts.push(1e12);
+        ts.push(rs.start_s);
+        ts.push(rs.start_s + rs.duration_s());
+        let mut levels = vec![0.0; 3]; // stale contents must be discarded
+        let mut charging = vec![true; 3];
+        rs.sample_many(&ts, &mut levels, &mut charging);
+        assert_eq!(levels.len(), ts.len());
+        assert_eq!(charging.len(), ts.len());
+        for (k, &t) in ts.iter().enumerate() {
+            let (l, c) = rs.sample(t);
+            assert_eq!(levels[k].to_bits(), l.to_bits(), "t={t}");
+            assert_eq!(charging[k], c, "t={t}");
         }
     }
 

@@ -7,8 +7,11 @@
 //! the paper's trace pipeline uses ([`pchip`]), summary statistics
 //! ([`stats`]), a randomized property-test harness ([`check`]), a
 //! wall-clock bench harness ([`bench`]), table/CSV emitters
-//! ([`table`]) and the FNV-1a determinism-digest fold ([`fnv`]).
+//! ([`table`]), the FNV-1a determinism-digest fold ([`fnv`]) and a
+//! zero-dependency `sched_setaffinity` wrapper for core-pinning the
+//! fleet kernel's shard workers ([`affinity`]).
 
+pub mod affinity;
 pub mod bench;
 pub mod check;
 pub mod fnv;

@@ -209,10 +209,39 @@ impl PchipTable {
         if self.values.is_empty() {
             return f64::NAN;
         }
-        let i = (((t - self.t0) / self.dt).floor() as i64)
-            .clamp(0, self.values.len() as i64 - 1) as usize;
-        self.values[i]
+        self.values[grid_cell(self.t0, self.dt, self.values.len(), t)]
     }
+
+    /// Batch twin of [`at`](PchipTable::at): one gather pass over `ts`
+    /// into the caller's reusable `out` buffer (cleared, then refilled —
+    /// zero steady-state allocation once `out` has grown to size). The
+    /// loop body is a pure clamp + indexed load with no per-iteration
+    /// branches, so the shard-wide availability sweep in the fleet
+    /// kernel runs it lane-parallel. Elementwise bit-identical to `at`,
+    /// including the NaN-for-empty contract.
+    pub fn eval_many(&self, ts: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        if self.values.is_empty() {
+            out.resize(ts.len(), f64::NAN);
+            return;
+        }
+        let (t0, dt, n) = (self.t0, self.dt, self.values.len());
+        out.extend(
+            ts.iter().map(|&t| self.values[grid_cell(t0, dt, n, t)]),
+        );
+    }
+}
+
+/// THE uniform-grid floor-cell index: `clamp(floor((t - t0)/dt), 0, len-1)`.
+///
+/// Shared by [`PchipTable::at`], [`PchipTable::eval_many`] and
+/// `trace::resample::ResampledTrace` so every grid consumer in the crate
+/// clamps identically — a second hand-rolled copy of this formula is how
+/// batch and scalar paths drift apart by one cell at boundaries. Caller
+/// guarantees `len > 0`.
+#[inline]
+pub fn grid_cell(t0: f64, dt: f64, len: usize, t: f64) -> usize {
+    (((t - t0) / dt).floor() as i64).clamp(0, len as i64 - 1) as usize
 }
 
 #[inline]
@@ -498,6 +527,65 @@ mod tests {
         let ends = p.eval_many(&[-100.0, 1e9]);
         assert_eq!(ends[0], 1.0);
         assert_eq!(ends[1], 6.5);
+    }
+
+    #[test]
+    fn table_eval_many_matches_at_and_cursor_paths() {
+        let p = wiggly();
+        let table = PchipTable::build(&p, 0.0, 0.5, 25);
+        // a deliberately unsorted query mix: interior cells, exact cell
+        // edges, both clamp ends
+        let ts: Vec<f64> = vec![
+            3.3, -4.0, 0.0, 12.0, 0.5, 11.99, 1e9, 6.25, -0.0001, 7.5,
+        ];
+        let mut out = Vec::new();
+        table.eval_many(&ts, &mut out);
+        assert_eq!(out.len(), ts.len());
+        for (t, got) in ts.iter().zip(&out) {
+            assert_eq!(got.to_bits(), table.at(*t).to_bits(), "t={t}");
+        }
+        // the buffer is reused: a second, shorter batch must clear first
+        table.eval_many(&[2.0], &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].to_bits(), table.at(2.0).to_bits());
+        // on grid points the table equals the cursor-driven interpolant,
+        // so eval_many agrees with eval_monotone there too
+        let grid: Vec<f64> = (0..25).map(|i| i as f64 * 0.5).collect();
+        table.eval_many(&grid, &mut out);
+        let mut cur = PchipCursor::default();
+        for (t, got) in grid.iter().zip(&out) {
+            assert_eq!(
+                got.to_bits(),
+                p.eval_monotone(*t, &mut cur).to_bits(),
+                "grid t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn table_eval_many_empty_and_single_cell() {
+        let p = Pchip::new(vec![2.0, 4.0], vec![10.0, 20.0]).unwrap();
+        let mut out = vec![99.0; 4]; // stale contents must be discarded
+        let empty = PchipTable::build(&p, 2.0, 1.0, 0);
+        empty.eval_many(&[0.0, 2.0, 1e9], &mut out);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|v| v.is_nan()));
+        let single = PchipTable::build(&p, 2.0, 1.0, 1);
+        single.eval_many(&[-1e9, 2.0, 2.5, 1e9], &mut out);
+        assert_eq!(out.len(), 4);
+        for v in &out {
+            assert_eq!(v.to_bits(), single.at(2.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn grid_cell_clamps_both_ends() {
+        assert_eq!(grid_cell(0.0, 1.0, 10, -5.0), 0);
+        assert_eq!(grid_cell(0.0, 1.0, 10, 0.0), 0);
+        assert_eq!(grid_cell(0.0, 1.0, 10, 3.7), 3);
+        assert_eq!(grid_cell(0.0, 1.0, 10, 9.0), 9);
+        assert_eq!(grid_cell(0.0, 1.0, 10, 1e12), 9);
+        assert_eq!(grid_cell(100.0, 600.0, 3, 100.0 + 1200.0), 2);
     }
 
     #[test]

@@ -1,0 +1,67 @@
+//! Integration: the batch-vectorized SoA passes (batched envelope RNG,
+//! lane-friendly availability sweep, split plan/commit energy tick)
+//! must stay bit-identical to the scalar PR 1 reference kernel over
+//! *randomly generated* scenarios, not just the committed builtins —
+//! the property that makes a vectorization bug fail as a parity error.
+
+use swan::fleet::{run_scenario, run_scenario_reference, ScenarioSpec};
+use swan::prop_assert;
+use swan::util::check::check;
+use swan::util::rng::Rng;
+
+fn random_spec(rng: &mut Rng, case: usize) -> ScenarioSpec {
+    ScenarioSpec {
+        name: format!("batch-parity-{case}"),
+        seed: rng.next_u64(),
+        devices: 40 + rng.index(160),
+        rounds: 3 + rng.index(8),
+        clients_per_round: 5 + rng.index(20),
+        trace_users: 1 + rng.index(3),
+        daily_credit_j: rng.range(1_000.0, 30_000.0),
+        min_level_pct: rng.range(10.0, 60.0),
+        interference_p: rng.range(0.0, 0.5),
+        interference_slowdown: rng.range(1.0, 3.0),
+        thermal_throttle_p: rng.range(0.0, 0.3),
+        thermal_derate: rng.range(1.0, 2.0),
+        ..ScenarioSpec::default()
+    }
+}
+
+#[test]
+fn batched_passes_match_scalar_reference_on_random_scenarios() {
+    let mut case = 0usize;
+    check(6, |rng| {
+        let spec = random_spec(rng, case);
+        case += 1;
+        let golden = run_scenario_reference(&spec, 1, swan::fl::FlArm::Swan)
+            .map_err(|e| format!("reference run failed: {e}"))?;
+        for shards in [1usize, 3, 8] {
+            let soa = run_scenario(&spec, shards, swan::fl::FlArm::Swan)
+                .map_err(|e| format!("soa run failed: {e}"))?;
+            prop_assert!(
+                soa.digest() == golden.digest(),
+                "{}: soa@{shards} digest {} != reference {}",
+                spec.name,
+                soa.digest(),
+                golden.digest()
+            );
+            prop_assert!(
+                soa.online_per_round == golden.online_per_round,
+                "{}: online-per-round diverged at {shards} shards",
+                spec.name
+            );
+            prop_assert!(
+                soa.total_time_s.to_bits() == golden.total_time_s.to_bits(),
+                "{}: total_time_s bits diverged at {shards} shards",
+                spec.name
+            );
+            prop_assert!(
+                soa.total_energy_j.to_bits()
+                    == golden.total_energy_j.to_bits(),
+                "{}: total_energy_j bits diverged at {shards} shards",
+                spec.name
+            );
+        }
+        Ok(())
+    });
+}
