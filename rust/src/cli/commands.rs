@@ -12,14 +12,24 @@
 //! swan bench   serve --scenario smoke --lanes 4 --json
 //! swan bench   floor --floors ci/perf_floors.json
 //! swan obs     check events.ndjson
+//! swan obs     trace events.ndjson --round 1 [--device 17]
+//! swan obs     top events.ndjson --by stage|device
+//! swan obs     rates events.ndjson --window 0.5
+//! swan obs     diff BENCH_fleet.json baseline.json --threshold 10
 //! swan traces  --users 4
 //! swan report  table2|table3|fig1|fig2|fig3|fleet
 //! ```
 //!
 //! `--events <path>` (fleet/serve/bench) streams the telemetry spine's
 //! NDJSON event stream to a file; `--events stderr` (or `-`) streams to
-//! stderr. `swan obs check` validates a captured stream; `swan bench
-//! floor` enforces the committed CI perf floors against bench records.
+//! stderr; adding `--trace` turns on per-device lifecycle edges
+//! (`trace-edge` records). The `swan obs` verbs consume those streams:
+//! `check` validates framing + per-reason schema, `trace` reconstructs
+//! device lifecycles, `top` attributes latency to stages/stragglers,
+//! `rates` windows admission traffic, and `diff` compares two runs
+//! (NDJSON or `BENCH_*.json`) with direction-aware regression gates.
+//! `swan bench floor` enforces the committed CI perf floors against
+//! bench records.
 
 use crate::report;
 use crate::runtime::{ModelExecutor, Registry, RuntimeClient};
@@ -38,6 +48,15 @@ fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) ->
         help,
         default,
         is_switch: false,
+    }
+}
+
+fn switch(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        is_switch: true,
     }
 }
 
@@ -86,7 +105,7 @@ fn print_help() {
          \x20 fleet     sharded fleet simulation (100k–1M devices)\n\
          \x20 serve     run the FL coordinator control plane on TCP\n\
          \x20 bench     throughput harnesses (BENCH_fleet.json / BENCH_serve.json)\n\
-         \x20 obs       telemetry utilities (obs check <events.ndjson>)\n\
+         \x20 obs       telemetry toolkit (check|trace|top|rates|diff)\n\
          \x20 traces    generate + preprocess GreenHub-style traces\n\
          \x20 report    regenerate a paper table/figure\n"
     );
@@ -291,6 +310,7 @@ fn cmd_fleet(rest: &[String]) -> crate::Result<()> {
         opt("rounds", "override round count (0 = scenario value)", Some("0")),
         opt("arm", "swan|baseline|both", Some("both")),
         opt("events", EVENTS_HELP, None),
+        switch("trace", TRACE_HELP),
     ];
     let args = parse_args(rest, &specs)?;
     let spec = scenario_arg(&args, "smoke")?;
@@ -376,17 +396,31 @@ fn scenario_arg(
 
 /// Resolve the telemetry sink from the shared `--events` opt: a path
 /// streams NDJSON to that file, the literal `stderr` (or `-`) streams
-/// to stderr, and no flag leaves telemetry off.
+/// to stderr, and no flag leaves telemetry off. The `--trace` switch
+/// additionally turns on per-device `trace-edge` records — it needs a
+/// live sink, so `--trace` without `--events` is an error rather than
+/// a silent no-op.
 fn obs_arg(args: &Args) -> crate::Result<crate::obs::Obs> {
-    match args.get("events") {
-        None => Ok(crate::obs::Obs::off()),
-        Some("stderr") | Some("-") => Ok(crate::obs::Obs::stderr()),
-        Some(path) => crate::obs::Obs::to_file(path),
+    let obs = match args.get("events") {
+        None => crate::obs::Obs::off(),
+        Some("stderr") | Some("-") => crate::obs::Obs::stderr(),
+        Some(path) => crate::obs::Obs::to_file(path)?,
+    };
+    if args.has("trace") {
+        crate::ensure!(
+            obs.enabled(),
+            "--trace emits per-device lifecycle records into the event \
+             stream: pass --events <path> too"
+        );
+        return Ok(obs.with_traces());
     }
+    Ok(obs)
 }
 
 const EVENTS_HELP: &str =
     "stream NDJSON telemetry to a file path, or 'stderr'";
+const TRACE_HELP: &str =
+    "emit per-device trace-edge records (needs --events)";
 
 fn cmd_serve(rest: &[String]) -> crate::Result<()> {
     // no --devices/--rounds here: the coordinator serves whatever
@@ -402,6 +436,7 @@ fn cmd_serve(rest: &[String]) -> crate::Result<()> {
         opt("cap", "per-round admission bound (0 = unbounded)", Some("0")),
         opt("cache", "LRU profile-cache capacity (contexts)", Some("64")),
         opt("events", EVENTS_HELP, None),
+        switch("trace", TRACE_HELP),
     ];
     let args = parse_args(rest, &specs)?;
     let spec = scenario_arg(&args, "smoke")?;
@@ -476,6 +511,7 @@ fn cmd_bench_serve(rest: &[String]) -> crate::Result<()> {
             is_switch: true,
         },
         opt("events", EVENTS_HELP, None),
+        switch("trace", TRACE_HELP),
     ];
     let args = parse_args(rest, &specs)?;
     let spec = scenario_arg(&args, "smoke")?;
@@ -571,6 +607,7 @@ fn cmd_bench_fleet(rest: &[String]) -> crate::Result<()> {
             None,
         ),
         opt("events", EVENTS_HELP, None),
+        switch("trace", TRACE_HELP),
     ];
     let args = parse_args(rest, &specs)?;
     if args.has("no-pin") {
@@ -714,17 +751,38 @@ fn cmd_bench_floor(rest: &[String]) -> crate::Result<()> {
 fn cmd_obs(rest: &[String]) -> crate::Result<()> {
     match rest.split_first() {
         Some((what, r)) if what == "check" => cmd_obs_check(r),
-        Some((other, _)) => {
-            crate::bail!("unknown obs subcommand '{other}' (check)")
-        }
-        None => crate::bail!("usage: swan obs check <events.ndjson>"),
+        Some((what, r)) if what == "trace" => cmd_obs_trace(r),
+        Some((what, r)) if what == "top" => cmd_obs_top(r),
+        Some((what, r)) if what == "rates" => cmd_obs_rates(r),
+        Some((what, r)) if what == "diff" => cmd_obs_diff(r),
+        Some((other, _)) => crate::bail!(
+            "unknown obs subcommand '{other}' (check|trace|top|rates|diff)"
+        ),
+        None => crate::bail!(
+            "usage: swan obs <check|trace|top|rates|diff> ..."
+        ),
     }
+}
+
+/// Pull the one required positional `<events.ndjson>` argument the obs
+/// verbs share.
+fn obs_file_arg<'a>(
+    args: &'a Args,
+    verb: &str,
+    tail: &str,
+) -> crate::Result<&'a str> {
+    args.positional.first().map(String::as_str).ok_or_else(|| {
+        crate::err!("usage: swan obs {verb} <events.ndjson>{tail}")
+    })
 }
 
 /// `swan obs check <file>` — validate a captured NDJSON event stream:
 /// every line parses as a JSON object with a string `reason` and a
-/// numeric `seq`, and `seq` never decreases in file order (the sink
-/// assigns seq under the same lock that orders the writes).
+/// numeric `seq`, `seq` strictly increases in file order (the sink
+/// assigns seq under the same lock that orders the writes, so even
+/// equal seqs mean two writers shared a stream), and every typed
+/// reason carries its full payload schema
+/// ([`crate::obs::analyze::required_fields`]).
 fn cmd_obs_check(rest: &[String]) -> crate::Result<()> {
     let path = rest.first().ok_or_else(|| {
         crate::err!("usage: swan obs check <events.ndjson>")
@@ -733,6 +791,8 @@ fn cmd_obs_check(rest: &[String]) -> crate::Result<()> {
         .map_err(|e| crate::err!("reading {path}: {e}"))?;
     let mut events = 0usize;
     let mut last_seq = -1.0f64;
+    let mut by_reason: std::collections::BTreeMap<String, usize> =
+        std::collections::BTreeMap::new();
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
@@ -751,15 +811,343 @@ fn cmd_obs_check(rest: &[String]) -> crate::Result<()> {
             .req_f64("seq")
             .map_err(|e| crate::err!("{path}:{lineno}: {e}"))?;
         crate::ensure!(
-            seq >= last_seq,
+            seq > last_seq,
             "{path}:{lineno}: seq {seq} after {last_seq} — stream \
              ordering violated"
         );
         last_seq = seq;
+        for field in crate::obs::analyze::required_fields(reason) {
+            crate::ensure!(
+                v.get(field).is_some(),
+                "{path}:{lineno}: '{reason}' event is missing \
+                 required field '{field}'"
+            );
+        }
+        *by_reason.entry(reason.to_string()).or_insert(0) += 1;
         events += 1;
     }
     crate::ensure!(events > 0, "{path}: no events in stream");
     println!("obs check: {events} well-formed event(s) in {path}");
+    for (reason, n) in &by_reason {
+        println!("  {reason}: {n}");
+    }
+    Ok(())
+}
+
+/// `swan obs trace <file> --round R [--device D]` — reconstruct the
+/// per-device lifecycles the `--trace` switch recorded, print each as
+/// a timeline of edges with inter-edge gaps, and flag stalls (gaps
+/// over `--stall`, or 5× the median gap when `--stall 0`).
+fn cmd_obs_trace(rest: &[String]) -> crate::Result<()> {
+    use crate::util::bench::fmt_secs;
+    let specs = [
+        opt("round", "round to reconstruct (required)", None),
+        opt("device", "restrict to one device id", None),
+        opt(
+            "stall",
+            "flag gaps over this many seconds (0 = 5x median gap)",
+            Some("0"),
+        ),
+        opt("limit", "max lifecycles to print", Some("20")),
+        switch(
+            "expect-complete",
+            "fail unless a complete admitted lifecycle exists",
+        ),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let path = obs_file_arg(&args, "trace", " --round <R>")?;
+    crate::ensure!(
+        args.get("round").is_some(),
+        "swan obs trace needs --round <R> (a lifecycle's identity is \
+         (round, device))"
+    );
+    let round = args.get_u64("round", 0)?;
+    let device = match args.get("device") {
+        Some(_) => Some(args.get_u64("device", 0)?),
+        None => None,
+    };
+    let limit = args.get_usize("limit", 20)?;
+
+    let events = crate::obs::analyze::read_events(path)?;
+    let lcs = crate::obs::analyze::lifecycles_filtered(
+        &events,
+        Some(round),
+        device,
+    );
+    crate::ensure!(
+        !lcs.is_empty(),
+        "{path}: no trace-edge records for round {round}{} — was the \
+         run traced? (pass --trace with --events)",
+        device.map(|d| format!(", device {d}")).unwrap_or_default()
+    );
+    let stall = match args.get_f64("stall", 0.0)? {
+        s if s > 0.0 => s,
+        _ => crate::obs::analyze::auto_stall_threshold_s(&lcs),
+    };
+    let complete =
+        lcs.iter().filter(|lc| lc.is_complete_admitted()).count();
+    println!(
+        "round {round}: {} lifecycle(s), {complete} complete admitted\
+         {}",
+        lcs.len(),
+        if stall > 0.0 {
+            format!(", stall threshold {}", fmt_secs(stall))
+        } else {
+            String::new()
+        }
+    );
+    for lc in lcs.iter().take(limit) {
+        let tag = if lc.is_complete_admitted() {
+            " [complete]"
+        } else if !lc.timestamps_monotone() {
+            " [NON-MONOTONE]"
+        } else {
+            ""
+        };
+        println!(
+            "  device {} ({} edges, {}){tag}",
+            lc.device,
+            lc.edges.len(),
+            fmt_secs(lc.duration_s())
+        );
+        let mut prev_t = None;
+        for e in &lc.edges {
+            match prev_t {
+                None => println!(
+                    "    {:>10}  {}",
+                    fmt_secs(e.t_s),
+                    e.edge
+                ),
+                Some(p) => {
+                    let gap = e.t_s - p;
+                    let mark = if stall > 0.0 && gap > stall {
+                        "  <-- stall"
+                    } else {
+                        ""
+                    };
+                    println!(
+                        "    {:>10}  {}{mark}",
+                        format!("+{}", fmt_secs(gap)),
+                        e.edge
+                    );
+                }
+            }
+            prev_t = Some(e.t_s);
+        }
+    }
+    if lcs.len() > limit {
+        println!("  ... {} more (raise --limit)", lcs.len() - limit);
+    }
+    if args.has("expect-complete") {
+        crate::ensure!(
+            complete > 0,
+            "{path}: round {round} has no complete admitted lifecycle"
+        );
+    }
+    Ok(())
+}
+
+/// `swan obs top <file> --by stage|device` — K-way latency
+/// attribution: which pipeline stage (inter-edge gap) or which device
+/// lifecycle ate the most wall-clock. Without trace edges, stage mode
+/// falls back to the `span-summary` records the runs always emit.
+fn cmd_obs_top(rest: &[String]) -> crate::Result<()> {
+    let specs = [
+        opt("by", "attribution axis: stage|device", Some("stage")),
+        opt("limit", "max rows to print", Some("10")),
+        opt("round", "restrict to one round", None),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let path = obs_file_arg(&args, "top", " [--by stage|device]")?;
+    let by = args.get_str("by", "stage");
+    let limit = args.get_usize("limit", 10)?;
+    let round = match args.get("round") {
+        Some(_) => Some(args.get_u64("round", 0)?),
+        None => None,
+    };
+
+    let events = crate::obs::analyze::read_events(path)?;
+    let lcs =
+        crate::obs::analyze::lifecycles_filtered(&events, round, None);
+    let mut rows = match by.as_str() {
+        "stage" => crate::obs::analyze::top_stages(&lcs),
+        "device" => {
+            crate::ensure!(
+                !lcs.is_empty(),
+                "{path}: no trace-edge records — --by device needs a \
+                 traced run (pass --trace with --events)"
+            );
+            crate::obs::analyze::top_devices(&lcs)
+        }
+        other => crate::bail!("--by expects stage|device, got '{other}'"),
+    };
+    // Stage mode degrades gracefully: an untraced stream still carries
+    // span-summary records, which answer the same "where did the time
+    // go" question at phase granularity.
+    if rows.is_empty() && by == "stage" {
+        let mut map: std::collections::BTreeMap<
+            String,
+            crate::obs::analyze::GapStat,
+        > = std::collections::BTreeMap::new();
+        for v in &events {
+            if v.get("reason")
+                .and_then(crate::util::json::Value::as_str)
+                != Some("span-summary")
+            {
+                continue;
+            }
+            let Some(crate::util::json::Value::Obj(spans)) =
+                v.get("spans")
+            else {
+                continue;
+            };
+            for (name, s) in spans {
+                let stat = map.entry(format!("span:{name}")).or_default();
+                stat.count += s
+                    .get("count")
+                    .and_then(crate::util::json::Value::as_f64)
+                    .unwrap_or(0.0) as u64;
+                stat.total_s += s
+                    .get("total_s")
+                    .and_then(crate::util::json::Value::as_f64)
+                    .unwrap_or(0.0);
+                let max = s
+                    .get("max_s")
+                    .and_then(crate::util::json::Value::as_f64)
+                    .unwrap_or(0.0);
+                if max > stat.max_s {
+                    stat.max_s = max;
+                }
+            }
+        }
+        rows = map.into_iter().collect();
+        rows.sort_by(|a, b| b.1.total_s.total_cmp(&a.1.total_s));
+        crate::ensure!(
+            !rows.is_empty(),
+            "{path}: no trace-edge or span-summary records to attribute"
+        );
+    }
+    rows.truncate(limit);
+    report::obs_top_table(&format!("top {by}s — {path}"), &rows)
+        .emit()?;
+    Ok(())
+}
+
+/// `swan obs rates <file> --window S` — bucket admission traffic
+/// (check-ins, deferrals, aggregations) into fixed wall-clock windows;
+/// falls back to per-round counts when the stream has no trace edges.
+fn cmd_obs_rates(rest: &[String]) -> crate::Result<()> {
+    let specs =
+        [opt("window", "window width in seconds", Some("1"))];
+    let args = parse_args(rest, &specs)?;
+    let path = obs_file_arg(&args, "rates", " [--window S]")?;
+    let window = args.get_f64("window", 1.0)?;
+    crate::ensure!(window > 0.0, "--window must be positive");
+    let events = crate::obs::analyze::read_events(path)?;
+    let rows = crate::obs::analyze::windowed_rates(&events, window);
+    crate::ensure!(
+        !rows.is_empty(),
+        "{path}: no admission traffic (trace edges or round records)"
+    );
+    let mut t = Table::new(
+        &format!("admission rates — {path}"),
+        &[
+            "window",
+            "checkins",
+            "deferred",
+            "aggregated",
+            "checkins/s",
+            "defer_rate",
+        ],
+    );
+    for r in &rows {
+        let cps = if r.span_s > 0.0 {
+            r.checkins as f64 / r.span_s
+        } else {
+            0.0
+        };
+        let seen = r.checkins + r.deferred;
+        let defer_rate = if seen > 0 {
+            100.0 * r.deferred as f64 / seen as f64
+        } else {
+            0.0
+        };
+        t.row(&[
+            r.label.clone(),
+            r.checkins.to_string(),
+            r.deferred.to_string(),
+            r.aggregated.to_string(),
+            format!("{cps:.1}"),
+            format!("{defer_rate:.1}%"),
+        ]);
+    }
+    t.emit()?;
+    Ok(())
+}
+
+fn fmt_metric(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// `swan obs diff <candidate> <baseline>` — compare two runs (NDJSON
+/// streams or `BENCH_*.json` snapshots) and exit nonzero when a metric
+/// with a known good direction regresses past `--threshold` percent.
+fn cmd_obs_diff(rest: &[String]) -> crate::Result<()> {
+    let specs = [
+        opt("threshold", "regression gate in percent", Some("10")),
+        switch("report-only", "print the diff but never fail"),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let (cand_path, base_path) =
+        match (args.positional.first(), args.positional.get(1)) {
+            (Some(c), Some(b)) => (c.as_str(), b.as_str()),
+            _ => crate::bail!(
+                "usage: swan obs diff <candidate> <baseline> \
+                 [--threshold PCT] [--report-only]"
+            ),
+        };
+    let threshold = args.get_f64("threshold", 10.0)?;
+    crate::ensure!(threshold >= 0.0, "--threshold must be >= 0");
+    let cand = crate::obs::analyze::load_any(cand_path)?;
+    let base = crate::obs::analyze::load_any(base_path)?;
+    let rows = crate::obs::analyze::diff(&cand, &base, threshold)?;
+    let mut t = Table::new(
+        &format!("{cand_path} vs {base_path}"),
+        &["metric", "candidate", "baseline", "delta", "verdict"],
+    );
+    let mut regressions = 0usize;
+    for r in &rows {
+        if r.regressed {
+            regressions += 1;
+        }
+        t.row(&[
+            r.metric.clone(),
+            fmt_metric(r.candidate),
+            fmt_metric(r.baseline),
+            format!("{:+.1}%", r.delta_pct),
+            if r.regressed { "REGRESSED" } else { "ok" }.to_string(),
+        ]);
+    }
+    t.emit()?;
+    if regressions > 0 && !args.has("report-only") {
+        crate::bail!(
+            "{regressions} metric(s) regressed more than {threshold}% \
+             vs {base_path}"
+        );
+    }
+    println!(
+        "obs diff: {} metric(s), {regressions} regression(s) over \
+         {threshold}%",
+        rows.len()
+    );
     Ok(())
 }
 

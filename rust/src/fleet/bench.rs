@@ -277,7 +277,7 @@ pub fn run_serve_bench(
             Arc::new(Coordinator::with_obs(cfg.clone(), obs.clone())?);
         let handle = serve_tcp(tcp_coord, "127.0.0.1:0", lanes)?;
         let addr = handle.addr;
-        let out = run_tcp(spec, lanes, addr, cfg.update_dim);
+        let out = run_tcp(spec, lanes, addr, cfg.update_dim, obs);
         // clients are dropped by now (run_tcp owns them), so the pool
         // drains and the join below cannot hang — even on error
         handle.shutdown();

@@ -370,6 +370,21 @@ impl<N: FleetNode> ShardedEventLoop<N> {
             let c_picked = metrics.counter("fleet.picked");
             let h_round = metrics
                 .hist("fleet.round_wall_s", crate::obs::LATENCY_BUCKETS_S);
+            let h_avail = metrics.hist(
+                "fleet.stage.availability_s",
+                crate::obs::LATENCY_BUCKETS_S,
+            );
+            let h_select = metrics
+                .hist("fleet.stage.select_s", crate::obs::LATENCY_BUCKETS_S);
+            let h_step = metrics
+                .hist("fleet.stage.step_s", crate::obs::LATENCY_BUCKETS_S);
+            let h_agg = metrics.hist(
+                "fleet.stage.aggregate_s",
+                crate::obs::LATENCY_BUCKETS_S,
+            );
+            // Trace timestamps: anchored at drive start, read only at
+            // the control thread's own barriers.
+            let tclock = crate::obs::TraceClock::start();
 
             // The control loop proper, fallible: any send/recv against
             // a dead shard breaks out with an error naming it.
@@ -428,10 +443,9 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                         .collect();
                     online.sort_unstable();
                     outcome.online_per_round.push((round, online.len()));
-                    spans.record(
-                        sp_avail,
-                        phase_t0.elapsed().as_secs_f64(),
-                    );
+                    let avail_s = phase_t0.elapsed().as_secs_f64();
+                    spans.record(sp_avail, avail_s);
+                    metrics.observe(h_avail, avail_s);
                     metrics.add(c_online, online.len() as u64);
                     if online.is_empty() {
                         now_s += EMPTY_ROUND_WAIT_S;
@@ -475,10 +489,26 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                             extra_energy_j: rc.exploration_energy_j,
                         });
                     }
-                    spans.record(
-                        sp_select,
-                        phase_t0.elapsed().as_secs_f64(),
-                    );
+                    let select_s = phase_t0.elapsed().as_secs_f64();
+                    spans.record(sp_select, select_s);
+                    metrics.observe(h_select, select_s);
+                    if cfg.obs.trace_on() {
+                        // one timestamp per barrier: the edges record
+                        // WHEN the selection barrier passed, not a
+                        // fictional per-device ordering within it
+                        let t_s = tclock.now_s();
+                        for (i, &gid) in picked.iter().enumerate() {
+                            cfg.obs.emit(
+                                &crate::obs::TraceEdge::new(
+                                    round as u32,
+                                    gid as u64,
+                                    crate::obs::trace::EDGE_SELECTED,
+                                    t_s,
+                                )
+                                .with("seq", i as f64),
+                            );
+                        }
+                    }
 
                     // 4. parallel event-driven local epochs
                     let phase_t0 = Instant::now();
@@ -522,10 +552,26 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                         }
                     }
 
-                    spans.record(
-                        sp_step,
-                        phase_t0.elapsed().as_secs_f64(),
-                    );
+                    let step_s = phase_t0.elapsed().as_secs_f64();
+                    spans.record(sp_step, step_s);
+                    metrics.observe(h_step, step_s);
+                    if cfg.obs.trace_on() {
+                        let t_s = tclock.now_s();
+                        for &gid in &picked {
+                            if let Some(r) = results.get(&(gid as u32)) {
+                                cfg.obs.emit(
+                                    &crate::obs::TraceEdge::new(
+                                        round as u32,
+                                        gid as u64,
+                                        crate::obs::trace::EDGE_STEPPED,
+                                        t_s,
+                                    )
+                                    .with("time_s", r.time_s)
+                                    .with("energy_j", r.energy_j),
+                                );
+                            }
+                        }
+                    }
 
                     // 5. fold in global picked order — a fixed reduction
                     //    order keeps aggregates bit-identical under any
@@ -551,10 +597,9 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                     }
                     now_s += round_time + cfg.server_overhead_s;
                     outcome.rounds_run = round + 1;
-                    spans.record(
-                        sp_agg,
-                        phase_t0.elapsed().as_secs_f64(),
-                    );
+                    let agg_s = phase_t0.elapsed().as_secs_f64();
+                    spans.record(sp_agg, agg_s);
+                    metrics.observe(h_agg, agg_s);
                     metrics.observe(
                         h_round,
                         round_t0.elapsed().as_secs_f64(),

@@ -784,6 +784,21 @@ impl SoaFleet {
             let c_picked = metrics.counter("fleet.picked");
             let h_round = metrics
                 .hist("fleet.round_wall_s", crate::obs::LATENCY_BUCKETS_S);
+            let h_avail = metrics.hist(
+                "fleet.stage.availability_s",
+                crate::obs::LATENCY_BUCKETS_S,
+            );
+            let h_select = metrics
+                .hist("fleet.stage.select_s", crate::obs::LATENCY_BUCKETS_S);
+            let h_step = metrics
+                .hist("fleet.stage.step_s", crate::obs::LATENCY_BUCKETS_S);
+            let h_agg = metrics.hist(
+                "fleet.stage.aggregate_s",
+                crate::obs::LATENCY_BUCKETS_S,
+            );
+            // Trace timestamps: anchored at drive start, read only at
+            // the control thread's own barriers.
+            let tclock = crate::obs::TraceClock::start();
 
             for round in 0..cfg.rounds {
                 let round_t0 = Instant::now();
@@ -819,7 +834,9 @@ impl SoaFleet {
                     &mut online,
                 );
                 outcome.online_per_round.push((round, online.len()));
-                spans.record(sp_avail, phase_t0.elapsed().as_secs_f64());
+                let avail_s = phase_t0.elapsed().as_secs_f64();
+                spans.record(sp_avail, avail_s);
+                metrics.observe(h_avail, avail_s);
                 metrics.add(c_online, online.len() as u64);
                 if online.is_empty() {
                     now_s += EMPTY_ROUND_WAIT_S;
@@ -869,7 +886,26 @@ impl SoaFleet {
                     });
                 }
 
-                spans.record(sp_select, phase_t0.elapsed().as_secs_f64());
+                let select_s = phase_t0.elapsed().as_secs_f64();
+                spans.record(sp_select, select_s);
+                metrics.observe(h_select, select_s);
+                if cfg.obs.trace_on() {
+                    // one timestamp per barrier: the edges record WHEN
+                    // the selection barrier passed, not a fictional
+                    // per-device ordering within it
+                    let t_s = tclock.now_s();
+                    for (seq, &gid) in picked.iter().enumerate() {
+                        cfg.obs.emit(
+                            &crate::obs::TraceEdge::new(
+                                round as u32,
+                                gid as u64,
+                                crate::obs::trace::EDGE_SELECTED,
+                                t_s,
+                            )
+                            .with("seq", seq as f64),
+                        );
+                    }
+                }
 
                 // 4. parallel event-driven local epochs
                 let phase_t0 = Instant::now();
@@ -904,7 +940,24 @@ impl SoaFleet {
                         fold_steps[s] = r.steps;
                     }
                 }
-                spans.record(sp_step, phase_t0.elapsed().as_secs_f64());
+                let step_s = phase_t0.elapsed().as_secs_f64();
+                spans.record(sp_step, step_s);
+                metrics.observe(h_step, step_s);
+                if cfg.obs.trace_on() {
+                    let t_s = tclock.now_s();
+                    for (s, &gid) in picked.iter().enumerate() {
+                        cfg.obs.emit(
+                            &crate::obs::TraceEdge::new(
+                                round as u32,
+                                gid as u64,
+                                crate::obs::trace::EDGE_STEPPED,
+                                t_s,
+                            )
+                            .with("time_s", fold_time[s])
+                            .with("energy_j", fold_energy[s]),
+                        );
+                    }
+                }
                 let phase_t0 = Instant::now();
                 let mut round_time = 0.0f64;
                 let mut round_energy = 0.0f64;
@@ -917,7 +970,9 @@ impl SoaFleet {
                 }
                 now_s += round_time + cfg.server_overhead_s;
                 outcome.rounds_run = round + 1;
-                spans.record(sp_agg, phase_t0.elapsed().as_secs_f64());
+                let agg_s = phase_t0.elapsed().as_secs_f64();
+                spans.record(sp_agg, agg_s);
+                metrics.observe(h_agg, agg_s);
                 metrics
                     .observe(h_round, round_t0.elapsed().as_secs_f64());
                 if cfg.obs.enabled() {

@@ -1,0 +1,824 @@
+//! The consume side of the telemetry spine: turn an NDJSON event
+//! stream (or a `BENCH_*.json` snapshot) into answers.
+//!
+//! Everything here is pure over parsed [`Value`]s so the CLI verbs
+//! (`swan obs trace|top|rates|diff`) and the integration tests share
+//! one engine:
+//!
+//! - [`lifecycles`] groups `trace-edge` records by their deterministic
+//!   identity `(round, device_id)` in seq (= file) order and exposes
+//!   inter-edge gaps, so "why was device 17 slow in round 412?" is a
+//!   lookup, not a rerun.
+//! - [`top_stages`] / [`top_devices`] aggregate those gaps into K-way
+//!   attribution tables (slowest pipeline stage, worst stragglers).
+//! - [`windowed_rates`] buckets check-in/deferral/aggregation edges
+//!   into fixed wall-clock windows to spot admission storms; without
+//!   trace edges it falls back to per-round counts from the base
+//!   records.
+//! - [`load_any`] + [`diff`] compare two runs — NDJSON vs NDJSON or
+//!   snapshot vs snapshot — with percent deltas and direction-aware
+//!   regression flags.
+//!
+//! [`required_fields`] is the per-reason schema contract shared with
+//! `swan obs check`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Value};
+
+use super::trace::{
+    EDGE_AGGREGATED, EDGE_CHECKIN, EDGE_CONN_DEFERRED, EDGE_DEFERRED,
+    SERVE_ADMITTED_CHAIN,
+};
+
+// -- schema -----------------------------------------------------------------
+
+/// Required payload fields per event reason — the schema `swan obs
+/// check` enforces. Unknown reasons return an empty slice (forward
+/// compatible: new reasons are allowed, known ones must be complete).
+/// `round-end` is shared by the fleet and serve emitters with
+/// different extras, so only the common core is required.
+pub fn required_fields(reason: &str) -> &'static [&'static str] {
+    match reason {
+        "round-start" => &["scenario", "round", "now_s"],
+        "shard-progress" => &["round", "shard", "online"],
+        "round-end" => &["round", "round_time_s", "round_energy_j"],
+        "profile-explored" => &[
+            "model",
+            "requester",
+            "chain_len",
+            "exploration_time_s",
+            "exploration_energy_j",
+        ],
+        "profile-adopted" => &["model", "adoptions"],
+        "cache-hit-miss" => &["round", "hits", "misses", "evictions"],
+        "checkin-batch" => &["round", "size"],
+        "deferral" => {
+            &["round", "deferred", "retry_after_s", "batch_size"]
+        }
+        "late-carryover" => &["round", "carried"],
+        "serve-start" => &["addr", "workers"],
+        "span-summary" => &["scope", "spans"],
+        "bench-result" => &["bench", "record"],
+        "trace-edge" => &["round", "edge", "t_s"],
+        "lane-burst" => &["lane", "round", "size", "burst_s"],
+        _ => &[],
+    }
+}
+
+// -- stream reading ---------------------------------------------------------
+
+/// Parse an NDJSON body: one event object per non-blank line, in file
+/// order. `origin` only flavors error messages.
+pub fn parse_events(text: &str, origin: &str) -> crate::Result<Vec<Value>> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line).map_err(|e| {
+            crate::err!("{origin}:{}: bad event line: {e}", i + 1)
+        })?;
+        events.push(v);
+    }
+    crate::ensure!(!events.is_empty(), "{origin}: no events in stream");
+    Ok(events)
+}
+
+/// Read and parse an NDJSON event file.
+pub fn read_events(path: &str) -> crate::Result<Vec<Value>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| crate::err!("reading {path}: {e}"))?;
+    parse_events(&text, path)
+}
+
+// -- lifecycle reconstruction -----------------------------------------------
+
+/// One reconstructed edge: the full event record plus the fields every
+/// consumer needs pre-extracted.
+#[derive(Clone, Debug)]
+pub struct LifeEdge {
+    pub edge: String,
+    pub t_s: f64,
+    pub seq: f64,
+    /// The whole event record, for detail fields (`retry_after_s`,
+    /// selection `seq`, ...).
+    pub v: Value,
+}
+
+/// All edges observed for one `(round, device)` identity, in seq
+/// order.
+#[derive(Clone, Debug)]
+pub struct Lifecycle {
+    pub round: u64,
+    pub device: u64,
+    pub edges: Vec<LifeEdge>,
+}
+
+impl Lifecycle {
+    /// Wall-clock span from first to last edge.
+    pub fn duration_s(&self) -> f64 {
+        match (self.edges.first(), self.edges.last()) {
+            (Some(a), Some(b)) => b.t_s - a.t_s,
+            _ => 0.0,
+        }
+    }
+
+    /// Inter-edge gaps as `("a→b", dt)` pairs, in order.
+    pub fn gaps(&self) -> Vec<(String, f64)> {
+        self.edges
+            .windows(2)
+            .map(|w| {
+                (
+                    format!("{}\u{2192}{}", w[0].edge, w[1].edge),
+                    w[1].t_s - w[0].t_s,
+                )
+            })
+            .collect()
+    }
+
+    /// The single largest inter-edge gap, if any.
+    pub fn max_gap(&self) -> Option<(String, f64)> {
+        self.gaps()
+            .into_iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+    }
+
+    /// Timestamps never go backwards in seq order — the causality
+    /// contract of [`super::trace::TraceClock`].
+    pub fn timestamps_monotone(&self) -> bool {
+        self.edges.windows(2).all(|w| w[1].t_s >= w[0].t_s)
+    }
+
+    /// True when `chain` appears as an in-order subsequence of this
+    /// lifecycle's edges.
+    pub fn has_chain(&self, chain: &[&str]) -> bool {
+        let mut want = chain.iter();
+        let mut next = want.next();
+        for e in &self.edges {
+            match next {
+                Some(&n) if e.edge == n => next = want.next(),
+                Some(_) => {}
+                None => break,
+            }
+        }
+        next.is_none()
+    }
+
+    /// A complete admitted-and-selected serve lifecycle: every
+    /// happy-path edge present, timestamps monotone.
+    pub fn is_complete_admitted(&self) -> bool {
+        self.has_chain(SERVE_ADMITTED_CHAIN) && self.timestamps_monotone()
+    }
+}
+
+/// Group all `trace-edge` events by `(round, device)`. Events with a
+/// null device (transport-level edges) have no lifecycle identity and
+/// are skipped. Within a lifecycle, edge order is file (= seq) order.
+pub fn lifecycles(events: &[Value]) -> Vec<Lifecycle> {
+    let mut by_id: BTreeMap<(u64, u64), Vec<LifeEdge>> = BTreeMap::new();
+    for v in events {
+        if v.get("reason").and_then(Value::as_str) != Some("trace-edge") {
+            continue;
+        }
+        let Some(device) = v.get("device").and_then(Value::as_f64) else {
+            continue;
+        };
+        let (Some(round), Some(edge), Some(t_s)) = (
+            v.get("round").and_then(Value::as_f64),
+            v.get("edge").and_then(Value::as_str),
+            v.get("t_s").and_then(Value::as_f64),
+        ) else {
+            continue;
+        };
+        let seq = v.get("seq").and_then(Value::as_f64).unwrap_or(0.0);
+        by_id.entry((round as u64, device as u64)).or_default().push(
+            LifeEdge {
+                edge: edge.to_string(),
+                t_s,
+                seq,
+                v: v.clone(),
+            },
+        );
+    }
+    by_id
+        .into_iter()
+        .map(|((round, device), edges)| Lifecycle {
+            round,
+            device,
+            edges,
+        })
+        .collect()
+}
+
+/// [`lifecycles`] restricted to one round and/or one device.
+pub fn lifecycles_filtered(
+    events: &[Value],
+    round: Option<u64>,
+    device: Option<u64>,
+) -> Vec<Lifecycle> {
+    lifecycles(events)
+        .into_iter()
+        .filter(|lc| round.map_or(true, |r| lc.round == r))
+        .filter(|lc| device.map_or(true, |d| lc.device == d))
+        .collect()
+}
+
+/// A stall threshold when the user didn't give one: 5× the median
+/// positive inter-edge gap across all lifecycles (0.0 — flag nothing —
+/// when there are too few gaps to call anything an outlier).
+pub fn auto_stall_threshold_s(lcs: &[Lifecycle]) -> f64 {
+    let mut gaps: Vec<f64> = lcs
+        .iter()
+        .flat_map(|lc| lc.gaps())
+        .map(|(_, dt)| dt)
+        .filter(|dt| *dt > 0.0)
+        .collect();
+    if gaps.len() < 4 {
+        return 0.0;
+    }
+    gaps.sort_by(|a, b| a.total_cmp(b));
+    5.0 * gaps[gaps.len() / 2]
+}
+
+// -- attribution ------------------------------------------------------------
+
+/// Aggregated latency for one attribution key (a pipeline stage or a
+/// straggler device).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GapStat {
+    pub count: u64,
+    pub total_s: f64,
+    pub max_s: f64,
+}
+
+impl GapStat {
+    pub fn add(&mut self, v: f64) {
+        self.count += 1;
+        self.total_s += v;
+        if v > self.max_s {
+            self.max_s = v;
+        }
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_s / self.count as f64
+        }
+    }
+}
+
+fn sorted_by_total(
+    map: BTreeMap<String, GapStat>,
+) -> Vec<(String, GapStat)> {
+    let mut rows: Vec<_> = map.into_iter().collect();
+    rows.sort_by(|a, b| b.1.total_s.total_cmp(&a.1.total_s));
+    rows
+}
+
+/// Total latency attributed to each pipeline stage (`a→b` inter-edge
+/// gap), slowest first.
+pub fn top_stages(lcs: &[Lifecycle]) -> Vec<(String, GapStat)> {
+    let mut map: BTreeMap<String, GapStat> = BTreeMap::new();
+    for lc in lcs {
+        for (stage, dt) in lc.gaps() {
+            map.entry(stage).or_default().add(dt);
+        }
+    }
+    sorted_by_total(map)
+}
+
+/// Per-device lifecycle durations (`count` = edges seen, `total` =
+/// first-to-last span, `max` = worst single gap), slowest first —
+/// the straggler list.
+pub fn top_devices(lcs: &[Lifecycle]) -> Vec<(String, GapStat)> {
+    let mut map: BTreeMap<String, GapStat> = BTreeMap::new();
+    for lc in lcs {
+        let key = format!("r{}/d{}", lc.round, lc.device);
+        let stat = map.entry(key).or_default();
+        stat.count = lc.edges.len() as u64;
+        stat.total_s = lc.duration_s();
+        stat.max_s = lc.max_gap().map(|(_, dt)| dt).unwrap_or(0.0);
+    }
+    sorted_by_total(map)
+}
+
+// -- rates ------------------------------------------------------------------
+
+/// One row of the windowed-rates table.
+#[derive(Clone, Debug, Default)]
+pub struct RateRow {
+    pub label: String,
+    /// Time base for the rates: the window width (trace mode) or the
+    /// round's virtual duration (fallback mode).
+    pub span_s: f64,
+    pub checkins: u64,
+    pub deferred: u64,
+    pub aggregated: u64,
+}
+
+/// Bucket admission traffic into fixed windows of `window_s` seconds
+/// over trace-edge timestamps. When the stream has no trace edges,
+/// falls back to one row per round built from the base records
+/// (`checkin-batch` sizes, `deferral` counts, `round-end`
+/// participants/picked), with the round's virtual `round_time_s` as
+/// the time base.
+pub fn windowed_rates(events: &[Value], window_s: f64) -> Vec<RateRow> {
+    let window_s = if window_s > 0.0 { window_s } else { 1.0 };
+    let mut windows: BTreeMap<u64, RateRow> = BTreeMap::new();
+    let mut saw_trace = false;
+    for v in events {
+        if v.get("reason").and_then(Value::as_str) != Some("trace-edge") {
+            continue;
+        }
+        let (Some(edge), Some(t_s)) = (
+            v.get("edge").and_then(Value::as_str),
+            v.get("t_s").and_then(Value::as_f64),
+        ) else {
+            continue;
+        };
+        saw_trace = true;
+        let w = (t_s / window_s).floor() as u64;
+        let row = windows.entry(w).or_insert_with(|| RateRow {
+            label: format!(
+                "[{:.2}s, {:.2}s)",
+                w as f64 * window_s,
+                (w + 1) as f64 * window_s
+            ),
+            span_s: window_s,
+            ..RateRow::default()
+        });
+        match edge {
+            EDGE_CHECKIN => row.checkins += 1,
+            EDGE_DEFERRED | EDGE_CONN_DEFERRED => row.deferred += 1,
+            EDGE_AGGREGATED => row.aggregated += 1,
+            _ => {}
+        }
+    }
+    if saw_trace {
+        return windows.into_values().collect();
+    }
+
+    // Fallback: per-round admission counts from the base records.
+    let mut rounds: BTreeMap<u64, RateRow> = BTreeMap::new();
+    for v in events {
+        let Some(reason) = v.get("reason").and_then(Value::as_str) else {
+            continue;
+        };
+        let Some(round) = v.get("round").and_then(Value::as_f64) else {
+            continue;
+        };
+        let row = rounds.entry(round as u64).or_insert_with(|| RateRow {
+            label: format!("round {}", round as u64),
+            ..RateRow::default()
+        });
+        match reason {
+            "checkin-batch" => {
+                row.checkins +=
+                    v.get("size").and_then(Value::as_f64).unwrap_or(0.0)
+                        as u64;
+            }
+            "deferral" => {
+                row.deferred += v
+                    .get("deferred")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(0.0) as u64;
+            }
+            "round-end" => {
+                // Serve rounds report participants; fleet rounds picked.
+                let agg = v
+                    .get("participants")
+                    .or_else(|| v.get("picked"))
+                    .and_then(Value::as_f64)
+                    .unwrap_or(0.0);
+                row.aggregated += agg as u64;
+                row.span_s = v
+                    .get("round_time_s")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(0.0);
+            }
+            _ => {}
+        }
+    }
+    rounds.into_values().collect()
+}
+
+// -- diff -------------------------------------------------------------------
+
+/// What a path turned out to hold.
+pub enum Loaded {
+    /// An NDJSON event stream.
+    Events(Vec<Value>),
+    /// A single-object `BENCH_*.json` snapshot.
+    Snapshot(Value),
+}
+
+impl Loaded {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Loaded::Events(_) => "events",
+            Loaded::Snapshot(_) => "snapshot",
+        }
+    }
+}
+
+/// Auto-detect NDJSON vs snapshot. A file that parses whole as one
+/// JSON object is a snapshot unless it carries a `"reason"` field (a
+/// one-line event stream); anything else is parsed line-by-line.
+pub fn load_any(path: &str) -> crate::Result<Loaded> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| crate::err!("reading {path}: {e}"))?;
+    if let Ok(v) = json::parse(&text) {
+        if matches!(v, Value::Obj(_)) && v.get("reason").is_none() {
+            return Ok(Loaded::Snapshot(v));
+        }
+    }
+    Ok(Loaded::Events(parse_events(&text, path)?))
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Direction {
+    HigherBetter,
+    LowerBetter,
+    Neutral,
+}
+
+/// Which way is "good" for a snapshot headline metric. Unknown keys
+/// are reported but never gate.
+fn snapshot_direction(key: &str) -> Direction {
+    match key {
+        "best_devices_stepped_per_sec"
+        | "checkins_per_sec"
+        | "tcp_checkins_per_sec"
+        | "cache_hit_rate"
+        | "speedup_vs_reference"
+        | "speedup_same_shards" => Direction::HigherBetter,
+        "p90_checkin_latency_s" | "deferral_rate" | "cache_evictions" => {
+            Direction::LowerBetter
+        }
+        _ => Direction::Neutral,
+    }
+}
+
+/// One compared metric. `delta_pct` is the candidate relative to the
+/// baseline; `regressed` is set when the candidate is worse by more
+/// than the threshold in the metric's known good direction.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub metric: String,
+    pub candidate: f64,
+    pub baseline: f64,
+    pub delta_pct: f64,
+    pub regressed: bool,
+}
+
+fn diff_row(
+    metric: String,
+    candidate: f64,
+    baseline: f64,
+    dir: Direction,
+    threshold_pct: f64,
+) -> DiffRow {
+    let delta_pct = if baseline != 0.0 {
+        (candidate - baseline) / baseline.abs() * 100.0
+    } else if candidate == 0.0 {
+        0.0
+    } else {
+        f64::INFINITY * candidate.signum()
+    };
+    let regressed = match dir {
+        Direction::HigherBetter => delta_pct < -threshold_pct,
+        Direction::LowerBetter => delta_pct > threshold_pct,
+        Direction::Neutral => false,
+    };
+    DiffRow {
+        metric,
+        candidate,
+        baseline,
+        delta_pct,
+        regressed,
+    }
+}
+
+fn numeric_top_level(v: &Value) -> Vec<(String, f64)> {
+    match v {
+        Value::Obj(kv) => kv
+            .iter()
+            .filter(|(k, _)| k != "schema_version")
+            .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+            .collect(),
+        _ => Vec::new(),
+    }
+}
+
+fn reason_counts(events: &[Value]) -> BTreeMap<String, u64> {
+    let mut map = BTreeMap::new();
+    for v in events {
+        if let Some(r) = v.get("reason").and_then(Value::as_str) {
+            *map.entry(r.to_string()).or_insert(0) += 1;
+        }
+    }
+    map
+}
+
+/// Compare a candidate run against a baseline. Both sides must be the
+/// same kind; snapshots must additionally carry the same `bench` tag
+/// (diffing a fleet snapshot against a serve one is a usage error, not
+/// an all-metrics-missing report).
+pub fn diff(
+    candidate: &Loaded,
+    baseline: &Loaded,
+    threshold_pct: f64,
+) -> crate::Result<Vec<DiffRow>> {
+    match (candidate, baseline) {
+        (Loaded::Snapshot(c), Loaded::Snapshot(b)) => {
+            let (ct, bt) = (c.req_str("bench")?, b.req_str("bench")?);
+            crate::ensure!(
+                ct == bt,
+                "cannot diff a '{ct}' snapshot against a '{bt}' snapshot"
+            );
+            let base: BTreeMap<String, f64> =
+                numeric_top_level(b).into_iter().collect();
+            let mut rows = Vec::new();
+            for (k, cv) in numeric_top_level(c) {
+                if let Some(&bv) = base.get(&k) {
+                    rows.push(diff_row(
+                        k.clone(),
+                        cv,
+                        bv,
+                        snapshot_direction(&k),
+                        threshold_pct,
+                    ));
+                }
+            }
+            crate::ensure!(
+                !rows.is_empty(),
+                "snapshots share no numeric metrics"
+            );
+            Ok(rows)
+        }
+        (Loaded::Events(c), Loaded::Events(b)) => {
+            let mut rows = Vec::new();
+            let (cc, bc) = (reason_counts(c), reason_counts(b));
+            for (k, &cv) in &cc {
+                if let Some(&bv) = bc.get(k) {
+                    rows.push(diff_row(
+                        format!("count.{k}"),
+                        cv as f64,
+                        bv as f64,
+                        Direction::Neutral,
+                        threshold_pct,
+                    ));
+                }
+            }
+            let (cs, bs) = (
+                top_stages(&lifecycles(c)),
+                top_stages(&lifecycles(b)),
+            );
+            let base: BTreeMap<String, GapStat> =
+                bs.into_iter().collect();
+            for (stage, stat) in cs {
+                if let Some(bstat) = base.get(&stage) {
+                    rows.push(diff_row(
+                        format!("stage.{stage}.mean_s"),
+                        stat.mean_s(),
+                        bstat.mean_s(),
+                        Direction::LowerBetter,
+                        threshold_pct,
+                    ));
+                }
+            }
+            crate::ensure!(
+                !rows.is_empty(),
+                "event streams share no comparable metrics"
+            );
+            Ok(rows)
+        }
+        (c, b) => crate::bail!(
+            "cannot diff {} against {} (both sides must be NDJSON \
+             streams or both BENCH_*.json snapshots)",
+            c.kind(),
+            b.kind()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{
+        EDGE_ADMITTED, EDGE_LEASE_SENT, EDGE_SELECTED,
+        EDGE_UPDATE_RECEIVED,
+    };
+    use crate::obs::{Obs, TraceEdge};
+
+    fn edge(
+        obs: &Obs,
+        round: u32,
+        device: u64,
+        name: &'static str,
+        t_s: f64,
+    ) {
+        obs.emit(&TraceEdge::new(round, device, name, t_s));
+    }
+
+    fn parsed(obs: &Obs) -> Vec<Value> {
+        obs.captured_lines()
+            .iter()
+            .map(|l| json::parse(l).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn lifecycles_group_by_round_and_device_in_seq_order() {
+        let obs = Obs::capture().with_traces();
+        edge(&obs, 1, 7, EDGE_CHECKIN, 0.10);
+        edge(&obs, 1, 9, EDGE_CHECKIN, 0.11);
+        edge(&obs, 1, 7, EDGE_ADMITTED, 0.12);
+        edge(&obs, 2, 7, EDGE_CHECKIN, 0.50);
+        obs.emit(&TraceEdge::conn_deferred(1, 0.2, 30.0));
+        let lcs = lifecycles(&parsed(&obs));
+        assert_eq!(lcs.len(), 3, "null-device edges form no lifecycle");
+        let d7r1 = lcs
+            .iter()
+            .find(|lc| lc.round == 1 && lc.device == 7)
+            .unwrap();
+        let names: Vec<&str> =
+            d7r1.edges.iter().map(|e| e.edge.as_str()).collect();
+        assert_eq!(names, [EDGE_CHECKIN, EDGE_ADMITTED]);
+        assert!(d7r1.timestamps_monotone());
+        assert!((d7r1.duration_s() - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complete_admitted_chain_is_recognized() {
+        let obs = Obs::capture().with_traces();
+        let chain = [
+            EDGE_CHECKIN,
+            EDGE_ADMITTED,
+            EDGE_SELECTED,
+            EDGE_LEASE_SENT,
+            EDGE_UPDATE_RECEIVED,
+            EDGE_AGGREGATED,
+        ];
+        for (i, name) in chain.iter().enumerate() {
+            edge(&obs, 0, 1, name, i as f64 * 0.1);
+        }
+        let lcs = lifecycles(&parsed(&obs));
+        assert!(lcs[0].is_complete_admitted());
+        assert_eq!(
+            lcs[0].max_gap().unwrap().0,
+            format!("{EDGE_CHECKIN}\u{2192}{EDGE_ADMITTED}")
+        );
+
+        let partial = Obs::capture().with_traces();
+        edge(&partial, 0, 1, EDGE_CHECKIN, 0.0);
+        edge(&partial, 0, 1, EDGE_ADMITTED, 0.1);
+        let lcs = lifecycles(&parsed(&partial));
+        assert!(!lcs[0].is_complete_admitted());
+    }
+
+    #[test]
+    fn top_stages_attribute_the_slowest_gap() {
+        let obs = Obs::capture().with_traces();
+        // Two devices; the admitted→selected gap dominates.
+        for d in [1u64, 2] {
+            edge(&obs, 0, d, EDGE_CHECKIN, 0.0);
+            edge(&obs, 0, d, EDGE_ADMITTED, 0.01);
+            edge(&obs, 0, d, EDGE_SELECTED, 1.01);
+        }
+        let lcs = lifecycles(&parsed(&obs));
+        let stages = top_stages(&lcs);
+        assert_eq!(
+            stages[0].0,
+            format!("{EDGE_ADMITTED}\u{2192}{EDGE_SELECTED}")
+        );
+        assert_eq!(stages[0].1.count, 2);
+        assert!((stages[0].1.mean_s() - 1.0).abs() < 1e-9);
+        let devs = top_devices(&lcs);
+        assert_eq!(devs.len(), 2);
+        assert!(devs[0].0.starts_with("r0/d"));
+    }
+
+    #[test]
+    fn windowed_rates_bucket_trace_edges() {
+        let obs = Obs::capture().with_traces();
+        edge(&obs, 0, 1, EDGE_CHECKIN, 0.1);
+        edge(&obs, 0, 2, EDGE_CHECKIN, 0.2);
+        edge(&obs, 0, 3, EDGE_DEFERRED, 0.3);
+        edge(&obs, 0, 1, EDGE_AGGREGATED, 1.2);
+        let rows = windowed_rates(&parsed(&obs), 1.0);
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].checkins, rows[0].deferred), (2, 1));
+        assert_eq!(rows[1].aggregated, 1);
+    }
+
+    #[test]
+    fn rates_fall_back_to_round_records_without_traces() {
+        let obs = Obs::capture();
+        obs.emit(&crate::obs::CheckinBatch { round: 0, size: 40 });
+        obs.emit(&crate::obs::Deferral {
+            round: 0,
+            deferred: 3,
+            retry_after_s: 30.0,
+            batch_size: 256,
+        });
+        obs.emit(&crate::obs::ServeRoundEnd {
+            round: 0,
+            checkins: 43,
+            admitted: 40,
+            deferred: 3,
+            participants: 8,
+            round_time_s: 2.0,
+            round_energy_j: 1.0,
+        });
+        let rows = windowed_rates(&parsed(&obs), 1.0);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].label, "round 0");
+        assert_eq!(
+            (rows[0].checkins, rows[0].deferred, rows[0].aggregated),
+            (40, 3, 8)
+        );
+        assert_eq!(rows[0].span_s, 2.0);
+    }
+
+    #[test]
+    fn snapshot_diff_flags_directional_regressions_only() {
+        let a = Value::obj()
+            .set("bench", "fleet")
+            .set("schema_version", 1.0)
+            .set("best_devices_stepped_per_sec", 50.0)
+            .set("rounds", 10.0);
+        let b = Value::obj()
+            .set("bench", "fleet")
+            .set("schema_version", 2.0)
+            .set("best_devices_stepped_per_sec", 100.0)
+            .set("rounds", 20.0);
+        let rows = diff(
+            &Loaded::Snapshot(a.clone()),
+            &Loaded::Snapshot(b.clone()),
+            10.0,
+        )
+        .unwrap();
+        let tput = rows
+            .iter()
+            .find(|r| r.metric == "best_devices_stepped_per_sec")
+            .unwrap();
+        assert!(tput.regressed, "-50% throughput must gate");
+        assert!((tput.delta_pct + 50.0).abs() < 1e-9);
+        let neutral =
+            rows.iter().find(|r| r.metric == "rounds").unwrap();
+        assert!(!neutral.regressed, "unknown direction never gates");
+        assert!(
+            !rows.iter().any(|r| r.metric == "schema_version"),
+            "schema_version is not a metric"
+        );
+        // Reversed order: candidate faster than baseline — no gate.
+        let rows =
+            diff(&Loaded::Snapshot(b), &Loaded::Snapshot(a), 10.0)
+                .unwrap();
+        assert!(rows.iter().all(|r| !r.regressed));
+    }
+
+    #[test]
+    fn mismatched_diff_inputs_error() {
+        let snap = Loaded::Snapshot(Value::obj().set("bench", "fleet"));
+        let obs = Obs::capture();
+        obs.emit(&crate::obs::CheckinBatch { round: 0, size: 1 });
+        let ev = Loaded::Events(parsed(&obs));
+        assert!(diff(&snap, &ev, 10.0).is_err());
+        let serve = Loaded::Snapshot(Value::obj().set("bench", "serve"));
+        let fleet = Loaded::Snapshot(
+            Value::obj().set("bench", "fleet").set("x", 1.0),
+        );
+        assert!(diff(&serve, &fleet, 10.0).is_err());
+    }
+
+    #[test]
+    fn every_typed_reason_has_a_schema() {
+        for reason in [
+            "round-start",
+            "shard-progress",
+            "round-end",
+            "profile-explored",
+            "profile-adopted",
+            "cache-hit-miss",
+            "checkin-batch",
+            "deferral",
+            "late-carryover",
+            "serve-start",
+            "span-summary",
+            "bench-result",
+            "trace-edge",
+            "lane-burst",
+        ] {
+            assert!(
+                !required_fields(reason).is_empty(),
+                "reason '{reason}' lost its schema"
+            );
+        }
+        assert!(required_fields("some-future-reason").is_empty());
+    }
+}

@@ -42,9 +42,15 @@ struct Sink {
 
 /// Handle to the shared event sink. Clones share one sequence counter
 /// and one output. `Obs::off()` is a null handle.
+///
+/// The `traces` flag opts a handle into per-device lifecycle edges
+/// ([`super::trace::TraceEdge`]) on top of the per-round records: a
+/// traced serve round emits a few lines per *device*, so the firehose
+/// is off unless explicitly requested (`--trace` on the CLI).
 #[derive(Clone, Default)]
 pub struct Obs {
     inner: Option<Arc<Sink>>,
+    traces: bool,
 }
 
 impl fmt::Debug for Obs {
@@ -69,7 +75,10 @@ impl fmt::Debug for Obs {
 impl Obs {
     /// Disabled sink: every emit is a no-op.
     pub fn off() -> Obs {
-        Obs { inner: None }
+        Obs {
+            inner: None,
+            traces: false,
+        }
     }
 
     fn with_target(target: Target) -> Obs {
@@ -77,7 +86,15 @@ impl Obs {
             inner: Some(Arc::new(Sink {
                 state: Mutex::new(SinkState { seq: 0, target }),
             })),
+            traces: false,
         }
+    }
+
+    /// Opt this handle (and everything cloned from it afterwards) into
+    /// per-device lifecycle trace edges.
+    pub fn with_traces(mut self) -> Obs {
+        self.traces = true;
+        self
     }
 
     /// Emit NDJSON lines to stderr (keeps stdout clean for tables and
@@ -109,6 +126,12 @@ impl Obs {
     /// construction that is not free.
     pub fn enabled(&self) -> bool {
         self.inner.is_some()
+    }
+
+    /// True when per-device trace edges should be emitted: the sink is
+    /// live *and* was opted in via [`Obs::with_traces`].
+    pub fn trace_on(&self) -> bool {
+        self.traces && self.inner.is_some()
     }
 
     /// Serialize and write one event line. Telemetry is best-effort:
@@ -298,11 +321,15 @@ impl ObsEvent for CheckinBatch {
     }
 }
 
-/// Serve admission: devices turned away at round close.
+/// Serve admission: devices turned away at round close. Carries the
+/// actual backoff advised on the wire (`retry_after_s`) and the
+/// coalescing batch size in force, so an admission storm is diagnosable
+/// from the stream alone.
 pub struct Deferral {
     pub round: u32,
     pub deferred: u64,
     pub retry_after_s: f64,
+    pub batch_size: usize,
 }
 
 impl ObsEvent for Deferral {
@@ -314,6 +341,7 @@ impl ObsEvent for Deferral {
             .set("round", self.round as f64)
             .set("deferred", self.deferred as f64)
             .set("retry_after_s", self.retry_after_s)
+            .set("batch_size", self.batch_size)
     }
 }
 
@@ -359,6 +387,27 @@ impl ObsEvent for ServeRoundEnd {
             .set("participants", self.participants)
             .set("round_time_s", self.round_time_s)
             .set("round_energy_j", self.round_energy_j)
+    }
+}
+
+/// Loadgen: one lane finished its check-in burst for a round.
+pub struct LaneBurst {
+    pub lane: usize,
+    pub round: usize,
+    pub size: usize,
+    pub burst_s: f64,
+}
+
+impl ObsEvent for LaneBurst {
+    fn reason(&self) -> &'static str {
+        "lane-burst"
+    }
+    fn payload(&self) -> Value {
+        Value::obj()
+            .set("lane", self.lane)
+            .set("round", self.round)
+            .set("size", self.size)
+            .set("burst_s", self.burst_s)
     }
 }
 

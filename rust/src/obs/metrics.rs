@@ -203,6 +203,14 @@ impl MetricsRegistry {
         self.hists[id.0].1.observe(v);
     }
 
+    /// Fold a free-standing histogram into a registered one — how a
+    /// lock-scoped local histogram (e.g. the serve intake timer kept
+    /// under the pending lock) lands in the round registry at a
+    /// barrier.
+    pub fn merge_hist(&mut self, id: HistId, other: &Histogram) {
+        self.hists[id.0].1.merge_from(other);
+    }
+
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
         self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
     }
@@ -295,6 +303,94 @@ mod tests {
         assert_eq!(a.count(), whole.count());
         assert_eq!(a.quantile(0.9), whole.quantile(0.9));
         assert!((a.sum() - whole.sum()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overflow_bucket_survives_merge_and_json() {
+        // Samples beyond the last bound land in the overflow bucket,
+        // report the observed max as their quantile, and keep doing so
+        // after a merge in either direction.
+        let mut over = Histogram::default();
+        over.observe(25.0);
+        over.observe(60.0);
+        assert_eq!(over.quantile(0.99), 60.0);
+
+        let mut under = Histogram::default();
+        under.observe(1e-3);
+        under.merge_from(&over);
+        assert_eq!(under.count(), 3);
+        assert_eq!(under.max(), 60.0);
+        assert_eq!(under.quantile(1.0), 60.0);
+        let j = under.to_json();
+        assert_eq!(j.req_f64("count").unwrap(), 3.0);
+        assert_eq!(j.req_f64("max_s").unwrap(), 60.0);
+        // p50 is rank 2 of {1e-3, 25, 60}: overflow bucket -> max.
+        assert_eq!(j.req_f64("p50_s").unwrap(), 60.0);
+    }
+
+    #[test]
+    fn shard_merge_is_count_invariant_at_one_and_four_shards() {
+        // The same sample stream recorded by 1 shard or striped over 4
+        // shard-local registries and merged in shard order must produce
+        // identical counters, bucket counts, and quantiles — the
+        // determinism discipline the fleet drive relies on.
+        let samples: Vec<f64> =
+            (0..200).map(|i| ((i * 37) % 97) as f64 * 1e-4).collect();
+
+        let mut one = MetricsRegistry::default();
+        let h1 = one.hist("fleet.round_wall_s", LATENCY_BUCKETS_S);
+        let c1 = one.counter("fleet.online");
+        for &v in &samples {
+            one.observe(h1, v);
+            one.add(c1, 1);
+        }
+
+        let mut shards: Vec<MetricsRegistry> =
+            (0..4).map(|_| MetricsRegistry::default()).collect();
+        for (i, &v) in samples.iter().enumerate() {
+            let reg = &mut shards[i % 4];
+            let h = reg.hist("fleet.round_wall_s", LATENCY_BUCKETS_S);
+            reg.observe(h, v);
+            reg.inc("fleet.online", 1);
+        }
+        let mut four = MetricsRegistry::default();
+        for reg in &shards {
+            four.merge_from(reg);
+        }
+
+        assert_eq!(
+            four.counter_value("fleet.online"),
+            one.counter_value("fleet.online")
+        );
+        let (ho, hf) = (
+            one.histogram("fleet.round_wall_s").unwrap(),
+            four.histogram("fleet.round_wall_s").unwrap(),
+        );
+        assert_eq!(hf.count(), ho.count());
+        assert_eq!(hf.counts, ho.counts);
+        assert_eq!(hf.sum().to_bits(), ho.sum().to_bits());
+        assert_eq!(hf.max().to_bits(), ho.max().to_bits());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(
+                hf.quantile(q).to_bits(),
+                ho.quantile(q).to_bits(),
+                "q{q} diverged between 1 and 4 shards"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_hist_folds_a_local_histogram_into_the_registry() {
+        let mut local = Histogram::default();
+        local.observe(2e-3);
+        local.observe(4e-3);
+        let mut reg = MetricsRegistry::default();
+        let id = reg.hist("serve.edge.checkin_s", LATENCY_BUCKETS_S);
+        reg.observe(id, 1e-3);
+        reg.merge_hist(id, &local);
+        let h = reg.histogram("serve.edge.checkin_s").unwrap();
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 7e-3).abs() < 1e-12);
     }
 
     #[test]

@@ -13,6 +13,14 @@
 //! 3. **spans** ([`span`]): scoped phase timers (availability sweep,
 //!    select, step, aggregate, flush) that land in both the event
 //!    stream and `report::obs_table`.
+//! 4. **traces** ([`trace`]): opt-in per-device lifecycle edges keyed
+//!    `(round, device_id)` with monotonic timestamps, stamped at the
+//!    coordinator/drive barrier points.
+//!
+//! The consume side lives in [`analyze`]: lifecycle reconstruction,
+//! stage/straggler attribution, windowed rates, and run-vs-run diffing
+//! over any NDJSON stream or `BENCH_*.json` snapshot — the engine
+//! behind `swan obs trace|top|rates|diff`.
 //!
 //! The load-bearing invariant is **digest neutrality**: enabling any
 //! of this must not change a single bit of `FleetOutcome` digests or
@@ -20,14 +28,17 @@
 //! *observes* existing control-flow boundaries — it never adds RNG
 //! draws, reorders float folds, or injects barriers of its own.
 
+pub mod analyze;
 pub mod event;
 pub mod metrics;
 pub mod span;
+pub mod trace;
 
 pub use event::{
-    BenchResult, CacheHitMiss, CheckinBatch, Deferral, LateCarryover,
-    Obs, ObsEvent, ProfileAdopted, ProfileExplored, RoundEnd,
-    RoundStart, ServeRoundEnd, ServeStart, ShardProgress, SpanSummary,
+    BenchResult, CacheHitMiss, CheckinBatch, Deferral, LaneBurst,
+    LateCarryover, Obs, ObsEvent, ProfileAdopted, ProfileExplored,
+    RoundEnd, RoundStart, ServeRoundEnd, ServeStart, ShardProgress,
+    SpanSummary,
 };
 pub use metrics::{
     CounterId, HistId, Histogram, MetricsRegistry, LATENCY_BUCKETS_S,
@@ -36,3 +47,4 @@ pub use span::{
     SpanEntry, SpanId, Spans, PHASE_AGGREGATE, PHASE_AVAILABILITY,
     PHASE_CLOSE, PHASE_FINISH, PHASE_FLUSH, PHASE_SELECT, PHASE_STEP,
 };
+pub use trace::{TraceClock, TraceEdge};

@@ -158,4 +158,67 @@ mod tests {
         assert_eq!(s.entries()[0].count, 1);
         assert!(s.entries()[0].total_s >= 0.0);
     }
+
+    #[test]
+    fn nested_closes_bill_the_inner_phase_to_both_scopes() {
+        // Spans are closed by scope exit, innermost first. A nested
+        // record must land in its own phase AND inside the enclosing
+        // phase's wall-clock (outer total >= inner total), and closing
+        // the inner scope must not disturb the outer handle.
+        let mut outer = Spans::default();
+        let o = outer.span("round");
+        let mut inner = Spans::default();
+        let i = inner.span(PHASE_STEP);
+        outer.time(o, || {
+            inner.time(i, || std::thread::sleep(
+                std::time::Duration::from_millis(2),
+            ));
+        });
+        assert_eq!(outer.entries()[0].count, 1);
+        assert_eq!(inner.entries()[0].count, 1);
+        assert!(
+            outer.entries()[0].total_s >= inner.entries()[0].total_s,
+            "outer scope must contain the nested one"
+        );
+
+        // Same shape on ONE span set: handles stay valid across a
+        // nested close because record never reorders entries.
+        let mut s = Spans::default();
+        let a = s.span("outer");
+        let b = s.span("inner");
+        s.record(b, 0.25); // inner closes first
+        s.record(a, 1.0); // then the enclosing scope
+        assert_eq!(s.entries()[0].name, "outer");
+        assert!((s.entries()[0].total_s - 1.0).abs() < 1e-12);
+        assert!((s.entries()[1].total_s - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_order_closes_accumulate_by_handle_not_close_order() {
+        // Handles may be recorded in any order, repeatedly, and
+        // interleaved; the entry a handle addresses is fixed at
+        // registration, so close order cannot corrupt attribution.
+        let mut s = Spans::default();
+        let avail = s.span(PHASE_AVAILABILITY);
+        let step = s.span(PHASE_STEP);
+        let agg = s.span(PHASE_AGGREGATE);
+        s.record(agg, 0.3); // closes before the phases that precede it
+        s.record(avail, 0.1);
+        s.record(step, 0.7);
+        s.record(avail, 0.2); // reopened and closed again
+        let names: Vec<&str> =
+            s.entries().iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![PHASE_AVAILABILITY, PHASE_STEP, PHASE_AGGREGATE],
+            "entry order is registration order, not close order"
+        );
+        assert_eq!(s.entries()[0].count, 2);
+        assert!((s.entries()[0].total_s - 0.3).abs() < 1e-12);
+        assert!((s.entries()[0].max_s - 0.2).abs() < 1e-12);
+        assert!((s.total_s() - 1.3).abs() < 1e-12);
+        // Re-registering an already-closed phase returns the same
+        // handle (no duplicate entries from late lookups).
+        assert_eq!(s.span(PHASE_AGGREGATE), agg);
+    }
 }

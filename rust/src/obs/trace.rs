@@ -1,0 +1,223 @@
+//! Causal device traces: the per-device lifecycle layer of the
+//! telemetry spine.
+//!
+//! A trace is identified by `(round, device_id)` — both already
+//! deterministic — and consists of **edges**: the barrier points a
+//! check-in passes on its way through the serve pipeline
+//! (or a picked device passes through the fleet drive). Every edge is
+//! one [`TraceEdge`] NDJSON record carrying a monotonic timestamp from
+//! a [`TraceClock`] anchored at coordinator/drive construction, so the
+//! consume side ([`super::analyze`]) can reconstruct lifecycles and
+//! attribute inter-edge latency without any cross-event bookkeeping.
+//!
+//! ```text
+//! serve lifecycle (one check-in, round R):
+//!
+//!   checkin ──▶ admitted ──▶ selected ──▶ lease-sent ──▶
+//!     │            │            │          update-received ──▶ aggregated
+//!     │            │            └──▶ rejected          (or ──▶ late-carryover,
+//!     │            └──────────────── (close barrier)        stamped into R+1)
+//!     └──▶ deferred  (admission bound; carries retry_after_s)
+//!
+//! fleet lifecycle (one picked device, round R):
+//!   selected ──▶ stepped
+//! ```
+//!
+//! **Digest neutrality.** Edges are *observations* of barriers the
+//! round structure already has: they never draw RNG, never reorder a
+//! float fold, and their timestamps are wall-clock (`Instant`)
+//! quantities that no simulation state ever reads back. Tracing is
+//! additionally gated behind [`Obs::trace_on`](super::Obs::trace_on)
+//! (the `--trace` CLI switch) because a traced serve round emits a few
+//! edges per *device*, not per round — the base event stream stays
+//! lean unless lifecycles were asked for.
+
+use crate::util::json::Value;
+use std::time::Instant;
+
+use super::event::ObsEvent;
+
+/// Serve pipeline edges, in causal order.
+pub const EDGE_CHECKIN: &str = "checkin";
+pub const EDGE_ADMITTED: &str = "admitted";
+pub const EDGE_DEFERRED: &str = "deferred";
+pub const EDGE_SELECTED: &str = "selected";
+pub const EDGE_REJECTED: &str = "rejected";
+pub const EDGE_LEASE_SENT: &str = "lease-sent";
+pub const EDGE_UPDATE_RECEIVED: &str = "update-received";
+pub const EDGE_AGGREGATED: &str = "aggregated";
+pub const EDGE_LATE_CARRYOVER: &str = "late-carryover";
+/// Transport-level deferral: a connection turned away by a saturated
+/// IO pool, before any device id was read (the record's `device` is
+/// null).
+pub const EDGE_CONN_DEFERRED: &str = "conn-deferred";
+/// Fleet drive edge: a picked device finished its local epoch.
+pub const EDGE_STEPPED: &str = "stepped";
+
+/// The complete happy-path chain of an admitted, selected serve
+/// check-in — what `swan obs trace --expect-complete` looks for.
+pub const SERVE_ADMITTED_CHAIN: &[&str] = &[
+    EDGE_CHECKIN,
+    EDGE_ADMITTED,
+    EDGE_SELECTED,
+    EDGE_LEASE_SENT,
+    EDGE_UPDATE_RECEIVED,
+    EDGE_AGGREGATED,
+];
+
+/// Monotonic timestamp source for trace edges: seconds since the
+/// owning coordinator/drive started. `Instant`-backed, so edge
+/// timestamps stamped in causal order are guaranteed non-decreasing —
+/// the property the lifecycle reconstruction asserts.
+#[derive(Clone, Debug)]
+pub struct TraceClock(Instant);
+
+impl TraceClock {
+    pub fn start() -> TraceClock {
+        TraceClock(Instant::now())
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for TraceClock {
+    fn default() -> TraceClock {
+        TraceClock::start()
+    }
+}
+
+/// One lifecycle edge. `detail` fields (an object) are inlined after
+/// the fixed fields, so e.g. a `deferred` edge carries the actual
+/// `retry_after_s` the device was told.
+pub struct TraceEdge {
+    pub round: u32,
+    /// `None` for transport-level edges where no device id exists yet
+    /// (serialized as JSON null).
+    pub device: Option<u64>,
+    pub edge: &'static str,
+    /// Seconds on the emitting component's [`TraceClock`].
+    pub t_s: f64,
+    pub detail: Value,
+}
+
+impl TraceEdge {
+    pub fn new(
+        round: u32,
+        device: u64,
+        edge: &'static str,
+        t_s: f64,
+    ) -> TraceEdge {
+        TraceEdge {
+            round,
+            device: Some(device),
+            edge,
+            t_s,
+            detail: Value::Null,
+        }
+    }
+
+    /// Append a detail field (inlined into the emitted record).
+    pub fn with(mut self, key: &str, v: impl Into<Value>) -> TraceEdge {
+        let obj = match self.detail {
+            Value::Obj(_) => self.detail,
+            _ => Value::obj(),
+        };
+        self.detail = obj.set(key, v);
+        self
+    }
+
+    /// The accept-pool-overflow edge: no device id is known because the
+    /// connection was refused before its first frame was read.
+    pub fn conn_deferred(
+        round: u32,
+        t_s: f64,
+        retry_after_s: f64,
+    ) -> TraceEdge {
+        TraceEdge {
+            round,
+            device: None,
+            edge: EDGE_CONN_DEFERRED,
+            t_s,
+            detail: Value::obj().set("retry_after_s", retry_after_s),
+        }
+    }
+}
+
+impl ObsEvent for TraceEdge {
+    fn reason(&self) -> &'static str {
+        "trace-edge"
+    }
+    fn payload(&self) -> Value {
+        let mut v = Value::obj()
+            .set("round", self.round as f64)
+            .set(
+                "device",
+                match self.device {
+                    Some(d) => Value::Num(d as f64),
+                    None => Value::Null,
+                },
+            )
+            .set("edge", self.edge)
+            .set("t_s", self.t_s);
+        if let Value::Obj(kv) = &self.detail {
+            for (k, val) in kv {
+                v = v.set(k, val.clone());
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Obs;
+    use crate::util::json;
+
+    #[test]
+    fn edge_records_inline_their_detail_fields() {
+        let obs = Obs::capture().with_traces();
+        assert!(obs.trace_on());
+        obs.emit(
+            &TraceEdge::new(3, 17, EDGE_DEFERRED, 0.25)
+                .with("retry_after_s", 30.0),
+        );
+        let line = &obs.captured_lines()[0];
+        let v = json::parse(line).expect("edge line parses");
+        assert_eq!(v.req_str("reason").unwrap(), "trace-edge");
+        assert_eq!(v.req_f64("round").unwrap(), 3.0);
+        assert_eq!(v.req_f64("device").unwrap(), 17.0);
+        assert_eq!(v.req_str("edge").unwrap(), EDGE_DEFERRED);
+        assert_eq!(v.req_f64("t_s").unwrap(), 0.25);
+        assert_eq!(v.req_f64("retry_after_s").unwrap(), 30.0);
+    }
+
+    #[test]
+    fn conn_deferred_has_a_null_device() {
+        let obs = Obs::capture().with_traces();
+        obs.emit(&TraceEdge::conn_deferred(0, 0.0, 30.0));
+        let v = json::parse(&obs.captured_lines()[0]).unwrap();
+        assert_eq!(v.req("device").unwrap(), &Value::Null);
+        assert_eq!(v.req_str("edge").unwrap(), EDGE_CONN_DEFERRED);
+    }
+
+    #[test]
+    fn trace_flag_gates_but_does_not_replace_enabled() {
+        let off = Obs::off().with_traces();
+        assert!(!off.trace_on(), "off sink never traces");
+        let plain = Obs::capture();
+        assert!(plain.enabled() && !plain.trace_on());
+        let traced = Obs::capture().with_traces();
+        assert!(traced.enabled() && traced.trace_on());
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let c = TraceClock::start();
+        let a = c.now_s();
+        let b = c.now_s();
+        assert!(b >= a && a >= 0.0);
+    }
+}

@@ -17,6 +17,6 @@ pub use fig1::fig1b_matmul_rows;
 pub use fig2::fig2_combo_rows;
 pub use fleet_eval::{fleet_eval_rows, fleet_table};
 pub use local_eval::{table2_rows, Table2Row};
-pub use obs_eval::{obs_metrics_table, obs_table};
+pub use obs_eval::{obs_metrics_table, obs_table, obs_top_table};
 pub use pcmark_eval::{fig3_rows, table3_rows, Table3Row};
 pub use serve_eval::serve_table;

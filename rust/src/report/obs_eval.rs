@@ -6,6 +6,7 @@
 //! throughput table so "where did the round wall-clock go" is answered
 //! in the same terminal scroll.
 
+use crate::obs::analyze::GapStat;
 use crate::obs::{MetricsRegistry, Spans};
 use crate::util::bench::fmt_secs;
 use crate::util::table::Table;
@@ -69,6 +70,36 @@ pub fn obs_metrics_table(title: &str, metrics: &MetricsRegistry) -> Table {
     t
 }
 
+/// Top-K attribution table for `swan obs top`: one row per key (a
+/// pipeline stage or a `rR/dD` device) from the analysis engine's
+/// [`GapStat`] aggregates, already sorted slowest-first by the caller.
+pub fn obs_top_table(
+    title: &str,
+    rows: &[(String, GapStat)],
+) -> Table {
+    let mut t = Table::new(
+        title,
+        &["key", "count", "total", "mean", "max", "share"],
+    );
+    let total: f64 = rows.iter().map(|(_, s)| s.total_s).sum();
+    for (key, s) in rows {
+        let share = if total > 0.0 {
+            100.0 * s.total_s / total
+        } else {
+            0.0
+        };
+        t.row(&[
+            key.clone(),
+            s.count.to_string(),
+            fmt_secs(s.total_s),
+            fmt_secs(s.mean_s()),
+            fmt_secs(s.max_s),
+            format!("{share:.1}%"),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +139,26 @@ mod tests {
         assert!(obs_metrics_table("t", &MetricsRegistry::default())
             .rows
             .is_empty());
+        assert!(obs_top_table("t", &[]).rows.is_empty());
+    }
+
+    #[test]
+    fn top_table_shares_follow_totals() {
+        let mut a = GapStat::default();
+        a.add(3.0);
+        let mut b = GapStat::default();
+        b.add(0.5);
+        b.add(0.5);
+        let rows = vec![
+            ("admitted\u{2192}selected".to_string(), a),
+            ("checkin\u{2192}admitted".to_string(), b),
+        ];
+        let t = obs_top_table("top stages", &rows);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "admitted\u{2192}selected");
+        assert_eq!(t.rows[0][1], "1");
+        assert_eq!(t.rows[0][5], "75.0%");
+        assert_eq!(t.rows[1][1], "2");
+        assert_eq!(t.rows[1][5], "25.0%");
     }
 }

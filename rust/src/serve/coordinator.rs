@@ -41,6 +41,7 @@
 //! into latency collapse.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -119,6 +120,10 @@ struct Pending {
     checkins: u64,
     admitted: usize,
     deferred: u64,
+    /// Intake service time per check-in (the `checkin` pipeline edge),
+    /// kept lock-local and merged into the round registry at close —
+    /// same discipline as the shard-local fleet metrics.
+    intake_hist: crate::obs::Histogram,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -185,6 +190,13 @@ pub struct Coordinator {
     pending: Mutex<Pending>,
     round: Mutex<RoundState>,
     obs: crate::obs::Obs,
+    /// Timestamp source for trace edges, anchored at construction.
+    clock: crate::obs::TraceClock,
+    /// The round an arriving check-in will land in, maintained at the
+    /// close/finish barriers. Purely observational (trace-edge round
+    /// identity without taking the round lock on the intake path);
+    /// Relaxed is enough because nothing simulation-visible reads it.
+    intake_round: AtomicU32,
 }
 
 impl Coordinator {
@@ -215,6 +227,7 @@ impl Coordinator {
                 checkins: 0,
                 admitted: 0,
                 deferred: 0,
+                intake_hist: crate::obs::Histogram::default(),
             }),
             round: Mutex::new(RoundState {
                 round: 0,
@@ -236,6 +249,8 @@ impl Coordinator {
             cfg,
             workload,
             obs,
+            clock: crate::obs::TraceClock::start(),
+            intake_round: AtomicU32::new(0),
         })
     }
 
@@ -246,6 +261,18 @@ impl Coordinator {
     /// The attached telemetry sink (off by default).
     pub fn obs(&self) -> &crate::obs::Obs {
         &self.obs
+    }
+
+    /// The round an arriving check-in will land in (observational —
+    /// see the field docs). Used by trace edges emitted outside the
+    /// round lock, e.g. the TCP server's accept-overflow deferral.
+    pub fn intake_round(&self) -> u32 {
+        self.intake_round.load(Ordering::Relaxed)
+    }
+
+    /// Seconds on this coordinator's trace clock.
+    pub fn trace_now_s(&self) -> f64 {
+        self.clock.now_s()
     }
 
     fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
@@ -317,43 +344,82 @@ impl Coordinator {
         {
             return Ack::Rejected;
         }
-        let full_batch = {
+        let t0 = Instant::now();
+        let (ack, full_batch) = {
             let mut p = Self::lock(&self.pending);
             p.checkins += 1;
-            if self.cfg.admit_capacity > 0
+            let out = if self.cfg.admit_capacity > 0
                 && p.admitted >= self.cfg.admit_capacity
             {
                 p.deferred += 1;
-                return Ack::Deferred {
-                    retry_after_s: RETRY_AFTER_S,
-                };
-            }
-            p.admitted += 1;
-            p.batch.push(ci);
-            if p.batch.len() >= self.cfg.batch_size {
-                std::mem::replace(
-                    &mut p.batch,
-                    Vec::with_capacity(self.cfg.batch_size),
+                (
+                    Ack::Deferred {
+                        retry_after_s: RETRY_AFTER_S,
+                    },
+                    Vec::new(),
                 )
             } else {
-                Vec::new()
-            }
+                p.admitted += 1;
+                p.batch.push(ci);
+                let full = if p.batch.len() >= self.cfg.batch_size {
+                    std::mem::replace(
+                        &mut p.batch,
+                        Vec::with_capacity(self.cfg.batch_size),
+                    )
+                } else {
+                    Vec::new()
+                };
+                (Ack::Admitted, full)
+            };
+            p.intake_hist.observe(t0.elapsed().as_secs_f64());
+            out
         };
+        if self.obs.trace_on() {
+            let round = self.intake_round();
+            let t_s = self.clock.now_s();
+            self.obs.emit(&crate::obs::TraceEdge::new(
+                round,
+                ci.device,
+                crate::obs::trace::EDGE_CHECKIN,
+                t_s,
+            ));
+            match ack {
+                Ack::Admitted => self.obs.emit(
+                    &crate::obs::TraceEdge::new(
+                        round,
+                        ci.device,
+                        crate::obs::trace::EDGE_ADMITTED,
+                        t_s,
+                    ),
+                ),
+                Ack::Deferred { retry_after_s } => self.obs.emit(
+                    &crate::obs::TraceEdge::new(
+                        round,
+                        ci.device,
+                        crate::obs::trace::EDGE_DEFERRED,
+                        t_s,
+                    )
+                    .with("retry_after_s", retry_after_s as f64),
+                ),
+                _ => {}
+            }
+        }
         self.flush_batch(full_batch);
-        Ack::Admitted
+        ack
     }
 
     /// End the check-in phase of `round`: flush the partial batch, run
     /// selection, resolve the picked leases. Returns the picked count.
     pub fn close_round(&self, round: u32) -> crate::Result<u32> {
         let t0 = Instant::now();
-        let (batch, checkins, deferred) = {
+        let (batch, checkins, deferred, intake_hist) = {
             let mut p = Self::lock(&self.pending);
             let b = std::mem::take(&mut p.batch);
             let c = std::mem::take(&mut p.checkins);
             let d = std::mem::take(&mut p.deferred);
+            let ih = std::mem::take(&mut p.intake_hist);
             p.admitted = 0;
-            (b, c, d)
+            (b, c, d, ih)
         };
         self.flush_batch(batch);
 
@@ -423,16 +489,57 @@ impl Coordinator {
         r.updates = vec![None; n];
         r.received = 0;
         r.phase = Phase::Update;
+        // check-ins arriving from here on land in the next round
+        self.intake_round.store(round + 1, Ordering::Relaxed);
         let h = r
             .metrics
             .hist("serve.close_s", crate::obs::LATENCY_BUCKETS_S);
         r.metrics.observe(h, t0.elapsed().as_secs_f64());
+        let h = r
+            .metrics
+            .hist("serve.edge.checkin_s", crate::obs::LATENCY_BUCKETS_S);
+        r.metrics.merge_hist(h, &intake_hist);
+        // the selection verdict per admitted device, for trace edges
+        // emitted after the lock drops
+        let verdicts: Vec<(u64, Option<u32>)> = if self.obs.trace_on() {
+            r.admitted
+                .iter()
+                .map(|ci| {
+                    (ci.device, r.leases.get(&ci.device).map(|l| l.seq))
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         drop(r);
+        if self.obs.trace_on() {
+            let t_s = self.clock.now_s();
+            for (device, seq) in verdicts {
+                match seq {
+                    Some(seq) => self.obs.emit(
+                        &crate::obs::TraceEdge::new(
+                            round,
+                            device,
+                            crate::obs::trace::EDGE_SELECTED,
+                            t_s,
+                        )
+                        .with("seq", seq as f64),
+                    ),
+                    None => self.obs.emit(&crate::obs::TraceEdge::new(
+                        round,
+                        device,
+                        crate::obs::trace::EDGE_REJECTED,
+                        t_s,
+                    )),
+                }
+            }
+        }
         if deferred > 0 && self.obs.enabled() {
             self.obs.emit(&crate::obs::Deferral {
                 round,
                 deferred,
                 retry_after_s: RETRY_AFTER_S as f64,
+                batch_size: self.cfg.batch_size,
             });
         }
         Ok(n as u32)
@@ -440,16 +547,40 @@ impl Coordinator {
 
     /// An admitted device asks whether it was selected this round.
     pub fn lease_poll(&self, device: u64) -> crate::Result<Option<PlanLease>> {
-        let r = Self::lock(&self.round);
+        let t0 = Instant::now();
+        let mut r = Self::lock(&self.round);
         crate::ensure!(
             r.phase == Phase::Update,
             "serve: lease_poll before the round closed"
         );
-        Ok(r.leases.get(&device).copied())
+        let lease = r.leases.get(&device).copied();
+        let h = r
+            .metrics
+            .hist("serve.edge.lease_s", crate::obs::LATENCY_BUCKETS_S);
+        r.metrics.observe(h, t0.elapsed().as_secs_f64());
+        let round = r.round;
+        drop(r);
+        if self.obs.trace_on() {
+            if let Some(l) = &lease {
+                self.obs.emit(
+                    &crate::obs::TraceEdge::new(
+                        round,
+                        device,
+                        crate::obs::trace::EDGE_LEASE_SENT,
+                        self.clock.now_s(),
+                    )
+                    .with("seq", l.seq as f64),
+                );
+            }
+        }
+        Ok(lease)
     }
 
     /// Accept a leased device's update into its dense seq slot.
     pub fn push_update(&self, up: UpdatePush) -> Ack {
+        let t0 = Instant::now();
+        let device = up.device;
+        let round = up.round;
         let mut r = Self::lock(&self.round);
         if r.phase != Phase::Update {
             return Ack::Rejected;
@@ -470,6 +601,19 @@ impl Coordinator {
         }
         r.updates[slot] = Some((up.params, up.weight));
         r.received += 1;
+        let h = r
+            .metrics
+            .hist("serve.edge.update_s", crate::obs::LATENCY_BUCKETS_S);
+        r.metrics.observe(h, t0.elapsed().as_secs_f64());
+        drop(r);
+        if self.obs.trace_on() {
+            self.obs.emit(&crate::obs::TraceEdge::new(
+                round,
+                device,
+                crate::obs::trace::EDGE_UPDATE_RECEIVED,
+                self.clock.now_s(),
+            ));
+        }
         Ack::Accepted
     }
 
@@ -561,6 +705,19 @@ impl Coordinator {
         };
 
         let carried = r.next_admitted.len();
+        // trace-edge payloads, collected before the round state is
+        // recycled and emitted after the lock drops
+        let (agg_devices, carried_devices) = if self.obs.trace_on() {
+            (
+                r.picked.clone(),
+                r.next_admitted
+                    .iter()
+                    .map(|ci| ci.device)
+                    .collect::<Vec<u64>>(),
+            )
+        } else {
+            (Vec::new(), Vec::new())
+        };
         r.round += 1;
         r.phase = Phase::CheckIn;
         // late check-ins banked during the update phase open the next
@@ -582,6 +739,27 @@ impl Coordinator {
                 (cache.hits, cache.misses, cache.evictions)
             };
             drop(r);
+            if self.obs.trace_on() {
+                let t_s = self.clock.now_s();
+                for device in agg_devices {
+                    self.obs.emit(&crate::obs::TraceEdge::new(
+                        round,
+                        device,
+                        crate::obs::trace::EDGE_AGGREGATED,
+                        t_s,
+                    ));
+                }
+                // a carried check-in's lifecycle continues in the round
+                // it was banked into
+                for device in carried_devices {
+                    self.obs.emit(&crate::obs::TraceEdge::new(
+                        round + 1,
+                        device,
+                        crate::obs::trace::EDGE_LATE_CARRYOVER,
+                        t_s,
+                    ));
+                }
+            }
             self.obs.emit(&crate::obs::ServeRoundEnd {
                 round,
                 checkins: round_checkins,
@@ -642,7 +820,9 @@ impl Coordinator {
     /// Snapshot of the cumulative counter/histogram registry (the
     /// telemetry superset behind [`stats`](Coordinator::stats):
     /// `serve.*` counters plus `serve.flush_s` / `serve.close_s` /
-    /// `serve.finish_s` control-plane latency histograms).
+    /// `serve.finish_s` control-plane latency histograms and the
+    /// per-pipeline-edge `serve.edge.checkin_s` / `serve.edge.lease_s`
+    /// / `serve.edge.update_s` service-time histograms).
     pub fn metrics(&self) -> crate::obs::MetricsRegistry {
         Self::lock(&self.round).metrics.clone()
     }

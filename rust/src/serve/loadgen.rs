@@ -157,6 +157,9 @@ struct Lane {
     /// traffic, not the availability sweep) — the driver folds the max
     /// across lanes into `checkin_wall_s`.
     last_burst_s: f64,
+    /// Client-side telemetry sink (clone of the run's sink; one
+    /// `lane-burst` record per (lane, round) with traffic).
+    obs: Obs,
 }
 
 impl Lane {
@@ -190,6 +193,14 @@ impl Lane {
         self.last_burst_s = t0.elapsed().as_secs_f64();
         self.latencies
             .observe(self.last_burst_s / self.reqs.len() as f64);
+        if self.obs.enabled() {
+            self.obs.emit(&crate::obs::LaneBurst {
+                lane: self.lane_idx,
+                round,
+                size: self.reqs.len(),
+                burst_s: self.last_burst_s,
+            });
+        }
         crate::ensure!(
             acks.len() == self.reqs.len(),
             "serve loadgen: {} acks for {} check-ins",
@@ -276,6 +287,7 @@ pub fn run_loadgen(
     clients: Vec<Box<dyn ServeClient>>,
     transport: &'static str,
     update_dim: usize,
+    obs: &Obs,
 ) -> crate::Result<ServeRunOutcome> {
     crate::ensure!(
         !clients.is_empty(),
@@ -302,6 +314,7 @@ pub fn run_loadgen(
             admitted: Vec::new(),
             latencies: Histogram::default(),
             last_burst_s: 0.0,
+            obs: obs.clone(),
         })
         .collect();
 
@@ -409,7 +422,13 @@ pub fn run_inproc_with(
                 as Box<dyn ServeClient>
         })
         .collect();
-    let out = run_loadgen(spec, clients, TRANSPORT_INPROC, cfg.update_dim)?;
+    let out = run_loadgen(
+        spec,
+        clients,
+        TRANSPORT_INPROC,
+        cfg.update_dim,
+        obs,
+    )?;
     Ok((out, coord))
 }
 
@@ -419,12 +438,13 @@ pub fn run_tcp(
     lanes: usize,
     addr: std::net::SocketAddr,
     update_dim: usize,
+    obs: &Obs,
 ) -> crate::Result<ServeRunOutcome> {
     let mut clients: Vec<Box<dyn ServeClient>> = Vec::new();
     for _ in 0..lanes.max(1) {
         clients.push(Box::new(TcpClient::connect(addr)?));
     }
-    run_loadgen(spec, clients, TRANSPORT_TCP, update_dim)
+    run_loadgen(spec, clients, TRANSPORT_TCP, update_dim, obs)
 }
 
 /// What the oracle replay produced.

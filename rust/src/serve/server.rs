@@ -78,6 +78,7 @@ pub fn serve_tcp(
 
     let stop_accept = Arc::clone(&stop);
     let accept = std::thread::spawn(move || {
+        let obs = coord.obs().clone();
         for stream in listener.incoming() {
             if stop_accept.load(Ordering::SeqCst) {
                 break;
@@ -109,6 +110,15 @@ pub fn serve_tcp(
                         }),
                     );
                     let _ = s.flush();
+                    if obs.trace_on() {
+                        // no device id yet — the connection never got
+                        // to speak — so this edge has a null device
+                        obs.emit(&crate::obs::TraceEdge::conn_deferred(
+                            coord.intake_round(),
+                            coord.trace_now_s(),
+                            RETRY_AFTER_S as f64,
+                        ));
+                    }
                 }
                 Err(TrySendError::Disconnected(_)) => break,
             }

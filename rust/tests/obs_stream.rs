@@ -10,8 +10,9 @@
 //!    matching the `swan_properties` idiom).
 //! 2. **Digest neutrality** — turning telemetry on must not perturb a
 //!    single bit of any aggregate, at 1 and 4 shards/lanes, on both
-//!    the fleet and serve paths. Telemetry only observes existing
-//!    barriers; it never draws RNG or reorders folds.
+//!    the fleet and serve paths — including with per-device causal
+//!    tracing (`with_traces`) enabled. Telemetry only observes
+//!    existing barriers; it never draws RNG or reorders folds.
 //!
 //! Plus the bench contract: the `bench-result` event nested in the
 //! stream must agree with the `BENCH_fleet.json` snapshot the same run
@@ -134,6 +135,31 @@ fn fleet_telemetry_is_digest_neutral() {
         assert_eq!(off.total_steps, on.total_steps);
         assert_eq!(off.participations, on.participations);
         assert_eq!(off.online_per_round, on.online_per_round);
+
+        // full causal tracing is still a pure observer
+        let tobs = Obs::capture().with_traces();
+        let traced = run_scenario_obs(&spec, shards, FlArm::Swan, &tobs)
+            .expect("traced run");
+        assert_eq!(off.digest(), traced.digest(), "{shards} shards traced");
+        assert_eq!(
+            off.total_time_s.to_bits(),
+            traced.total_time_s.to_bits(),
+            "{shards} shards traced: virtual time"
+        );
+        assert_eq!(
+            off.total_energy_j.to_bits(),
+            traced.total_energy_j.to_bits(),
+            "{shards} shards traced: energy"
+        );
+        let edges = tobs
+            .captured_lines()
+            .iter()
+            .filter(|l| l.contains("\"trace-edge\""))
+            .count();
+        assert!(
+            edges > 0,
+            "{shards} shards: traced fleet run emitted no trace edges"
+        );
     }
 }
 
@@ -178,7 +204,72 @@ fn serve_telemetry_is_digest_neutral() {
                 "{lanes} lanes: missing '{want}' in {reasons:?}"
             );
         }
+
+        // full causal tracing is still a pure observer
+        let tobs = Obs::capture().with_traces();
+        let (traced, _) = run_inproc_with(&spec, lanes, &cfg, &tobs)
+            .expect("traced run");
+        assert_eq!(off.digest, traced.digest, "{lanes} lanes traced");
+        assert_eq!(
+            off.total_time_s.to_bits(),
+            traced.total_time_s.to_bits(),
+            "{lanes} lanes traced: virtual time"
+        );
+        assert_eq!(
+            off.total_energy_j.to_bits(),
+            traced.total_energy_j.to_bits(),
+            "{lanes} lanes traced: energy"
+        );
+        assert!(
+            tobs.captured_lines()
+                .iter()
+                .any(|l| l.contains("\"trace-edge\"")),
+            "{lanes} lanes: traced serve run emitted no trace edges"
+        );
     }
+}
+
+#[test]
+fn traced_serve_stream_reconstructs_complete_lifecycles() {
+    use swan::obs::analyze::{self, lifecycles};
+
+    let spec = tiny_spec("obs-lifecycle", 240, 3);
+    let cfg = ServeConfig::for_scenario(&spec);
+    let obs = Obs::capture().with_traces();
+    let (out, _) = run_inproc_with(&spec, 2, &cfg, &obs)
+        .expect("traced serve run");
+    assert!(out.participations > 0, "run selected no participants");
+
+    let events: Vec<_> = obs
+        .captured_lines()
+        .iter()
+        .map(|l| json::parse(l).expect("well-formed line"))
+        .collect();
+    let lcs = lifecycles(&events);
+    assert!(!lcs.is_empty(), "no lifecycles reconstructed");
+    // at least one device rode the full happy path: checkin →
+    // admitted → selected → lease-sent → update-received → aggregated,
+    // with monotone timestamps
+    let complete: Vec<_> = lcs
+        .iter()
+        .filter(|lc| lc.is_complete_admitted())
+        .collect();
+    assert!(
+        !complete.is_empty(),
+        "no complete admitted lifecycle among {} lifecycles",
+        lcs.len()
+    );
+    // attribution + rates run off the same reconstruction
+    let stages = analyze::top_stages(&lcs);
+    assert!(
+        stages
+            .iter()
+            .any(|(k, _)| k == "checkin\u{2192}admitted"),
+        "checkin→admitted stage missing from {stages:?}"
+    );
+    let rates = analyze::windowed_rates(&events, 1.0);
+    let checkins: u64 = rates.iter().map(|r| r.checkins).sum();
+    assert!(checkins > 0, "windowed rates saw no check-ins");
 }
 
 #[test]

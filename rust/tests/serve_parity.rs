@@ -18,7 +18,9 @@
 //! identical assertion in release mode.
 
 use swan::fleet::{run_serve_bench, ScenarioSpec};
-use swan::serve::{run_inproc, run_oracle, ServeConfig};
+use swan::serve::{
+    run_inproc, run_inproc_with, run_oracle, ServeConfig, RETRY_AFTER_S,
+};
 
 #[test]
 fn smoke_scenario_inproc_matches_fl_server_oracle() {
@@ -72,6 +74,46 @@ fn loopback_tcp_matches_the_inproc_digest() {
     assert_eq!(tcp.participations, report.inproc.participations);
     assert_eq!(tcp.checkins, report.inproc.checkins);
     assert_eq!(tcp.deferred, 0);
+}
+
+#[test]
+fn deferral_events_carry_retry_after_and_batch_size() {
+    // force backpressure: a tiny admission bound against a fleet big
+    // enough to overflow it every round
+    let spec = ScenarioSpec {
+        name: "serve-deferral-unit".to_string(),
+        devices: 300,
+        rounds: 3,
+        clients_per_round: 8,
+        trace_users: 2,
+        ..ScenarioSpec::default()
+    };
+    let mut cfg = ServeConfig::for_scenario(&spec);
+    cfg.admit_capacity = 8;
+    let obs = swan::obs::Obs::capture();
+    let (out, _) =
+        run_inproc_with(&spec, 2, &cfg, &obs).expect("inproc serve");
+    assert!(out.deferred > 0, "admission bound never tripped");
+    let deferrals: Vec<_> = obs
+        .captured_lines()
+        .iter()
+        .map(|l| swan::util::json::parse(l).expect("well-formed line"))
+        .filter(|v| v.req_str("reason").unwrap() == "deferral")
+        .collect();
+    assert!(!deferrals.is_empty(), "no deferral events in the stream");
+    for d in &deferrals {
+        // the record reports the policy the clients were actually
+        // told: the coordinator's Retry-After and coalescing batch
+        assert_eq!(
+            d.req_f64("retry_after_s").unwrap(),
+            RETRY_AFTER_S as f64
+        );
+        assert_eq!(
+            d.req_f64("batch_size").unwrap(),
+            cfg.batch_size as f64
+        );
+        assert!(d.req_f64("deferred").unwrap() > 0.0);
+    }
 }
 
 #[test]
