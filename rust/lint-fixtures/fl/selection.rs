@@ -1,0 +1,34 @@
+//! Known-bad fixture for `swan lint` — mirrors the module path
+//! `fl/selection.rs` (digest scope, NOT in the RNG registry), so RNG
+//! discipline applies; the pragma-hygiene cases ride along.
+//!
+//! Expected findings: rng ×2 (`Rng::new`, `.fork`), pragma ×3 (unused
+//! pragma, reason-less pragma, unknown rule name).
+
+use crate::util::rng::Rng;
+
+pub fn fresh_stream_in_selection(seed: u64) -> u64 {
+    let mut rng = Rng::new(seed);
+    rng.next_u64()
+}
+
+pub fn forked_stream(root: &mut Rng) -> Rng {
+    root.fork(7)
+}
+
+// lint: allow(determinism) — nothing on the next line needs this
+pub fn unused_pragma_target() -> u32 {
+    41
+}
+
+pub fn reasonless_pragma(seed: u64) -> u64 {
+    // the pragma below suppresses the rng finding but is itself an
+    // error: every allow must carry a reason after an em-dash
+    let mut rng = Rng::new(seed ^ 1); // lint: allow(rng)
+    rng.next_u64()
+}
+
+// lint: allow(vibes) — `vibes` is not a rule the analyzer knows
+pub fn unknown_rule_pragma() -> u32 {
+    43
+}

@@ -1,0 +1,39 @@
+//! Known-bad fixture for `swan lint` — this file mirrors the module
+//! path `fleet/soa.rs`, so the determinism and panic rules apply, and
+//! it must ALWAYS produce findings. CI runs the lint over this tree
+//! and fails if the run unexpectedly passes (the must-fail self-test).
+//!
+//! Expected findings: determinism ×3 (wall clock, hash iteration ×2),
+//! panic ×3 (unwrap, expect, panic!), unsafe ×1.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn wall_clock_in_round_state() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn hash_ordered_fold(m: &HashMap<u64, f64>) -> f64 {
+    let mut acc = 0.0;
+    for (_gid, v) in m.iter() {
+        acc += *v;
+    }
+    let mut keys = HashMap::new();
+    keys.insert(1u64, 2u64);
+    for k in &keys {
+        acc += k.1.wrapping_mul(3) as f64;
+    }
+    acc
+}
+
+pub fn worker_tears_down(x: Option<u32>, y: Option<u32>) -> u32 {
+    if x.is_none() {
+        panic!("boom");
+    }
+    x.unwrap() + y.expect("y must be set")
+}
+
+pub fn raw_read(p: *const u8) -> u8 {
+    unsafe { *p }
+}

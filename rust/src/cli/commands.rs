@@ -16,6 +16,7 @@
 //! swan obs     top events.ndjson --by stage|device
 //! swan obs     rates events.ndjson --window 0.5
 //! swan obs     diff BENCH_fleet.json baseline.json --threshold 10
+//! swan lint    [--deny-all] [--json] [rust/src ...]
 //! swan traces  --users 4
 //! swan report  table2|table3|fig1|fig2|fig3|fleet
 //! ```
@@ -79,6 +80,7 @@ pub fn run_main() -> crate::Result<()> {
         "serve" => cmd_serve(&rest),
         "bench" => cmd_bench(&rest),
         "obs" => cmd_obs(&rest),
+        "lint" => cmd_lint(&rest),
         "traces" => cmd_traces(&rest),
         "report" => cmd_report(&rest),
         "help" | "--help" | "-h" => {
@@ -106,6 +108,7 @@ fn print_help() {
          \x20 serve     run the FL coordinator control plane on TCP\n\
          \x20 bench     throughput harnesses (BENCH_fleet.json / BENCH_serve.json)\n\
          \x20 obs       telemetry toolkit (check|trace|top|rates|diff)\n\
+         \x20 lint      static analysis over the crate's own sources\n\
          \x20 traces    generate + preprocess GreenHub-style traces\n\
          \x20 report    regenerate a paper table/figure\n"
     );
@@ -1147,6 +1150,57 @@ fn cmd_obs_diff(rest: &[String]) -> crate::Result<()> {
         "obs diff: {} metric(s), {regressions} regression(s) over \
          {threshold}%",
         rows.len()
+    );
+    Ok(())
+}
+
+fn cmd_lint(rest: &[String]) -> crate::Result<()> {
+    let specs = vec![
+        switch(
+            "deny-all",
+            "treat warn-level findings (panic family) as errors",
+        ),
+        switch("json", "emit one JSON object per finding (NDJSON)"),
+    ];
+    if rest.iter().any(|a| a == "--help") {
+        println!(
+            "{}",
+            usage(
+                "lint",
+                "static analysis over the crate's own sources",
+                &specs
+            )
+        );
+        return Ok(());
+    }
+    let args = parse_args(rest, &specs)?;
+    let paths = if args.positional.is_empty() {
+        vec!["rust/src".to_string()]
+    } else {
+        args.positional.clone()
+    };
+    let findings = crate::lint::lint_paths(&paths)?;
+    if args.has("json") {
+        use crate::util::json::Value;
+        for f in &findings {
+            let v = Value::obj()
+                .set("file", f.file.as_str())
+                .set("line", f.line as usize)
+                .set("rule", f.rule)
+                .set("severity", if f.deny { "deny" } else { "warn" })
+                .set("message", f.message.as_str());
+            println!("{v}");
+        }
+    } else if findings.is_empty() {
+        println!("swan lint: clean ({})", paths.join(", "));
+    } else {
+        println!("{}", report::lint_table(&findings).to_markdown());
+    }
+    let failing = crate::lint::failing(&findings, args.has("deny-all"));
+    crate::ensure!(
+        failing == 0,
+        "swan lint: {failing} failing finding(s) of {} total",
+        findings.len()
     );
     Ok(())
 }

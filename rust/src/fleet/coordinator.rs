@@ -171,26 +171,27 @@ impl ProfileCoordinator {
         requester: usize,
         arm: FlArm,
     ) -> ResolvedCost {
-        let fresh = !self.entries.iter().any(|(m, _)| *m == model);
-        if fresh {
-            let entry = Self::explore(&self.workload, model, requester);
-            if self.obs.enabled() {
-                self.obs.emit(&crate::obs::ProfileExplored {
-                    model: model.key(),
-                    requester,
-                    chain_len: entry.chain.len(),
-                    exploration_time_s: entry.exploration_time_s,
-                    exploration_energy_j: entry.exploration_energy_j,
-                });
+        let found = self.entries.iter().position(|(m, _)| *m == model);
+        let fresh = found.is_none();
+        let idx = match found {
+            Some(i) => i,
+            None => {
+                let entry =
+                    Self::explore(&self.workload, model, requester);
+                if self.obs.enabled() {
+                    self.obs.emit(&crate::obs::ProfileExplored {
+                        model: model.key(),
+                        requester,
+                        chain_len: entry.chain.len(),
+                        exploration_time_s: entry.exploration_time_s,
+                        exploration_energy_j: entry.exploration_energy_j,
+                    });
+                }
+                self.entries.push((model, entry));
+                self.entries.len() - 1
             }
-            self.entries.push((model, entry));
-        }
-        let entry = self
-            .entries
-            .iter_mut()
-            .find(|(m, _)| *m == model)
-            .map(|(_, e)| e)
-            .expect("entry just ensured");
+        };
+        let entry = &mut self.entries[idx].1;
         let cost = match arm {
             FlArm::Swan => {
                 let best = &entry.chain[0];

@@ -34,7 +34,12 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
+
+// Wall-clock reads go through the audited obs chokepoint: the lint
+// determinism rule bans raw wall-clock constructors in
+// digest-affecting modules (timing here is telemetry, never
+// simulation state).
+use crate::obs::wall_timer;
 
 use crate::fl::{select_uniform, FlArm};
 use crate::obs::{
@@ -316,7 +321,7 @@ impl<N: FleetNode> ShardedEventLoop<N> {
         policy: &mut dyn FleetPolicy,
         cfg: &DriveConfig,
     ) -> crate::Result<FleetOutcome> {
-        let wall0 = Instant::now();
+        let wall0 = wall_timer();
         let shards = &mut self.shards;
         let models = &self.models;
         let n_shards = shards.len();
@@ -390,7 +395,7 @@ impl<N: FleetNode> ShardedEventLoop<N> {
             // a dead shard breaks out with an error naming it.
             let run = (|| -> crate::Result<()> {
                 for round in 0..cfg.rounds {
-                    let round_t0 = Instant::now();
+                    let round_t0 = wall_timer();
                     if cfg.obs.enabled() {
                         cfg.obs.emit(&RoundStart {
                             scenario: &cfg.scenario,
@@ -398,7 +403,7 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                             now_s,
                         });
                     }
-                    let phase_t0 = Instant::now();
+                    let phase_t0 = wall_timer();
                     // 1. availability: every shard polls in parallel
                     for (sid, tx) in cmd_txs.iter().enumerate() {
                         crate::ensure!(
@@ -467,7 +472,7 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                     }
 
                     // 2. selection: central, keyed on (seed, round) only
-                    let phase_t0 = Instant::now();
+                    let phase_t0 = wall_timer();
                     let mut rng = round_rng(cfg.seed, round);
                     let picked = select_uniform(
                         &online,
@@ -511,7 +516,7 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                     }
 
                     // 4. parallel event-driven local epochs
-                    let phase_t0 = Instant::now();
+                    let phase_t0 = wall_timer();
                     let mut active: Vec<usize> = Vec::new();
                     for (sid, tx) in cmd_txs.iter().enumerate() {
                         let jobs = std::mem::take(&mut jobs_by_shard[sid]);
@@ -577,7 +582,7 @@ impl<N: FleetNode> ShardedEventLoop<N> {
                     //    order keeps aggregates bit-identical under any
                     //    sharding (synchronous FL: stragglers pace
                     //    rounds)
-                    let phase_t0 = Instant::now();
+                    let phase_t0 = wall_timer();
                     let mut round_time = 0.0f64;
                     let mut round_energy = 0.0f64;
                     for &gid in &picked {
@@ -750,7 +755,7 @@ pub fn run_scenario_obs(
         coord: &mut coord,
         arm,
     };
-    let mut out = fleet.drive(&mut policy, &cfg);
+    let mut out = fleet.drive(&mut policy, &cfg)?;
     attach_exploration(&mut out, &coord, arm);
     emit_adoptions(obs, &coord, arm);
     Ok(out)

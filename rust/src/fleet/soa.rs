@@ -56,11 +56,13 @@
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Instant;
 
 use crate::fl::availability::availability_gate_many;
 use crate::fl::energy_loan::LoanBank;
 use crate::fl::selection::select_uniform_into;
+// the lint determinism rule bans raw wall-clock constructors in
+// digest-affecting modules; timing here is telemetry, never state
+use crate::obs::wall_timer;
 use crate::soc::device::DeviceId;
 use crate::trace::resample::ResampledTrace;
 use crate::util::affinity;
@@ -400,31 +402,44 @@ impl Slot {
 }
 
 /// Hand control a command; for `Step`, swap the prepared job buffer in.
-fn send(slot: &Slot, cmd: Cmd, jobs: Option<&mut Vec<SoaJob>>) {
-    let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+/// A poisoned mailbox (its worker unwound holding the lock) is an
+/// error, not a cascade — the caller releases the fleet via
+/// [`StopOnDrop`] and reports the dead shard.
+fn send(
+    slot: &Slot,
+    cmd: Cmd,
+    jobs: Option<&mut Vec<SoaJob>>,
+) -> crate::Result<()> {
+    let mut g = slot
+        .mx
+        .lock()
+        .map_err(|_| crate::err!("soa fleet: mailbox poisoned"))?;
     if let Some(j) = jobs {
         std::mem::swap(&mut g.jobs, j);
     }
     g.cmd = cmd;
     g.done = false;
     slot.cv.notify_all();
+    Ok(())
 }
 
 /// Block until shard `si` finishes its command, returning the mailbox
-/// for buffer exchange. A dead worker turns into a control-thread panic
-/// (which [`StopOnDrop`] converts into a fleet-wide release, so the
-/// scope join can't deadlock).
-fn wait_done<'a>(slots: &'a [Slot], si: usize) -> MutexGuard<'a, Mailbox> {
+/// for buffer exchange. A dead worker turns into a control-thread
+/// error (whose propagation drops [`StopOnDrop`], releasing the whole
+/// fleet so the scope join can't deadlock).
+fn wait_done<'a>(
+    slots: &'a [Slot],
+    si: usize,
+) -> crate::Result<MutexGuard<'a, Mailbox>> {
     let slot = &slots[si];
-    let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+    let poisoned =
+        || crate::err!("soa fleet: shard {si} mailbox poisoned");
+    let mut g = slot.mx.lock().map_err(|_| poisoned())?;
     while !g.done {
-        g = slot.cv.wait(g).expect("soa mailbox poisoned");
+        g = slot.cv.wait(g).map_err(|_| poisoned())?;
     }
-    if g.dead {
-        drop(g);
-        panic!("soa fleet: shard worker {si} died");
-    }
-    g
+    crate::ensure!(!g.dead, "soa fleet: shard worker {si} died");
+    Ok(g)
 }
 
 /// Releases every worker on drop — normal exit or control-thread
@@ -488,10 +503,17 @@ fn worker_loop(
     let mut jobs: Vec<SoaJob> = Vec::new();
     let mut results: Vec<SoaResult> = Vec::new();
     loop {
+        // A poisoned mailbox means a control- or sibling-side unwind
+        // while holding the lock: retire this worker quietly — the
+        // control thread sees the same poison through `wait_done` and
+        // errors there, so nothing can hang on us.
         let cmd = {
-            let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+            let Ok(mut g) = slot.mx.lock() else { return };
             while matches!(g.cmd, Cmd::Idle) {
-                g = slot.cv.wait(g).expect("soa mailbox poisoned");
+                g = match slot.cv.wait(g) {
+                    Ok(g) => g,
+                    Err(_) => return,
+                };
             }
             let c = g.cmd;
             g.cmd = Cmd::Idle;
@@ -506,20 +528,22 @@ fn worker_loop(
                     now_s, n_combos, groups, &mut online, shard_idx,
                     n_shards,
                 );
-                let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+                let Ok(mut g) = slot.mx.lock() else { return };
                 std::mem::swap(&mut g.online, &mut online);
                 g.done = true;
                 slot.cv.notify_all();
             }
             Cmd::Step { now_s, round } => {
                 shard.step(now_s, round, &jobs, &mut results);
-                let mut g = slot.mx.lock().expect("soa mailbox poisoned");
+                let Ok(mut g) = slot.mx.lock() else { return };
                 std::mem::swap(&mut g.results, &mut results);
                 g.done = true;
                 slot.cv.notify_all();
             }
             Cmd::Stop => return,
-            Cmd::Idle => unreachable!("Idle is never dispatched"),
+            // the wait loop above never hands Idle out, but a spurious
+            // one should re-park the worker, not unwind it
+            Cmd::Idle => {}
         }
     }
 }
@@ -718,8 +742,8 @@ impl SoaFleet {
         &mut self,
         policy: &mut dyn FleetPolicy,
         cfg: &DriveConfig,
-    ) -> FleetOutcome {
-        let wall0 = Instant::now();
+    ) -> crate::Result<FleetOutcome> {
+        let wall0 = wall_timer();
         let n_shards = self.shards.len();
         let shards = &mut self.shards;
         let n_combos = self.combos.len();
@@ -740,260 +764,279 @@ impl SoaFleet {
 
         let slots: Vec<Slot> = (0..n_shards).map(|_| Slot::new()).collect();
 
-        std::thread::scope(|scope| {
+        std::thread::scope(|scope| -> crate::Result<()> {
+            let mut handles = Vec::with_capacity(n_shards);
             for (si, shard) in shards.iter_mut().enumerate() {
                 let slot = &slots[si];
-                scope.spawn(move || {
+                handles.push(scope.spawn(move || {
                     worker_loop(shard, slot, n_combos, groups, si, n_shards)
-                });
+                }));
             }
-            // from here on, leaving the closure — normally or by panic —
-            // releases every worker (see StopOnDrop)
-            let _stop = StopOnDrop { slots: &slots };
+            // The control body runs fallibly: leaving it — normally or
+            // through `?` — drops StopOnDrop, which releases every
+            // worker before the joins below.
+            let run = (|| -> crate::Result<()> {
+                let _stop = StopOnDrop { slots: &slots };
 
-            // Control-side buffers, all reused across rounds: after the
-            // first round the steady state allocates nothing.
-            let mut online_lists: Vec<Vec<u32>> =
-                (0..n_shards).map(|_| Vec::new()).collect();
-            let mut job_bufs: Vec<Vec<SoaJob>> =
-                (0..n_shards).map(|_| Vec::new()).collect();
-            let mut cursors: Vec<usize> = vec![0; n_shards];
-            let mut merge_heap: Vec<(u32, u32)> = Vec::new();
-            let mut online: Vec<usize> = Vec::new();
-            let mut picked: Vec<usize> = Vec::new();
-            let mut scratch: HashMap<usize, usize> = HashMap::new();
-            let mut active: Vec<usize> = Vec::new();
-            let mut fold_time: Vec<f64> = Vec::new();
-            let mut fold_energy: Vec<f64> = Vec::new();
-            let mut fold_steps: Vec<u32> = Vec::new();
+                // Control-side buffers, all reused across rounds: after the
+                // first round the steady state allocates nothing.
+                let mut online_lists: Vec<Vec<u32>> =
+                    (0..n_shards).map(|_| Vec::new()).collect();
+                let mut job_bufs: Vec<Vec<SoaJob>> =
+                    (0..n_shards).map(|_| Vec::new()).collect();
+                let mut cursors: Vec<usize> = vec![0; n_shards];
+                let mut merge_heap: Vec<(u32, u32)> = Vec::new();
+                let mut online: Vec<usize> = Vec::new();
+                let mut picked: Vec<usize> = Vec::new();
+                let mut scratch: HashMap<usize, usize> = HashMap::new();
+                let mut active: Vec<usize> = Vec::new();
+                let mut fold_time: Vec<f64> = Vec::new();
+                let mut fold_energy: Vec<f64> = Vec::new();
+                let mut fold_steps: Vec<u32> = Vec::new();
 
-            let mut now_s = 0.0f64;
-            let mut total_energy = 0.0f64;
-            let mut total_steps = 0u64;
-            let mut participations = 0u64;
+                let mut now_s = 0.0f64;
+                let mut total_energy = 0.0f64;
+                let mut total_steps = 0u64;
+                let mut participations = 0u64;
 
-            // Telemetry locals — wall-clock observers only, never fed
-            // back into the simulation, so the digest cannot see them.
-            let mut spans = crate::obs::Spans::default();
-            let sp_avail = spans.span(crate::obs::PHASE_AVAILABILITY);
-            let sp_select = spans.span(crate::obs::PHASE_SELECT);
-            let sp_step = spans.span(crate::obs::PHASE_STEP);
-            let sp_agg = spans.span(crate::obs::PHASE_AGGREGATE);
-            let mut metrics = crate::obs::MetricsRegistry::default();
-            let c_online = metrics.counter("fleet.online");
-            let c_picked = metrics.counter("fleet.picked");
-            let h_round = metrics
-                .hist("fleet.round_wall_s", crate::obs::LATENCY_BUCKETS_S);
-            let h_avail = metrics.hist(
-                "fleet.stage.availability_s",
-                crate::obs::LATENCY_BUCKETS_S,
-            );
-            let h_select = metrics
-                .hist("fleet.stage.select_s", crate::obs::LATENCY_BUCKETS_S);
-            let h_step = metrics
-                .hist("fleet.stage.step_s", crate::obs::LATENCY_BUCKETS_S);
-            let h_agg = metrics.hist(
-                "fleet.stage.aggregate_s",
-                crate::obs::LATENCY_BUCKETS_S,
-            );
-            // Trace timestamps: anchored at drive start, read only at
-            // the control thread's own barriers.
-            let tclock = crate::obs::TraceClock::start();
-
-            for round in 0..cfg.rounds {
-                let round_t0 = Instant::now();
-                if cfg.obs.enabled() {
-                    cfg.obs.emit(&crate::obs::RoundStart {
-                        scenario: &cfg.scenario,
-                        round,
-                        now_s,
-                    });
-                }
-                // 1. availability: every shard sweeps in parallel
-                let phase_t0 = Instant::now();
-                for slot in &slots {
-                    send(slot, Cmd::Poll { now_s }, None);
-                }
-                for si in 0..n_shards {
-                    let mut g = wait_done(&slots, si);
-                    std::mem::swap(&mut g.online, &mut online_lists[si]);
-                }
-                if cfg.obs.enabled() {
-                    for (si, list) in online_lists.iter().enumerate() {
-                        cfg.obs.emit(&crate::obs::ShardProgress {
-                            round,
-                            shard: si,
-                            online: list.len(),
-                        });
-                    }
-                }
-                merge_online(
-                    &online_lists,
-                    &mut cursors,
-                    &mut merge_heap,
-                    &mut online,
+                // Telemetry locals — wall-clock observers only, never fed
+                // back into the simulation, so the digest cannot see them.
+                let mut spans = crate::obs::Spans::default();
+                let sp_avail = spans.span(crate::obs::PHASE_AVAILABILITY);
+                let sp_select = spans.span(crate::obs::PHASE_SELECT);
+                let sp_step = spans.span(crate::obs::PHASE_STEP);
+                let sp_agg = spans.span(crate::obs::PHASE_AGGREGATE);
+                let mut metrics = crate::obs::MetricsRegistry::default();
+                let c_online = metrics.counter("fleet.online");
+                let c_picked = metrics.counter("fleet.picked");
+                let h_round = metrics
+                    .hist("fleet.round_wall_s", crate::obs::LATENCY_BUCKETS_S);
+                let h_avail = metrics.hist(
+                    "fleet.stage.availability_s",
+                    crate::obs::LATENCY_BUCKETS_S,
                 );
-                outcome.online_per_round.push((round, online.len()));
-                let avail_s = phase_t0.elapsed().as_secs_f64();
-                spans.record(sp_avail, avail_s);
-                metrics.observe(h_avail, avail_s);
-                metrics.add(c_online, online.len() as u64);
-                if online.is_empty() {
-                    now_s += EMPTY_ROUND_WAIT_S;
-                    metrics.observe(
-                        h_round,
-                        round_t0.elapsed().as_secs_f64(),
-                    );
+                let h_select = metrics
+                    .hist("fleet.stage.select_s", crate::obs::LATENCY_BUCKETS_S);
+                let h_step = metrics
+                    .hist("fleet.stage.step_s", crate::obs::LATENCY_BUCKETS_S);
+                let h_agg = metrics.hist(
+                    "fleet.stage.aggregate_s",
+                    crate::obs::LATENCY_BUCKETS_S,
+                );
+                // Trace timestamps: anchored at drive start, read only at
+                // the control thread's own barriers.
+                let tclock = crate::obs::TraceClock::start();
+
+                for round in 0..cfg.rounds {
+                    let round_t0 = wall_timer();
                     if cfg.obs.enabled() {
-                        cfg.obs.emit(&crate::obs::RoundEnd {
+                        cfg.obs.emit(&crate::obs::RoundStart {
+                            scenario: &cfg.scenario,
                             round,
-                            online: 0,
-                            picked: 0,
-                            round_time_s: 0.0,
-                            round_energy_j: 0.0,
                             now_s,
                         });
                     }
-                    continue;
-                }
-
-                // 2. selection: central, keyed on (seed, round) only
-                let phase_t0 = Instant::now();
-                let mut rng = round_rng(cfg.seed, round);
-                select_uniform_into(
-                    &online,
-                    cfg.clients_per_round,
-                    &mut rng,
-                    &mut scratch,
-                    &mut picked,
-                );
-                metrics.add(c_picked, picked.len() as u64);
-
-                // 3. resolve policy costs centrally, in picked order
-                //    (§4.2 exploration billing is order-sensitive)
-                for buf in job_bufs.iter_mut() {
-                    buf.clear();
-                }
-                for (seq, &gid) in picked.iter().enumerate() {
-                    let rc = policy.step_cost(models[gid], gid);
-                    job_bufs[gid % n_shards].push(SoaJob {
-                        seq: seq as u32,
-                        device: gid as u32,
-                        local: (gid / n_shards) as u32,
-                        cost: rc.cost,
-                        extra_time_s: rc.exploration_time_s,
-                        extra_energy_j: rc.exploration_energy_j,
-                    });
-                }
-
-                let select_s = phase_t0.elapsed().as_secs_f64();
-                spans.record(sp_select, select_s);
-                metrics.observe(h_select, select_s);
-                if cfg.obs.trace_on() {
-                    // one timestamp per barrier: the edges record WHEN
-                    // the selection barrier passed, not a fictional
-                    // per-device ordering within it
-                    let t_s = tclock.now_s();
-                    for (seq, &gid) in picked.iter().enumerate() {
-                        cfg.obs.emit(
-                            &crate::obs::TraceEdge::new(
-                                round as u32,
-                                gid as u64,
-                                crate::obs::trace::EDGE_SELECTED,
-                                t_s,
-                            )
-                            .with("seq", seq as f64),
-                        );
+                    // 1. availability: every shard sweeps in parallel
+                    let phase_t0 = wall_timer();
+                    for slot in &slots {
+                        send(slot, Cmd::Poll { now_s }, None)?;
                     }
-                }
-
-                // 4. parallel event-driven local epochs
-                let phase_t0 = Instant::now();
-                active.clear();
-                for si in 0..n_shards {
-                    if job_bufs[si].is_empty() {
+                    for si in 0..n_shards {
+                        let mut g = wait_done(&slots, si)?;
+                        std::mem::swap(&mut g.online, &mut online_lists[si]);
+                    }
+                    if cfg.obs.enabled() {
+                        for (si, list) in online_lists.iter().enumerate() {
+                            cfg.obs.emit(&crate::obs::ShardProgress {
+                                round,
+                                shard: si,
+                                online: list.len(),
+                            });
+                        }
+                    }
+                    merge_online(
+                        &online_lists,
+                        &mut cursors,
+                        &mut merge_heap,
+                        &mut online,
+                    );
+                    outcome.online_per_round.push((round, online.len()));
+                    let avail_s = phase_t0.elapsed().as_secs_f64();
+                    spans.record(sp_avail, avail_s);
+                    metrics.observe(h_avail, avail_s);
+                    metrics.add(c_online, online.len() as u64);
+                    if online.is_empty() {
+                        now_s += EMPTY_ROUND_WAIT_S;
+                        metrics.observe(
+                            h_round,
+                            round_t0.elapsed().as_secs_f64(),
+                        );
+                        if cfg.obs.enabled() {
+                            cfg.obs.emit(&crate::obs::RoundEnd {
+                                round,
+                                online: 0,
+                                picked: 0,
+                                round_time_s: 0.0,
+                                round_energy_j: 0.0,
+                                now_s,
+                            });
+                        }
                         continue;
                     }
-                    active.push(si);
-                    send(
-                        &slots[si],
-                        Cmd::Step { now_s, round },
-                        Some(&mut job_bufs[si]),
+
+                    // 2. selection: central, keyed on (seed, round) only
+                    let phase_t0 = wall_timer();
+                    let mut rng = round_rng(cfg.seed, round);
+                    select_uniform_into(
+                        &online,
+                        cfg.clients_per_round,
+                        &mut rng,
+                        &mut scratch,
+                        &mut picked,
                     );
+                    metrics.add(c_picked, picked.len() as u64);
+
+                    // 3. resolve policy costs centrally, in picked order
+                    //    (§4.2 exploration billing is order-sensitive)
+                    for buf in job_bufs.iter_mut() {
+                        buf.clear();
+                    }
+                    for (seq, &gid) in picked.iter().enumerate() {
+                        let rc = policy.step_cost(models[gid], gid);
+                        job_bufs[gid % n_shards].push(SoaJob {
+                            seq: seq as u32,
+                            device: gid as u32,
+                            local: (gid / n_shards) as u32,
+                            cost: rc.cost,
+                            extra_time_s: rc.exploration_time_s,
+                            extra_energy_j: rc.exploration_energy_j,
+                        });
+                    }
+
+                    let select_s = phase_t0.elapsed().as_secs_f64();
+                    spans.record(sp_select, select_s);
+                    metrics.observe(h_select, select_s);
+                    if cfg.obs.trace_on() {
+                        // one timestamp per barrier: the edges record WHEN
+                        // the selection barrier passed, not a fictional
+                        // per-device ordering within it
+                        let t_s = tclock.now_s();
+                        for (seq, &gid) in picked.iter().enumerate() {
+                            cfg.obs.emit(
+                                &crate::obs::TraceEdge::new(
+                                    round as u32,
+                                    gid as u64,
+                                    crate::obs::trace::EDGE_SELECTED,
+                                    t_s,
+                                )
+                                .with("seq", seq as f64),
+                            );
+                        }
+                    }
+
+                    // 4. parallel event-driven local epochs
+                    let phase_t0 = wall_timer();
+                    active.clear();
+                    for si in 0..n_shards {
+                        if job_bufs[si].is_empty() {
+                            continue;
+                        }
+                        active.push(si);
+                        send(
+                            &slots[si],
+                            Cmd::Step { now_s, round },
+                            Some(&mut job_bufs[si]),
+                        )?;
+                    }
+
+                    // 5. scatter results by seq, fold in global picked
+                    //    order — the same fixed reduction order as the
+                    //    generic kernel, so aggregates are bit-identical
+                    fold_time.clear();
+                    fold_time.resize(picked.len(), 0.0);
+                    fold_energy.clear();
+                    fold_energy.resize(picked.len(), 0.0);
+                    fold_steps.clear();
+                    fold_steps.resize(picked.len(), 0);
+                    for &si in &active {
+                        let mut g = wait_done(&slots, si)?;
+                        for r in g.results.drain(..) {
+                            let s = r.seq as usize;
+                            fold_time[s] = r.time_s;
+                            fold_energy[s] = r.energy_j;
+                            fold_steps[s] = r.steps;
+                        }
+                    }
+                    let step_s = phase_t0.elapsed().as_secs_f64();
+                    spans.record(sp_step, step_s);
+                    metrics.observe(h_step, step_s);
+                    if cfg.obs.trace_on() {
+                        let t_s = tclock.now_s();
+                        for (s, &gid) in picked.iter().enumerate() {
+                            cfg.obs.emit(
+                                &crate::obs::TraceEdge::new(
+                                    round as u32,
+                                    gid as u64,
+                                    crate::obs::trace::EDGE_STEPPED,
+                                    t_s,
+                                )
+                                .with("time_s", fold_time[s])
+                                .with("energy_j", fold_energy[s]),
+                            );
+                        }
+                    }
+                    let phase_t0 = wall_timer();
+                    let mut round_time = 0.0f64;
+                    let mut round_energy = 0.0f64;
+                    for s in 0..picked.len() {
+                        total_energy += fold_energy[s];
+                        round_energy += fold_energy[s];
+                        total_steps += fold_steps[s] as u64;
+                        participations += 1;
+                        round_time = round_time.max(fold_time[s]);
+                    }
+                    now_s += round_time + cfg.server_overhead_s;
+                    outcome.rounds_run = round + 1;
+                    let agg_s = phase_t0.elapsed().as_secs_f64();
+                    spans.record(sp_agg, agg_s);
+                    metrics.observe(h_agg, agg_s);
+                    metrics
+                        .observe(h_round, round_t0.elapsed().as_secs_f64());
+                    if cfg.obs.enabled() {
+                        cfg.obs.emit(&crate::obs::RoundEnd {
+                            round,
+                            online: online.len(),
+                            picked: picked.len(),
+                            round_time_s: round_time,
+                            round_energy_j: round_energy,
+                            now_s,
+                        });
+                    }
                 }
 
-                // 5. scatter results by seq, fold in global picked
-                //    order — the same fixed reduction order as the
-                //    generic kernel, so aggregates are bit-identical
-                fold_time.clear();
-                fold_time.resize(picked.len(), 0.0);
-                fold_energy.clear();
-                fold_energy.resize(picked.len(), 0.0);
-                fold_steps.clear();
-                fold_steps.resize(picked.len(), 0);
-                for &si in &active {
-                    let mut g = wait_done(&slots, si);
-                    for r in g.results.drain(..) {
-                        let s = r.seq as usize;
-                        fold_time[s] = r.time_s;
-                        fold_energy[s] = r.energy_j;
-                        fold_steps[s] = r.steps;
-                    }
-                }
-                let step_s = phase_t0.elapsed().as_secs_f64();
-                spans.record(sp_step, step_s);
-                metrics.observe(h_step, step_s);
-                if cfg.obs.trace_on() {
-                    let t_s = tclock.now_s();
-                    for (s, &gid) in picked.iter().enumerate() {
-                        cfg.obs.emit(
-                            &crate::obs::TraceEdge::new(
-                                round as u32,
-                                gid as u64,
-                                crate::obs::trace::EDGE_STEPPED,
-                                t_s,
-                            )
-                            .with("time_s", fold_time[s])
-                            .with("energy_j", fold_energy[s]),
-                        );
-                    }
-                }
-                let phase_t0 = Instant::now();
-                let mut round_time = 0.0f64;
-                let mut round_energy = 0.0f64;
-                for s in 0..picked.len() {
-                    total_energy += fold_energy[s];
-                    round_energy += fold_energy[s];
-                    total_steps += fold_steps[s] as u64;
-                    participations += 1;
-                    round_time = round_time.max(fold_time[s]);
-                }
-                now_s += round_time + cfg.server_overhead_s;
-                outcome.rounds_run = round + 1;
-                let agg_s = phase_t0.elapsed().as_secs_f64();
-                spans.record(sp_agg, agg_s);
-                metrics.observe(h_agg, agg_s);
-                metrics
-                    .observe(h_round, round_t0.elapsed().as_secs_f64());
-                if cfg.obs.enabled() {
-                    cfg.obs.emit(&crate::obs::RoundEnd {
-                        round,
-                        online: online.len(),
-                        picked: picked.len(),
-                        round_time_s: round_time,
-                        round_energy_j: round_energy,
-                        now_s,
-                    });
+                outcome.total_time_s = now_s;
+                outcome.total_energy_j = total_energy;
+                outcome.total_steps = total_steps;
+                outcome.participations = participations;
+                outcome.spans = spans;
+                outcome.metrics = metrics;
+                Ok(())
+            })();
+            // Join the workers so a panicked one surfaces as an error
+            // from this scope instead of an abort at scope exit.
+            let mut panicked = 0usize;
+            for h in handles {
+                if h.join().is_err() {
+                    panicked += 1;
                 }
             }
-
-            outcome.total_time_s = now_s;
-            outcome.total_energy_j = total_energy;
-            outcome.total_steps = total_steps;
-            outcome.participations = participations;
-            outcome.spans = spans;
-            outcome.metrics = metrics;
-        });
+            run?;
+            crate::ensure!(
+                panicked == 0,
+                "{panicked} soa shard worker(s) panicked"
+            );
+            Ok(())
+        })?;
         outcome.wall_s = wall0.elapsed().as_secs_f64();
         // Worker tallies, folded in shard order now that every worker
         // is parked (the scope joined them) and the borrows are back.
@@ -1014,7 +1057,7 @@ impl SoaFleet {
                 spans: &outcome.spans,
             });
         }
-        outcome
+        Ok(outcome)
     }
 }
 
@@ -1111,7 +1154,7 @@ mod tests {
             FlArm::Swan,
             crate::obs::Obs::off(),
         );
-        let drove = fleet.drive(&mut policy, &cfg);
+        let drove = fleet.drive(&mut policy, &cfg).unwrap();
         let back = fleet.into_devices().unwrap();
         let parts: usize = back.iter().map(|d| d.participations).sum();
         assert_eq!(parts as u64, drove.participations);

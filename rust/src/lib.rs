@@ -58,6 +58,12 @@
 //!   phase spans — all digest-neutral by construction, feeding
 //!   `report::obs_table` and the CI perf-floor gate.
 //! - [`report`] — emitters that regenerate every paper table and figure.
+//! - [`lint`] — `swan lint`: a hand-rolled static analyzer over the
+//!   crate's own sources (lexer + syntactic rule scans) that rejects
+//!   determinism hazards (wall clock / hash-ordered iteration in
+//!   digest-affecting modules), unregistered RNG construction,
+//!   panics on worker/IO paths, and undocumented `unsafe` — with
+//!   per-site `// lint: allow(rule) — reason` pragmas, wired into CI.
 
 pub mod error;
 pub mod util;
@@ -76,6 +82,7 @@ pub mod fleet;
 pub mod obs;
 pub mod serve;
 pub mod report;
+pub mod lint;
 pub mod cli;
 
 /// Crate-wide result type.

@@ -1,0 +1,567 @@
+//! A minimal Rust lexer for `swan lint` — just enough fidelity that
+//! the syntactic rules in [`super::rules`] never fire inside string
+//! literals, raw strings, char literals, or (nested) block comments.
+//!
+//! This is not a Rust grammar: the output is a flat token stream with
+//! line numbers, hand-rolled in the spirit of `util/json.rs`. The
+//! rules only need identifier/punct adjacency (`Instant :: now`,
+//! `. unwrap (`), comment text (allow pragmas, `SAFETY:` markers), and
+//! balanced-brace scanning (test-span detection), so that is all the
+//! lexer models. The genuinely tricky cases it must get right:
+//!
+//! - raw strings `r"…"` / `r#"…"#` / `br##"…"##` (arbitrary hashes),
+//! - raw identifiers `r#type` (an identifier, not a raw string),
+//! - nested block comments `/* outer /* inner */ still out */`,
+//! - `'a'` char literals vs `'a` lifetimes (including `'\''`, `b'x'`),
+//! - multi-line strings, so line numbers stay exact after them.
+
+/// Token classes the rules discriminate on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (including raw identifiers like `r#type`).
+    Ident,
+    /// Numeric literal (loose: suffixes and float tails are swallowed).
+    Num,
+    /// `"…"` or `b"…"` string literal.
+    Str,
+    /// `r"…"` / `r#"…"#` raw string literal (and `br` forms).
+    RawStr,
+    /// `'x'` / `b'x'` char literal.
+    Char,
+    /// `'a` lifetime.
+    Lifetime,
+    /// `// …` line comment (doc comments included).
+    LineComment,
+    /// `/* … */` block comment, nesting handled.
+    BlockComment,
+    /// Any other punctuation; `::` is fused into one token.
+    Punct,
+}
+
+/// One lexed token, borrowing its text from the source.
+#[derive(Clone, Copy, Debug)]
+pub struct Token<'a> {
+    pub kind: Kind,
+    pub text: &'a str,
+    /// 1-based line the token starts on.
+    pub line: u32,
+    /// 1-based line the token ends on (multi-line strings/comments).
+    pub end_line: u32,
+    /// True when no earlier token starts or ends on this token's line.
+    pub first_on_line: bool,
+}
+
+/// A lexing problem (unterminated literal or comment). The driver
+/// reports these as findings instead of panicking.
+#[derive(Clone, Debug)]
+pub struct LexError {
+    pub line: u32,
+    pub message: String,
+}
+
+fn ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn ident_continue(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte length of the UTF-8 codepoint starting with `c`.
+fn utf8_len(c: u8) -> usize {
+    match c {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Lex `src` into a flat token stream. Never panics: malformed input
+/// degrades to single-char punct tokens plus `LexError`s.
+pub fn lex(src: &str) -> (Vec<Token<'_>>, Vec<LexError>) {
+    let b = src.as_bytes();
+    let mut toks: Vec<Token<'_>> = Vec::new();
+    let mut errs: Vec<LexError> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    // Highest line any previous token starts or ends on, for
+    // `first_on_line` (pragma own-line vs trailing classification).
+    let mut last_line = 0u32;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let start_line = line;
+        let kind: Kind;
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            kind = Kind::LineComment;
+        } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            i += 2;
+            let mut depth = 1usize;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            if depth > 0 {
+                errs.push(LexError {
+                    line: start_line,
+                    message: "unterminated block comment".to_string(),
+                });
+            }
+            kind = Kind::BlockComment;
+        } else if let Some((quote, hashes)) = raw_str_open(b, i) {
+            // r"…" / r#"…"# / br##"…"## — scan for `"` + `hashes` `#`s.
+            i = quote + 1;
+            let mut closed = false;
+            while i < b.len() {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'"' && tail_hashes(b, i + 1) >= hashes {
+                    i += 1 + hashes;
+                    closed = true;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            if !closed {
+                errs.push(LexError {
+                    line: start_line,
+                    message: "unterminated raw string".to_string(),
+                });
+            }
+            kind = Kind::RawStr;
+        } else if c == b'"' || (c == b'b' && b.get(i + 1) == Some(&b'"'))
+        {
+            if c == b'b' {
+                i += 1;
+            }
+            i += 1;
+            let mut closed = false;
+            while i < b.len() {
+                match b[i] {
+                    b'\\' => i += 2,
+                    b'"' => {
+                        i += 1;
+                        closed = true;
+                        break;
+                    }
+                    b'\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            if !closed {
+                errs.push(LexError {
+                    line: start_line,
+                    message: "unterminated string".to_string(),
+                });
+            }
+            kind = Kind::Str;
+        } else if c == b'\''
+            || (c == b'b' && b.get(i + 1) == Some(&b'\''))
+        {
+            let byte_prefix = c == b'b';
+            if byte_prefix {
+                i += 1;
+            }
+            // i is at the opening quote. `'\…'` and `'X'` are char
+            // literals; `'name` (no closing quote after one codepoint)
+            // is a lifetime. A `b` prefix always means a byte char.
+            if b.get(i + 1) == Some(&b'\\') {
+                i += 2;
+                // Skip the escaped character itself, so `'\''` and
+                // `'\\'` don't close on their own payload.
+                i += b.get(i).map_or(0, |&c| utf8_len(c));
+                while i < b.len() && b[i] != b'\'' {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                if i < b.len() {
+                    i += 1;
+                } else {
+                    errs.push(LexError {
+                        line: start_line,
+                        message: "unterminated char literal".to_string(),
+                    });
+                }
+                kind = Kind::Char;
+            } else {
+                let cp = b.get(i + 1).map_or(1, |&c| utf8_len(c));
+                if b.get(i + 1 + cp) == Some(&b'\'') {
+                    i += 2 + cp;
+                    kind = Kind::Char;
+                } else if byte_prefix {
+                    // `b'` with no closing quote: malformed byte char.
+                    errs.push(LexError {
+                        line: start_line,
+                        message: "unterminated byte char".to_string(),
+                    });
+                    i += 1;
+                    kind = Kind::Char;
+                } else {
+                    i += 1;
+                    while i < b.len() && ident_continue(b[i]) {
+                        i += 1;
+                    }
+                    kind = Kind::Lifetime;
+                }
+            }
+        } else if c.is_ascii_digit() {
+            i += 1;
+            while i < b.len() && ident_continue(b[i]) {
+                i += 1;
+            }
+            // One fractional part, only when a digit follows the dot —
+            // keeps `0..n` ranges and `1.max(x)` out of the literal.
+            if b.get(i) == Some(&b'.')
+                && b.get(i + 1).map_or(false, |d| d.is_ascii_digit())
+            {
+                i += 1;
+                while i < b.len() && ident_continue(b[i]) {
+                    i += 1;
+                }
+            }
+            kind = Kind::Num;
+        } else if ident_start(c) {
+            // `r#type` raw identifier (raw strings were tried above).
+            if c == b'r'
+                && b.get(i + 1) == Some(&b'#')
+                && b.get(i + 2).map_or(false, |&c| ident_start(c))
+            {
+                i += 2;
+            }
+            i += 1;
+            while i < b.len() && ident_continue(b[i]) {
+                i += 1;
+            }
+            kind = Kind::Ident;
+        } else if c == b':' && b.get(i + 1) == Some(&b':') {
+            i += 2;
+            kind = Kind::Punct;
+        } else {
+            i += utf8_len(c);
+            kind = Kind::Punct;
+        }
+        let first_on_line = start_line > last_line;
+        last_line = last_line.max(line).max(start_line);
+        toks.push(Token {
+            kind,
+            text: &src[start..i],
+            line: start_line,
+            end_line: line,
+            first_on_line,
+        });
+    }
+    (toks, errs)
+}
+
+/// If `b[i]` opens a raw string (`r…"` / `br…"`), return the index of
+/// the opening quote and the hash count.
+fn raw_str_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let hashes = tail_hashes(b, j);
+    j += hashes;
+    if b.get(j) == Some(&b'"') {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+/// Count consecutive `#` bytes starting at `i`.
+fn tail_hashes(b: &[u8], i: usize) -> usize {
+    let mut n = 0;
+    while b.get(i + n) == Some(&b'#') {
+        n += 1;
+    }
+    n
+}
+
+fn is_comment(t: &Token<'_>) -> bool {
+    matches!(t.kind, Kind::LineComment | Kind::BlockComment)
+}
+
+/// Line spans (inclusive) covered by `#[test]`- or `#[cfg(test)]`-
+/// attributed items: the attribute line through the item's closing
+/// brace. The rules use these to exempt test code.
+pub fn test_spans(tokens: &[Token<'_>]) -> Vec<(u32, u32)> {
+    let code: Vec<&Token<'_>> =
+        tokens.iter().filter(|t| !is_comment(t)).collect();
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        let opens_attr = |k: usize| {
+            k + 1 < code.len()
+                && code[k].text == "#"
+                && code[k + 1].text == "["
+        };
+        if !opens_attr(i) {
+            i += 1;
+            continue;
+        }
+        // Collect this attribute; any `test` identifier inside marks
+        // the following item as test-only (`#[test]`, `#[cfg(test)]`,
+        // `#[cfg(all(test, …))]`).
+        let attr_line = code[i].line;
+        let mut j = i + 2;
+        let mut depth = 1i32;
+        let mut is_test = false;
+        while j < code.len() && depth > 0 {
+            match code[j].text {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                "test" if code[j].kind == Kind::Ident => is_test = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !is_test {
+            i = j;
+            continue;
+        }
+        // Skip further attributes stacked on the same item.
+        while opens_attr(j) {
+            j += 2;
+            let mut d = 1i32;
+            while j < code.len() && d > 0 {
+                match code[j].text {
+                    "[" => d += 1,
+                    "]" => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        // Find the item's body: the first `{` at paren/bracket depth
+        // 0. A `;` first (e.g. `mod tests;`) means no inline body.
+        let mut d = 0i32;
+        let mut open = None;
+        while j < code.len() {
+            match code[j].text {
+                "(" | "[" => d += 1,
+                ")" | "]" => d -= 1,
+                "{" if d == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                ";" if d == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = open else {
+            let end = j.min(code.len().saturating_sub(1));
+            spans.push((attr_line, code[end].end_line));
+            i = j + 1;
+            continue;
+        };
+        // Match the body braces. Strings and comments are already
+        // tokenized away, so every `{`/`}` punct here is structural.
+        let mut bd = 0i32;
+        let mut k = open;
+        let mut end_line = code[open].end_line;
+        while k < code.len() {
+            match code[k].text {
+                "{" => bd += 1,
+                "}" => {
+                    bd -= 1;
+                    if bd == 0 {
+                        end_line = code[k].end_line;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        if bd != 0 {
+            // Unbalanced (malformed source): exempt to end of file
+            // rather than mis-flagging half a test module.
+            end_line = code.last().map_or(end_line, |t| t.end_line);
+        }
+        spans.push((attr_line, end_line));
+        i = k + 1;
+    }
+    spans
+}
+
+/// True when `line` falls inside any of `spans` (inclusive).
+pub fn in_spans(spans: &[(u32, u32)], line: u32) -> bool {
+    spans.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        let (toks, errs) = lex(src);
+        assert!(errs.is_empty(), "lex errors: {errs:?}");
+        toks.iter().map(|t| (t.kind, t.text.to_string())).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_paths() {
+        let ks = kinds("let x = Instant::now();");
+        let texts: Vec<&str> =
+            ks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(
+            texts,
+            vec!["let", "x", "=", "Instant", "::", "now", "(", ")", ";"]
+        );
+        assert_eq!(ks[4].0, Kind::Punct, ":: fuses into one token");
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let ks = kinds(r#"let s = "Instant::now() // not a comment";"#);
+        assert!(ks.iter().any(|(k, _)| *k == Kind::Str));
+        assert!(
+            !ks.iter().any(|(k, t)| *k == Kind::Ident && t == "Instant"),
+            "identifier leaked out of a string literal"
+        );
+        assert!(!ks.iter().any(|(k, _)| *k == Kind::LineComment));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let s = r##\"has \"# quote and .unwrap()\"## ;";
+        let ks = kinds(src);
+        assert!(ks.iter().any(|(k, _)| *k == Kind::RawStr));
+        assert!(
+            !ks.iter().any(|(k, t)| *k == Kind::Ident && t == "unwrap")
+        );
+        // The `;` after the raw string still lexes.
+        assert_eq!(ks.last().map(|(_, t)| t.as_str()), Some(";"));
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_raw_string() {
+        let ks = kinds("let r#type = 1;");
+        assert!(
+            ks.iter().any(|(k, t)| *k == Kind::Ident && t == "r#type")
+        );
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let ks =
+            kinds("/* outer /* inner .unwrap() */ still */ let a = 1;");
+        assert_eq!(ks[0].0, Kind::BlockComment);
+        assert!(
+            !ks.iter().any(|(k, t)| *k == Kind::Ident && t == "unwrap")
+        );
+        assert!(ks.iter().any(|(k, t)| *k == Kind::Ident && t == "let"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let ks = kinds("fn f<'a>(x: &'a u8) { let c = 'x'; let q = '\\''; }");
+        assert_eq!(
+            ks.iter().filter(|(k, _)| *k == Kind::Lifetime).count(),
+            2,
+            "two 'a lifetimes"
+        );
+        assert_eq!(
+            ks.iter().filter(|(k, _)| *k == Kind::Char).count(),
+            2,
+            "'x' and the escaped quote are char literals"
+        );
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_numbers() {
+        let src = "let a = \"line\none\ntwo\";\nlet b = 1;";
+        let (toks, errs) = lex(src);
+        assert!(errs.is_empty());
+        let b_tok = toks
+            .iter()
+            .find(|t| t.kind == Kind::Ident && t.text == "b")
+            .expect("b token");
+        assert_eq!(b_tok.line, 4);
+        assert!(!b_tok.first_on_line, "`let` starts line 4, not `b`");
+        let let_b = toks
+            .iter()
+            .filter(|t| t.text == "let")
+            .nth(1)
+            .expect("second let");
+        assert!(let_b.first_on_line);
+    }
+
+    #[test]
+    fn unterminated_string_reports_instead_of_panicking() {
+        let (_, errs) = lex("let s = \"never closed");
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].message.contains("unterminated"));
+    }
+
+    #[test]
+    fn test_spans_cover_cfg_test_modules_and_test_fns() {
+        let src = "\
+fn live() {}\n\
+#[test]\n\
+fn unit() {\n\
+    let x = 1;\n\
+}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    fn helper() {}\n\
+}\n\
+fn live2() {}\n";
+        let (toks, _) = lex(src);
+        let spans = test_spans(&toks);
+        assert_eq!(spans, vec![(2, 5), (6, 9)]);
+        assert!(!in_spans(&spans, 1));
+        assert!(in_spans(&spans, 4));
+        assert!(in_spans(&spans, 8));
+        assert!(!in_spans(&spans, 10));
+    }
+
+    #[test]
+    fn test_spans_skip_stacked_attributes() {
+        let src = "\
+#[test]\n\
+#[ignore] // microbench\n\
+fn bench_like() {\n\
+    let t = 0;\n\
+}\n";
+        let (toks, _) = lex(src);
+        let spans = test_spans(&toks);
+        assert_eq!(spans, vec![(1, 5)]);
+    }
+}

@@ -1,0 +1,249 @@
+//! `swan lint` — a zero-dependency static analyzer for the crate's
+//! own sources.
+//!
+//! Every guarantee this reproduction makes — bit-identical aggregates
+//! at any shard count, digest-neutral telemetry, the pinned batched
+//! draw sequence — is otherwise enforced *dynamically*, by property
+//! tests that must happen to hit the violating path. This pass rejects
+//! the hazards at the source level instead: a hand-rolled Rust lexer
+//! ([`lexer`], in the spirit of `util/json.rs`) feeds syntactic rule
+//! scans ([`rules`]) with per-site allow pragmas ([`pragma`]).
+//!
+//! Rule families (scopes live in [`rules`], the table in README):
+//!
+//! - `determinism` — no `Instant::now()`/`SystemTime`, no
+//!   `HashMap`/`HashSet` iteration, in digest-affecting modules
+//!   (`fleet`, `fl`, the serve coordinator/wire/cache, `util/rng`,
+//!   `util/fnv`); `obs` is exempt per its digest-neutral contract.
+//! - `rng` — `Rng` construction/forking only at registered sites
+//!   ([`rules::RNG_REGISTRY`]).
+//! - `panic` — no `unwrap`/`expect`/`panic!`-family on shard-worker
+//!   and serve-IO paths; warn-level, denied under `--deny-all`.
+//! - `unsafe` — every `unsafe` needs a nearby `// SAFETY:` comment.
+//! - `pragma` — unused, reason-less, or malformed allow pragmas are
+//!   themselves errors, so the allowlist can only shrink.
+//!
+//! Suppression syntax: `// lint: allow(rule) — reason` (own line =
+//! next code line; trailing = same line). The CLI surface is
+//! `swan lint [--deny-all] [--json] [paths…]`.
+
+pub mod lexer;
+pub mod pragma;
+pub mod rules;
+
+pub use rules::{Finding, ALLOWABLE, RNG_REGISTRY};
+
+/// Map an on-disk path to the module-relative form the scope tables
+/// use (`fleet/engine.rs`): the suffix after the last `src/`, or after
+/// `lint-fixtures/` for the known-bad fixture tree.
+fn rel_path(name: &str) -> String {
+    let norm = name.replace('\\', "/");
+    for marker in ["/src/", "lint-fixtures/"] {
+        if let Some(pos) = norm.rfind(marker) {
+            return norm[pos + marker.len()..].to_string();
+        }
+    }
+    norm.strip_prefix("src/").unwrap_or(&norm).to_string()
+}
+
+/// Lint one file's source text. `name` is used both for reporting and
+/// (via [`rel_path`]) for rule scoping.
+pub fn lint_source(name: &str, src: &str) -> Vec<Finding> {
+    let rel = rel_path(name);
+    let (tokens, lex_errors) = lexer::lex(src);
+    let mut out: Vec<Finding> = lex_errors
+        .into_iter()
+        .map(|e| Finding {
+            file: name.to_string(),
+            line: e.line,
+            rule: "lex",
+            deny: true,
+            message: e.message,
+        })
+        .collect();
+    let tests = lexer::test_spans(&tokens);
+    let mut malformed = Vec::new();
+    let pragmas = pragma::parse(&tokens, &mut malformed);
+    for (line, msg) in malformed {
+        out.push(Finding {
+            file: name.to_string(),
+            line,
+            rule: "pragma",
+            deny: true,
+            message: msg,
+        });
+    }
+    let mut raw = Vec::new();
+    rules::scan(&rel, &tokens, &tests, &mut raw);
+    let mut used = vec![false; pragmas.len()];
+    for mut f in raw {
+        let mut suppressed = false;
+        for (i, p) in pragmas.iter().enumerate() {
+            if p.target_line == f.line
+                && p.rules.iter().any(|r| r == f.rule)
+            {
+                used[i] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            f.file = name.to_string();
+            out.push(f);
+        }
+    }
+    for (i, p) in pragmas.iter().enumerate() {
+        for r in &p.rules {
+            if !ALLOWABLE.contains(&r.as_str()) {
+                out.push(Finding {
+                    file: name.to_string(),
+                    line: p.line,
+                    rule: "pragma",
+                    deny: true,
+                    message: format!(
+                        "unknown rule `{r}` in allow pragma \
+                         (allowable: {})",
+                        ALLOWABLE.join(", "),
+                    ),
+                });
+            }
+        }
+        if p.reason.is_empty() {
+            out.push(Finding {
+                file: name.to_string(),
+                line: p.line,
+                rule: "pragma",
+                deny: true,
+                message: "allow pragma without a reason — every \
+                          suppression must say why"
+                    .to_string(),
+            });
+        }
+        if !used[i]
+            && p.rules.iter().all(|r| ALLOWABLE.contains(&r.as_str()))
+        {
+            out.push(Finding {
+                file: name.to_string(),
+                line: p.line,
+                rule: "pragma",
+                deny: true,
+                message: format!(
+                    "unused allow pragma for `{}` — it suppresses \
+                     nothing; delete it",
+                    p.rules.join(", "),
+                ),
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Lint every `.rs` file under `paths` (files or directories),
+/// depth-first in sorted order so output is stable.
+pub fn lint_paths(paths: &[String]) -> crate::Result<Vec<Finding>> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    for p in paths {
+        let path = std::path::Path::new(p);
+        crate::ensure!(path.exists(), "lint: no such path '{p}'");
+        collect_rs(path, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    crate::ensure!(
+        !files.is_empty(),
+        "lint: no .rs files under {}",
+        paths.join(", ")
+    );
+    let mut out = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f).map_err(|e| {
+            crate::err!("lint: reading {}: {e}", f.display())
+        })?;
+        out.extend(lint_source(&f.display().to_string(), &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(
+    path: &std::path::Path,
+    files: &mut Vec<std::path::PathBuf>,
+) -> crate::Result<()> {
+    if path.is_dir() {
+        let rd = std::fs::read_dir(path).map_err(|e| {
+            crate::err!("lint: reading dir {}: {e}", path.display())
+        })?;
+        let mut children: Vec<std::path::PathBuf> = Vec::new();
+        for entry in rd {
+            let entry = entry.map_err(|e| {
+                crate::err!("lint: reading dir {}: {e}", path.display())
+            })?;
+            children.push(entry.path());
+        }
+        children.sort();
+        for c in children {
+            collect_rs(&c, files)?;
+        }
+    } else if path.extension().map_or(false, |x| x == "rs") {
+        files.push(path.to_path_buf());
+    }
+    Ok(())
+}
+
+/// Count the findings that fail the run: every `deny` finding, plus
+/// warn findings under `--deny-all`.
+pub fn failing(findings: &[Finding], deny_all: bool) -> usize {
+    findings.iter().filter(|f| f.deny || deny_all).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_path_strips_src_and_fixture_prefixes() {
+        assert_eq!(
+            rel_path("rust/src/fleet/engine.rs"),
+            "fleet/engine.rs"
+        );
+        assert_eq!(
+            rel_path("/abs/repo/rust/src/serve/wire.rs"),
+            "serve/wire.rs"
+        );
+        assert_eq!(
+            rel_path("rust/lint-fixtures/fleet/soa.rs"),
+            "fleet/soa.rs"
+        );
+        assert_eq!(rel_path("fl/sim.rs"), "fl/sim.rs");
+    }
+
+    #[test]
+    fn failing_separates_warn_from_deny() {
+        let fs = vec![
+            Finding {
+                file: "a".into(),
+                line: 1,
+                rule: "panic",
+                deny: false,
+                message: String::new(),
+            },
+            Finding {
+                file: "a".into(),
+                line: 2,
+                rule: "determinism",
+                deny: true,
+                message: String::new(),
+            },
+        ];
+        assert_eq!(failing(&fs, false), 1);
+        assert_eq!(failing(&fs, true), 2);
+    }
+
+    #[test]
+    fn clean_source_is_clean() {
+        let src = "\
+fn add(a: u64, b: u64) -> u64 {\n\
+    a.wrapping_add(b)\n\
+}\n";
+        assert!(lint_source("fleet/soa.rs", src).is_empty());
+    }
+}

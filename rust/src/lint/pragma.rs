@@ -1,0 +1,197 @@
+//! Per-site allow pragmas.
+//!
+//! Syntax (plain `//` comments only — doc comments are never parsed,
+//! so rule documentation can quote the form freely):
+//!
+//! ```text
+//! // lint: allow(rule[, rule…]) — reason the suppression is sound
+//! ```
+//!
+//! A pragma on its own line suppresses matching findings on the next
+//! code line; a trailing pragma suppresses findings on its own line.
+//! The reason is mandatory (after `—`, `--`, or `:`), and the driver
+//! rejects pragmas that suppress nothing — the allowlist can only
+//! shrink.
+
+use super::lexer::{Kind, Token};
+
+/// One parsed allow pragma.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    /// Line the pragma comment sits on.
+    pub line: u32,
+    /// Line whose findings it suppresses (0 when nothing follows it).
+    pub target_line: u32,
+    /// Rule names inside `allow(…)`.
+    pub rules: Vec<String>,
+    /// Text after the separator; empty is a hygiene violation.
+    pub reason: String,
+}
+
+/// Extract pragmas from the token stream. Comments that start with
+/// `lint:` but don't parse are pushed onto `malformed` as
+/// `(line, message)` for the driver to report.
+pub fn parse(
+    tokens: &[Token<'_>],
+    malformed: &mut Vec<(u32, String)>,
+) -> Vec<Pragma> {
+    let mut out = Vec::new();
+    for (idx, t) in tokens.iter().enumerate() {
+        if t.kind != Kind::LineComment {
+            continue;
+        }
+        if t.text.starts_with("///") || t.text.starts_with("//!") {
+            continue;
+        }
+        let body = t.text.trim_start_matches('/').trim_start();
+        let Some(rest) = body.strip_prefix("lint:") else {
+            continue;
+        };
+        match parse_body(rest) {
+            Ok((rules, reason)) => {
+                let target_line = if t.first_on_line {
+                    next_code_line(tokens, idx)
+                } else {
+                    t.line
+                };
+                out.push(Pragma {
+                    line: t.line,
+                    target_line,
+                    rules,
+                    reason,
+                });
+            }
+            Err(msg) => malformed.push((t.line, msg)),
+        }
+    }
+    out
+}
+
+fn parse_body(rest: &str) -> Result<(Vec<String>, String), String> {
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix("allow") else {
+        return Err(
+            "malformed pragma: expected `allow(…)` after `lint:`"
+                .to_string(),
+        );
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return Err(
+            "malformed pragma: expected `(` after `allow`".to_string()
+        );
+    };
+    let Some(close) = rest.find(')') else {
+        return Err("malformed pragma: unclosed `allow(`".to_string());
+    };
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return Err(
+            "malformed pragma: empty rule list in `allow()`".to_string()
+        );
+    }
+    let mut reason = rest[close + 1..].trim();
+    for sep in ["—", "–", "--", "-", ":"] {
+        if let Some(r) = reason.strip_prefix(sep) {
+            reason = r.trim_start();
+            break;
+        }
+    }
+    Ok((rules, reason.to_string()))
+}
+
+/// Line of the first code token after `idx` (0 when none).
+fn next_code_line(tokens: &[Token<'_>], idx: usize) -> u32 {
+    tokens[idx + 1..]
+        .iter()
+        .find(|t| {
+            !matches!(t.kind, Kind::LineComment | Kind::BlockComment)
+        })
+        .map_or(0, |t| t.line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::lex;
+
+    fn pragmas(src: &str) -> (Vec<Pragma>, Vec<(u32, String)>) {
+        let (toks, errs) = lex(src);
+        assert!(errs.is_empty(), "lex errors: {errs:?}");
+        let mut malformed = Vec::new();
+        let ps = parse(&toks, &mut malformed);
+        (ps, malformed)
+    }
+
+    #[test]
+    fn own_line_pragma_targets_next_code_line() {
+        let src = "\
+// lint: allow(determinism) — timing is report-only here\n\
+let t = Instant::now();\n";
+        let (ps, bad) = pragmas(src);
+        assert!(bad.is_empty());
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].line, 1);
+        assert_eq!(ps[0].target_line, 2);
+        assert_eq!(ps[0].rules, vec!["determinism"]);
+        assert_eq!(ps[0].reason, "timing is report-only here");
+    }
+
+    #[test]
+    fn trailing_pragma_targets_its_own_line() {
+        let src =
+            "let t = now(); // lint: allow(determinism) -- report-only\n";
+        let (ps, bad) = pragmas(src);
+        assert!(bad.is_empty());
+        assert_eq!(ps[0].target_line, 1);
+        assert_eq!(ps[0].reason, "report-only");
+    }
+
+    #[test]
+    fn multiple_rules_and_ascii_separator() {
+        let src = "\
+// lint: allow(determinism, panic) - both are test-harness-only\n\
+x();\n";
+        let (ps, _) = pragmas(src);
+        assert_eq!(ps[0].rules, vec!["determinism", "panic"]);
+        assert_eq!(ps[0].reason, "both are test-harness-only");
+    }
+
+    #[test]
+    fn missing_reason_parses_as_empty() {
+        let (ps, bad) = pragmas("// lint: allow(unsafe)\nx();\n");
+        assert!(bad.is_empty());
+        assert_eq!(ps[0].reason, "");
+    }
+
+    #[test]
+    fn malformed_pragmas_are_reported() {
+        let (ps, bad) = pragmas("// lint: deny(everything)\nx();\n");
+        assert!(ps.is_empty());
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].1.contains("allow"));
+        let (ps2, bad2) = pragmas("// lint: allow(\nx();\n");
+        assert!(ps2.is_empty());
+        assert_eq!(bad2.len(), 1);
+    }
+
+    #[test]
+    fn doc_comments_are_not_pragmas() {
+        let (ps, bad) =
+            pragmas("/// lint: allow(determinism) — just docs\nx();\n");
+        assert!(ps.is_empty());
+        assert!(bad.is_empty());
+    }
+
+    #[test]
+    fn pragma_inside_string_is_inert() {
+        let src = "let s = \"// lint: allow(panic) — not real\";\n";
+        let (ps, bad) = pragmas(src);
+        assert!(ps.is_empty());
+        assert!(bad.is_empty());
+    }
+}

@@ -1,0 +1,653 @@
+//! The rule families `swan lint` enforces, as scans over the token
+//! stream from [`super::lexer`].
+//!
+//! Scopes are path-based on the module-relative file name (see
+//! `super::rel_path`): the determinism and RNG rules cover the
+//! digest-affecting modules, the panic rule covers shard-worker and
+//! serve-IO paths, and unsafe hygiene is crate-wide. `#[test]` /
+//! `#[cfg(test)]` spans are exempt from everything except unsafe
+//! hygiene — a test that needs `unsafe` still needs a `SAFETY:` story.
+
+use super::lexer::{in_spans, Kind, Token};
+
+/// Rule names a pragma may `allow`. `pragma` and `lex` findings are
+/// deliberately absent: suppressions and broken lexes can't be
+/// suppressed, so the allowlist can only shrink.
+pub const ALLOWABLE: &[&str] = &["determinism", "rng", "panic", "unsafe"];
+
+/// One lint finding. `deny` findings fail the run unconditionally;
+/// warn findings (the panic family) fail only under `--deny-all`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub deny: bool,
+    pub message: String,
+}
+
+/// Modules whose state feeds round/aggregate digests: determinism and
+/// RNG-discipline rules apply here. `obs/` is deliberately absent —
+/// its contract is digest *neutrality* (enforced by the `obs_stream`
+/// tests), and it owns the audited wall-clock chokepoint
+/// [`crate::obs::wall_timer`].
+fn digest_scope(rel: &str) -> bool {
+    rel.starts_with("fleet/")
+        || rel.starts_with("fl/")
+        || matches!(
+            rel,
+            "serve/coordinator.rs"
+                | "serve/wire.rs"
+                | "serve/cache.rs"
+                | "util/rng.rs"
+                | "util/fnv.rs"
+        )
+}
+
+/// Shard-worker and serve-IO paths: a panic here tears down a worker
+/// mid-round (poisoned mailbox, dead IO lane) instead of surfacing
+/// through `error.rs`. `fleet/bench.rs` stays out on purpose — its
+/// determinism asserts are deliberate crash-on-divergence gates.
+fn panic_scope(rel: &str) -> bool {
+    matches!(
+        rel,
+        "serve/server.rs"
+            | "serve/client.rs"
+            | "serve/coordinator.rs"
+            | "serve/wire.rs"
+            | "fleet/engine.rs"
+            | "fleet/soa.rs"
+            | "fleet/coordinator.rs"
+    )
+}
+
+/// Files allowed to construct or fork `Rng` streams, with why.
+/// Everything else in the digest scope must thread an existing stream
+/// through — a new construction site reorders the draw sequence
+/// `tests/fleet_batch_parity.rs` pins.
+pub const RNG_REGISTRY: &[(&str, &str)] = &[
+    ("util/rng.rs", "the generator's home module"),
+    (
+        "fleet/engine.rs",
+        "round_rng: the (seed, round)-keyed selection stream",
+    ),
+    (
+        "fleet/scenario.rs",
+        "build_fleet: per-device trace/charger assignment streams",
+    ),
+    (
+        "fleet/device.rs",
+        "envelope_draws: the per-device charger envelope stream",
+    ),
+    (
+        "fl/sim.rs",
+        "FlSim::new: per-client credit streams derived from the root seed",
+    ),
+];
+
+/// Hash-container methods whose visit order is allocation-dependent.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+const PANIC_MACROS: &[&str] =
+    &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Run every applicable rule family over one file's tokens.
+pub fn scan(
+    rel: &str,
+    tokens: &[Token<'_>],
+    tests: &[(u32, u32)],
+    out: &mut Vec<Finding>,
+) {
+    let code: Vec<&Token<'_>> = tokens
+        .iter()
+        .filter(|t| {
+            !matches!(t.kind, Kind::LineComment | Kind::BlockComment)
+        })
+        .collect();
+    if digest_scope(rel) {
+        determinism(&code, tests, out);
+        rng_discipline(rel, &code, tests, out);
+    }
+    if panic_scope(rel) {
+        panic_safety(&code, tests, out);
+    }
+    unsafe_hygiene(tokens, out);
+}
+
+fn finding(
+    rule: &'static str,
+    deny: bool,
+    line: u32,
+    message: String,
+) -> Finding {
+    Finding {
+        file: String::new(),
+        line,
+        rule,
+        deny,
+        message,
+    }
+}
+
+fn text_at(code: &[&Token<'_>], i: usize) -> &str {
+    code.get(i).map_or("", |t| t.text)
+}
+
+fn ident_at(code: &[&Token<'_>], i: usize, name: &str) -> bool {
+    code.get(i)
+        .map_or(false, |t| t.kind == Kind::Ident && t.text == name)
+}
+
+/// Rule `determinism`: no wall clock, no hash-ordered iteration, in
+/// digest-affecting modules.
+fn determinism(
+    code: &[&Token<'_>],
+    tests: &[(u32, u32)],
+    out: &mut Vec<Finding>,
+) {
+    let tracked = hash_bindings(code);
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.kind != Kind::Ident || in_spans(tests, t.line) {
+            continue;
+        }
+        if t.text == "SystemTime" {
+            out.push(finding(
+                "determinism",
+                true,
+                t.line,
+                "`SystemTime` in a digest-affecting module — wall time \
+                 is nondeterministic"
+                    .to_string(),
+            ));
+            continue;
+        }
+        if t.text == "Instant"
+            && text_at(code, i + 1) == "::"
+            && ident_at(code, i + 2, "now")
+        {
+            out.push(finding(
+                "determinism",
+                true,
+                t.line,
+                "`Instant::now()` in a digest-affecting module — route \
+                 telemetry timing through `obs::wall_timer()`"
+                    .to_string(),
+            ));
+            continue;
+        }
+        if tracked.binary_search(&t.text).is_err() {
+            continue;
+        }
+        // `name.iter()` / `name.keys()` / … on a hash-typed binding.
+        if text_at(code, i + 1) == "."
+            && code.get(i + 2).map_or(false, |m| {
+                m.kind == Kind::Ident && ITER_METHODS.contains(&m.text)
+            })
+        {
+            out.push(finding(
+                "determinism",
+                true,
+                t.line,
+                format!(
+                    "iteration over hash-ordered `{}` (`.{}()`) in a \
+                     digest-affecting module — fold over a sorted key \
+                     list instead",
+                    t.text,
+                    text_at(code, i + 2),
+                ),
+            ));
+            continue;
+        }
+        // `for x in name` / `for x in &mut name`.
+        let mut p = i;
+        while p > 0
+            && (text_at(code, p - 1) == "&"
+                || ident_at(code, p - 1, "mut"))
+        {
+            p -= 1;
+        }
+        if p > 0 && ident_at(code, p - 1, "in") {
+            out.push(finding(
+                "determinism",
+                true,
+                t.line,
+                format!(
+                    "for-loop over hash-ordered `{}` in a \
+                     digest-affecting module — fold over a sorted key \
+                     list instead",
+                    t.text,
+                ),
+            ));
+        }
+    }
+}
+
+/// Identifiers bound to `HashMap`/`HashSet` in this file, from `let`
+/// bindings, type ascriptions, struct fields, and fn params. Coarse
+/// (name-based, file-global) by design: a collision with a same-named
+/// non-hash binding can be pragma'd with a reason.
+fn hash_bindings<'a>(code: &[&Token<'a>]) -> Vec<&'a str> {
+    let mut names: Vec<&'a str> = Vec::new();
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.kind != Kind::Ident
+            || (t.text != "HashMap" && t.text != "HashSet")
+        {
+            continue;
+        }
+        // Walk left past a `std::collections::` path prefix…
+        let mut j = i;
+        while j >= 2 && text_at(code, j - 1) == "::" {
+            j -= 2;
+        }
+        if j == 0 {
+            continue;
+        }
+        // …then past `&`, `mut`, and lifetimes to the `:` or `=` that
+        // links the type to its binder.
+        let mut k = j - 1;
+        while k > 0
+            && (text_at(code, k) == "&"
+                || ident_at(code, k, "mut")
+                || code[k].kind == Kind::Lifetime)
+        {
+            k -= 1;
+        }
+        let sep = text_at(code, k);
+        if (sep == ":" || sep == "=")
+            && k > 0
+            && code[k - 1].kind == Kind::Ident
+        {
+            names.push(code[k - 1].text);
+        }
+    }
+    names.sort_unstable();
+    names.dedup();
+    names
+}
+
+/// Rule `rng`: `Rng::new` / `.fork(` only in registered files.
+fn rng_discipline(
+    rel: &str,
+    code: &[&Token<'_>],
+    tests: &[(u32, u32)],
+    out: &mut Vec<Finding>,
+) {
+    if RNG_REGISTRY.iter().any(|(f, _)| *f == rel) {
+        return;
+    }
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.kind != Kind::Ident || in_spans(tests, t.line) {
+            continue;
+        }
+        if t.text == "Rng"
+            && text_at(code, i + 1) == "::"
+            && ident_at(code, i + 2, "new")
+        {
+            out.push(finding(
+                "rng",
+                true,
+                t.line,
+                "`Rng::new` outside a registered construction site — \
+                 a new stream reorders the draw sequence the parity \
+                 tests pin; thread an existing stream through, or \
+                 register this site in lint::rules::RNG_REGISTRY"
+                    .to_string(),
+            ));
+        }
+        if t.text == "fork"
+            && text_at(code, i.wrapping_sub(1)) == "."
+            && i > 0
+            && text_at(code, i + 1) == "("
+        {
+            out.push(finding(
+                "rng",
+                true,
+                t.line,
+                "`.fork(…)` derives a new RNG stream outside a \
+                 registered site — register it in \
+                 lint::rules::RNG_REGISTRY or reuse an existing stream"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule `panic`: worker/IO paths must propagate through `error.rs`.
+fn panic_safety(
+    code: &[&Token<'_>],
+    tests: &[(u32, u32)],
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..code.len() {
+        let t = code[i];
+        if t.kind != Kind::Ident || in_spans(tests, t.line) {
+            continue;
+        }
+        if (t.text == "unwrap" || t.text == "expect")
+            && i > 0
+            && text_at(code, i - 1) == "."
+            && text_at(code, i + 1) == "("
+        {
+            out.push(finding(
+                "panic",
+                false,
+                t.line,
+                format!(
+                    "`.{}()` on a shard-worker/serve-IO path — \
+                     propagate through `error.rs` (`crate::Result`)",
+                    t.text,
+                ),
+            ));
+        }
+        if PANIC_MACROS.contains(&t.text)
+            && text_at(code, i + 1) == "!"
+        {
+            out.push(finding(
+                "panic",
+                false,
+                t.line,
+                format!(
+                    "`{}!` on a shard-worker/serve-IO path — return an \
+                     `error.rs` error instead of tearing the worker \
+                     down",
+                    t.text,
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule `unsafe`: every `unsafe` keyword needs a `SAFETY:` comment
+/// whose comment run ends on the same line or within the three lines
+/// above. A multi-line justification is a run of consecutive `//`
+/// lines with the marker only on the first, so the marker comment's
+/// reach extends through the contiguous comment lines that follow it.
+/// Runs over the full token stream (comments included) and does not
+/// exempt tests.
+fn unsafe_hygiene(tokens: &[Token<'_>], out: &mut Vec<Finding>) {
+    let comments: Vec<&Token<'_>> = tokens
+        .iter()
+        .filter(|c| {
+            matches!(c.kind, Kind::LineComment | Kind::BlockComment)
+        })
+        .collect();
+    let mut safety_spans: Vec<(u32, u32)> = Vec::new();
+    for (i, c) in comments.iter().enumerate() {
+        if !c.text.contains("SAFETY:") {
+            continue;
+        }
+        let mut end = c.end_line;
+        for d in &comments[i + 1..] {
+            if d.line > end + 1 {
+                break;
+            }
+            end = end.max(d.end_line);
+        }
+        safety_spans.push((c.line, end));
+    }
+    for t in tokens {
+        if t.kind != Kind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        let covered = safety_spans
+            .iter()
+            .any(|&(start, end)| start <= t.line && end + 3 >= t.line);
+        if !covered {
+            out.push(finding(
+                "unsafe",
+                true,
+                t.line,
+                "`unsafe` without a `// SAFETY:` comment on the same \
+                 line or the three lines above"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::lint::lint_source;
+
+    fn rules_hit(name: &str, src: &str) -> Vec<&'static str> {
+        let mut rs: Vec<&'static str> =
+            lint_source(name, src).into_iter().map(|f| f.rule).collect();
+        rs.sort_unstable();
+        rs.dedup();
+        rs
+    }
+
+    #[test]
+    fn instant_now_flagged_in_digest_scope_only() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(rules_hit("fleet/soa.rs", src), vec!["determinism"]);
+        assert!(rules_hit("obs/span.rs", src).is_empty());
+        assert!(rules_hit("sim/clock.rs", src).is_empty());
+    }
+
+    #[test]
+    fn system_time_flagged() {
+        let src = "fn f() { let t = SystemTime::now(); }\n";
+        assert_eq!(
+            rules_hit("serve/coordinator.rs", src),
+            vec!["determinism"]
+        );
+    }
+
+    #[test]
+    fn hash_iteration_flagged_but_keyed_access_is_not() {
+        let bad = "\
+fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+    let mut acc = 0;\n\
+    for (_k, v) in m.iter() {\n\
+        acc += *v;\n\
+    }\n\
+    acc\n\
+}\n";
+        assert_eq!(rules_hit("fl/server.rs", bad), vec!["determinism"]);
+        let good = "\
+fn f(m: &HashMap<u32, u32>, keys: &[u32]) -> u32 {\n\
+    let mut acc = 0;\n\
+    for k in keys {\n\
+        acc += m.get(k).copied().unwrap_or(0);\n\
+    }\n\
+    acc\n\
+}\n";
+        assert!(rules_hit("fl/server.rs", good).is_empty());
+    }
+
+    #[test]
+    fn for_loop_over_hash_binding_flagged() {
+        let src = "\
+fn f() {\n\
+    let mut s = HashSet::new();\n\
+    s.insert(1);\n\
+    for v in &s {\n\
+        drop(v);\n\
+    }\n\
+}\n";
+        assert_eq!(
+            rules_hit("fleet/engine.rs", src),
+            vec!["determinism"]
+        );
+    }
+
+    #[test]
+    fn rng_construction_outside_registry_flagged() {
+        let src = "fn f() -> u64 { Rng::new(7).next_u64() }\n";
+        assert_eq!(rules_hit("fl/server.rs", src), vec!["rng"]);
+        // Registered site: fine.
+        assert!(rules_hit("fl/sim.rs", src).is_empty());
+        // Out of digest scope: fine.
+        assert!(rules_hit("trace/gen.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fork_outside_registry_flagged() {
+        let src = "fn f(r: &mut Rng) -> Rng { r.fork(3) }\n";
+        assert_eq!(rules_hit("fleet/soa.rs", src), vec!["rng"]);
+        assert!(rules_hit("fleet/scenario.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_family_flagged_in_worker_paths_only() {
+        let src = "\
+fn f(x: Option<u32>) -> u32 {\n\
+    if x.is_none() {\n\
+        panic!(\"boom\");\n\
+    }\n\
+    x.unwrap()\n\
+}\n";
+        let hits = rules_hit("serve/server.rs", src);
+        assert_eq!(hits, vec!["panic"]);
+        assert!(rules_hit("fleet/bench.rs", src).is_empty());
+        // unwrap_or_else is not unwrap: exact-identifier matching.
+        let ok = "fn f(x: Option<u32>) -> u32 { x.unwrap_or_else(|| 0) }\n";
+        assert!(rules_hit("serve/server.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn test_code_is_exempt_except_unsafe() {
+        let src = "\
+#[cfg(test)]\n\
+mod tests {\n\
+    #[test]\n\
+    fn t() {\n\
+        let r = Rng::new(1);\n\
+        let t = Instant::now();\n\
+        r.x.unwrap();\n\
+        drop(t);\n\
+    }\n\
+}\n";
+        assert!(rules_hit("fleet/soa.rs", src).is_empty());
+        let unsafe_in_test = "\
+#[test]\n\
+fn t() {\n\
+    let p = core::ptr::null::<u8>();\n\
+    let _v = unsafe { p.read() };\n\
+}\n";
+        assert_eq!(
+            rules_hit("util/affinity.rs", unsafe_in_test),
+            vec!["unsafe"]
+        );
+    }
+
+    #[test]
+    fn safety_comment_satisfies_unsafe_hygiene() {
+        let src = "\
+fn f(p: *const u8) -> u8 {\n\
+    // SAFETY: caller guarantees p is valid for reads.\n\
+    unsafe { *p }\n\
+}\n";
+        assert!(rules_hit("util/affinity.rs", src).is_empty());
+        let far = "\
+fn f(p: *const u8) -> u8 {\n\
+    // SAFETY: too far away to count.\n\
+    let a = 1;\n\
+    let b = a + 1;\n\
+    let c = b + 1;\n\
+    let d = c + 1;\n\
+    drop((a, b, c, d));\n\
+    unsafe { *p }\n\
+}\n";
+        assert_eq!(rules_hit("util/affinity.rs", far), vec!["unsafe"]);
+    }
+
+    #[test]
+    fn multi_line_safety_run_reaches_the_unsafe_block() {
+        // marker on the first line only; the run of consecutive `//`
+        // lines must carry its reach down to the `unsafe`
+        let src = "\
+fn f(p: *const u8) -> u8 {\n\
+    // SAFETY: p is valid for reads because the caller derived it\n\
+    // from a live &[u8] borrow two frames up, and the read cannot\n\
+    // outlive that borrow; nothing here mutates through it, and\n\
+    // the pointee is plain-old-data so no drop glue can run.\n\
+    // (Deliberately long: only the first line has the marker.)\n\
+    unsafe { *p }\n\
+}\n";
+        assert!(rules_hit("util/affinity.rs", src).is_empty());
+        // a gap in the run breaks the chain: the marker's reach stops
+        // at the blank-separated comment, leaving the unsafe uncovered
+        let gapped = "\
+fn f(p: *const u8) -> u8 {\n\
+    // SAFETY: reach ends here.\n\
+\n\
+    let a = 1;\n\
+    let b = a + 1;\n\
+    let c = b + 1;\n\
+    drop((a, b, c));\n\
+    // unrelated trailing note, no marker\n\
+    unsafe { *p }\n\
+}\n";
+        assert_eq!(rules_hit("util/affinity.rs", gapped), vec!["unsafe"]);
+    }
+
+    #[test]
+    fn pragma_suppresses_and_unused_pragma_fails() {
+        let suppressed = "\
+fn f() {\n\
+    // lint: allow(determinism) — report-only telemetry timing\n\
+    let t = Instant::now();\n\
+    drop(t);\n\
+}\n";
+        assert!(rules_hit("fleet/soa.rs", suppressed).is_empty());
+        let unused = "\
+fn f() {\n\
+    // lint: allow(determinism) — nothing here needs it\n\
+    let t = 1;\n\
+    drop(t);\n\
+}\n";
+        assert_eq!(rules_hit("fleet/soa.rs", unused), vec!["pragma"]);
+    }
+
+    #[test]
+    fn pragma_without_reason_fails_even_when_it_suppresses() {
+        let src = "\
+fn f() {\n\
+    let t = Instant::now(); // lint: allow(determinism)\n\
+    drop(t);\n\
+}\n";
+        assert_eq!(rules_hit("fleet/soa.rs", src), vec!["pragma"]);
+    }
+
+    #[test]
+    fn unknown_rule_in_pragma_fails() {
+        let src = "\
+fn f() {\n\
+    // lint: allow(vibes) — not a rule\n\
+    let t = 1;\n\
+    drop(t);\n\
+}\n";
+        assert_eq!(rules_hit("fleet/soa.rs", src), vec!["pragma"]);
+    }
+
+    #[test]
+    fn violations_inside_literals_do_not_fire() {
+        let src = "\
+fn f() -> &'static str {\n\
+    // a comment mentioning Instant::now() is fine\n\
+    \"Instant::now() .unwrap() panic!\"\n\
+}\n";
+        assert!(rules_hit("fleet/soa.rs", src).is_empty());
+        let raw = "\
+fn f() -> &'static str {\n\
+    r#\"Rng::new(1) for x in m.iter()\"#\n\
+}\n";
+        assert!(rules_hit("serve/coordinator.rs", raw).is_empty());
+    }
+}

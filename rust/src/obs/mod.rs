@@ -48,3 +48,16 @@ pub use span::{
     PHASE_CLOSE, PHASE_FINISH, PHASE_FLUSH, PHASE_SELECT, PHASE_STEP,
 };
 pub use trace::{TraceClock, TraceEdge};
+
+/// The audited wall-clock read for digest-affecting modules.
+///
+/// `swan lint`'s determinism rule forbids `Instant::now()` inside
+/// `fleet`/`fl`/the serve coordinator, so those modules time their
+/// phases through this single obs-owned chokepoint instead. Timing is
+/// telemetry: the values land in spans, metrics, and `BENCH_*.json`
+/// records, never in digests — keeping every wall-clock read behind
+/// one audited symbol is what makes that reviewable.
+#[inline]
+pub fn wall_timer() -> std::time::Instant {
+    std::time::Instant::now()
+}

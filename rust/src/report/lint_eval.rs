@@ -1,0 +1,44 @@
+//! `swan lint` findings rendered as a report table.
+
+use crate::lint::Finding;
+use crate::util::table::Table;
+
+/// One row per finding: file, line, rule, severity, message.
+pub fn lint_table(findings: &[Finding]) -> Table {
+    let mut t = Table::new(
+        "swan lint findings",
+        &["file", "line", "rule", "severity", "message"],
+    );
+    for f in findings {
+        t.row(&[
+            f.file.clone(),
+            f.line.to_string(),
+            f.rule.to_string(),
+            if f.deny { "deny" } else { "warn" }.to_string(),
+            f.message.clone(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_one_row_per_finding() {
+        let fs = vec![Finding {
+            file: "rust/src/fleet/soa.rs".into(),
+            line: 42,
+            rule: "determinism",
+            deny: true,
+            message: "wall clock in digest scope".into(),
+        }];
+        let t = lint_table(&fs);
+        assert_eq!(t.rows.len(), 1);
+        let md = t.to_markdown();
+        assert!(md.contains("determinism"));
+        assert!(md.contains("42"));
+        assert!(md.contains("deny"));
+    }
+}

@@ -8,6 +8,7 @@
 pub mod fig1;
 pub mod fig2;
 pub mod fleet_eval;
+pub mod lint_eval;
 pub mod local_eval;
 pub mod obs_eval;
 pub mod pcmark_eval;
@@ -16,6 +17,7 @@ pub mod serve_eval;
 pub use fig1::fig1b_matmul_rows;
 pub use fig2::fig2_combo_rows;
 pub use fleet_eval::{fleet_eval_rows, fleet_table};
+pub use lint_eval::lint_table;
 pub use local_eval::{table2_rows, Table2Row};
 pub use obs_eval::{obs_metrics_table, obs_table, obs_top_table};
 pub use pcmark_eval::{fig3_rows, table3_rows, Table3Row};

@@ -217,7 +217,10 @@ impl ServeClient for TcpClient {
             round,
             op: RoundOp::Close,
         })])?;
-        match Self::expect_ack(reply.into_iter().next().unwrap())? {
+        let first = reply.into_iter().next().ok_or_else(|| {
+            crate::err!("serve: close_round({round}) got an empty reply")
+        })?;
+        match Self::expect_ack(first)? {
             Ack::Closed { picked } => Ok(picked),
             other => {
                 crate::bail!("serve: close_round({round}) got {other:?}")
@@ -230,7 +233,10 @@ impl ServeClient for TcpClient {
             round,
             op: RoundOp::Finish,
         })])?;
-        match reply.into_iter().next().unwrap() {
+        let first = reply.into_iter().next().ok_or_else(|| {
+            crate::err!("serve: finish_round({round}) got an empty reply")
+        })?;
+        match first {
             Msg::RoundSummary(s) => Ok(s),
             other => {
                 crate::bail!("serve: finish_round({round}) got {other:?}")

@@ -43,10 +43,12 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
 
 use crate::fl::server::fedavg;
 use crate::fl::selection::select_uniform;
+// the lint determinism rule bans raw wall-clock constructors in
+// digest-affecting modules; timing here is telemetry, never round state
+use crate::obs::wall_timer;
 use crate::fleet::engine::{round_rng, EMPTY_ROUND_WAIT_S};
 use crate::fleet::scenario::ScenarioSpec;
 use crate::workload::{load_or_builtin, Workload, WorkloadName};
@@ -275,11 +277,27 @@ impl Coordinator {
         self.clock.now_s()
     }
 
-    fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
-        // a poisoned lock means another server thread panicked
-        // mid-round; the state is torn, so propagating the panic to
-        // this connection's thread is the honest move
-        m.lock().expect("serve coordinator lock poisoned")
+    /// Lock for round-mutating paths. A poisoned lock means another
+    /// server thread panicked mid-round — the state may be torn, so
+    /// surface it as a protocol error the caller propagates (the wire
+    /// layer turns it into a `Rejected` ack) instead of cascading the
+    /// panic through every IO worker.
+    fn lock<'a, T>(
+        m: &'a Mutex<T>,
+    ) -> crate::Result<std::sync::MutexGuard<'a, T>> {
+        m.lock().map_err(|_| {
+            crate::err!(
+                "serve: coordinator state poisoned by a peer thread panic"
+            )
+        })
+    }
+
+    /// Lock for read-only report accessors (digest/stats/metrics).
+    /// These run after the harness has already observed any failure
+    /// through [`Self::lock`]; a poisoned snapshot is still worth
+    /// reporting, so recover the guard rather than failing the report.
+    fn lock_report<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+        m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
     /// Move a coalesced batch into the round state and warm the profile
@@ -287,13 +305,13 @@ impl Coordinator {
     /// cache-lock acquisition per `batch_size` check-ins, and at most
     /// one exploration per distinct context regardless of batch
     /// composition.
-    fn flush_batch(&self, batch: Vec<CheckIn>) {
+    fn flush_batch(&self, batch: Vec<CheckIn>) -> crate::Result<()> {
         if batch.is_empty() {
-            return;
+            return Ok(());
         }
-        let t0 = Instant::now();
+        let t0 = wall_timer();
         let size = batch.len();
-        let mut r = Self::lock(&self.round);
+        let mut r = Self::lock(&self.round)?;
         // a check-in landing after its round closed (free-running
         // clients racing the pacer) was counted toward the *next*
         // round's pending counters, so it belongs to the next round's
@@ -306,7 +324,7 @@ impl Coordinator {
             r.round + 1
         };
         drop(r);
-        let mut cache = Self::lock(&self.cache);
+        let mut cache = Self::lock(&self.cache)?;
         for ci in &batch {
             if let Some(model) = model_from_code(ci.model) {
                 let key = PlanKey {
@@ -320,7 +338,7 @@ impl Coordinator {
             }
         }
         drop(cache);
-        let mut r = Self::lock(&self.round);
+        let mut r = Self::lock(&self.round)?;
         let h = r
             .metrics
             .hist("serve.flush_s", crate::obs::LATENCY_BUCKETS_S);
@@ -332,6 +350,7 @@ impl Coordinator {
                 size,
             });
         }
+        Ok(())
     }
 
     /// Check-in intake (any thread). Rejects unknown models, defers
@@ -344,9 +363,13 @@ impl Coordinator {
         {
             return Ack::Rejected;
         }
-        let t0 = Instant::now();
+        let t0 = wall_timer();
         let (ack, full_batch) = {
-            let mut p = Self::lock(&self.pending);
+            // an Ack-returning entry point: poison degrades to the
+            // protocol's refusal instead of an unwind
+            let Ok(mut p) = Self::lock(&self.pending) else {
+                return Ack::Rejected;
+            };
             p.checkins += 1;
             let out = if self.cfg.admit_capacity > 0
                 && p.admitted >= self.cfg.admit_capacity
@@ -404,16 +427,21 @@ impl Coordinator {
                 _ => {}
             }
         }
-        self.flush_batch(full_batch);
+        // the admitted check-ins in a batch that fails to flush never
+        // reach round state; their acks were already computed, so the
+        // honest degraded answer for THIS caller is a rejection
+        if self.flush_batch(full_batch).is_err() {
+            return Ack::Rejected;
+        }
         ack
     }
 
     /// End the check-in phase of `round`: flush the partial batch, run
     /// selection, resolve the picked leases. Returns the picked count.
     pub fn close_round(&self, round: u32) -> crate::Result<u32> {
-        let t0 = Instant::now();
+        let t0 = wall_timer();
         let (batch, checkins, deferred, intake_hist) = {
-            let mut p = Self::lock(&self.pending);
+            let mut p = Self::lock(&self.pending)?;
             let b = std::mem::take(&mut p.batch);
             let c = std::mem::take(&mut p.checkins);
             let d = std::mem::take(&mut p.deferred);
@@ -421,9 +449,9 @@ impl Coordinator {
             p.admitted = 0;
             (b, c, d, ih)
         };
-        self.flush_batch(batch);
+        self.flush_batch(batch)?;
 
-        let mut r = Self::lock(&self.round);
+        let mut r = Self::lock(&self.round)?;
         crate::ensure!(
             r.phase == Phase::CheckIn && r.round == round,
             "serve: close_round({round}) in phase {:?} of round {}",
@@ -449,7 +477,7 @@ impl Coordinator {
         let picked_ids =
             select_uniform(&ids, self.cfg.clients_per_round, &mut rng);
 
-        let mut cache = Self::lock(&self.cache);
+        let mut cache = Self::lock(&self.cache)?;
         let mut leases = HashMap::with_capacity(picked_ids.len());
         for (seq, &gid) in picked_ids.iter().enumerate() {
             let idx = r
@@ -459,8 +487,12 @@ impl Coordinator {
                     crate::err!("serve: picked device {gid} not admitted")
                 })?;
             let ci = r.admitted[idx];
-            let model = model_from_code(ci.model)
-                .expect("validated at check_in");
+            let model = model_from_code(ci.model).ok_or_else(|| {
+                crate::err!(
+                    "serve: round {round} admitted unknown model code {}",
+                    ci.model
+                )
+            })?;
             let key = PlanKey {
                 model: ci.model,
                 band: ci.band,
@@ -547,8 +579,8 @@ impl Coordinator {
 
     /// An admitted device asks whether it was selected this round.
     pub fn lease_poll(&self, device: u64) -> crate::Result<Option<PlanLease>> {
-        let t0 = Instant::now();
-        let mut r = Self::lock(&self.round);
+        let t0 = wall_timer();
+        let mut r = Self::lock(&self.round)?;
         crate::ensure!(
             r.phase == Phase::Update,
             "serve: lease_poll before the round closed"
@@ -578,10 +610,12 @@ impl Coordinator {
 
     /// Accept a leased device's update into its dense seq slot.
     pub fn push_update(&self, up: UpdatePush) -> Ack {
-        let t0 = Instant::now();
+        let t0 = wall_timer();
         let device = up.device;
         let round = up.round;
-        let mut r = Self::lock(&self.round);
+        let Ok(mut r) = Self::lock(&self.round) else {
+            return Ack::Rejected;
+        };
         if r.phase != Phase::Update {
             return Ack::Rejected;
         }
@@ -620,8 +654,8 @@ impl Coordinator {
     /// Aggregate the finished round (FedAvg via `fl::server`), fold the
     /// parity digest, advance to the next round's check-in phase.
     pub fn finish_round(&self, round: u32) -> crate::Result<RoundSummary> {
-        let t0 = Instant::now();
-        let mut r = Self::lock(&self.round);
+        let t0 = wall_timer();
+        let mut r = Self::lock(&self.round)?;
         crate::ensure!(
             r.phase == Phase::Update && r.round == round,
             "serve: finish_round({round}) in phase {:?} of round {}",
@@ -660,14 +694,19 @@ impl Coordinator {
 
         let participants = r.picked.len() as u32;
         if participants > 0 {
-            let updates: Vec<(Vec<Vec<f32>>, f64)> = r
-                .updates
-                .drain(..)
-                .map(|slot| {
-                    let (params, w) = slot.expect("received == picked");
-                    (vec![params], w)
-                })
-                .collect();
+            // the `received == picked` ensure above makes an empty slot
+            // impossible, but a counting bug must surface as an error,
+            // not an unwind inside the round lock
+            let mut updates: Vec<(Vec<Vec<f32>>, f64)> =
+                Vec::with_capacity(r.updates.len());
+            for (seq, slot) in r.updates.drain(..).enumerate() {
+                let (params, w) = slot.ok_or_else(|| {
+                    crate::err!(
+                        "serve: round {round} lost the update for seq {seq}"
+                    )
+                })?;
+                updates.push((vec![params], w));
+            }
             let agg = fedavg(&updates);
             for v in &agg[0] {
                 digest.push_f32(*v);
@@ -735,7 +774,7 @@ impl Coordinator {
         if self.obs.enabled() {
             // lock order: round before cache, matching stats()
             let (hits, misses, evictions) = {
-                let cache = Self::lock(&self.cache);
+                let cache = Self::lock(&self.cache)?;
                 (cache.hits, cache.misses, cache.evictions)
             };
             drop(r);
@@ -785,19 +824,19 @@ impl Coordinator {
 
     /// Cumulative parity digest (hex form used in reports/benches).
     pub fn digest(&self) -> String {
-        digest_hex(Self::lock(&self.round).digest.h)
+        digest_hex(Self::lock_report(&self.round).digest.h)
     }
 
     /// The last finished round's FedAvg aggregate (tests compare this
     /// against a direct `fl::server::fedavg` call bit-for-bit).
     pub fn last_aggregate(&self) -> Vec<f32> {
-        Self::lock(&self.round).last_aggregate.clone()
+        Self::lock_report(&self.round).last_aggregate.clone()
     }
 
     pub fn stats(&self) -> ServeStats {
         // lock order: round before cache, matching close_round/flush
-        let r = Self::lock(&self.round);
-        let cache = Self::lock(&self.cache);
+        let r = Self::lock_report(&self.round);
+        let cache = Self::lock_report(&self.cache);
         ServeStats {
             cache_hits: cache.hits,
             cache_misses: cache.misses,
@@ -824,7 +863,7 @@ impl Coordinator {
     /// per-pipeline-edge `serve.edge.checkin_s` / `serve.edge.lease_s`
     /// / `serve.edge.update_s` service-time histograms).
     pub fn metrics(&self) -> crate::obs::MetricsRegistry {
-        Self::lock(&self.round).metrics.clone()
+        Self::lock_report(&self.round).metrics.clone()
     }
 }
 

@@ -63,10 +63,15 @@ pub fn serve_tcp(
         let rx = Arc::clone(&rx);
         let coord = Arc::clone(&coord);
         worker_handles.push(std::thread::spawn(move || loop {
-            // take the receiver lock only to pull the next connection
+            // take the receiver lock only to pull the next connection;
+            // a poisoned lock means a sibling worker died mid-recv —
+            // retire this worker too rather than poisoning the pool
             let conn = {
                 let guard: std::sync::MutexGuard<'_, Receiver<TcpStream>> =
-                    rx.lock().expect("serve conn queue poisoned");
+                    match rx.lock() {
+                        Ok(g) => g,
+                        Err(_) => return,
+                    };
                 guard.recv()
             };
             match conn {

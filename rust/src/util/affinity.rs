@@ -76,6 +76,12 @@ mod imp {
         }
         let mut mask = [0usize; WORDS];
         mask[cpu / WORD_BITS] |= 1usize << (cpu % WORD_BITS);
+        // SAFETY: `mask` is a live, properly aligned `[usize; WORDS]`
+        // on this stack frame, `cpusetsize` is exactly its byte size,
+        // and pid 0 targets only the calling thread. glibc reads
+        // `cpusetsize` bytes from `mask` and writes nothing; the call
+        // cannot outlive the frame and has no other side effects
+        // beyond the kernel's own affinity bookkeeping.
         let rc = unsafe {
             sched_setaffinity(
                 0,
