@@ -49,13 +49,82 @@ fn fleet_fast_path() {
     }
 }
 
+/// `--serve` path: Figs 5a/6a/7a with real SGD routed through the
+/// serve coordinator — the softmax probe supplies numerics, so no
+/// artifacts or PJRT are needed, and the harness asserts bit-identity
+/// against the direct oracle before any CSV is written.
+fn serve_path() {
+    std::fs::create_dir_all("target/reports").unwrap();
+    let cfg = FlConfig {
+        seed: 9,
+        raw_traces: 8,
+        quality_traces: 2,
+        clients_per_round: 3,
+        local_steps: 3,
+        rounds: 12,
+        eval_every: 2,
+        eval_batches: 2,
+        daily_credit_j: 1_500.0,
+        server_overhead_s: 2.0,
+    };
+    for (fig, wl) in [
+        ("fig5", WorkloadName::ShufflenetV2),
+        ("fig6", WorkloadName::MobilenetV2),
+        ("fig7", WorkloadName::Resnet34),
+    ] {
+        println!("== {fig} (serve-routed): {:?} ==", wl);
+        for arm in [FlArm::Swan, FlArm::Baseline] {
+            let report = swan::fleet::run_fl_bench(
+                &cfg,
+                arm,
+                wl,
+                2,
+                false,
+                &swan::obs::Obs::off(),
+            )
+            .expect("serve-routed FL run");
+            let out = &report.inproc; // digest-identical to the oracle
+            println!(
+                "  {:9} vt={:7.1}s energy={:8.0}J best_acc={:.3} \
+                 digest={}",
+                arm.name(),
+                out.total_time_s,
+                out.total_energy_j,
+                out.best_accuracy(),
+                report.digest
+            );
+            std::fs::write(
+                format!("target/reports/{fig}a_{}_serve.csv", arm.name()),
+                out.accuracy_curve.to_csv("accuracy"),
+            )
+            .unwrap();
+            let mut online = String::from("round,online\n");
+            for (r, n) in &out.online_per_round {
+                online.push_str(&format!("{r},{n}\n"));
+            }
+            std::fs::write(
+                format!("target/reports/{fig}b_{}_serve.csv", arm.name()),
+                online,
+            )
+            .unwrap();
+        }
+    }
+}
+
 fn main() {
     if std::env::args().any(|a| a == "--fleet") {
         fleet_fast_path();
         return;
     }
+    if std::env::args().any(|a| a == "--serve") {
+        serve_path();
+        return;
+    }
     let Ok(reg) = Registry::discover() else {
-        println!("artifacts not built; run `make artifacts` (or pass --fleet)");
+        println!(
+            "artifacts not built; run `make artifacts` (or pass --fleet \
+             / --serve)"
+        );
         return;
     };
     let client = RuntimeClient::cpu().expect("pjrt");

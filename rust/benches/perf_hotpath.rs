@@ -63,7 +63,7 @@ fn main() {
         let updates: Vec<(Vec<Vec<f32>>, f64)> =
             (0..5).map(|i| (host.clone(), 1.0 + i as f64)).collect();
         set.bench(&format!("fedavg_5clients_{model}"), || {
-            std::hint::black_box(fedavg(&updates).len());
+            std::hint::black_box(fedavg(&updates).unwrap().len());
         });
     }
     set.write_csv().unwrap();

@@ -42,13 +42,82 @@ fn fleet_fast_path() {
     table.emit().expect("emit");
 }
 
+/// `--serve` path: the Table-4 ratios with real SGD routed through the
+/// serve coordinator (softmax-probe numerics, no artifacts/PJRT). The
+/// harness asserts every row's run is bit-identical to the direct
+/// oracle before it lands in the table.
+fn serve_path() {
+    let cfg = FlConfig {
+        seed: 5,
+        raw_traces: 8,
+        quality_traces: 2,
+        clients_per_round: 3,
+        local_steps: 3,
+        rounds: 10,
+        eval_every: 2,
+        eval_batches: 2,
+        daily_credit_j: 2_000.0,
+        server_overhead_s: 2.0,
+    };
+    let mut table = Table::new(
+        "Table 4 (serve-routed) — FL time-to-accuracy and energy",
+        &["model", "tta_speedup", "energy_eff", "swan_best_acc", "base_best_acc"],
+    );
+    for (model, wl) in [
+        ("mobilenet", WorkloadName::MobilenetV2),
+        ("shufflenet", WorkloadName::ShufflenetV2),
+        ("resnet34", WorkloadName::Resnet34),
+    ] {
+        let run = |arm: FlArm| {
+            swan::fleet::run_fl_bench(
+                &cfg,
+                arm,
+                wl,
+                2,
+                false,
+                &swan::obs::Obs::off(),
+            )
+            .expect("serve-routed FL run")
+            .inproc // digest-identical to the oracle
+        };
+        let swan_out = run(FlArm::Swan);
+        let base_out = run(FlArm::Baseline);
+        let target =
+            swan_out.best_accuracy().min(base_out.best_accuracy());
+        let tta = match (
+            swan_out.time_to_accuracy(target),
+            base_out.time_to_accuracy(target),
+        ) {
+            (Some(a), Some(b)) => b / a.max(1.0),
+            _ => f64::NAN,
+        };
+        table.row(&[
+            model.to_string(),
+            fmt_ratio(tta),
+            fmt_ratio(
+                base_out.total_energy_j / swan_out.total_energy_j.max(1.0),
+            ),
+            format!("{:.3}", swan_out.best_accuracy()),
+            format!("{:.3}", base_out.best_accuracy()),
+        ]);
+    }
+    table.emit().expect("emit");
+}
+
 fn main() {
     if std::env::args().any(|a| a == "--fleet") {
         fleet_fast_path();
         return;
     }
+    if std::env::args().any(|a| a == "--serve") {
+        serve_path();
+        return;
+    }
     let Ok(reg) = Registry::discover() else {
-        println!("artifacts not built; run `make artifacts` (or pass --fleet)");
+        println!(
+            "artifacts not built; run `make artifacts` (or pass --fleet \
+             / --serve)"
+        );
         return;
     };
     let client = RuntimeClient::cpu().expect("pjrt");

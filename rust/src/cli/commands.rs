@@ -10,6 +10,7 @@
 //! swan serve   --port 7077 --scenario smoke --workers 4 --events serve.ndjson
 //! swan bench   fleet --scenario city --shards 1,2,4,8 --json
 //! swan bench   serve --scenario smoke --lanes 4 --json
+//! swan bench   fl --rounds 6 --lanes 4 --json
 //! swan bench   floor --floors ci/perf_floors.json
 //! swan obs     check events.ndjson
 //! swan obs     trace events.ndjson --round 1 [--device 17]
@@ -103,10 +104,10 @@ fn print_help() {
          \x20 explore   run §4.2 exploration on one device/model\n\
          \x20 train     real local training under Swan scheduling\n\
          \x20 pcmark    Fig-3/Table-3 user-experience evaluation\n\
-         \x20 fl        federated-learning simulation (§5.3)\n\
+         \x20 fl        federated-learning simulation (§5.3; --serve routes it through the coordinator)\n\
          \x20 fleet     sharded fleet simulation (100k–1M devices)\n\
          \x20 serve     run the FL coordinator control plane on TCP\n\
-         \x20 bench     throughput harnesses (BENCH_fleet.json / BENCH_serve.json)\n\
+         \x20 bench     throughput harnesses (BENCH_fleet / BENCH_serve / BENCH_fl .json)\n\
          \x20 obs       telemetry toolkit (check|trace|top|rates|diff)\n\
          \x20 lint      static analysis over the crate's own sources\n\
          \x20 traces    generate + preprocess GreenHub-style traces\n\
@@ -255,12 +256,17 @@ fn cmd_fl(rest: &[String]) -> crate::Result<()> {
         opt("traces", "quality traces (×24 clients)", Some("2")),
         opt("arm", "swan|baseline|both", Some("both")),
         opt("seed", "rng seed", Some("17")),
+        switch(
+            "serve",
+            "route training through the serve coordinator (softmax-probe \
+             numerics, in-process + loopback TCP, no PJRT artifacts)",
+        ),
+        opt("lanes", "serve lanes when --serve", Some("2")),
+        opt("events", EVENTS_HELP, None),
+        switch("trace", TRACE_HELP),
     ];
     let args = parse_args(rest, &specs)?;
     let model = args.get_str("model", "shufflenet_s");
-    let reg = Registry::discover()?;
-    let client = RuntimeClient::cpu()?;
-    let exec = ModelExecutor::load(&client, &reg.dir, &model)?;
     let cfg = crate::fl::FlConfig {
         seed: args.get_u64("seed", 17)?,
         raw_traces: args.get_usize("traces", 2)? * 4,
@@ -277,13 +283,41 @@ fn cmd_fl(rest: &[String]) -> crate::Result<()> {
         WorkloadName::parse(&model)
             .ok_or_else(|| crate::err!("unknown model"))?,
     );
-    let workload = load_or_builtin(paper, "artifacts");
     let arm_s = args.get_str("arm", "both");
     let arms: Vec<crate::fl::FlArm> = match arm_s.as_str() {
         "swan" => vec![crate::fl::FlArm::Swan],
         "baseline" => vec![crate::fl::FlArm::Baseline],
         _ => vec![crate::fl::FlArm::Swan, crate::fl::FlArm::Baseline],
     };
+
+    if args.has("serve") {
+        // the unified engine through the control plane: every round's
+        // SGD is leased, pushed and FedAvg'd inside the coordinator,
+        // and the harness asserts bit-identity against the direct
+        // oracle on both the in-process and loopback-TCP wirings
+        let obs = obs_arg(&args)?;
+        let lanes = args.get_usize("lanes", 2)?.max(1);
+        for arm in arms {
+            let report =
+                crate::fleet::run_fl_bench(&cfg, arm, paper, lanes, true, &obs)?;
+            println!(
+                "[{}] vt={:.1}h energy={:.1}kJ best_acc={:.3} rounds={} \
+                 digest={}",
+                arm.name(),
+                report.direct.total_time_s / 3600.0,
+                report.direct.total_energy_j / 1e3,
+                report.direct.best_accuracy(),
+                report.direct.rounds_run,
+                report.digest
+            );
+        }
+        return Ok(());
+    }
+
+    let reg = Registry::discover()?;
+    let client = RuntimeClient::cpu()?;
+    let exec = ModelExecutor::load(&client, &reg.dir, &model)?;
+    let workload = load_or_builtin(paper, "artifacts");
     for arm in arms {
         let ds = if exec.meta.task == "speech" {
             SyntheticDataset::speech(cfg.seed)
@@ -485,11 +519,128 @@ fn cmd_bench(rest: &[String]) -> crate::Result<()> {
     match what {
         "fleet" => cmd_bench_fleet(&rest),
         "serve" => cmd_bench_serve(&rest),
+        "fl" => cmd_bench_fl(&rest),
         "floor" => cmd_bench_floor(&rest),
         other => {
-            crate::bail!("unknown bench '{other}' (fleet|serve|floor)")
+            crate::bail!("unknown bench '{other}' (fleet|serve|fl|floor)")
         }
     }
+}
+
+/// `swan bench fl` — the numerics-loop harness: real federated SGD
+/// (softmax probe) through the unified engine on every wiring (direct
+/// oracle, in-process serve, loopback TCP), digest-parity-gated, with
+/// serve-routed training rounds/sec as the headline number.
+fn cmd_bench_fl(rest: &[String]) -> crate::Result<()> {
+    let specs = [
+        opt("model", "paper-scale workload for systems costs", Some("shufflenet_v2")),
+        opt("rounds", "FL rounds", Some("6")),
+        opt("clients", "clients per round", Some("5")),
+        opt("steps", "local SGD steps per client per round", Some("3")),
+        opt("traces", "quality traces (×24 clients)", Some("4")),
+        opt("lanes", "serve lanes (threads + TCP connections)", Some("4")),
+        opt("arm", "swan|baseline", Some("swan")),
+        opt("seed", "rng seed", Some("17")),
+        opt("out", "record path, implies --json (default BENCH_fl.json)", None),
+        OptSpec {
+            name: "json",
+            help: "write the BENCH_fl.json record to --out",
+            default: None,
+            is_switch: true,
+        },
+        OptSpec {
+            name: "no-tcp",
+            help: "skip the loopback-TCP path (oracle + in-process only)",
+            default: None,
+            is_switch: true,
+        },
+        opt(
+            "expect-digest",
+            "fail unless the run reproduces this golden digest",
+            None,
+        ),
+        opt("events", EVENTS_HELP, None),
+        switch("trace", TRACE_HELP),
+    ];
+    let args = parse_args(rest, &specs)?;
+    let obs = obs_arg(&args)?;
+    let wl = WorkloadName::parse(&args.get_str("model", "shufflenet_v2"))
+        .ok_or_else(|| crate::err!("unknown model"))?;
+    let traces = args.get_usize("traces", 4)?;
+    let cfg = crate::fl::FlConfig {
+        seed: args.get_u64("seed", 17)?,
+        raw_traces: traces * 4,
+        quality_traces: traces,
+        clients_per_round: args.get_usize("clients", 5)?,
+        local_steps: args.get_usize("steps", 3)?,
+        rounds: args.get_usize("rounds", 6)?,
+        eval_every: 2,
+        eval_batches: 2,
+        daily_credit_j: 3_000.0,
+        server_overhead_s: 2.0,
+    };
+    let arm = match args.get_str("arm", "swan").as_str() {
+        "swan" => crate::fl::FlArm::Swan,
+        "baseline" => crate::fl::FlArm::Baseline,
+        other => crate::bail!("unknown --arm '{other}' (swan|baseline)"),
+    };
+    let lanes = args.get_usize("lanes", 4)?.max(1);
+
+    println!(
+        "bench fl: {} clients × {} rounds, K={}, {} local steps, {} lanes",
+        traces * 24,
+        cfg.rounds,
+        cfg.clients_per_round,
+        cfg.local_steps,
+        lanes
+    );
+    let report = crate::fleet::run_fl_bench(
+        &cfg,
+        arm,
+        wl,
+        lanes,
+        !args.has("no-tcp"),
+        &obs,
+    )?;
+    println!(
+        "parity: every path reproduced digest {} with bit-identical \
+         final weights ({} params)",
+        report.digest,
+        report.direct.final_model.len()
+    );
+    let tcp_part = match report.tcp_rounds_per_sec() {
+        Some(r) => format!(", tcp {r:.2}"),
+        None => String::new(),
+    };
+    println!(
+        "rounds/sec: direct {:.2}, serve {:.2}{tcp_part}",
+        report.direct_rounds_per_sec(),
+        report.rounds_per_sec()
+    );
+    if let Some((t_s, acc)) = report.direct.accuracy_curve.last() {
+        println!(
+            "accuracy: {acc:.3} at vt {:.1}h; time-to-{:.0}%: {}",
+            t_s / 3600.0,
+            100.0 * crate::fleet::bench::FL_TTA_TARGET,
+            match report
+                .direct
+                .time_to_accuracy(crate::fleet::bench::FL_TTA_TARGET)
+            {
+                Some(t) => format!("{:.1}h", t / 3600.0),
+                None => "not reached".to_string(),
+            }
+        );
+    }
+    if let Some(want) = args.get("expect-digest") {
+        report.assert_digest(want)?;
+        println!("digest matches --expect-digest");
+    }
+    println!("{}", report.one_line());
+    if args.has("json") || args.get("out").is_some() {
+        let path = report.write_json(args.get_str("out", "BENCH_fl.json"))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
 }
 
 fn cmd_bench_serve(rest: &[String]) -> crate::Result<()> {
@@ -703,8 +854,10 @@ fn cmd_bench_floor(rest: &[String]) -> crate::Result<()> {
         opt("floors", "perf-floor policy JSON", Some("ci/perf_floors.json")),
         opt("fleet", "BENCH_fleet.json record to gate ('' = skip)", Some("BENCH_fleet.json")),
         opt("serve", "BENCH_serve.json record to gate ('' = skip)", Some("BENCH_serve.json")),
+        opt("fl", "BENCH_fl.json record to gate ('' = skip)", Some("BENCH_fl.json")),
         opt("min-fleet", "override the fleet floor, devices-stepped/sec (0 = use policy)", Some("0")),
         opt("min-serve", "override the serve floor, checkins/sec (0 = use policy)", Some("0")),
+        opt("min-fl", "override the fl floor, serve-routed rounds/sec (0 = use policy)", Some("0")),
     ];
     let args = parse_args(rest, &specs)?;
     let floors_path = args.get_str("floors", "ci/perf_floors.json");
@@ -747,6 +900,27 @@ fn cmd_bench_floor(rest: &[String]) -> crate::Result<()> {
              checkins/sec, floor is {floor:.0} ({floors_path})"
         );
         println!("perf floor ok: serve {got:.0} >= {floor:.0} checkins/sec");
+    }
+
+    let fl_path = args.get_str("fl", "BENCH_fl.json");
+    if !fl_path.is_empty() {
+        let rec = crate::util::json::parse_file(&fl_path)?;
+        let got = rec.req_f64("rounds_per_sec")?;
+        let over = args.get_f64("min-fl", 0.0)?;
+        let floor = if over > 0.0 {
+            over
+        } else {
+            floors.req_f64("fl_rounds_per_sec_min")?
+        };
+        crate::ensure!(
+            got >= floor,
+            "perf floor violated: {fl_path} reports {got:.2} \
+             serve-routed rounds/sec, floor is {floor:.2} ({floors_path})"
+        );
+        println!(
+            "perf floor ok: fl {got:.2} >= {floor:.2} serve-routed \
+             rounds/sec"
+        );
     }
     Ok(())
 }

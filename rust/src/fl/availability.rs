@@ -80,6 +80,25 @@ pub fn availability_gate_many(
     }
 }
 
+/// One availability sweep over a whole [`LoanBank`]: advance every
+/// loan to `now_s` (`tick_all`), then refresh `mask` via
+/// [`availability_gate_many`]. This tick→gate call order is the batch
+/// twin of [`availability_gate`]'s scalar tick→gate, and it is shared
+/// by the SoA fleet kernel (`fleet::soa`) and the unified FL engine
+/// (`fl::engine::ClientLanes::poll`), so the two round drivers evolve
+/// loan bits identically by construction.
+pub fn sweep_gate(
+    bank: &mut LoanBank,
+    now_s: f64,
+    level_pct: &[f64],
+    charging: &[bool],
+    min_level_pct: &[f64],
+    mask: &mut Vec<bool>,
+) {
+    bank.tick_all(now_s, charging);
+    availability_gate_many(bank, level_pct, charging, min_level_pct, mask);
+}
+
 pub struct FlClient {
     pub id: usize,
     pub device: Device,

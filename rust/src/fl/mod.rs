@@ -2,20 +2,30 @@
 //! clients, with the paper's energy-loan availability model.
 //!
 //! Numerics are real — every selected client runs actual SGD steps
-//! through the PJRT executor from the current global model — while
+//! from the current global model through a [`engine`] backend (the
+//! PJRT executor or the zero-dependency softmax probe) — while
 //! per-client time and energy come from the SoC simulator under the
 //! client's policy (Swan vs greedy baseline). Time-to-accuracy is
 //! measured on the virtual clock, exactly like the paper's FedScale
 //! emulation.
+//!
+//! [`engine`] is the ONE round state machine behind every wiring:
+//! `run_direct` (the in-process bit-exactness oracle) and `run_serve`
+//! (real SGD routed through the `serve` coordinator over in-process or
+//! TCP lanes) must produce bit-identical final weights and digests.
 
 pub mod availability;
 pub mod energy_loan;
+pub mod engine;
 pub mod selection;
 pub mod server;
 pub mod sim;
 
 pub use availability::FlClient;
 pub use energy_loan::EnergyLoan;
+pub use engine::{
+    run_direct, run_serve, serve_config, step_order, ClientLanes,
+};
 pub use selection::{select_uniform, select_uniform_into};
 pub use server::fedavg;
 pub use sim::{FlArm, FlConfig, FlOutcome, FlSim};

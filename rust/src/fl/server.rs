@@ -5,11 +5,16 @@
 ///
 /// `updates` pairs each client's full parameter list (leaf-major, same
 /// order as the metadata) with its sample-count weight. Returns the
-/// aggregated parameter list.
-pub fn fedavg(updates: &[(Vec<Vec<f32>>, f64)]) -> Vec<Vec<f32>> {
-    assert!(!updates.is_empty(), "fedavg over zero clients");
+/// aggregated parameter list, or an error on an empty/degenerate input
+/// — aggregation runs inside the serve coordinator's round machinery,
+/// where a panic would poison the round lock instead of surfacing
+/// through `error.rs`.
+pub fn fedavg(
+    updates: &[(Vec<Vec<f32>>, f64)],
+) -> crate::Result<Vec<Vec<f32>>> {
+    crate::ensure!(!updates.is_empty(), "fedavg over zero clients");
     let total_w: f64 = updates.iter().map(|(_, w)| *w).sum();
-    assert!(total_w > 0.0, "zero total weight");
+    crate::ensure!(total_w > 0.0, "fedavg over zero total weight");
     let n_leaves = updates[0].0.len();
     let mut out: Vec<Vec<f32>> = updates[0]
         .0
@@ -17,16 +22,25 @@ pub fn fedavg(updates: &[(Vec<Vec<f32>>, f64)]) -> Vec<Vec<f32>> {
         .map(|leaf| vec![0.0f32; leaf.len()])
         .collect();
     for (params, w) in updates {
-        assert_eq!(params.len(), n_leaves, "leaf count mismatch");
+        crate::ensure!(
+            params.len() == n_leaves,
+            "leaf count mismatch: {} vs {n_leaves}",
+            params.len()
+        );
         let scale = (w / total_w) as f32;
         for (acc, leaf) in out.iter_mut().zip(params) {
-            assert_eq!(acc.len(), leaf.len(), "leaf shape mismatch");
+            crate::ensure!(
+                acc.len() == leaf.len(),
+                "leaf shape mismatch: {} vs {}",
+                leaf.len(),
+                acc.len()
+            );
             for (a, v) in acc.iter_mut().zip(leaf) {
                 *a += scale * v;
             }
         }
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -37,7 +51,7 @@ mod tests {
     fn equal_weights_is_mean() {
         let a = vec![vec![1.0f32, 2.0], vec![10.0]];
         let b = vec![vec![3.0f32, 6.0], vec![30.0]];
-        let avg = fedavg(&[(a, 1.0), (b, 1.0)]);
+        let avg = fedavg(&[(a, 1.0), (b, 1.0)]).unwrap();
         assert_eq!(avg, vec![vec![2.0, 4.0], vec![20.0]]);
     }
 
@@ -45,20 +59,37 @@ mod tests {
     fn weights_respected() {
         let a = vec![vec![0.0f32]];
         let b = vec![vec![10.0f32]];
-        let avg = fedavg(&[(a, 1.0), (b, 3.0)]);
+        let avg = fedavg(&[(a, 1.0), (b, 3.0)]).unwrap();
         assert!((avg[0][0] - 7.5).abs() < 1e-6);
     }
 
     #[test]
     fn single_client_identity() {
         let a = vec![vec![1.5f32, -2.5]];
-        let avg = fedavg(&[(a.clone(), 123.0)]);
+        let avg = fedavg(&[(a.clone(), 123.0)]).unwrap();
         assert_eq!(avg, a);
     }
 
     #[test]
-    #[should_panic(expected = "zero clients")]
-    fn empty_panics() {
-        fedavg(&[]);
+    fn empty_is_an_error_not_a_panic() {
+        let err = fedavg(&[]).unwrap_err();
+        assert!(err.to_string().contains("zero clients"), "{err}");
+    }
+
+    #[test]
+    fn zero_weight_is_an_error() {
+        let a = vec![vec![1.0f32]];
+        let err = fedavg(&[(a, 0.0)]).unwrap_err();
+        assert!(err.to_string().contains("zero total weight"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_leaves_error() {
+        let a = vec![vec![1.0f32], vec![2.0]];
+        let b = vec![vec![1.0f32]];
+        assert!(fedavg(&[(a, 1.0), (b, 1.0)]).is_err());
+        let c = vec![vec![1.0f32, 2.0]];
+        let d = vec![vec![1.0f32]];
+        assert!(fedavg(&[(c, 1.0), (d, 1.0)]).is_err());
     }
 }

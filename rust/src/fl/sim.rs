@@ -27,13 +27,14 @@ use crate::runtime::ModelExecutor;
 use crate::soc::device::{all_devices, Device, DeviceId};
 use crate::trace::augment::augment_shifts;
 use crate::train::data::SyntheticDataset;
-use crate::train::metrics::{EvalResult, LossCurve};
+use crate::train::metrics::LossCurve;
+use crate::train::softmax::{ExecutorSgd, LocalSgd};
 use crate::util::rng::Rng;
+use crate::workload::Workload;
 use crate::Result;
 
 use super::availability::FlClient;
-use super::selection::select_uniform;
-use super::server::fedavg;
+use super::engine::{run_direct, ClientLanes};
 
 /// Which policy the fleet runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -105,6 +106,14 @@ pub struct FlOutcome {
     /// Total virtual time, seconds.
     pub total_time_s: f64,
     pub rounds_run: usize,
+    /// Parity digest over the round stream (`serve-<16 hex>`): the
+    /// exact field sequence the serve coordinator folds, so a direct
+    /// run and a serve-routed run of the same config must report one
+    /// digest. Empty for the systems-only paths.
+    pub digest: String,
+    /// Final global model (flat f32). Bit-identical across every
+    /// wiring of the same run. Empty for the systems-only paths.
+    pub final_model: Vec<f32>,
 }
 
 impl FlOutcome {
@@ -169,7 +178,7 @@ pub struct FlSim {
     pub dataset: SyntheticDataset,
     pub clients: Vec<FlClient>,
     policy: PolicyTable,
-    rng: Rng,
+    workload: Workload,
 }
 
 impl FlSim {
@@ -212,14 +221,8 @@ impl FlSim {
             dataset,
             clients,
             policy,
-            rng,
+            workload: workload.clone(),
         })
-    }
-
-    /// Steps in one full local epoch for client `ci` (paper §5.1: one
-    /// pass over the client's samples at batch 16).
-    fn epoch_steps(&self, ci: usize) -> usize {
-        self.clients[ci].epoch_steps()
     }
 
     /// Systems-only horizon: availability + energy-loan dynamics over
@@ -295,93 +298,30 @@ impl FlSim {
     }
 
     /// Run the configured number of rounds with real numerics through
-    /// `exec`. Returns the full outcome record.
+    /// `exec` (the PJRT path). Delegates to the unified engine
+    /// (`fl::engine::run_direct`) — the same round state machine the
+    /// serve control plane replays — through the [`ExecutorSgd`]
+    /// flat-model adapter. Returns the full outcome record.
     pub fn run(&mut self, exec: &ModelExecutor) -> Result<FlOutcome> {
-        let mut global = exec.init_host_params(self.cfg.seed ^ 0x60BA1);
-        let mut outcome = FlOutcome {
-            arm: self.arm.name(),
-            ..Default::default()
-        };
-        let mut now_s = 0.0f64;
-        let mut total_energy = 0.0f64;
+        let backend = ExecutorSgd::new(exec, self.dataset.clone());
+        self.run_with(&backend)
+    }
 
-        for round in 0..self.cfg.rounds {
-            // 1. availability
-            let online: Vec<usize> = (0..self.clients.len())
-                .filter(|&i| self.clients[i].online(now_s))
-                .collect();
-            outcome.online_per_round.push((round, online.len()));
-            if online.is_empty() {
-                now_s += 600.0; // nobody available; wait 10 min
-                continue;
-            }
-
-            // 2. selection
-            let picked = select_uniform(
-                &online,
-                self.cfg.clients_per_round,
-                &mut self.rng,
-            );
-
-            // 3. local training (real numerics + simulated systems cost)
-            let mut updates = Vec::with_capacity(picked.len());
-            let mut round_time = 0.0f64;
-            for &ci in &picked {
-                let mut state = exec.state_from_host(&global)?;
-                let (lat, en) = self
-                    .policy
-                    .step_cost(&self.clients[ci].device, self.arm);
-                let part = self.clients[ci].partition.clone();
-                // numerics: `local_steps` real SGD steps (an emulated
-                // sample of the epoch, FedScale-style)...
-                for step in 0..self.cfg.local_steps {
-                    let (x, y) = self.dataset.batch(
-                        &part,
-                        round * self.cfg.local_steps + step,
-                        exec.meta.batch,
-                    );
-                    exec.train_step(&mut state, &x, &y)?;
-                }
-                // ...systems: the client pays for its FULL local epoch
-                // (one pass over its n_samples), which is what the paper's
-                // devices actually execute per round
-                let epoch_steps = self.epoch_steps(ci);
-                let t = lat * epoch_steps as f64;
-                let e = en * epoch_steps as f64;
-                self.clients[ci].charge_participation(t, e);
-                total_energy += e;
-                round_time = round_time.max(t);
-                updates.push((
-                    exec.state_to_host(&state)?,
-                    part.n_samples as f64,
-                ));
-            }
-
-            // 4. aggregate + advance the clock
-            global = fedavg(&updates);
-            now_s += round_time + self.cfg.server_overhead_s;
-
-            // 5. periodic evaluation
-            if round % self.cfg.eval_every == 0
-                || round + 1 == self.cfg.rounds
-            {
-                let state = exec.state_from_host(&global)?;
-                let mut batches = Vec::new();
-                for b in 0..self.cfg.eval_batches {
-                    let (x, y) =
-                        self.dataset.eval_batch(b, exec.meta.batch);
-                    let (loss, correct) = exec.eval_step(&state, &x, &y)?;
-                    batches.push((loss, correct, exec.meta.batch));
-                }
-                let ev = EvalResult::from_batches(&batches);
-                outcome.accuracy_curve.push(now_s, ev.accuracy);
-                outcome.loss_curve.push(now_s, ev.loss);
-            }
-            outcome.rounds_run = round + 1;
-        }
-        outcome.total_energy_j = total_energy;
-        outcome.total_time_s = now_s;
-        Ok(outcome)
+    /// Run through any [`LocalSgd`] backend (e.g. the zero-dependency
+    /// `SoftmaxProbe`, which needs no PJRT plugin). The engine
+    /// decomposes the clients into SoA lanes, drives the unified round
+    /// machine, and writes the mutated loan/participation state back.
+    pub fn run_with<B: LocalSgd>(&mut self, backend: &B) -> Result<FlOutcome> {
+        let mut lanes = ClientLanes::new(&self.clients, self.cfg.seed);
+        let out = run_direct(
+            &self.cfg,
+            self.arm,
+            &mut lanes,
+            backend,
+            &self.workload,
+        )?;
+        lanes.write_back(&mut self.clients);
+        Ok(out)
     }
 }
 

@@ -17,17 +17,31 @@
 //! and the result lands in `BENCH_serve.json` — check-ins/sec, p90
 //! check-in latency and the deferral rate, the first bench in the repo
 //! denominated in requests served rather than devices stepped.
+//!
+//! [`run_fl_bench`] is the numerics-loop harness behind `swan bench
+//! fl`: one FL config driven through `fl::engine::run_direct` (the
+//! oracle), the in-process serve path and (optionally) loopback TCP —
+//! real SGD through the coordinator on every path. Bit-identical
+//! digests AND final weights are *asserted*, then the run lands in
+//! `BENCH_fl.json` denominated in training rounds/sec plus
+//! time-to-accuracy on the virtual clock.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use crate::fl::FlArm;
+use crate::fl::{
+    run_direct, run_serve, serve_config, ClientLanes, FlArm, FlConfig,
+    FlOutcome, FlSim,
+};
 use crate::obs::{BenchResult, Obs};
 use crate::serve::{
     run_inproc_with, run_oracle, run_tcp, serve_tcp, Coordinator,
-    ServeConfig, ServeRunOutcome, ServeStats,
+    InProcClient, ServeClient, ServeConfig, ServeRunOutcome, ServeStats,
+    TcpClient,
 };
+use crate::train::{SoftmaxProbe, SyntheticDataset};
 use crate::util::json::Value;
+use crate::workload::{load_or_builtin, WorkloadName};
 
 use super::engine::{run_scenario_obs, run_scenario_reference_obs};
 use super::metrics::FleetOutcome;
@@ -394,6 +408,251 @@ impl ServeBenchReport {
     }
 }
 
+/// Accuracy target for the headline time-to-accuracy metric (the
+/// softmax probe on 35-class synthetic speech starts near 1/35 chance;
+/// reaching 20% demonstrates genuine learning through the wire).
+pub const FL_TTA_TARGET: f64 = 0.20;
+
+/// Everything one numerics-loop bench invocation produced.
+#[derive(Clone, Debug)]
+pub struct FlBenchReport {
+    pub cfg: FlConfig,
+    pub arm: FlArm,
+    pub workload: WorkloadName,
+    pub lanes: usize,
+    /// Fleet size the config synthesized (quality traces × 24 shifts).
+    pub n_clients: usize,
+    /// The digest every path reproduced bit-for-bit.
+    pub digest: String,
+    pub direct: FlOutcome,
+    pub inproc: FlOutcome,
+    pub tcp: Option<FlOutcome>,
+    pub direct_wall_s: f64,
+    pub inproc_wall_s: f64,
+    pub tcp_wall_s: Option<f64>,
+}
+
+/// Drive one FL config through all three wirings of the unified engine
+/// — direct oracle, in-process serve, and (when `with_tcp`) loopback
+/// TCP with `lanes` connections — and *assert* bit-identical digests
+/// and final weights across them. Divergence is an error, not a data
+/// point. The serve coordinators attach `obs`, so a telemetry-enabled
+/// run emits the usual `ServeRoundEnd`/trace events for `swan obs`.
+pub fn run_fl_bench(
+    cfg: &FlConfig,
+    arm: FlArm,
+    workload: WorkloadName,
+    lanes: usize,
+    with_tcp: bool,
+    obs: &Obs,
+) -> crate::Result<FlBenchReport> {
+    let lanes = lanes.max(1);
+    let ds = SyntheticDataset::speech(cfg.seed);
+    let w = load_or_builtin(workload, "artifacts");
+    let probe = SoftmaxProbe::new(ds.clone());
+    let sim = FlSim::new(cfg.clone(), arm, ds, &w)?;
+    let clients = sim.clients;
+
+    let t0 = crate::obs::wall_timer();
+    let mut oracle_lanes = ClientLanes::new(&clients, cfg.seed);
+    let direct = run_direct(cfg, arm, &mut oracle_lanes, &probe, &w)?;
+    let direct_wall_s = t0.elapsed().as_secs_f64();
+
+    let coord = Arc::new(Coordinator::with_obs(
+        serve_config(cfg, arm, workload, probe.dim()),
+        obs.clone(),
+    )?);
+    let lane_clients: Vec<Box<dyn ServeClient>> = (0..lanes)
+        .map(|_| {
+            Box::new(InProcClient::new(coord.clone()))
+                as Box<dyn ServeClient>
+        })
+        .collect();
+    let t1 = crate::obs::wall_timer();
+    let mut inproc_lanes = ClientLanes::new(&clients, cfg.seed);
+    let inproc = run_serve(cfg, arm, &mut inproc_lanes, &probe, lane_clients)?;
+    let inproc_wall_s = t1.elapsed().as_secs_f64();
+    assert_fl_parity("in-process", &direct, &inproc)?;
+
+    let (tcp, tcp_wall_s) = if with_tcp {
+        let tcp_coord = Arc::new(Coordinator::with_obs(
+            serve_config(cfg, arm, workload, probe.dim()),
+            obs.clone(),
+        )?);
+        let handle = serve_tcp(tcp_coord, "127.0.0.1:0", lanes)?;
+        let addr = handle.addr;
+        let t2 = crate::obs::wall_timer();
+        let run = (|| -> crate::Result<FlOutcome> {
+            let conns: Vec<Box<dyn ServeClient>> = (0..lanes)
+                .map(|_| {
+                    TcpClient::connect(addr)
+                        .map(|c| Box::new(c) as Box<dyn ServeClient>)
+                })
+                .collect::<crate::Result<_>>()?;
+            let mut tcp_lanes = ClientLanes::new(&clients, cfg.seed);
+            run_serve(cfg, arm, &mut tcp_lanes, &probe, conns)
+        })();
+        // connections are dropped by now (run_serve owns them), so the
+        // worker pool drains and the join cannot hang — even on error
+        handle.shutdown();
+        let wall = t2.elapsed().as_secs_f64();
+        let out = run?;
+        assert_fl_parity("loopback-TCP", &direct, &out)?;
+        (Some(out), Some(wall))
+    } else {
+        (None, None)
+    };
+
+    let report = FlBenchReport {
+        cfg: cfg.clone(),
+        arm,
+        workload,
+        lanes,
+        n_clients: clients.len(),
+        digest: direct.digest.clone(),
+        direct,
+        inproc,
+        tcp,
+        direct_wall_s,
+        inproc_wall_s,
+        tcp_wall_s,
+    };
+    if obs.enabled() {
+        obs.emit(&BenchResult {
+            bench: "fl",
+            record: report.to_json(),
+        });
+    }
+    Ok(report)
+}
+
+fn assert_fl_parity(
+    path: &str,
+    oracle: &FlOutcome,
+    served: &FlOutcome,
+) -> crate::Result<()> {
+    crate::ensure!(
+        served.digest == oracle.digest,
+        "fl numerics parity violated: {path} path produced digest {} \
+         but the direct oracle produced {}",
+        served.digest,
+        oracle.digest
+    );
+    crate::ensure!(
+        served.final_model.len() == oracle.final_model.len()
+            && served
+                .final_model
+                .iter()
+                .zip(&oracle.final_model)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "fl numerics parity violated: {path} final weights are not \
+         bit-identical to the oracle (digest collided?)"
+    );
+    Ok(())
+}
+
+impl FlBenchReport {
+    /// Serve-routed training throughput (the headline number): rounds
+    /// of real federated SGD the coordinator closed per wall second.
+    pub fn rounds_per_sec(&self) -> f64 {
+        if self.inproc_wall_s > 0.0 {
+            self.inproc.rounds_run as f64 / self.inproc_wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Oracle-path throughput (no coordinator machinery).
+    pub fn direct_rounds_per_sec(&self) -> f64 {
+        if self.direct_wall_s > 0.0 {
+            self.direct.rounds_run as f64 / self.direct_wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// TCP-path throughput, when the TCP leg ran.
+    pub fn tcp_rounds_per_sec(&self) -> Option<f64> {
+        match (&self.tcp, self.tcp_wall_s) {
+            (Some(t), Some(w)) if w > 0.0 => {
+                Some(t.rounds_run as f64 / w)
+            }
+            _ => None,
+        }
+    }
+
+    /// Gate the parity digest against a golden value (CLI
+    /// `--expect-digest`, wired into CI's numerics-smoke).
+    pub fn assert_digest(&self, want: &str) -> crate::Result<()> {
+        crate::ensure!(
+            self.digest == want,
+            "fl bench digest mismatch: got {} want {want} (arm {}, \
+             seed {})",
+            self.digest,
+            self.arm.name(),
+            self.cfg.seed
+        );
+        Ok(())
+    }
+
+    /// The `BENCH_fl.json` record (schema documented in the README's
+    /// "Training through the control plane" section).
+    pub fn to_json(&self) -> Value {
+        let (final_t_s, final_acc) = self
+            .direct
+            .accuracy_curve
+            .last()
+            .unwrap_or((0.0, 0.0));
+        Value::obj()
+            .set("bench", "fl")
+            .set("schema_version", 1usize)
+            .set("arm", self.arm.name())
+            .set("workload", self.workload.key())
+            .set("seed", self.cfg.seed as usize)
+            .set("clients", self.n_clients)
+            .set("clients_per_round", self.cfg.clients_per_round)
+            .set("local_steps", self.cfg.local_steps)
+            .set("rounds", self.cfg.rounds)
+            .set("lanes", self.lanes)
+            .set("model_dim", self.direct.final_model.len())
+            .set("digest", self.digest.clone())
+            .set("rounds_per_sec", self.rounds_per_sec())
+            .set("direct_rounds_per_sec", self.direct_rounds_per_sec())
+            .set(
+                "tcp_rounds_per_sec",
+                match self.tcp_rounds_per_sec() {
+                    Some(r) => Value::Num(r),
+                    None => Value::Null,
+                },
+            )
+            .set("final_accuracy", final_acc)
+            .set("final_eval_t_s", final_t_s)
+            .set(
+                "time_to_accuracy_s",
+                match self.direct.time_to_accuracy(FL_TTA_TARGET) {
+                    Some(t) => Value::Num(t),
+                    None => Value::Null,
+                },
+            )
+            .set("tta_target", FL_TTA_TARGET)
+            .set("total_virtual_time_s", self.direct.total_time_s)
+            .set("total_energy_j", self.direct.total_energy_j)
+    }
+
+    /// Machine-parseable single line (`BENCH_fl {…}`).
+    pub fn one_line(&self) -> String {
+        format!("BENCH_fl {}", self.to_json())
+    }
+
+    /// Write the pretty record to `path` (conventionally
+    /// `BENCH_fl.json` at the repo root).
+    pub fn write_json(&self, path: impl AsRef<Path>) -> crate::Result<PathBuf> {
+        let path = path.as_ref().to_path_buf();
+        std::fs::write(&path, format!("{:#}\n", self.to_json()))?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -501,6 +760,46 @@ mod tests {
         let line = rep.one_line();
         assert!(!line.trim().contains('\n'));
         let payload = line.strip_prefix("BENCH_serve ").unwrap();
+        assert!(crate::util::json::parse(payload).is_ok());
+    }
+
+    #[test]
+    fn fl_bench_asserts_parity_and_renders_json() {
+        let cfg = FlConfig {
+            seed: 9,
+            raw_traces: 6,
+            quality_traces: 2,
+            clients_per_round: 3,
+            local_steps: 2,
+            rounds: 3,
+            eval_every: 2,
+            eval_batches: 1,
+            daily_credit_j: 3_000.0,
+            server_overhead_s: 0.5,
+        };
+        let rep = run_fl_bench(
+            &cfg,
+            FlArm::Swan,
+            WorkloadName::ShufflenetV2,
+            2,
+            false,
+            &Obs::off(),
+        )
+        .unwrap();
+        assert_eq!(rep.inproc.digest, rep.digest);
+        assert!(rep.tcp.is_none());
+        assert!(rep.digest.starts_with("serve-"));
+        rep.assert_digest(&rep.digest.clone()).unwrap();
+        assert!(rep.assert_digest("serve-bogus").is_err());
+        assert!(rep.rounds_per_sec() > 0.0);
+        let v = rep.to_json();
+        assert_eq!(v.req_str("bench").unwrap(), "fl");
+        assert_eq!(v.req_str("digest").unwrap(), rep.digest);
+        assert!(v.req_f64("rounds_per_sec").unwrap() > 0.0);
+        assert!(v.req_f64("model_dim").unwrap() > 0.0);
+        let line = rep.one_line();
+        assert!(!line.trim().contains('\n'));
+        let payload = line.strip_prefix("BENCH_fl ").unwrap();
         assert!(crate::util::json::parse(payload).is_ok());
     }
 

@@ -42,7 +42,9 @@
 //!   [`run_serve_bench`]: the `serve` load-generator mode that points
 //!   this fleet at the [`crate::serve`] coordinator control plane
 //!   (in-process + loopback TCP, digest-parity-gated, emits
-//!   `BENCH_serve.json`).
+//!   `BENCH_serve.json`). And [`run_fl_bench`]: the numerics-loop
+//!   harness (`swan bench fl`) driving real federated SGD through the
+//!   unified `fl::engine` on every wiring, emitting `BENCH_fl.json`.
 
 pub mod bench;
 pub mod coordinator;
@@ -54,7 +56,8 @@ pub mod scenario;
 pub mod soa;
 
 pub use bench::{
-    run_fleet_bench, run_serve_bench, FleetBenchReport, ServeBenchReport,
+    run_fl_bench, run_fleet_bench, run_serve_bench, FlBenchReport,
+    FleetBenchReport, ServeBenchReport,
 };
 pub use coordinator::{
     explore_profiles, CoordinatorPolicy, CoordinatorStats, FleetPolicy,

@@ -57,7 +57,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
-use crate::fl::availability::availability_gate_many;
+use crate::fl::availability::sweep_gate;
 use crate::fl::energy_loan::LoanBank;
 use crate::fl::selection::select_uniform_into;
 // the lint determinism rule bans raw wall-clock constructors in
@@ -219,11 +219,12 @@ impl SoaShard {
         self.train_time_s.push(d.train_time_s);
     }
 
-    /// Availability sweep as five staged batch passes (module docs):
+    /// Availability sweep as staged batch passes (module docs):
     /// combo-cache refresh via one `sample_many` per distinct trace,
-    /// a per-device gather into dense lanes, the branch-free
-    /// `LoanBank::tick_all`, the branch-free `availability_gate_many`
-    /// mask sweep, and a compaction pass into the ascending online
+    /// a per-device gather into dense lanes, the shared branch-free
+    /// `fl::availability::sweep_gate` tick→gate pass (also the FL
+    /// engine's `ClientLanes::poll` sweep), and a compaction pass into
+    /// the ascending online
     /// list. Decision-identical to gating each device through
     /// `fl::availability_gate_sampled`: the cache is sound because the
     /// sample depends only on `(trace, shift, now_s)`, and
@@ -266,11 +267,12 @@ impl SoaShard {
             self.lvl.push(self.cache_level[ci]);
             self.chg.push(self.cache_charging[ci]);
         }
-        // stage 3: branch-free loan tick across the whole shard
-        self.bank.tick_all(now_s, &self.chg);
-        // stage 4: branch-free gate sweep into the dense bitmap
-        availability_gate_many(
-            &self.bank,
+        // stages 3+4: the shared branch-free tick→gate sweep (one
+        // definition with the FL engine's `ClientLanes::poll`, so the
+        // two round drivers evolve loan bits identically)
+        sweep_gate(
+            &mut self.bank,
+            now_s,
             &self.lvl,
             &self.chg,
             &self.min_level_pct,

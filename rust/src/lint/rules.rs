@@ -58,6 +58,8 @@ fn panic_scope(rel: &str) -> bool {
             | "fleet/engine.rs"
             | "fleet/soa.rs"
             | "fleet/coordinator.rs"
+            | "fl/engine.rs"
+            | "fl/server.rs"
     )
 }
 
@@ -82,6 +84,11 @@ pub const RNG_REGISTRY: &[(&str, &str)] = &[
     (
         "fl/sim.rs",
         "FlSim::new: per-client credit streams derived from the root seed",
+    ),
+    (
+        "fl/engine.rs",
+        "ClientLanes::new band-seed stream + step_order's \
+         (seed, client, round)-keyed local-step shuffle",
     ),
 ];
 

@@ -16,8 +16,10 @@
 
 use std::collections::HashMap;
 
+use crate::fl::FlArm;
 use crate::fleet::coordinator::{explore_profiles, StepCost};
 use crate::soc::device::{device, DeviceId};
+use crate::soc::exec_model::{estimate, ExecutionContext};
 use crate::swan::prune::prune_dominated;
 use crate::workload::Workload;
 
@@ -84,6 +86,35 @@ pub fn plan_cost(
     StepCost {
         latency_s: best.latency_s * m,
         energy_j: best.energy_j * m,
+    }
+}
+
+/// [`plan_cost`] under a policy arm. The Swan arm is the §4.2 chain
+/// head (bit-identical to [`plan_cost`]); the baseline arm is the
+/// PyTorch-greedy low-latency core set — the same estimate the fleet
+/// `ProfileCoordinator` benches for its baseline — under the same
+/// band/charger envelope, so the FL arms differ only in the execution
+/// plan, never in the environment model.
+pub fn plan_cost_for_arm(
+    workload: &Workload,
+    model: DeviceId,
+    band: u8,
+    charging: bool,
+    arm: FlArm,
+) -> StepCost {
+    match arm {
+        FlArm::Swan => plan_cost(workload, model, band, charging),
+        FlArm::Baseline => {
+            let d = device(model);
+            let ctx = ExecutionContext::exclusive(d.n_cores());
+            let est =
+                estimate(&d, workload, &d.low_latency_cores(), &ctx);
+            let m = band_derate(band) * charger_relief(charging);
+            StepCost {
+                latency_s: est.latency_s * m,
+                energy_j: est.energy_j * m,
+            }
+        }
     }
 }
 
@@ -321,6 +352,38 @@ mod tests {
         assert!(warm.latency_s < hot.latency_s);
         assert!(a.latency_s < unplugged.latency_s);
         assert!(a.energy_j < hot.energy_j);
+    }
+
+    #[test]
+    fn plan_cost_for_arm_matches_both_coordinator_arms() {
+        let w = builtin(WorkloadName::ShufflenetV2);
+        let mut coord =
+            crate::fleet::coordinator::ProfileCoordinator::new(w.clone());
+        let swan =
+            coord.resolve(DeviceId::S10e, 0, crate::fl::FlArm::Swan);
+        let greedy =
+            coord.resolve(DeviceId::S10e, 0, crate::fl::FlArm::Baseline);
+        let s =
+            plan_cost_for_arm(&w, DeviceId::S10e, 0, true, FlArm::Swan);
+        let b = plan_cost_for_arm(
+            &w,
+            DeviceId::S10e,
+            0,
+            true,
+            FlArm::Baseline,
+        );
+        assert_eq!(s.latency_s.to_bits(), swan.cost.latency_s.to_bits());
+        assert_eq!(b.latency_s.to_bits(), greedy.cost.latency_s.to_bits());
+        assert_eq!(b.energy_j.to_bits(), greedy.cost.energy_j.to_bits());
+        // the envelope applies to both arms identically
+        let b_hot = plan_cost_for_arm(
+            &w,
+            DeviceId::S10e,
+            2,
+            false,
+            FlArm::Baseline,
+        );
+        assert!(b_hot.latency_s > b.latency_s);
     }
 
     #[test]

@@ -17,8 +17,9 @@ use std::sync::Arc;
 
 use super::coordinator::Coordinator;
 use super::wire::{
-    encode_into, read_frame, Ack, CheckIn, LeasePoll, Msg, PlanLease,
-    RoundCtl, RoundOp, RoundSummary, UpdatePush,
+    encode_into, read_frame, Ack, CheckIn, LeasePoll, ModelInit,
+    ModelPull, Msg, PlanLease, RoundCtl, RoundOp, RoundSummary,
+    UpdatePush,
 };
 
 /// Reply to a lease poll.
@@ -51,6 +52,13 @@ pub trait ServeClient: Send {
 
     /// `RoundCtl::Finish` — returns the round summary.
     fn round_finish(&mut self, round: u32) -> crate::Result<RoundSummary>;
+
+    /// Seed the coordinator's global model (training driver only).
+    fn model_init(&mut self, params: Vec<f32>) -> crate::Result<()>;
+
+    /// Pull the current global model: (first round it will train, flat
+    /// params). Bit-exact over both wirings — f32 raw bits on the wire.
+    fn model_pull(&mut self) -> crate::Result<(u32, Vec<f32>)>;
 }
 
 /// Direct in-process wiring: `fleet` devices check in through the
@@ -100,6 +108,14 @@ impl ServeClient for InProcClient {
 
     fn round_finish(&mut self, round: u32) -> crate::Result<RoundSummary> {
         self.coord.finish_round(round)
+    }
+
+    fn model_init(&mut self, params: Vec<f32>) -> crate::Result<()> {
+        self.coord.set_global(params)
+    }
+
+    fn model_pull(&mut self) -> crate::Result<(u32, Vec<f32>)> {
+        self.coord.model_pull()
     }
 }
 
@@ -241,6 +257,30 @@ impl ServeClient for TcpClient {
             other => {
                 crate::bail!("serve: finish_round({round}) got {other:?}")
             }
+        }
+    }
+
+    fn model_init(&mut self, params: Vec<f32>) -> crate::Result<()> {
+        let reply =
+            self.exchange(&[Msg::ModelInit(ModelInit { params })])?;
+        let first = reply.into_iter().next().ok_or_else(|| {
+            crate::err!("serve: model_init got an empty reply")
+        })?;
+        match Self::expect_ack(first)? {
+            Ack::Accepted => Ok(()),
+            other => crate::bail!("serve: model_init got {other:?}"),
+        }
+    }
+
+    fn model_pull(&mut self) -> crate::Result<(u32, Vec<f32>)> {
+        let reply =
+            self.exchange(&[Msg::ModelPull(ModelPull { device: 0 })])?;
+        let first = reply.into_iter().next().ok_or_else(|| {
+            crate::err!("serve: model_pull got an empty reply")
+        })?;
+        match first {
+            Msg::ModelState(s) => Ok((s.round, s.params)),
+            other => crate::bail!("serve: model_pull got {other:?}"),
         }
     }
 }

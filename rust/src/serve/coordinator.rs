@@ -53,7 +53,7 @@ use crate::fleet::engine::{round_rng, EMPTY_ROUND_WAIT_S};
 use crate::fleet::scenario::ScenarioSpec;
 use crate::workload::{load_or_builtin, Workload, WorkloadName};
 
-use super::cache::{plan_cost, PlanKey, ProfileCache};
+use super::cache::{plan_cost_for_arm, PlanKey, ProfileCache};
 use super::wire::{
     model_from_code, Ack, CheckIn, PlanLease, RoundSummary, UpdatePush,
 };
@@ -83,6 +83,10 @@ pub struct ServeConfig {
     /// Parameter count every `UpdatePush` must carry.
     pub update_dim: usize,
     pub workload: WorkloadName,
+    /// Policy arm every lease resolves under (§4.2 chain head vs the
+    /// greedy baseline). `Swan` reproduces the historical `plan_cost`
+    /// values bit-for-bit.
+    pub arm: crate::fl::FlArm,
 }
 
 impl ServeConfig {
@@ -96,6 +100,7 @@ impl ServeConfig {
             cache_capacity: 64,
             update_dim: 32,
             workload: spec.workload,
+            arm: crate::fl::FlArm::Swan,
         }
     }
 }
@@ -159,6 +164,12 @@ struct RoundState {
     total_time_s: f64,
     total_energy_j: f64,
     last_aggregate: Vec<f32>,
+    /// The global model the serve-routed training loop trains: seeded
+    /// via [`Coordinator::set_global`], replaced by each round's FedAvg
+    /// aggregate, served back through [`Coordinator::model_pull`].
+    /// Never folded into the digest directly — the aggregate bits
+    /// already are.
+    global: Vec<f32>,
 }
 
 /// Run-cumulative counters (mirrors what the load generator folds from
@@ -247,6 +258,7 @@ impl Coordinator {
                 total_time_s: 0.0,
                 total_energy_j: 0.0,
                 last_aggregate: Vec::new(),
+                global: Vec::new(),
             }),
             cfg,
             workload,
@@ -333,7 +345,13 @@ impl Coordinator {
                     charging: ci.charging,
                 };
                 cache.get_or_insert_with(key, || {
-                    plan_cost(&self.workload, model, ci.band, ci.charging)
+                    plan_cost_for_arm(
+                        &self.workload,
+                        model,
+                        ci.band,
+                        ci.charging,
+                        self.cfg.arm,
+                    )
                 });
             }
         }
@@ -499,7 +517,13 @@ impl Coordinator {
                 charging: ci.charging,
             };
             let (cost, _) = cache.get_or_insert_with(key, || {
-                plan_cost(&self.workload, model, ci.band, ci.charging)
+                plan_cost_for_arm(
+                    &self.workload,
+                    model,
+                    ci.band,
+                    ci.charging,
+                    self.cfg.arm,
+                )
             });
             leases.insert(
                 ci.device,
@@ -707,12 +731,16 @@ impl Coordinator {
                 })?;
                 updates.push((vec![params], w));
             }
-            let agg = fedavg(&updates);
+            let agg = fedavg(&updates)?;
             for v in &agg[0] {
                 digest.push_f32(*v);
             }
             r.last_aggregate = agg.into_iter().next().unwrap_or_default();
+            // the aggregate IS the next global model — this single
+            // assignment is what closes the numerics loop
+            r.global = r.last_aggregate.clone();
         } else {
+            // an empty round leaves the global model untouched
             r.updates.clear();
             r.last_aggregate.clear();
         }
@@ -822,6 +850,34 @@ impl Coordinator {
         Ok(summary)
     }
 
+    /// Seed (or replace) the global model. The training driver owns
+    /// initialization, so every wiring — oracle, in-process, TCP —
+    /// starts each run from one bit-identical model. Digest-neutral:
+    /// only aggregates fold parameter bits.
+    pub fn set_global(&self, params: Vec<f32>) -> crate::Result<()> {
+        crate::ensure!(
+            params.len() == self.cfg.update_dim,
+            "serve: model init carries {} params, expected {}",
+            params.len(),
+            self.cfg.update_dim
+        );
+        let mut r = Self::lock(&self.round)?;
+        r.global = params;
+        Ok(())
+    }
+
+    /// The current global model and the round counter it is valid for
+    /// (i.e. the first round that will train from it). Errors until
+    /// [`set_global`](Coordinator::set_global) has seeded a model.
+    pub fn model_pull(&self) -> crate::Result<(u32, Vec<f32>)> {
+        let r = Self::lock(&self.round)?;
+        crate::ensure!(
+            !r.global.is_empty(),
+            "serve: model pull before a global model was seeded"
+        );
+        Ok((r.round, r.global.clone()))
+    }
+
     /// Cumulative parity digest (hex form used in reports/benches).
     pub fn digest(&self) -> String {
         digest_hex(Self::lock_report(&self.round).digest.h)
@@ -883,6 +939,7 @@ mod tests {
             cache_capacity: 16,
             update_dim: 4,
             workload: WorkloadName::ShufflenetV2,
+            arm: crate::fl::FlArm::Swan,
         }
     }
 
@@ -951,11 +1008,35 @@ mod tests {
                 .iter()
                 .map(|(p, w)| (vec![p.clone()], *w))
                 .collect::<Vec<_>>(),
-        );
+        )
+        .unwrap();
         let got = c.last_aggregate();
         assert_eq!(got.len(), oracle[0].len());
         for (a, b) in got.iter().zip(&oracle[0]) {
             assert_eq!(a.to_bits(), b.to_bits(), "fedavg parity");
+        }
+    }
+
+    #[test]
+    fn global_model_follows_the_aggregate() {
+        let c = Coordinator::new(cfg(3, 0)).unwrap();
+        // pull before seeding is a protocol error
+        assert!(c.model_pull().is_err());
+        // wrong-dim seed rejected
+        assert!(c.set_global(vec![1.0; 3]).is_err());
+        c.set_global(vec![0.25f32; 4]).unwrap();
+        let (round, g) = c.model_pull().unwrap();
+        assert_eq!(round, 0);
+        assert_eq!(g, vec![0.25f32; 4]);
+        let devices: Vec<(u64, DeviceId)> =
+            vec![(0, DeviceId::Pixel3), (1, DeviceId::S10e)];
+        let _ = drive_round(&c, 0, &devices);
+        let (round, g) = c.model_pull().unwrap();
+        assert_eq!(round, 1, "pull reports the round trained next");
+        let agg = c.last_aggregate();
+        assert_eq!(g.len(), agg.len());
+        for (a, b) in g.iter().zip(&agg) {
+            assert_eq!(a.to_bits(), b.to_bits(), "global == aggregate");
         }
     }
 

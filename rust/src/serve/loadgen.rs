@@ -525,7 +525,7 @@ pub fn run_oracle(
         fold.push_f64(round_time_s);
         fold.push_f64(round_energy_j);
         if !updates.is_empty() {
-            let agg = fedavg(&updates);
+            let agg = fedavg(&updates)?;
             for v in &agg[0] {
                 fold.push_f32(*v);
             }

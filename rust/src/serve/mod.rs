@@ -54,6 +54,6 @@ pub use loadgen::{
 };
 pub use server::{serve_tcp, TcpServeHandle};
 pub use wire::{
-    model_code, model_from_code, Ack, CheckIn, Msg, PlanLease,
-    RoundSummary, UpdatePush,
+    model_code, model_from_code, Ack, CheckIn, ModelInit, ModelPull,
+    ModelState, Msg, PlanLease, RoundSummary, UpdatePush,
 };

@@ -196,10 +196,21 @@ fn dispatch(coord: &Arc<Coordinator>, msg: Msg) -> Msg {
                 Err(_) => Msg::Ack(Ack::Rejected),
             },
         },
+        Msg::ModelInit(mi) => match coord.set_global(mi.params) {
+            Ok(()) => Msg::Ack(Ack::Accepted),
+            Err(_) => Msg::Ack(Ack::Rejected),
+        },
+        Msg::ModelPull(_) => match coord.model_pull() {
+            Ok((round, params)) => Msg::ModelState(
+                crate::serve::wire::ModelState { round, params },
+            ),
+            Err(_) => Msg::Ack(Ack::Rejected),
+        },
         // server-to-client message types arriving inbound are misuse
-        Msg::PlanLease(_) | Msg::Ack(_) | Msg::RoundSummary(_) => {
-            Msg::Ack(Ack::Rejected)
-        }
+        Msg::PlanLease(_)
+        | Msg::Ack(_)
+        | Msg::RoundSummary(_)
+        | Msg::ModelState(_) => Msg::Ack(Ack::Rejected),
     }
 }
 
@@ -247,6 +258,7 @@ mod tests {
             cache_capacity: 16,
             update_dim: 4,
             workload: WorkloadName::ShufflenetV2,
+            arm: crate::fl::FlArm::Swan,
         }
     }
 
@@ -257,6 +269,12 @@ mod tests {
             serve_tcp(Arc::clone(&coord), "127.0.0.1:0", 2).unwrap();
         {
             let mut c = TcpClient::connect(handle.addr).unwrap();
+            // wrong-dim model init is a Rejected ack, not a hang
+            assert!(c.model_init(vec![0.5; 3]).is_err());
+            c.model_init(vec![0.5; 4]).unwrap();
+            let (round0, g0) = c.model_pull().unwrap();
+            assert_eq!(round0, 0);
+            assert_eq!(g0, vec![0.5; 4]);
             let reqs: Vec<CheckIn> = (0..6u64)
                 .map(|d| CheckIn {
                     device: d,
@@ -298,6 +316,15 @@ mod tests {
                 )
                 .unwrap()
             });
+            // the pulled model is the round's aggregate, bit-exact
+            // over the wire
+            let (round1, g1) = c.model_pull().unwrap();
+            assert_eq!(round1, 1);
+            let agg = coord.last_aggregate();
+            assert_eq!(g1.len(), agg.len());
+            for (a, b) in g1.iter().zip(&agg) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
         handle.shutdown();
     }

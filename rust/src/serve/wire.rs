@@ -19,6 +19,9 @@
 //! | 5   | `Ack`          | s → c     | kind u8 (+ retry f32 / picked u32) |
 //! | 6   | `RoundCtl`     | c → s     | round u32, op u8 (1 = close, 2 = finish) |
 //! | 7   | `RoundSummary` | s → c     | round u32, checkins u64, admitted u64, deferred u64, participants u32, round_time f64, round_energy f64, digest u64 |
+//! | 8   | `ModelPull`    | c → s     | device u64 |
+//! | 9   | `ModelState`   | s → c     | round u32, n u32, n×f32 |
+//! | 10  | `ModelInit`    | c → s     | n u32, n×f32 |
 //!
 //! Oversized or malformed frames are decode errors, never panics: a
 //! hostile or corrupt peer costs the server one connection, not the
@@ -118,6 +121,29 @@ pub struct RoundSummary {
     pub digest: u64,
 }
 
+/// Ask the coordinator for the current global model (the serve-routed
+/// training loop pulls after each `RoundCtl::Finish`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelPull {
+    pub device: u64,
+}
+
+/// The coordinator's current global model: the round counter it is
+/// valid for plus the flat f32 parameters (raw bits on the wire, so
+/// the pulled model is bit-identical to the aggregate).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelState {
+    pub round: u32,
+    pub params: Vec<f32>,
+}
+
+/// Seed the coordinator's global model before round 0 (the training
+/// driver owns initialization so every wiring starts from one model).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelInit {
+    pub params: Vec<f32>,
+}
+
 /// One wire frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
@@ -128,6 +154,9 @@ pub enum Msg {
     Ack(Ack),
     RoundCtl(RoundCtl),
     RoundSummary(RoundSummary),
+    ModelPull(ModelPull),
+    ModelState(ModelState),
+    ModelInit(ModelInit),
 }
 
 /// SoC model → wire code. The codes are part of the wire format: do not
@@ -162,6 +191,9 @@ const TAG_UPDATE_PUSH: u8 = 4;
 const TAG_ACK: u8 = 5;
 const TAG_ROUND_CTL: u8 = 6;
 const TAG_ROUND_SUMMARY: u8 = 7;
+const TAG_MODEL_PULL: u8 = 8;
+const TAG_MODEL_STATE: u8 = 9;
+const TAG_MODEL_INIT: u8 = 10;
 
 const ACK_ADMITTED: u8 = 1;
 const ACK_DEFERRED: u8 = 2;
@@ -260,6 +292,25 @@ pub fn encode_into(msg: &Msg, buf: &mut Vec<u8>) {
             put_f64(buf, m.round_time_s);
             put_f64(buf, m.round_energy_j);
             put_u64(buf, m.digest);
+        }
+        Msg::ModelPull(m) => {
+            buf.push(TAG_MODEL_PULL);
+            put_u64(buf, m.device);
+        }
+        Msg::ModelState(m) => {
+            buf.push(TAG_MODEL_STATE);
+            put_u32(buf, m.round);
+            put_u32(buf, m.params.len() as u32);
+            for p in &m.params {
+                put_f32(buf, *p);
+            }
+        }
+        Msg::ModelInit(m) => {
+            buf.push(TAG_MODEL_INIT);
+            put_u32(buf, m.params.len() as u32);
+            for p in &m.params {
+                put_f32(buf, *p);
+            }
         }
     }
     let body_len = (buf.len() - start - 4) as u32;
@@ -406,6 +457,34 @@ pub fn decode_body(body: &[u8]) -> crate::Result<Msg> {
             round_energy_j: c.f64()?,
             digest: c.u64()?,
         }),
+        TAG_MODEL_PULL => Msg::ModelPull(ModelPull { device: c.u64()? }),
+        TAG_MODEL_STATE => {
+            let round = c.u32()?;
+            let n = c.u32()? as usize;
+            crate::ensure!(
+                n <= body.len() / 4,
+                "wire: model state claims {n} params in a {}-byte body",
+                body.len()
+            );
+            let mut params = Vec::with_capacity(n);
+            for _ in 0..n {
+                params.push(c.f32()?);
+            }
+            Msg::ModelState(ModelState { round, params })
+        }
+        TAG_MODEL_INIT => {
+            let n = c.u32()? as usize;
+            crate::ensure!(
+                n <= body.len() / 4,
+                "wire: model init claims {n} params in a {}-byte body",
+                body.len()
+            );
+            let mut params = Vec::with_capacity(n);
+            for _ in 0..n {
+                params.push(c.f32()?);
+            }
+            Msg::ModelInit(ModelInit { params })
+        }
         other => crate::bail!("wire: unknown message tag {other}"),
     };
     c.done()?;
@@ -507,6 +586,14 @@ mod tests {
             round_energy_j: 9.75,
             digest: 0xDEAD_BEEF_CAFE_F00D,
         }));
+        roundtrip(Msg::ModelPull(ModelPull { device: 77 }));
+        roundtrip(Msg::ModelState(ModelState {
+            round: 12,
+            params: vec![0.5, -1.25, f32::MIN_POSITIVE, -0.0],
+        }));
+        roundtrip(Msg::ModelInit(ModelInit {
+            params: vec![1.0, 2.0, -3.5],
+        }));
     }
 
     #[test]
@@ -571,6 +658,14 @@ mod tests {
         body.extend_from_slice(&1.0f64.to_bits().to_le_bytes());
         body.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_body(&body).is_err());
+        // model state/init param counts inconsistent with body size
+        let mut state = vec![TAG_MODEL_STATE];
+        state.extend_from_slice(&0u32.to_le_bytes());
+        state.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_body(&state).is_err());
+        let mut init = vec![TAG_MODEL_INIT];
+        init.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_body(&init).is_err());
     }
 
     #[test]

@@ -4,8 +4,10 @@
 
 pub mod data;
 pub mod metrics;
+pub mod softmax;
 pub mod trainer;
 
 pub use data::{Partition, SyntheticDataset};
 pub use metrics::{EvalResult, LossCurve};
+pub use softmax::{ExecutorSgd, LocalSgd, SoftmaxProbe};
 pub use trainer::LocalTrainer;

@@ -1,0 +1,385 @@
+//! Pure-Rust local-SGD backends for the unified FL engine.
+//!
+//! [`LocalSgd`] is the numerics contract `fl::engine` trains through.
+//! The model is one flat `Vec<f32>`, so FedAvg aggregation, wire
+//! transport (`serve::wire` carries raw f32 bits) and digest folding
+//! are backend-agnostic. Two backends:
+//!
+//! - [`SoftmaxProbe`] — softmax regression over a fixed random
+//!   projection of the synthetic dataset. Zero-dependency, so it runs
+//!   in CI (no PJRT plugin), and fully deterministic: the same
+//!   (model, partition, step list) always yields bit-identical
+//!   updates, which is what the serve-vs-oracle parity gates pin.
+//!   The class templates stay linearly separable-ish in the projected
+//!   space, so the probe has a real learning signal and
+//!   time-to-accuracy is meaningful, if modest.
+//! - [`ExecutorSgd`] — the PJRT executor from `runtime`, flattened
+//!   leaf-major into the flat-model contract. FedAvg is element-wise,
+//!   so aggregating the flattened vector is bit-identical to
+//!   aggregating per leaf.
+
+use crate::runtime::ModelExecutor;
+use crate::util::rng::Rng;
+
+use super::data::{Partition, SyntheticDataset};
+use super::metrics::EvalResult;
+
+/// Projected feature count for [`SoftmaxProbe`] (plus one bias term).
+pub const PROBE_FEATURES: usize = 16;
+
+/// Local-SGD batch size for [`SoftmaxProbe`] — matches the
+/// `epoch_steps` batch the availability model assumes.
+pub const PROBE_BATCH: usize = 16;
+
+const EVAL_BATCH: usize = 64;
+const LR: f32 = 0.5;
+
+/// One client's worth of local training, against a flat f32 model.
+///
+/// `local_update` must be a pure function of `(global, part, steps)` —
+/// the engine replays it from several wirings (oracle, in-process
+/// serve, TCP serve) and requires bit-identical results.
+pub trait LocalSgd {
+    /// Flat model dimension.
+    fn dim(&self) -> usize;
+
+    /// Deterministic initial model.
+    fn init_global(&self, seed: u64) -> Vec<f32>;
+
+    /// Run local SGD from `global` over the given batch-step indices
+    /// (already shuffled by the engine) and return the updated model.
+    fn local_update(
+        &self,
+        global: &[f32],
+        part: &Partition,
+        steps: &[usize],
+    ) -> crate::Result<Vec<f32>>;
+
+    /// Held-out evaluation of `global` over `batches` eval batches.
+    fn eval(&self, global: &[f32], batches: usize) -> crate::Result<EvalResult>;
+}
+
+/// Softmax-regression probe over a fixed random projection.
+///
+/// Features: `PROBE_FEATURES` random-Gaussian projections of the raw
+/// sample (rows scaled by `1/sqrt(numel)` so features are unit-scale),
+/// plus a constant bias input. Model: `num_classes × (PROBE_FEATURES+1)`
+/// weights, row-major by class.
+#[derive(Clone, Debug)]
+pub struct SoftmaxProbe {
+    dataset: SyntheticDataset,
+    /// `[PROBE_FEATURES][numel]` projection, row-major.
+    proj: Vec<f32>,
+}
+
+const D: usize = PROBE_FEATURES + 1;
+
+impl SoftmaxProbe {
+    pub fn new(dataset: SyntheticDataset) -> Self {
+        let numel = dataset.sample_numel();
+        let mut rng = Rng::new(dataset.seed ^ 0x50F7_AB0E);
+        let scale = 1.0 / (numel as f64).sqrt();
+        let proj = (0..PROBE_FEATURES * numel)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        SoftmaxProbe { dataset, proj }
+    }
+
+    pub fn dataset(&self) -> &SyntheticDataset {
+        &self.dataset
+    }
+
+    /// Project a flattened batch into `[batch][D]` feature rows.
+    fn features(&self, x: &[f32], batch: usize, out: &mut [f32]) {
+        let numel = self.dataset.sample_numel();
+        for b in 0..batch {
+            let sample = &x[b * numel..(b + 1) * numel];
+            let row_out = &mut out[b * D..(b + 1) * D];
+            for (f, slot) in row_out[..PROBE_FEATURES].iter_mut().enumerate() {
+                let row = &self.proj[f * numel..(f + 1) * numel];
+                let mut acc = 0.0f32;
+                for (p, v) in row.iter().zip(sample) {
+                    acc += p * v;
+                }
+                *slot = acc;
+            }
+            row_out[PROBE_FEATURES] = 1.0;
+        }
+    }
+
+    /// Class probabilities for one feature row.
+    fn probs(&self, w: &[f32], feat: &[f32], out: &mut [f32]) {
+        for (k, z) in out.iter_mut().enumerate() {
+            let row = &w[k * D..(k + 1) * D];
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(feat) {
+                acc += a * b;
+            }
+            *z = acc;
+        }
+        let m = out.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f32;
+        for v in out.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in out.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+impl LocalSgd for SoftmaxProbe {
+    fn dim(&self) -> usize {
+        self.dataset.num_classes * D
+    }
+
+    fn init_global(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..self.dim())
+            .map(|_| (rng.normal() * 0.01) as f32)
+            .collect()
+    }
+
+    fn local_update(
+        &self,
+        global: &[f32],
+        part: &Partition,
+        steps: &[usize],
+    ) -> crate::Result<Vec<f32>> {
+        crate::ensure!(
+            global.len() == self.dim(),
+            "model dim mismatch: got {}, want {}",
+            global.len(),
+            self.dim()
+        );
+        let classes = self.dataset.num_classes;
+        let mut w = global.to_vec();
+        let mut feats = vec![0.0f32; PROBE_BATCH * D];
+        let mut p = vec![0.0f32; classes];
+        let mut grad = vec![0.0f32; classes * D];
+        for &step in steps {
+            let (x, y) = self.dataset.batch(part, step, PROBE_BATCH);
+            self.features(&x, PROBE_BATCH, &mut feats);
+            grad.iter_mut().for_each(|g| *g = 0.0);
+            for b in 0..PROBE_BATCH {
+                let feat = &feats[b * D..(b + 1) * D];
+                self.probs(&w, feat, &mut p);
+                let label = y[b] as usize;
+                for k in 0..classes {
+                    let err = p[k] - if k == label { 1.0 } else { 0.0 };
+                    let grow = &mut grad[k * D..(k + 1) * D];
+                    for (g, f) in grow.iter_mut().zip(feat) {
+                        *g += err * f;
+                    }
+                }
+            }
+            let scale = LR / PROBE_BATCH as f32;
+            for (wv, g) in w.iter_mut().zip(&grad) {
+                *wv -= scale * g;
+            }
+        }
+        Ok(w)
+    }
+
+    fn eval(&self, global: &[f32], batches: usize) -> crate::Result<EvalResult> {
+        crate::ensure!(
+            global.len() == self.dim(),
+            "model dim mismatch: got {}, want {}",
+            global.len(),
+            self.dim()
+        );
+        let classes = self.dataset.num_classes;
+        let mut feats = vec![0.0f32; EVAL_BATCH * D];
+        let mut p = vec![0.0f32; classes];
+        let mut agg = Vec::with_capacity(batches);
+        for b in 0..batches {
+            let (x, y) = self.dataset.eval_batch(b, EVAL_BATCH);
+            self.features(&x, EVAL_BATCH, &mut feats);
+            let mut loss = 0.0f32;
+            let mut correct = 0.0f32;
+            for (s, &label) in y.iter().enumerate() {
+                let feat = &feats[s * D..(s + 1) * D];
+                self.probs(global, feat, &mut p);
+                let label = label as usize;
+                loss -= p[label].max(1e-12).ln();
+                let argmax = p
+                    .iter()
+                    .enumerate()
+                    .fold((0usize, f32::NEG_INFINITY), |best, (k, &v)| {
+                        if v > best.1 {
+                            (k, v)
+                        } else {
+                            best
+                        }
+                    })
+                    .0;
+                if argmax == label {
+                    correct += 1.0;
+                }
+            }
+            agg.push((loss / EVAL_BATCH as f32, correct, EVAL_BATCH));
+        }
+        Ok(EvalResult::from_batches(&agg))
+    }
+}
+
+/// PJRT-executor adapter: flattens the executor's leaf-major params
+/// into the engine's flat-model contract.
+pub struct ExecutorSgd<'e, 'c> {
+    exec: &'e ModelExecutor<'c>,
+    dataset: SyntheticDataset,
+    /// Per-leaf element counts, in metadata order.
+    leaf_lens: Vec<usize>,
+}
+
+impl<'e, 'c> ExecutorSgd<'e, 'c> {
+    pub fn new(exec: &'e ModelExecutor<'c>, dataset: SyntheticDataset) -> Self {
+        let leaf_lens =
+            exec.meta.params.iter().map(|s| s.numel()).collect();
+        ExecutorSgd {
+            exec,
+            dataset,
+            leaf_lens,
+        }
+    }
+
+    fn unflatten(&self, flat: &[f32]) -> crate::Result<Vec<Vec<f32>>> {
+        crate::ensure!(
+            flat.len() == self.dim(),
+            "model dim mismatch: got {}, want {}",
+            flat.len(),
+            self.dim()
+        );
+        let mut out = Vec::with_capacity(self.leaf_lens.len());
+        let mut off = 0;
+        for &n in &self.leaf_lens {
+            out.push(flat[off..off + n].to_vec());
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+fn flatten(leaves: Vec<Vec<f32>>) -> Vec<f32> {
+    let mut out = Vec::with_capacity(leaves.iter().map(Vec::len).sum());
+    for leaf in leaves {
+        out.extend(leaf);
+    }
+    out
+}
+
+impl LocalSgd for ExecutorSgd<'_, '_> {
+    fn dim(&self) -> usize {
+        self.leaf_lens.iter().sum()
+    }
+
+    fn init_global(&self, seed: u64) -> Vec<f32> {
+        flatten(self.exec.init_host_params(seed))
+    }
+
+    fn local_update(
+        &self,
+        global: &[f32],
+        part: &Partition,
+        steps: &[usize],
+    ) -> crate::Result<Vec<f32>> {
+        let host = self.unflatten(global)?;
+        let mut state = self.exec.state_from_host(&host)?;
+        for &step in steps {
+            let (x, y) =
+                self.dataset.batch(part, step, self.exec.meta.batch);
+            self.exec.train_step(&mut state, &x, &y)?;
+        }
+        Ok(flatten(self.exec.state_to_host(&state)?))
+    }
+
+    fn eval(&self, global: &[f32], batches: usize) -> crate::Result<EvalResult> {
+        let host = self.unflatten(global)?;
+        let state = self.exec.state_from_host(&host)?;
+        let mut agg = Vec::with_capacity(batches);
+        for b in 0..batches {
+            let (x, y) =
+                self.dataset.eval_batch(b, self.exec.meta.batch);
+            let (loss, correct) = self.exec.eval_step(&state, &x, &y)?;
+            agg.push((loss, correct, self.exec.meta.batch));
+        }
+        Ok(EvalResult::from_batches(&agg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::server::fedavg;
+
+    #[test]
+    fn probe_dim_matches_classes() {
+        let probe = SoftmaxProbe::new(SyntheticDataset::speech(1));
+        assert_eq!(probe.dim(), 35 * D);
+        let probe = SoftmaxProbe::new(SyntheticDataset::vision(1));
+        assert_eq!(probe.dim(), 64 * D);
+    }
+
+    #[test]
+    fn local_update_is_bit_deterministic() {
+        let probe = SoftmaxProbe::new(SyntheticDataset::speech(7));
+        let part = probe.dataset().partition(3);
+        let g = probe.init_global(42);
+        let steps = [4usize, 1, 9];
+        let a = probe.local_update(&g, &part, &steps).unwrap();
+        let b = probe.local_update(&g, &part, &steps).unwrap();
+        let bits = |v: &[f32]| -> Vec<u32> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&a), bits(&b));
+        // Step order matters: a different shuffle is a different model.
+        let c = probe.local_update(&g, &part, &[9, 1, 4]).unwrap();
+        assert_ne!(bits(&a), bits(&c));
+    }
+
+    #[test]
+    fn update_rejects_wrong_dim() {
+        let probe = SoftmaxProbe::new(SyntheticDataset::speech(7));
+        let part = probe.dataset().partition(0);
+        assert!(probe.local_update(&[0.0; 3], &part, &[0]).is_err());
+        assert!(probe.eval(&[0.0; 3], 1).is_err());
+    }
+
+    #[test]
+    fn probe_learns_above_chance() {
+        let probe = SoftmaxProbe::new(SyntheticDataset::speech(11));
+        let mut global = probe.init_global(42);
+        let e0 = probe.eval(&global, 4).unwrap();
+        for round in 0..5 {
+            let mut updates = Vec::new();
+            for c in 0..8usize {
+                let part = probe.dataset().partition(c);
+                let steps: Vec<usize> =
+                    (round * 5..round * 5 + 5).collect();
+                let w =
+                    probe.local_update(&global, &part, &steps).unwrap();
+                updates.push((vec![w], part.n_samples as f64));
+            }
+            global = fedavg(&updates)
+                .unwrap()
+                .into_iter()
+                .next()
+                .unwrap();
+        }
+        let e1 = probe.eval(&global, 4).unwrap();
+        assert!(
+            e1.loss < e0.loss,
+            "loss did not improve: {} -> {}",
+            e0.loss,
+            e1.loss
+        );
+        let chance = 1.0 / 35.0;
+        assert!(
+            e1.accuracy > 2.0 * chance,
+            "accuracy {} not above chance {}",
+            e1.accuracy,
+            chance
+        );
+    }
+}

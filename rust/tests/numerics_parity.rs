@@ -1,0 +1,236 @@
+//! Numerics-loop parity: the acceptance contract of the unified FL
+//! engine (`fl::engine`).
+//!
+//! 1. **Serve-routed training is the direct run.** `run_serve` — real
+//!    local SGD whose selection, lease resolution, FedAvg aggregation
+//!    and parity digest all happen inside the `serve` coordinator —
+//!    must produce bit-identical final weights, digests, virtual-clock
+//!    totals and loan-state evolution to `run_direct`, the in-process
+//!    oracle, at ANY lane count.
+//! 2. **The wire is value-transparent.** The same holds over loopback
+//!    TCP: every f32 gradient and f64 lease field round-trips exactly
+//!    through the length-prefixed binary framing.
+//!
+//! Configs are drawn from the repo's deterministic RNG, so "random"
+//! here means "a different corner of the config space every edit of
+//! the draw seed", not flaky.
+
+use std::sync::Arc;
+
+use swan::fl::{
+    run_direct, run_serve, serve_config, ClientLanes, FlArm, FlClient,
+    FlConfig, FlSim,
+};
+use swan::serve::{serve_tcp, Coordinator, InProcClient, ServeClient, TcpClient};
+use swan::train::{SoftmaxProbe, SyntheticDataset};
+use swan::util::rng::Rng;
+use swan::workload::{load_or_builtin, Workload, WorkloadName};
+
+const WORKLOAD: WorkloadName = WorkloadName::ShufflenetV2;
+
+/// Draw one small-but-not-degenerate config from the repo RNG.
+fn draw_cfg(rng: &mut Rng) -> FlConfig {
+    FlConfig {
+        seed: rng.next_u64(),
+        raw_traces: 6,
+        quality_traces: 2, // × 24 shifts = 48 clients
+        clients_per_round: 2 + rng.index(4), // 2..=5
+        local_steps: 1 + rng.index(3),       // 1..=3
+        rounds: 3 + rng.index(3),            // 3..=5
+        eval_every: 2,
+        eval_batches: 1,
+        daily_credit_j: rng.range(2_000.0, 6_000.0),
+        server_overhead_s: rng.range(0.1, 2.0),
+    }
+}
+
+fn fleet(
+    cfg: &FlConfig,
+    arm: FlArm,
+) -> (Vec<FlClient>, SoftmaxProbe, Workload) {
+    let ds = SyntheticDataset::speech(cfg.seed);
+    let w = load_or_builtin(WORKLOAD, "artifacts");
+    let sim = FlSim::new(cfg.clone(), arm, ds.clone(), &w)
+        .expect("fleet construction");
+    (sim.clients, SoftmaxProbe::new(ds), w)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Assert the full bit-identity contract between an oracle run and a
+/// serve-routed run, including the lane state both mutated.
+fn assert_parity(
+    tag: &str,
+    direct: &swan::fl::FlOutcome,
+    direct_lanes: &ClientLanes,
+    served: &swan::fl::FlOutcome,
+    served_lanes: &ClientLanes,
+) {
+    assert_eq!(direct.digest, served.digest, "{tag}: digest");
+    assert!(
+        direct.digest.starts_with("serve-"),
+        "{tag}: digest missing its namespace: {}",
+        direct.digest
+    );
+    assert_eq!(
+        bits(&direct.final_model),
+        bits(&served.final_model),
+        "{tag}: final weights"
+    );
+    assert_eq!(
+        direct.total_time_s.to_bits(),
+        served.total_time_s.to_bits(),
+        "{tag}: virtual clock"
+    );
+    assert_eq!(
+        direct.total_energy_j.to_bits(),
+        served.total_energy_j.to_bits(),
+        "{tag}: fleet energy"
+    );
+    assert_eq!(
+        direct.online_per_round, served.online_per_round,
+        "{tag}: availability stream"
+    );
+    assert_eq!(direct.rounds_run, served.rounds_run);
+    for k in 0..direct_lanes.n {
+        assert_eq!(
+            direct_lanes.bank.loan_j[k].to_bits(),
+            served_lanes.bank.loan_j[k].to_bits(),
+            "{tag}: loan row {k}"
+        );
+        assert_eq!(
+            direct_lanes.participations[k], served_lanes.participations[k],
+            "{tag}: participation row {k}"
+        );
+        assert_eq!(
+            direct_lanes.train_time_s[k].to_bits(),
+            served_lanes.train_time_s[k].to_bits(),
+            "{tag}: train-time row {k}"
+        );
+    }
+}
+
+#[test]
+fn inproc_serve_matches_the_direct_oracle_over_random_configs() {
+    let mut draw = Rng::new(0xF1_C0DE);
+    for case in 0..3 {
+        let cfg = draw_cfg(&mut draw);
+        let arm = if case % 2 == 0 { FlArm::Swan } else { FlArm::Baseline };
+        let (clients, probe, w) = fleet(&cfg, arm);
+        let mut oracle_lanes = ClientLanes::new(&clients, cfg.seed);
+        let direct =
+            run_direct(&cfg, arm, &mut oracle_lanes, &probe, &w)
+                .expect("oracle run");
+        assert!(
+            !direct.final_model.is_empty(),
+            "case {case}: oracle trained nothing"
+        );
+
+        for n_lanes in [1usize, 4] {
+            let coord = Arc::new(
+                Coordinator::new(serve_config(
+                    &cfg,
+                    arm,
+                    WORKLOAD,
+                    probe.dim(),
+                ))
+                .expect("coordinator"),
+            );
+            let lane_clients: Vec<Box<dyn ServeClient>> = (0..n_lanes)
+                .map(|_| {
+                    Box::new(InProcClient::new(coord.clone()))
+                        as Box<dyn ServeClient>
+                })
+                .collect();
+            let mut lanes = ClientLanes::new(&clients, cfg.seed);
+            let served =
+                run_serve(&cfg, arm, &mut lanes, &probe, lane_clients)
+                    .expect("serve-routed run");
+            assert_parity(
+                &format!("case {case} inproc lanes={n_lanes}"),
+                &direct,
+                &oracle_lanes,
+                &served,
+                &lanes,
+            );
+        }
+    }
+}
+
+#[test]
+fn loopback_tcp_serve_matches_the_direct_oracle() {
+    let mut draw = Rng::new(0x7C9_B00F);
+    let cfg = draw_cfg(&mut draw);
+    let arm = FlArm::Swan;
+    let (clients, probe, w) = fleet(&cfg, arm);
+    let mut oracle_lanes = ClientLanes::new(&clients, cfg.seed);
+    let direct = run_direct(&cfg, arm, &mut oracle_lanes, &probe, &w)
+        .expect("oracle run");
+
+    for n_lanes in [1usize, 4] {
+        let coord = Arc::new(
+            Coordinator::new(serve_config(&cfg, arm, WORKLOAD, probe.dim()))
+                .expect("coordinator"),
+        );
+        let handle = serve_tcp(coord.clone(), "127.0.0.1:0", 2)
+            .expect("tcp listener");
+        let lane_clients: Vec<Box<dyn ServeClient>> = (0..n_lanes)
+            .map(|_| {
+                Box::new(
+                    TcpClient::connect(handle.addr).expect("tcp connect"),
+                ) as Box<dyn ServeClient>
+            })
+            .collect();
+        let mut lanes = ClientLanes::new(&clients, cfg.seed);
+        let served = run_serve(&cfg, arm, &mut lanes, &probe, lane_clients)
+            .expect("tcp serve-routed run");
+        // run_serve consumed (and dropped) every client connection, so
+        // the workers are idle and shutdown joins cleanly
+        handle.shutdown();
+        assert_parity(
+            &format!("tcp lanes={n_lanes}"),
+            &direct,
+            &oracle_lanes,
+            &served,
+            &lanes,
+        );
+    }
+}
+
+#[test]
+fn flsim_run_with_probe_is_the_engine_oracle() {
+    // `FlSim::run_with` is sugar over ClientLanes + run_direct +
+    // write_back; pin that it reports the engine's digest and restores
+    // participation state into the scalar clients.
+    let cfg = FlConfig {
+        seed: 11,
+        raw_traces: 6,
+        quality_traces: 2,
+        clients_per_round: 3,
+        local_steps: 2,
+        rounds: 4,
+        eval_every: 2,
+        eval_batches: 1,
+        daily_credit_j: 3_000.0,
+        server_overhead_s: 0.5,
+    };
+    let ds = SyntheticDataset::speech(cfg.seed);
+    let w = load_or_builtin(WORKLOAD, "artifacts");
+    let probe = SoftmaxProbe::new(ds.clone());
+    let mut sim = FlSim::new(cfg.clone(), FlArm::Swan, ds, &w)
+        .expect("fleet construction");
+    let out = sim.run_with(&probe).expect("sim run");
+
+    let (clients, probe2, w2) = fleet(&cfg, FlArm::Swan);
+    let mut lanes = ClientLanes::new(&clients, cfg.seed);
+    let direct = run_direct(&cfg, FlArm::Swan, &mut lanes, &probe2, &w2)
+        .expect("engine oracle");
+    assert_eq!(out.digest, direct.digest);
+    assert_eq!(bits(&out.final_model), bits(&direct.final_model));
+    let sim_parts: usize =
+        sim.clients.iter().map(|c| c.participations).sum();
+    let lane_parts: usize = lanes.participations.iter().sum();
+    assert_eq!(sim_parts, lane_parts, "write_back lost participations");
+}
